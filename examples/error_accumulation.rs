@@ -1,0 +1,65 @@
+//! Table-1 analogue: show how low-bit KV quantization errors accumulate
+//! during generation until the token stream flips and diverges from the
+//! full-precision output (the paper's GSM8K 20-4-4 → 20+4+4 case study).
+//!
+//!   cargo run --release --example error_accumulation
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::model::{RefEngine, Weights};
+use kvtuner::tuner::calib;
+
+fn main() -> anyhow::Result<()> {
+    let dir = kvtuner::default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let weights = Weights::load(&manifest, &cfg.name)?;
+
+    let prompt = calib::calib_set(cfg.vocab, 3, 48, 12345).remove(1); // periodic motif
+    let horizon = 48;
+    let cap = prompt.len() + horizon + 1;
+
+    let fp = {
+        let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+        RefEngine::new(&cfg, &weights, specs, cap)?.generate(&prompt, horizon)?
+    };
+    println!("prompt ({} tokens): {:?}...", prompt.len(), &prompt[..8.min(prompt.len())]);
+    println!("\n{:>10}: {}", "FP16", fmt(&fp, &fp));
+
+    for (label, pair) in [
+        ("KV8", PrecisionPair::new(8, 8)),
+        ("KV4", PrecisionPair::new(4, 4)),
+        ("K4V2", PrecisionPair::new(4, 2)),
+        ("K2V4", PrecisionPair::new(2, 4)),
+        ("KV2", PrecisionPair::new(2, 2)),
+    ] {
+        let specs = LayerSpec::uniform(Mode::Token, pair, cfg.n_layers);
+        let out = RefEngine::new(&cfg, &weights, specs, cap)?.generate(&prompt, horizon)?;
+        let div = fp.iter().zip(&out).take_while(|(a, b)| a == b).count();
+        let agree = fp.iter().zip(&out).filter(|(a, b)| a == b).count();
+        println!(
+            "{label:>10}: {}  [diverges at token {div}, agreement {agree}/{}]",
+            fmt(&out, &fp),
+            fp.len()
+        );
+    }
+    println!(
+        "\nLike the paper's Table 1: high-precision pairs reproduce the FP stream; \
+         K-first pairs (K4V2) generally survive longer than V-first pairs (K2V4) at \
+         equal memory; 2-bit keys flip a token early and the remainder diverges."
+    );
+    Ok(())
+}
+
+fn fmt(out: &[i32], reference: &[i32]) -> String {
+    out.iter()
+        .zip(reference)
+        .map(|(t, r)| {
+            if t == r {
+                format!("{t:>3}")
+            } else {
+                format!("*{t:>2}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}

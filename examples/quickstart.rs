@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT artifacts, build a mixed-precision engine, and
+//! generate a few tokens.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use kvtuner::config::{LayerSpec, Mode, PrecisionPair};
+use kvtuner::engine::Engine;
+use kvtuner::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = kvtuner::default_artifact_dir();
+    println!("loading artifacts from {}", dir.display());
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let cfg = rt.manifest.config.clone();
+    println!(
+        "model config: {} layers, d_model={}, {} kv heads x {} dims, vocab={}",
+        cfg.n_layers, cfg.d_model, cfg.n_kv_heads, cfg.head_dim, cfg.vocab
+    );
+
+    // a layer-wise mixed precision map, the way a KVTuner config would set it:
+    // sensitive ends of the stack at K8V4 (kivi), the middle at K4V2.
+    let mut specs = Vec::new();
+    for l in 0..cfg.n_layers {
+        let pair = if l == 0 || l == cfg.n_layers - 1 {
+            PrecisionPair::new(8, 4)
+        } else {
+            PrecisionPair::new(4, 2)
+        };
+        specs.push(LayerSpec { mode: Mode::Kivi, pair });
+    }
+    let mut engine = Engine::new(rt, &cfg.name, specs, 1, 256, 32)?;
+    println!(
+        "engine ready: equivalent {:.2}-bit KV cache, {:.1} KiB cache buffers",
+        engine.equivalent_bits(),
+        engine.kv_bytes() as f64 / 1024.0
+    );
+
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 11) % cfg.vocab as i32).collect();
+    let out = engine.generate(0, &prompt, 16)?;
+    println!("prompt:    {prompt:?}");
+    println!("generated: {out:?}");
+    println!(
+        "exec stats: {} PJRT executions, compile {:?}",
+        engine.exec_count.load(std::sync::atomic::Ordering::Relaxed),
+        engine.rt.compile_stats.lock().unwrap().clone()
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the E2E validation run recorded in
+//! EXPERIMENTS.md): starts the multi-engine router — a KV8 "high" engine and
+//! a mixed-precision tuned "balanced" engine — submits a batch of requests
+//! with mixed accuracy classes, and reports per-engine throughput/latency.
+//!
+//!   cargo run --release --example serve_demo
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
+use kvtuner::util::bench::Table;
+use kvtuner::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = kvtuner::default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let batch = *manifest.decode_batches().last().unwrap_or(&1);
+    let n_requests = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12usize);
+
+    // tuned-style mixed map: K8V4 on the outer layers, K4V2 inside
+    let tuned: Vec<LayerSpec> = (0..cfg.n_layers)
+        .map(|l| LayerSpec {
+            mode: Mode::Kivi,
+            pair: if l == 0 || l + 1 == cfg.n_layers {
+                PrecisionPair::new(8, 4)
+            } else {
+                PrecisionPair::new(4, 2)
+            },
+        })
+        .collect();
+
+    let workers = vec![
+        WorkerSpec {
+            name: "kv8-high".into(),
+            model: cfg.name.clone(),
+            specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), cfg.n_layers),
+            class: AccuracyClass::High,
+            batch,
+            s_max: 256,
+            prefill_chunk: 32,
+        },
+        WorkerSpec {
+            name: "tuned-balanced".into(),
+            model: cfg.name.clone(),
+            specs: tuned,
+            class: AccuracyClass::Balanced,
+            batch,
+            s_max: 256,
+            prefill_chunk: 32,
+        },
+    ];
+
+    eprintln!("starting router with {} engine workers (batch={batch})...", workers.len());
+    let t0 = std::time::Instant::now();
+    let router = Router::start(dir, workers)?;
+    eprintln!("workers ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut rng = Rng::seed(99);
+    let classes = [AccuracyClass::High, AccuracyClass::Balanced];
+    let t_load = std::time::Instant::now();
+    let mut subs = Vec::new();
+    for i in 0..n_requests {
+        let plen = rng.range(16, 80);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+        subs.push(router.submit(prompt, 24, classes[i % 2])?);
+    }
+    let mut done = 0usize;
+    let mut tok_total = 0usize;
+    let mut t = Table::new("serve_demo — request results", &["id", "engine", "tokens", "ttft ms", "total ms"]);
+    for sub in subs {
+        let r = sub.wait()?;
+        anyhow::ensure!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        done += 1;
+        tok_total += r.tokens.len();
+        t.row(vec![
+            r.id.to_string(),
+            r.engine,
+            r.tokens.len().to_string(),
+            format!("{:.1}", r.ttft.as_secs_f64() * 1e3),
+            format!("{:.1}", r.total.as_secs_f64() * 1e3),
+        ]);
+    }
+    let wall = t_load.elapsed().as_secs_f64();
+    t.print();
+
+    let mut tm = Table::new("serve_demo — per-engine metrics", &["engine", "eq bits", "summary"]);
+    for (name, snap) in router.shutdown()? {
+        let bits = if name.starts_with("kv8") { 8.0 } else { 4.5 };
+        tm.row(vec![name, format!("{bits:.2}"), snap.to_string()]);
+    }
+    tm.print();
+    println!(
+        "\nE2E: {done}/{n_requests} requests, {tok_total} tokens in {wall:.2}s wall \
+         ({:.1} tok/s aggregate)",
+        tok_total as f64 / wall
+    );
+    Ok(())
+}

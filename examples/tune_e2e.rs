@@ -1,0 +1,91 @@
+//! Full KVTuner pipeline end to end: profile → prune → cluster → MOO search
+//! → emit config → validate the chosen config on the *PJRT* engine (not just
+//! the reference engine the search ran on).
+//!
+//!   cargo run --release --example tune_e2e [evals]
+
+use std::sync::Arc;
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::engine::Engine;
+use kvtuner::model::Weights;
+use kvtuner::runtime::Runtime;
+use kvtuner::tuner::{self, calib, MooOptions, TuneOptions};
+use kvtuner::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = kvtuner::default_artifact_dir();
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let weights = Weights::load(&manifest, &cfg.name)?;
+    let evals = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(80usize);
+
+    let opts = TuneOptions {
+        mode: Mode::Token,
+        n_prompts: 6,
+        prompt_len: 40,
+        horizon: 24,
+        moo: MooOptions { evaluations: evals, population: 12, ..Default::default() },
+        ..Default::default()
+    };
+    println!("running KVTuner pipeline ({} evals)...", opts.moo.evaluations);
+    let t0 = std::time::Instant::now();
+    let result = tuner::run_pipeline(&cfg, &weights, &opts)?;
+    println!(
+        "pipeline: {} groups, {} front points, {} evals in {:.1}s",
+        result.groups.len(),
+        result.front.len(),
+        result.evals,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut t = Table::new("Pareto frontier", &["equiv bits", "fidelity acc"]);
+    for p in &result.front {
+        t.row(vec![format!("{:.2}", p.bits), format!("{:.4}", p.accuracy)]);
+    }
+    t.print();
+
+    let Some(best) = result.configs.first() else {
+        anyhow::bail!("no config met the bit constraints");
+    };
+    let out = std::env::temp_dir().join("kvtuner_tuned.json");
+    best.save(&out)?;
+    println!("\nselected {} ({:.2} bits), saved to {}", best.label, best.equivalent_bits, out.display());
+
+    // validate on the real serving engine: compare against the fp PJRT arm
+    println!("validating on the PJRT engine...");
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let prompts = calib::calib_set(cfg.vocab, 4, 40, 777);
+    let horizon = 24;
+
+    let mut fp_eng = Engine::new(
+        rt.clone(), &cfg.name,
+        LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+        1, 256, 32,
+    )?;
+    let mut tuned_eng = Engine::new(rt.clone(), &cfg.name, best.specs.clone(), 1, 256, 32)?;
+    let mut kv2_eng = Engine::new(
+        rt, &cfg.name,
+        LayerSpec::uniform(Mode::Token, PrecisionPair::new(2, 2), cfg.n_layers),
+        1, 256, 32,
+    )?;
+
+    let (mut agree_tuned, mut agree_kv2, mut total) = (0usize, 0usize, 0usize);
+    for p in &prompts {
+        let fp = fp_eng.generate(0, p, horizon)?;
+        let tu = tuned_eng.generate(0, p, horizon)?;
+        let k2 = kv2_eng.generate(0, p, horizon)?;
+        agree_tuned += fp.iter().zip(&tu).filter(|(a, b)| a == b).count();
+        agree_kv2 += fp.iter().zip(&k2).filter(|(a, b)| a == b).count();
+        total += fp.len();
+    }
+    println!(
+        "PJRT validation: tuned {} fidelity {:.3} | uniform KV2 fidelity {:.3} (n={total})",
+        best.label,
+        agree_tuned as f64 / total as f64,
+        agree_kv2 as f64 / total as f64
+    );
+    anyhow::ensure!(agree_tuned >= agree_kv2, "tuned config should beat uniform KV2");
+    println!("OK: searched config validated on the serving engine");
+    Ok(())
+}

@@ -1,0 +1,223 @@
+"""AOT lowering: every layer-step / quantize / embed / lm-head variant to
+HLO *text* artifacts, plus weight blobs and a manifest the Rust runtime loads.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are keyed by *shape signature* (config, batch, t, s_max) and shared
+by every model (weight set) with the same config shape, since weights are
+runtime inputs. ``python -m compile.aot --help`` for the knobs; the default
+emits the `tiny` family used by tests plus the `small` family used by benches
+only when requested.
+
+Python runs ONCE at build time (`make artifacts`); it is never on the Rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PAIRS = [(k, v) for k in (8, 4, 2) for v in (8, 4, 2)]
+MODES = ("token", "kivi")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(name, spec):
+    return {"name": name, "dtype": str(spec.dtype), "shape": list(spec.shape)}
+
+
+def _out_json(outs):
+    flat, _ = jax.tree_util.tree_flatten(outs)
+    return [{"dtype": str(o.dtype), "shape": list(o.shape)} for o in flat]
+
+
+def lower_artifact(fn, specs, out_dir, name, meta, artifacts, force=False):
+    """Lower ``fn(*specs)`` to ``<out_dir>/<name>.hlo.txt`` and record it."""
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    shaped = [s for (_, s) in specs]
+    lowered = jax.jit(fn).lower(*shaped)
+    out_shapes = jax.eval_shape(fn, *shaped)
+    if force or not os.path.exists(path):
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+    entry = dict(meta)
+    entry.update(
+        name=name,
+        file=f"{name}.hlo.txt",
+        inputs=[_spec_json(n, s) for (n, s) in specs],
+        outputs=_out_json(out_shapes),
+    )
+    artifacts.append(entry)
+
+
+def emit_weights(cfg: M.ModelConfig, out_dir: str):
+    """weights-<model>.bin: flat little-endian f32; returns the tensor index."""
+    w = M.init_weights(cfg)
+    order = ["embed", "ln_f"] + [
+        f"layer{l}.{nm}" for l in range(cfg.n_layers) for nm in M.LAYER_WEIGHT_NAMES
+    ]
+    tensors, offset = {}, 0
+    path = os.path.join(out_dir, f"weights-{cfg.name}.bin")
+    with open(path, "wb") as f:
+        for nm in order:
+            t = np.ascontiguousarray(w[nm], dtype=np.float32)
+            f.write(t.tobytes())
+            tensors[nm] = {"offset": offset, "shape": list(t.shape)}
+            offset += t.size
+    outlier, temps, _ = M.sensitivity_profiles(cfg)
+    return {
+        "weights": f"weights-{cfg.name}.bin",
+        "tensors": tensors,
+        "outlier_profile": [float(x) for x in outlier],
+        "temp_profile": [[float(x) for x in row] for row in temps],
+    }
+
+
+def emit(config: str, models, batches, ts, s_maxes, out_root: str, force: bool):
+    cfg = M.CONFIGS[config]
+    out_dir = os.path.join(out_root, config)
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+    t0 = time.time()
+
+    def log(msg):
+        print(f"[aot {time.time() - t0:6.1f}s] {msg}", flush=True)
+
+    for b in batches:
+        for s in s_maxes:
+            for t in ts:
+                meta = {"kind": "layer", "batch": b, "t": t, "s_max": s}
+                specs = M.layer_step_specs(cfg, "fp", 16, 16, b, t, s)
+                lower_artifact(
+                    M.make_layer_step(cfg, "fp", 16, 16, b, t, s),
+                    specs, out_dir, f"layer_fp_b{b}_t{t}_s{s}",
+                    dict(meta, mode="fp", k_bits=16, v_bits=16), artifacts, force,
+                )
+                log(f"layer fp b{b} t{t} s{s}")
+                for mode in MODES:
+                    for kb, vb in PAIRS:
+                        specs = M.layer_step_specs(cfg, mode, kb, vb, b, t, s)
+                        lower_artifact(
+                            M.make_layer_step(cfg, mode, kb, vb, b, t, s),
+                            specs, out_dir, f"layer_{mode}_k{kb}v{vb}_b{b}_t{t}_s{s}",
+                            dict(meta, mode=mode, k_bits=kb, v_bits=vb), artifacts, force,
+                        )
+                    log(f"layer {mode} b{b} t{t} s{s} (9 pairs)")
+        # commit executables (chunk == group) and heads, per batch size
+        for bits in (8, 4, 2):
+            for mode, mname in (("per-token-asym", "token"), ("per-channel-asym", "channel")):
+                c = cfg.group
+                specs = [("x", M._f32(b, cfg.n_kv_heads, c, cfg.head_dim))]
+                lower_artifact(
+                    M.make_quantize_chunk(cfg, bits, mode, b, c),
+                    specs, out_dir, f"quant_{mname}_{bits}_b{b}_c{c}",
+                    {"kind": "quant", "mode": mname, "bits": bits, "batch": b, "chunk": c},
+                    artifacts, force,
+                )
+        for t in ts:
+            specs = [("ids", M._i32(b, t)), ("embed", M._f32(cfg.vocab, cfg.d_model))]
+            lower_artifact(
+                M.make_embed(cfg, b, t), specs, out_dir, f"embed_b{b}_t{t}",
+                {"kind": "embed", "batch": b, "t": t}, artifacts, force,
+            )
+        specs = [
+            ("x", M._f32(b, cfg.d_model)),
+            ("ln_f", M._f32(cfg.d_model)),
+            ("embed", M._f32(cfg.vocab, cfg.d_model)),
+        ]
+        lower_artifact(
+            M.make_lm_head(cfg, b), specs, out_dir, f"lmhead_b{b}",
+            {"kind": "lmhead", "batch": b}, artifacts, force,
+        )
+        log(f"quant/embed/lmhead b{b}")
+
+    model_entries = {}
+    for mn in models:
+        mcfg = M.CONFIGS[mn]
+        assert M.layer_weight_shapes(mcfg) == M.layer_weight_shapes(cfg), mn
+        model_entries[mn] = emit_weights(mcfg, out_dir)
+        log(f"weights {mn}")
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "rope_theta": cfg.rope_theta, "group": cfg.group,
+            "residual": cfg.residual, "rms_eps": cfg.rms_eps,
+        },
+        "models": model_entries,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"manifest: {len(artifacts)} artifacts -> {out_dir}")
+
+
+def source_stamp() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in os.walk(base):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="tiny")
+    p.add_argument("--models", default="tiny,tiny-robust,tiny-sensitive")
+    p.add_argument("--batch", default="1,2")
+    p.add_argument("--t", default="1,32")
+    p.add_argument("--smax", default="256")
+    p.add_argument("--out", default=None, help="output root (default ../artifacts)")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    out_root = args.out or os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_root = os.path.abspath(out_root)
+    stamp_path = os.path.join(out_root, args.config, ".stamp")
+    stamp = source_stamp() + f"|{args.models}|{args.batch}|{args.t}|{args.smax}"
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read() == stamp:
+                print(f"[aot] {args.config}: up to date, skipping")
+                return
+    emit(
+        args.config,
+        args.models.split(","),
+        [int(x) for x in args.batch.split(",")],
+        [int(x) for x in args.t.split(",")],
+        [int(x) for x in args.smax.split(",")],
+        out_root,
+        True,
+    )
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+
+
+if __name__ == "__main__":
+    main()

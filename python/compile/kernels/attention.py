@@ -1,0 +1,142 @@
+"""Pallas fused attention kernel (flash-style online softmax) for decode.
+
+The kernel computes ``softmax(q K^T / sqrt(Dh) + mask) V`` for grouped-query
+attention, streaming over key/value blocks with a running (max, denominator,
+accumulator) triple — the TPU-shaped restructuring of the paper's GPU
+attention path (DESIGN.md §Hardware-Adaptation): HBM→VMEM streaming of
+(head, seq-block) tiles replaces the CUDA threadblock tiling, and the MXU
+consumes [T, Dh] × [Dh, BLK] tiles.
+
+K/V arrive already dequantized (the dequant kernel in ``quant.py`` feeds
+this one inside the same HLO module, so XLA fuses them on a real backend).
+Masking is additive (-inf for invalid positions), which subsumes the
+cache-length mask, residual-length mask, and causal mask within the T new
+tokens — the model layer builds the mask once per step.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *, sm_scale, blocks):
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # [T, Dh]
+    k = k_ref[0, 0]  # [BLK, Dh]
+    v = v_ref[0, 0]  # [BLK, Dh]
+    mask = mask_ref[0]  # [T, BLK]
+
+    s = jnp.dot(q, k.T) * sm_scale + mask  # [T, BLK]
+    m_prev = m_scr[...]  # [T, 1]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # [T, BLK]
+    alpha = jnp.exp(m_prev - m_new)  # [T, 1]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(blk == blocks - 1)
+    def _finish():
+        o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+def _fused_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, sm_scale, group):
+    """Whole-sequence, all-heads attention for one batch element.
+
+    Grid is (B,) only: on the CPU interpret path every grid step lowers to a
+    sequential loop iteration, so folding heads + seq blocks into one kernel
+    invocation is the dominant perf lever (§Perf change L1-1). On a real TPU
+    this trades VMEM residency for loop overhead — the [S, Dh] K/V tiles at
+    S=1024, Dh=64 are 256 KiB each, still comfortably inside VMEM.
+    """
+    q = q_ref[0]  # [Hq, T, Dh]
+    k = k_ref[0]  # [Hkv, S, Dh]
+    v = v_ref[0]
+    mask = mask_ref[0]  # [T, S]
+    hq = q.shape[0]
+    # GQA: repeat kv heads across the query-head group
+    kx = jnp.repeat(k, group, axis=0)  # [Hq, S, Dh]
+    vx = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("htd,hsd->hts", q, kx) * sm_scale + mask[None]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    del hq
+    o_ref[0] = jnp.einsum("hts,hsd->htd", p, vx)
+
+
+def fused_attention(q, k, v, mask):
+    """Single-block attention with grid (B,) — see _fused_attn_kernel."""
+    b, hq, t, dh = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    kernel = functools.partial(
+        _fused_attn_kernel, sm_scale=1.0 / math.sqrt(dh), group=group
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, hq, t, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, s, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, s), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, t, dh), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def flash_attention(q, k, v, mask, *, block_k: int = 128):
+    """Grouped-query flash attention over a static-length KV buffer.
+
+    q: [B, Hq, T, Dh]; k/v: [B, Hkv, S, Dh]; mask: [B, T, S] additive fp32.
+    Hq must be a multiple of Hkv (GQA). Returns [B, Hq, T, Dh].
+    """
+    b, hq, t, dh = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    group = hq // hkv
+    blk = min(block_k, s)
+    assert s % blk == 0, f"S={s} must be a multiple of block_k={blk}"
+    blocks = s // blk
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_attn_kernel, sm_scale=sm_scale, blocks=blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, dh), lambda i, j, g: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, blk, dh), lambda i, j, g: (i, j // group, g, 0)),
+            pl.BlockSpec((1, 1, blk, dh), lambda i, j, g: (i, j // group, g, 0)),
+            pl.BlockSpec((1, t, blk), lambda i, j, g: (i, 0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, dh), lambda i, j, g: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, dh), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,65 @@
+"""Bit-packing helpers for low-precision KV cache codes.
+
+Codes are packed along the *head dimension* (the last axis) into uint8 bytes:
+with ``bits`` in {2, 4, 8}, ``per_byte = 8 // bits`` consecutive channels share
+one byte, channel ``d`` occupying bit positions ``bits * (d % per_byte)``.
+
+Packing along the head dim (rather than the sequence dim) keeps the unpack a
+pure lane-local shift on TPU (the Pallas analogue of avoiding cross-warp
+shuffles in the KIVI CUDA kernels): a VMEM tile of packed codes expands to the
+fp tile in-register, with no cross-lane data movement.
+
+These helpers are pure ``jnp`` so they can be used both inside Pallas kernels
+(interpret mode) and in the ``ref.py`` oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+def packed_width(head_dim: int, bits: int) -> int:
+    """Number of bytes needed to pack ``head_dim`` codes at ``bits`` each."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    if head_dim * bits % 8 != 0:
+        raise ValueError(f"head_dim={head_dim} not packable at {bits} bits")
+    return head_dim * bits // 8
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack integer codes in [0, 2^bits) along the last axis into uint8.
+
+    codes: [..., Dh] integer array with values < 2**bits.
+    returns: [..., Dh * bits // 8] uint8.
+    """
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    per_byte = 8 // bits
+    dh = codes.shape[-1]
+    grouped = codes.astype(jnp.uint32).reshape(*codes.shape[:-1], dh // per_byte, per_byte)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(
+        (1,) * (grouped.ndim - 1) + (per_byte,)
+    )
+    packed = jnp.sum(grouped << shifts, axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, head_dim: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`.
+
+    packed: [..., Dh * bits // 8] uint8.
+    returns: [..., Dh] uint8 codes in [0, 2^bits).
+    """
+    if bits == 8:
+        return packed
+    per_byte = 8 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    expanded = packed.astype(jnp.uint32)[..., :, None]  # [..., DhP, 1]
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint32) * bits).reshape(
+        (1,) * (expanded.ndim - 1) + (per_byte,)
+    )
+    codes = (expanded >> shifts) & mask
+    return codes.reshape(*packed.shape[:-1], head_dim).astype(jnp.uint8)

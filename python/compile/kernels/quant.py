@@ -1,0 +1,146 @@
+"""Pallas kernels for asymmetric KV cache quantization (L1 hot-spot).
+
+Two quantization modes, matching the paper (Sec. 3.2 / 4.2):
+
+* ``per-token-asym`` — one (scale, zero) per (batch, head, token), computed
+  over the head_dim channels of that token. Used for values always, and for
+  keys in the plain per-token baseline.
+* ``per-channel-asym`` — one (scale, zero) per (batch, head, channel),
+  computed over a *token group* of G tokens (KIVI-style key quantization;
+  the paper uses G = 32 with a fp residual of 32 recent tokens).
+
+All kernels run under ``interpret=True``: real-TPU Mosaic lowering emits a
+custom-call the CPU PJRT plugin cannot execute. Block shapes are still chosen
+for the TPU mapping documented in DESIGN.md §Hardware-Adaptation: one
+(batch, head) grid cell owns a [G, Dh] VMEM tile; pack/unpack is a lane-local
+shift; scales live in VMEM for the whole tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .packing import pack_codes, packed_width, unpack_codes
+
+_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Quantize: fp chunk [B, H, G, Dh] -> packed codes + scale/zero
+# ---------------------------------------------------------------------------
+
+
+def _quantize_token_kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits):
+    x = x_ref[0, 0]  # [G, Dh]
+    qmax = float(2**bits - 1)
+    lo = jnp.min(x, axis=-1, keepdims=True)  # [G, 1]
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, _EPS)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0.0, qmax).astype(jnp.uint8)
+    codes_ref[0, 0] = pack_codes(codes, bits)
+    scale_ref[0, 0] = scale[:, 0]
+    zero_ref[0, 0] = lo[:, 0]
+
+
+def _quantize_channel_kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits):
+    x = x_ref[0, 0]  # [G, Dh]
+    qmax = float(2**bits - 1)
+    lo = jnp.min(x, axis=0, keepdims=True)  # [1, Dh]
+    hi = jnp.max(x, axis=0, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, _EPS)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0.0, qmax).astype(jnp.uint8)
+    codes_ref[0, 0] = pack_codes(codes, bits)
+    scale_ref[0, 0] = scale[0]
+    zero_ref[0, 0] = lo[0]
+
+
+def quantize_chunk(x: jnp.ndarray, bits: int, mode: str):
+    """Quantize a fp chunk of KV cache.
+
+    x: [B, H, G, Dh] float32.
+    Returns (codes [B,H,G,DhP] u8, scale, zero) where scale/zero are
+    [B,H,G] for per-token mode and [B,H,Dh] for per-channel mode.
+    """
+    b, h, g, dh = x.shape
+    dhp = packed_width(dh, bits)
+    if mode == "per-token-asym":
+        kernel = functools.partial(_quantize_token_kernel, bits=bits)
+        sz_shape, sz_block = (b, h, g), (1, 1, g)
+    elif mode == "per-channel-asym":
+        kernel = functools.partial(_quantize_channel_kernel, bits=bits)
+        sz_shape, sz_block = (b, h, dh), (1, 1, dh)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[pl.BlockSpec((1, 1, g, dh), lambda i, j: (i, j, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dhp), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec(sz_block, lambda i, j: (i, j, 0)),
+            pl.BlockSpec(sz_block, lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g, dhp), jnp.uint8),
+            jax.ShapeDtypeStruct(sz_shape, jnp.float32),
+            jax.ShapeDtypeStruct(sz_shape, jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Dequantize: packed codes + scale/zero -> fp [B, H, S, Dh]
+# ---------------------------------------------------------------------------
+
+
+def _dequantize_token_kernel(codes_ref, scale_ref, zero_ref, out_ref, *, bits, dh):
+    codes = unpack_codes(codes_ref[0, 0], bits, dh).astype(jnp.float32)  # [S, Dh]
+    out_ref[0, 0] = codes * scale_ref[0, 0][:, None] + zero_ref[0, 0][:, None]
+
+
+def _dequantize_channel_kernel(codes_ref, scale_ref, zero_ref, out_ref, *, bits, dh, group):
+    codes = unpack_codes(codes_ref[0, 0], bits, dh).astype(jnp.float32)  # [S, Dh]
+    s = codes.shape[0]
+    # scale/zero: [S/G, Dh] -> broadcast each row over its token group.
+    scale = jnp.repeat(scale_ref[0, 0], group, axis=0)
+    zero = jnp.repeat(zero_ref[0, 0], group, axis=0)
+    out_ref[0, 0] = codes * scale[:s] + zero[:s]
+
+
+def dequantize(codes, scale, zero, bits: int, mode: str, head_dim: int, group: int = 32):
+    """Dequantize packed KV cache codes.
+
+    codes: [B, H, S, DhP] u8. scale/zero: [B,H,S] (per-token) or
+    [B,H,S//G,Dh] (per-channel, one row per committed token group).
+    Returns fp32 [B, H, S, Dh].
+    """
+    b, h, s, dhp = codes.shape
+    assert dhp == packed_width(head_dim, bits)
+    if mode == "per-token-asym":
+        kernel = functools.partial(_dequantize_token_kernel, bits=bits, dh=head_dim)
+        sz_block = pl.BlockSpec((1, 1, s), lambda i, j: (i, j, 0))
+    elif mode == "per-channel-asym":
+        kernel = functools.partial(
+            _dequantize_channel_kernel, bits=bits, dh=head_dim, group=group
+        )
+        ng = scale.shape[2]
+        sz_block = pl.BlockSpec((1, 1, ng, head_dim), lambda i, j: (i, j, 0, 0))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, dhp), lambda i, j: (i, j, 0, 0)),
+            sz_block,
+            sz_block,
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, head_dim), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, head_dim), jnp.float32),
+        interpret=True,
+    )(codes, scale, zero)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness signal).
+
+Each function here mirrors one kernel in ``quant.py`` / ``attention.py`` with
+straight-line jnp — no pallas, no packing tricks beyond the shared helpers.
+pytest asserts allclose between kernel and oracle across shapes/dtypes/modes
+(see python/tests/).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .packing import pack_codes, unpack_codes
+
+_EPS = 1e-8
+
+
+def quantize_chunk_ref(x, bits: int, mode: str):
+    """Oracle for quant.quantize_chunk. x: [B, H, G, Dh]."""
+    qmax = float(2**bits - 1)
+    if mode == "per-token-asym":
+        lo = jnp.min(x, axis=-1, keepdims=True)  # [B,H,G,1]
+        hi = jnp.max(x, axis=-1, keepdims=True)
+    elif mode == "per-channel-asym":
+        lo = jnp.min(x, axis=2, keepdims=True)  # [B,H,1,Dh]
+        hi = jnp.max(x, axis=2, keepdims=True)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    scale = jnp.maximum((hi - lo) / qmax, _EPS)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0.0, qmax).astype(jnp.uint8)
+    packed = pack_codes(codes, bits)
+    if mode == "per-token-asym":
+        return packed, scale[..., 0], lo[..., 0]
+    return packed, scale[:, :, 0, :], lo[:, :, 0, :]
+
+
+def dequantize_ref(codes, scale, zero, bits: int, mode: str, head_dim: int, group: int = 32):
+    """Oracle for quant.dequantize. codes: [B, H, S, DhP]."""
+    x = unpack_codes(codes, bits, head_dim).astype(jnp.float32)  # [B,H,S,Dh]
+    if mode == "per-token-asym":
+        return x * scale[..., None] + zero[..., None]
+    if mode == "per-channel-asym":
+        s = codes.shape[2]
+        sc = jnp.repeat(scale, group, axis=2)[:, :, :s, :]
+        zp = jnp.repeat(zero, group, axis=2)[:, :, :s, :]
+        return x * sc + zp
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def fake_quant_ref(x, bits: int, mode: str, group: int | None = None):
+    """Quantize + dequantize round trip (offline error-profiling primitive).
+
+    The whole chunk is one quantization group: per-channel stats span all
+    of x's token axis (pass ``group`` only to mimic a multi-group cache).
+    """
+    codes, scale, zero = quantize_chunk_ref(x, bits, mode)
+    if mode == "per-channel-asym":
+        scale, zero = scale[:, :, None, :], zero[:, :, None, :]
+        group = group or x.shape[2]
+    return dequantize_ref(codes, scale, zero, bits, mode, x.shape[-1], group or 32)
+
+
+def attention_ref(q, k, v, mask):
+    """Oracle for attention.flash_attention (naive two-pass softmax).
+
+    q: [B, Hq, T, Dh]; k/v: [B, Hkv, S, Dh]; mask: [B, T, S].
+    """
+    b, hq, t, dh = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)  # [B, Hq, S, Dh]
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, kx) / math.sqrt(dh)
+    scores = scores + mask[:, None, :, :]
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, vx)

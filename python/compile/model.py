@@ -1,0 +1,428 @@
+"""L2: the transformer decode/prefill graph, calling the L1 Pallas kernels.
+
+This module defines, per (quant-mode, k-bits, v-bits), the *single transformer
+layer step* that the Rust coordinator composes L times per token. The layer
+step is what gets AOT-lowered to HLO text (see ``aot.py``); the per-layer
+precision pair is baked into which executable Rust picks — the paper's
+"zero online decision overhead" property reduces to an array index.
+
+Quant modes (paper Sec. 3.2/4.2, App. C):
+
+* ``token`` — per-token-asym for both K and V. New-token K/V are quantized
+  *inside* the layer step (outputs are packed codes), so the per-token
+  baseline has no fp residual, matching the paper.
+* ``kivi``  — key per-channel-asym (token groups of G=32) + value
+  per-token-asym, both with a fp residual window of R=32 recent tokens.
+  The layer step outputs fp new-token K/V; the Rust cache manager owns the
+  residual ring and calls the ``quantize_chunk`` executables at commit time.
+* ``fp``    — full-precision cache (the 16-bit reference arm of
+  ``f_a(P) = A(KV_half) - A(KV_P)``).
+
+Synthetic-model substitution (DESIGN.md §2): weights are random but with
+*engineered* per-layer key-channel outliers and per-head attention sharpness,
+so the layer-wise sensitivity landscape is heterogeneous the way Fig. 7 / 11 /
+12 of the paper show for real LLMs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import flash_attention, fused_attention
+from .kernels.packing import packed_width
+from .kernels.quant import dequantize, quantize_chunk
+
+ATTN_BLOCK = 64  # flash-attention seq block; totals are padded to a multiple
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    group: int = 32       # per-channel token group == residual commit size
+    residual: int = 32    # fp residual window (KIVI residual length)
+    rms_eps: float = 1e-5
+    seed: int = 0
+    outlier_max: float = 16.0   # max per-layer key-channel outlier magnitude
+    temp_max: float = 3.0       # max per-head qk sharpness multiplier
+
+    def __post_init__(self):
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.d_model == self.n_heads * self.head_dim
+
+
+# Named configs. `tiny-*` variants exist for Table 2's model sweep: identical
+# shape, different sensitivity engineering (robust ≈ Llama-3.1-8B's tolerance
+# profile; sensitive ≈ Qwen2.5-7B's, which collapses at K4 per-token).
+CONFIGS: Dict[str, ModelConfig] = {}
+
+
+def _register(cfg: ModelConfig) -> ModelConfig:
+    CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+_register(ModelConfig("tiny", 4, 128, 4, 2, 32, 256, 64, seed=0))
+_register(ModelConfig("tiny-robust", 4, 128, 4, 2, 32, 256, 64, seed=1,
+                      outlier_max=3.0, temp_max=4.0))
+_register(ModelConfig("tiny-sensitive", 4, 128, 4, 2, 32, 256, 64, seed=2,
+                      outlier_max=48.0, temp_max=1.2))
+_register(ModelConfig("small", 8, 256, 4, 2, 64, 512, 512, seed=3))
+_register(ModelConfig("base", 12, 512, 8, 4, 64, 1024, 1024, seed=4))
+
+
+# ---------------------------------------------------------------------------
+# Sensitivity-engineering profiles
+# ---------------------------------------------------------------------------
+
+
+def sensitivity_profiles(cfg: ModelConfig) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-layer outlier magnitudes, per-(layer, head) sharpness temps, and
+    per-layer outlier channel indices.
+
+    Outliers drive the per-channel-vs-per-token key error gap (paper Table 9);
+    sharpness drives the streaming-vs-retrieval robustness split (Lemma 1):
+    high-temp heads have a dominating key token and are robust, low-temp
+    (diffuse) heads shift under low-bit key quantization.
+    """
+    rng = np.random.default_rng(cfg.seed + 1000)
+    outlier = rng.permutation(
+        np.geomspace(1.0, cfg.outlier_max, cfg.n_layers)
+    ).astype(np.float32)
+    temps = np.stack(
+        [
+            rng.permutation(np.geomspace(0.5, cfg.temp_max, cfg.n_heads))
+            for _ in range(cfg.n_layers)
+        ]
+    ).astype(np.float32)
+    n_out = max(1, cfg.head_dim // 16)  # outlier channels per kv head
+    chans = np.stack(
+        [
+            np.concatenate(
+                [
+                    rng.choice(cfg.head_dim, size=n_out, replace=False) + h * cfg.head_dim
+                    for h in range(cfg.n_kv_heads)
+                ]
+            )
+            for _ in range(cfg.n_layers)
+        ]
+    ).astype(np.int64)
+    return outlier, temps, chans
+
+
+LAYER_WEIGHT_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")
+
+
+def layer_weight_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hq, hkv, dh, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    return {
+        "ln1": (d,),
+        "wq": (d, hq * dh),
+        "wk": (d, hkv * dh),
+        "wv": (d, hkv * dh),
+        "wo": (hq * dh, d),
+        "ln2": (d,),
+        "w1": (d, f),
+        "w2": (f, d),
+    }
+
+
+def init_weights(cfg: ModelConfig) -> Dict[str, np.ndarray]:
+    """Deterministic weight init with sensitivity engineering applied."""
+    rng = np.random.default_rng(cfg.seed)
+    outlier, temps, chans = sensitivity_profiles(cfg)
+    d = cfg.d_model
+    w: Dict[str, np.ndarray] = {}
+    w["embed"] = (rng.standard_normal((cfg.vocab, d)) / math.sqrt(d)).astype(np.float32)
+    w["ln_f"] = np.ones(d, dtype=np.float32)
+    shapes = layer_weight_shapes(cfg)
+    for l in range(cfg.n_layers):
+        for nm in LAYER_WEIGHT_NAMES:
+            shp = shapes[nm]
+            if nm.startswith("ln"):
+                t = np.ones(shp, dtype=np.float32)
+            else:
+                t = (rng.standard_normal(shp) / math.sqrt(shp[0])).astype(np.float32)
+            if nm == "wk":
+                # key-channel outliers: a few output channels per kv head get
+                # magnitude outlier[l] (the Fig. 7 channel-outlier structure).
+                t[:, chans[l]] *= outlier[l]
+            if nm == "wq":
+                # per-head attention sharpness: scales q so qk^T logits of
+                # head h are multiplied by temps[l, h].
+                th = np.repeat(temps[l], cfg.head_dim)
+                t *= th[None, :]
+            if nm in ("wo", "w2"):
+                t *= 0.25  # damp the residual stream growth over layers
+            w[f"layer{l}.{nm}"] = t
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Model math (shared by all layer-step variants)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """positions: [B, T] int32 -> (cos, sin) each [B, T, Dh/2]."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, H, T, Dh]; cos/sin: [B, T, Dh/2] (split-half convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[:, None], sin[:, None]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _pad_seq(x, total_pad):
+    if total_pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, total_pad), (0, 0)))
+
+
+def _attention_mask(cfg, batch, t, s_max, with_residual, cache_len, res_len, padded_total):
+    """Additive mask [B, T, padded_total] over [cache | residual? | new | pad]."""
+    r = cfg.residual if with_residual else 0
+    j = jnp.arange(padded_total)
+    valid_cache = (j[None, :] < cache_len[:, None]) & (j[None, :] < s_max)  # [B, P]
+    valid = jnp.broadcast_to(valid_cache[:, None, :], (batch, t, padded_total))
+    if with_residual:
+        in_res = (j >= s_max) & (j < s_max + r)
+        valid_res = in_res[None, :] & ((j - s_max)[None, :] < res_len[:, None])
+        valid = valid | jnp.broadcast_to(valid_res[:, None, :], valid.shape)
+    new0 = s_max + r
+    ti = jnp.arange(t)
+    valid_new = (j[None, :] >= new0) & ((j - new0)[None, :] <= ti[:, None]) & (
+        j[None, :] < new0 + t
+    )
+    valid = valid | jnp.broadcast_to(valid_new[None], valid.shape)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# Attention kernel selection (§Perf L1-1): the fused whole-sequence kernel
+# collapses the (B, Hq, seq-blocks) interpret-mode grid to (B,), which is the
+# dominant CPU-PJRT perf lever; set KVTUNER_FLASH=1 at AOT time to lower the
+# flash (online-softmax, seq-blocked) kernel instead — the TPU-shaped layout.
+import os
+
+USE_FLASH = os.environ.get("KVTUNER_FLASH", "0") == "1"
+
+
+def _layer_core(cfg, x, q, k_full, v_full, mask, wo, ln2, w1, w2):
+    """Attention output projection + MLP, given assembled K/V and mask."""
+    b, t = x.shape[0], x.shape[1]
+    if USE_FLASH:
+        attn = flash_attention(q, k_full, v_full, mask, block_k=ATTN_BLOCK)
+    else:
+        attn = fused_attention(q, k_full, v_full, mask)
+    o = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.head_dim)
+    x = x + o @ wo
+    h = rmsnorm(x, ln2, cfg.rms_eps)
+    x = x + jax.nn.gelu(h @ w1) @ w2
+    return x
+
+
+def _qkv(cfg, x, pos, ln1, wq, wk, wv):
+    b, t, _ = x.shape
+    h = rmsnorm(x, ln1, cfg.rms_eps)
+    q = (h @ wq).reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (h @ wk).reshape(b, t, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = (h @ wv).reshape(b, t, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    cos, sin = rope_tables(cfg, positions)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+# ---------------------------------------------------------------------------
+# Layer-step variants (the AOT units)
+# ---------------------------------------------------------------------------
+
+
+def make_layer_step_fp(cfg: ModelConfig, batch: int, t: int, s_max: int):
+    """Full-precision cache layer step: the KV16 reference arm."""
+
+    def fn(x, pos, cache_len, ln1, wq, wk, wv, wo, ln2, w1, w2, k_fp, v_fp):
+        q, k_new, v_new = _qkv(cfg, x, pos, ln1, wq, wk, wv)
+        total = s_max + t
+        pad = (-total) % ATTN_BLOCK
+        k_full = _pad_seq(jnp.concatenate([k_fp, k_new], axis=2), pad)
+        v_full = _pad_seq(jnp.concatenate([v_fp, v_new], axis=2), pad)
+        res_len = jnp.zeros_like(cache_len)
+        mask = _attention_mask(cfg, batch, t, s_max, False, cache_len, res_len, total + pad)
+        y = _layer_core(cfg, x, q, k_full, v_full, mask, wo, ln2, w1, w2)
+        return y, k_new, v_new
+
+    return fn
+
+
+def make_layer_step_token(cfg: ModelConfig, kb: int, vb: int, batch: int, t: int, s_max: int):
+    """Per-token-asym layer step. Cache codes in, new-token codes out."""
+
+    def fn(
+        x, pos, cache_len,
+        ln1, wq, wk, wv, wo, ln2, w1, w2,
+        k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+    ):
+        q, k_new, v_new = _qkv(cfg, x, pos, ln1, wq, wk, wv)
+        k_cache = dequantize(k_codes, k_scale, k_zero, kb, "per-token-asym", cfg.head_dim)
+        v_cache = dequantize(v_codes, v_scale, v_zero, vb, "per-token-asym", cfg.head_dim)
+        total = s_max + t
+        pad = (-total) % ATTN_BLOCK
+        k_full = _pad_seq(jnp.concatenate([k_cache, k_new], axis=2), pad)
+        v_full = _pad_seq(jnp.concatenate([v_cache, v_new], axis=2), pad)
+        res_len = jnp.zeros_like(cache_len)
+        mask = _attention_mask(cfg, batch, t, s_max, False, cache_len, res_len, total + pad)
+        y = _layer_core(cfg, x, q, k_full, v_full, mask, wo, ln2, w1, w2)
+        kc, ks, kz = quantize_chunk(k_new, kb, "per-token-asym")
+        vc, vs, vz = quantize_chunk(v_new, vb, "per-token-asym")
+        return y, kc, ks, kz, vc, vs, vz
+
+    return fn
+
+
+def make_layer_step_kivi(cfg: ModelConfig, kb: int, vb: int, batch: int, t: int, s_max: int):
+    """KIVI layer step: key per-channel cache + fp residual ring; value
+    per-token cache + fp residual ring. New-token K/V returned fp (the Rust
+    cache manager appends them to the residual and commits groups of G)."""
+
+    def fn(
+        x, pos, cache_len, res_len,
+        ln1, wq, wk, wv, wo, ln2, w1, w2,
+        k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+        k_res, v_res,
+    ):
+        q, k_new, v_new = _qkv(cfg, x, pos, ln1, wq, wk, wv)
+        k_cache = dequantize(
+            k_codes, k_scale, k_zero, kb, "per-channel-asym", cfg.head_dim, cfg.group
+        )
+        v_cache = dequantize(v_codes, v_scale, v_zero, vb, "per-token-asym", cfg.head_dim)
+        total = s_max + cfg.residual + t
+        pad = (-total) % ATTN_BLOCK
+        k_full = _pad_seq(jnp.concatenate([k_cache, k_res, k_new], axis=2), pad)
+        v_full = _pad_seq(jnp.concatenate([v_cache, v_res, v_new], axis=2), pad)
+        mask = _attention_mask(cfg, batch, t, s_max, True, cache_len, res_len, total + pad)
+        y = _layer_core(cfg, x, q, k_full, v_full, mask, wo, ln2, w1, w2)
+        return y, k_new, v_new
+
+    return fn
+
+
+def make_quantize_chunk(cfg: ModelConfig, bits: int, mode: str, batch: int, chunk: int):
+    """Standalone commit executable: fp chunk -> packed codes + scale/zero."""
+
+    def fn(x):
+        return quantize_chunk(x, bits, mode)
+
+    return fn
+
+
+def make_embed(cfg: ModelConfig, batch: int, t: int):
+    def fn(ids, embed):
+        return (jnp.take(embed, ids, axis=0),)
+
+    return fn
+
+
+def make_lm_head(cfg: ModelConfig, batch: int):
+    def fn(x, ln_f, embed):
+        h = rmsnorm(x, ln_f, cfg.rms_eps)
+        logits = h @ embed.T
+        return (logits, jnp.argmax(logits, axis=-1).astype(jnp.int32))
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Input specs (shared with aot.py so the manifest matches the lowering)
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def weight_specs(cfg: ModelConfig) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    shapes = layer_weight_shapes(cfg)
+    return [(nm, _f32(*shapes[nm])) for nm in LAYER_WEIGHT_NAMES]
+
+
+def cache_specs(cfg: ModelConfig, mode: str, kb: int, vb: int, batch: int, s_max: int):
+    """Cache-tensor (name, spec) list for a layer step, per mode."""
+    h, dh, g = cfg.n_kv_heads, cfg.head_dim, cfg.group
+    if mode == "fp":
+        return [
+            ("k_fp", _f32(batch, h, s_max, dh)),
+            ("v_fp", _f32(batch, h, s_max, dh)),
+        ]
+    specs = [("k_codes", _u8(batch, h, s_max, packed_width(dh, kb)))]
+    if mode == "token":
+        specs += [("k_scale", _f32(batch, h, s_max)), ("k_zero", _f32(batch, h, s_max))]
+    else:  # kivi: key per-channel
+        ng = s_max // g
+        specs += [("k_scale", _f32(batch, h, ng, dh)), ("k_zero", _f32(batch, h, ng, dh))]
+    specs += [
+        ("v_codes", _u8(batch, h, s_max, packed_width(dh, vb))),
+        ("v_scale", _f32(batch, h, s_max)),
+        ("v_zero", _f32(batch, h, s_max)),
+    ]
+    if mode == "kivi":
+        specs += [
+            ("k_res", _f32(batch, h, cfg.residual, dh)),
+            ("v_res", _f32(batch, h, cfg.residual, dh)),
+        ]
+    return specs
+
+
+def layer_step_specs(cfg: ModelConfig, mode: str, kb: int, vb: int, batch: int, t: int, s_max: int):
+    specs = [("x", _f32(batch, t, cfg.d_model)), ("pos", _i32(batch)), ("cache_len", _i32(batch))]
+    if mode == "kivi":
+        specs.append(("res_len", _i32(batch)))
+    specs += weight_specs(cfg)
+    specs += cache_specs(cfg, mode, kb, vb, batch, s_max)
+    return specs
+
+
+def make_layer_step(cfg: ModelConfig, mode: str, kb: int, vb: int, batch: int, t: int, s_max: int):
+    if mode == "fp":
+        return make_layer_step_fp(cfg, batch, t, s_max)
+    if mode == "token":
+        return make_layer_step_token(cfg, kb, vb, batch, t, s_max)
+    if mode == "kivi":
+        return make_layer_step_kivi(cfg, kb, vb, batch, t, s_max)
+    raise ValueError(f"unknown mode {mode!r}")

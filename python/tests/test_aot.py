@@ -1,0 +1,85 @@
+"""AOT manifest sanity: shapes in manifest match a fresh lowering."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_pairs(manifest):
+    layers = [a for a in manifest["artifacts"] if a["kind"] == "layer"]
+    for mode in ("token", "kivi"):
+        pairs = {
+            (a["k_bits"], a["v_bits"])
+            for a in layers
+            if a["mode"] == mode and a["batch"] == 1 and a["t"] == 1
+        }
+        assert pairs == {(k, v) for k in (8, 4, 2) for v in (8, 4, 2)}, mode
+    assert any(a["mode"] == "fp" for a in layers)
+
+
+def test_manifest_files_exist(manifest):
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+    for m in manifest["models"].values():
+        assert os.path.exists(os.path.join(ART, m["weights"]))
+
+
+def test_weights_bin_matches_init(manifest):
+    """weights-tiny.bin round-trips init_weights exactly."""
+    cfg = M.CONFIGS["tiny"]
+    entry = manifest["models"]["tiny"]
+    blob = np.fromfile(os.path.join(ART, entry["weights"]), dtype=np.float32)
+    w = M.init_weights(cfg)
+    for nm in ("embed", "ln_f", "layer0.wk", f"layer{cfg.n_layers - 1}.w2"):
+        t = entry["tensors"][nm]
+        size = int(np.prod(t["shape"]))
+        got = blob[t["offset"] : t["offset"] + size].reshape(t["shape"])
+        np.testing.assert_array_equal(got, w[nm])
+
+
+def test_manifest_input_shapes_match_specs(manifest):
+    cfg = M.CONFIGS["tiny"]
+    a = next(
+        x for x in manifest["artifacts"]
+        if x["kind"] == "layer" and x["mode"] == "kivi"
+        and x["k_bits"] == 4 and x["v_bits"] == 2 and x["batch"] == 1 and x["t"] == 1
+    )
+    specs = M.layer_step_specs(cfg, "kivi", 4, 2, 1, 1, a["s_max"])
+    assert [i["name"] for i in a["inputs"]] == [n for n, _ in specs]
+    for got, (_, spec) in zip(a["inputs"], specs):
+        assert tuple(got["shape"]) == spec.shape
+        assert got["dtype"] == str(spec.dtype)
+
+
+def test_hlo_text_parses_as_module(manifest):
+    """Every artifact begins with an HloModule header (text format)."""
+    for a in manifest["artifacts"][:8]:
+        with open(os.path.join(ART, a["file"])) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), a["name"]
+
+
+def test_stamp_caching(tmp_path, capsys):
+    """Second aot invocation with identical params is a no-op."""
+    stamp = os.path.join(ART, ".stamp")
+    if not os.path.exists(stamp):
+        pytest.skip("stamp missing")
+    with open(stamp) as f:
+        content = f.read()
+    assert content.startswith(aot.source_stamp())

@@ -1,0 +1,141 @@
+"""Layer-step consistency: quantized variants vs the fp reference arm."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+from compile.kernels.packing import packed_width
+
+CFG = M.CONFIGS["tiny"]
+B, S = 2, 256
+H, DH, G, R = CFG.n_kv_heads, CFG.head_dim, CFG.group, CFG.residual
+
+
+@pytest.fixture(scope="module")
+def weights():
+    w = M.init_weights(CFG)
+    return [jnp.asarray(w[f"layer1.{n}"]) for n in M.LAYER_WEIGHT_NAMES]
+
+
+def _fp_cache(seed, n_tok):
+    k = jax.random.normal(jax.random.PRNGKey(seed), (B, H, S, DH), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, H, S, DH), jnp.float32)
+    mask = (jnp.arange(S) < n_tok)[None, None, :, None]
+    return k * mask, v * mask
+
+
+def _token_cache_from_fp(k, v, kb, vb):
+    kc, ks, kz = ref.quantize_chunk_ref(k, kb, "per-token-asym")
+    vc, vs, vz = ref.quantize_chunk_ref(v, vb, "per-token-asym")
+    return kc, ks, kz, vc, vs, vz
+
+
+def test_token_8bit_close_to_fp(weights):
+    """K8V8 per-token cache ≈ fp cache at the layer-output level (paper: KV8
+    is lossless; expect small relative error)."""
+    n_tok = 64
+    k, v = _fp_cache(0, n_tok)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, 1, CFG.d_model))
+    pos = jnp.full((B,), n_tok, jnp.int32)
+    clen = jnp.full((B,), n_tok, jnp.int32)
+
+    y_fp, kn, vn = M.make_layer_step(CFG, "fp", 16, 16, B, 1, S)(x, pos, clen, *weights, k, v)
+    caches = _token_cache_from_fp(k, v, 8, 8)
+    out = M.make_layer_step(CFG, "token", 8, 8, B, 1, S)(x, pos, clen, *weights, *caches)
+    rel = float(jnp.linalg.norm(out[0] - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.02, rel
+    # new-token K/V agree after dequantization
+    kn_hat = ref.dequantize_ref(out[1], out[2], out[3], 8, "per-token-asym", DH)
+    np.testing.assert_allclose(np.asarray(kn_hat), np.asarray(kn), atol=0.05)
+
+
+def test_token_error_grows_as_bits_drop(weights):
+    n_tok = 128
+    k, v = _fp_cache(2, n_tok)
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, 1, CFG.d_model))
+    pos = clen = jnp.full((B,), n_tok, jnp.int32)
+    y_fp, _, _ = M.make_layer_step(CFG, "fp", 16, 16, B, 1, S)(x, pos, clen, *weights, k, v)
+    errs = []
+    for bits in (8, 4, 2):
+        caches = _token_cache_from_fp(k, v, bits, bits)
+        out = M.make_layer_step(CFG, "token", bits, bits, B, 1, S)(x, pos, clen, *weights, *caches)
+        errs.append(float(jnp.linalg.norm(out[0] - y_fp) / jnp.linalg.norm(y_fp)))
+    assert errs[0] < errs[1] < errs[2], errs
+
+
+def test_kivi_residual_only_matches_fp(weights):
+    """Empty quantized cache + all tokens in the fp residual == fp attention
+    over those tokens exactly (the residual path adds no quant error)."""
+    n_res = 16
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, 1, CFG.d_model))
+    kf = jax.random.normal(jax.random.PRNGKey(8), (B, H, R, DH))
+    vf = jax.random.normal(jax.random.PRNGKey(9), (B, H, R, DH))
+    pos = jnp.full((B,), n_res, jnp.int32)
+    clen = jnp.zeros((B,), jnp.int32)
+    rlen = jnp.full((B,), n_res, jnp.int32)
+
+    ngs = S // G
+    kc = jnp.zeros((B, H, S, packed_width(DH, 4)), jnp.uint8)
+    ks = jnp.ones((B, H, ngs, DH))
+    kz = jnp.zeros((B, H, ngs, DH))
+    vc = jnp.zeros((B, H, S, packed_width(DH, 2)), jnp.uint8)
+    vs, vz = jnp.ones((B, H, S)), jnp.zeros((B, H, S))
+    y_kivi, kn, vn = M.make_layer_step(CFG, "kivi", 4, 2, B, 1, S)(
+        x, pos, clen, rlen, *weights, kc, ks, kz, vc, vs, vz, kf, vf
+    )
+
+    # fp arm: put the same tokens in the fp cache
+    k_fp = jnp.zeros((B, H, S, DH)).at[:, :, :R].set(kf)
+    v_fp = jnp.zeros((B, H, S, DH)).at[:, :, :R].set(vf)
+    y_fp, kn2, vn2 = M.make_layer_step(CFG, "fp", 16, 16, B, 1, S)(
+        x, pos, jnp.full((B,), n_res, jnp.int32), *weights, k_fp, v_fp
+    )
+    np.testing.assert_allclose(np.asarray(y_kivi), np.asarray(y_fp), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kn), np.asarray(kn2), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 4, DH))
+    pos = jnp.array([[3, 4, 5, 6]], jnp.int32)
+    cos, sin = M.rope_tables(CFG, pos)
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, DH))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, DH))
+
+    def dot_at(pi, pj):
+        ci, si = M.rope_tables(CFG, jnp.array([[pi]], jnp.int32))
+        cj, sj = M.rope_tables(CFG, jnp.array([[pj]], jnp.int32))
+        return float(jnp.sum(M.apply_rope(q, ci, si) * M.apply_rope(k, cj, sj)))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+
+
+def test_sensitivity_profiles_deterministic_and_heterogeneous():
+    o1, t1, c1 = M.sensitivity_profiles(CFG)
+    o2, t2, c2 = M.sensitivity_profiles(CFG)
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(t1, t2)
+    assert o1.max() / o1.min() > 4  # heterogeneous layers
+    assert len(set(np.round(o1, 3))) == CFG.n_layers
+    # different seeds -> different profiles
+    o3, _, _ = M.sensitivity_profiles(M.CONFIGS["tiny-sensitive"])
+    assert not np.allclose(o1, o3)
+
+
+def test_outliers_present_in_wk():
+    w = M.init_weights(CFG)
+    _, _, chans = M.sensitivity_profiles(CFG)
+    outlier, _, _ = M.sensitivity_profiles(CFG)
+    l = int(np.argmax(outlier))
+    wk = w[f"layer{l}.wk"]
+    col_norm = np.linalg.norm(wk, axis=0)
+    assert col_norm[chans[l]].mean() > 3 * np.median(col_norm)

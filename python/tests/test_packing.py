@@ -1,0 +1,63 @@
+"""Property tests for bit-packing (hypothesis over shapes/bits/values)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.packing import pack_codes, packed_width, unpack_codes
+
+BITS = st.sampled_from([2, 4, 8])
+
+
+@given(
+    bits=BITS,
+    b=st.integers(1, 3),
+    s=st.integers(1, 9),
+    dh_mult=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_pack_unpack_roundtrip(bits, b, s, dh_mult, seed):
+    dh = dh_mult * (8 // bits) * 4  # always packable
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, size=(b, s, dh), dtype=np.uint8)
+    packed = pack_codes(jnp.asarray(codes), bits)
+    assert packed.shape == (b, s, packed_width(dh, bits))
+    assert packed.dtype == jnp.uint8
+    back = unpack_codes(packed, bits, dh)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+def test_packed_width_values():
+    assert packed_width(64, 8) == 64
+    assert packed_width(64, 4) == 32
+    assert packed_width(64, 2) == 16
+    assert packed_width(32, 2) == 8
+
+
+def test_packed_width_rejects_bad_bits():
+    with pytest.raises(ValueError):
+        packed_width(64, 3)
+    with pytest.raises(ValueError):
+        packed_width(3, 2)
+
+
+def test_pack_is_dense():
+    """Every byte of the packed buffer carries information (no padding)."""
+    dh = 16
+    for bits in (2, 4):
+        codes = jnp.full((1, dh), (1 << bits) - 1, dtype=jnp.uint8)
+        packed = pack_codes(codes, bits)
+        assert (np.asarray(packed) == 0xFF).all()
+
+
+def test_unpack_channel_order():
+    """Channel d lives at byte d//per_byte, bit-offset bits*(d%per_byte)."""
+    bits, dh = 4, 8
+    codes = jnp.arange(dh, dtype=jnp.uint8)[None]
+    packed = np.asarray(pack_codes(codes, bits))[0]
+    assert packed[0] == 0x10  # ch0=0 low nibble, ch1=1 high nibble
+    assert packed[1] == 0x32
+    back = unpack_codes(jnp.asarray(packed)[None], bits, dh)
+    np.testing.assert_array_equal(np.asarray(back)[0], np.arange(dh))

@@ -1,0 +1,105 @@
+"""Pallas quantization kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+from compile.kernels.packing import packed_width
+
+MODES = st.sampled_from(["per-token-asym", "per-channel-asym"])
+BITS = st.sampled_from([2, 4, 8])
+
+
+def _rand(shape, seed, scale=1.0, outlier=None):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    if outlier:
+        x[..., 0] *= outlier  # channel-0 outlier
+    return jnp.asarray(x)
+
+
+@given(
+    mode=MODES, bits=BITS,
+    b=st.integers(1, 2), h=st.integers(1, 3),
+    g=st.sampled_from([1, 8, 32]), dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_quantize_matches_ref(mode, bits, b, h, g, dh, seed):
+    x = _rand((b, h, g, dh), seed)
+    c, s, z = quant.quantize_chunk(x, bits, mode)
+    cr, sr, zr = ref.quantize_chunk_ref(x, bits, mode)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-6)
+
+
+@given(
+    mode=MODES, bits=BITS,
+    s=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_dequantize_matches_ref(mode, bits, s, seed):
+    b, h, dh, g = 1, 2, 32, 32
+    x = _rand((b, h, s, dh), seed)
+    # build a realistic cache: quantize group by group like the Rust manager
+    chunks = [ref.quantize_chunk_ref(x[:, :, i : i + g], bits, mode) for i in range(0, s, g)]
+    codes = jnp.concatenate([c for c, _, _ in chunks], axis=2)
+    if mode == "per-token-asym":
+        scale = jnp.concatenate([sc for _, sc, _ in chunks], axis=2)
+        zero = jnp.concatenate([z for _, _, z in chunks], axis=2)
+    else:
+        scale = jnp.stack([sc for _, sc, _ in chunks], axis=2)
+        zero = jnp.stack([z for _, _, z in chunks], axis=2)
+    d = quant.dequantize(codes, scale, zero, bits, mode, dh, g)
+    dr = ref.dequantize_ref(codes, scale, zero, bits, mode, dh, g)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), atol=1e-5)
+
+
+@given(mode=MODES, bits=BITS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fake_quant_error_bound(mode, bits, seed):
+    """|x - dq(q(x))| <= scale/2 + eps elementwise (round-to-nearest)."""
+    x = _rand((1, 2, 32, 32), seed, scale=3.0)
+    _, scale, _ = ref.quantize_chunk_ref(x, bits, mode)
+    xhat = ref.fake_quant_ref(x, bits, mode)
+    if mode == "per-token-asym":
+        bound = np.asarray(scale)[..., None] * (0.5 + 1e-4) + 1e-6
+    else:
+        bound = np.asarray(scale)[:, :, None, :] * (0.5 + 1e-4) + 1e-6
+    err = np.abs(np.asarray(x - xhat))
+    np.testing.assert_array_less(err, np.broadcast_to(bound, err.shape))
+
+
+def test_error_monotone_in_bits():
+    """Mean |x - x̂| strictly shrinks as precision grows (paper Table 9)."""
+    x = _rand((2, 2, 64, 64), seed=7, scale=2.0)
+    for mode in ("per-token-asym", "per-channel-asym"):
+        errs = [
+            float(jnp.mean(jnp.abs(x - ref.fake_quant_ref(x, bits, mode))))
+            for bits in (2, 4, 8)
+        ]
+        assert errs[0] > errs[1] > errs[2], (mode, errs)
+
+
+def test_channel_outliers_favor_per_channel():
+    """With strong channel outliers, per-channel-asym key error is far lower
+    than per-token-asym at the same precision (paper Sec. 4.2 / Table 9)."""
+    x = _rand((1, 2, 64, 64), seed=11, outlier=30.0)
+    e_tok = float(jnp.mean(jnp.abs(x - ref.fake_quant_ref(x, 4, "per-token-asym"))))
+    e_ch = float(jnp.mean(jnp.abs(x - ref.fake_quant_ref(x, 4, "per-channel-asym"))))
+    assert e_ch < e_tok * 0.5, (e_ch, e_tok)
+
+
+def test_packed_shapes():
+    x = _rand((1, 1, 32, 64), seed=0)
+    for bits in (2, 4, 8):
+        c, s, z = quant.quantize_chunk(x, bits, "per-token-asym")
+        assert c.shape == (1, 1, 32, packed_width(64, bits))
+        assert s.shape == z.shape == (1, 1, 32)
+        c, s, z = quant.quantize_chunk(x, bits, "per-channel-asym")
+        assert c.shape == (1, 1, 32, packed_width(64, bits))
+        assert s.shape == z.shape == (1, 1, 64)

@@ -1,0 +1,77 @@
+//! Bench: hot-path micro-benchmarks — Rust-native quantization/packing
+//! (tuner substrate), PJRT layer-step latency per precision pair, and the
+//! KIVI commit path. The §Perf iteration log in EXPERIMENTS.md is driven by
+//! these numbers. Run: `cargo bench --bench quant_hotpath`
+
+use std::sync::Arc;
+
+use kvtuner::config::{LayerSpec, Mode, PrecisionPair};
+use kvtuner::engine::Engine;
+use kvtuner::quant::{quantize_per_channel, quantize_per_token};
+use kvtuner::runtime::Runtime;
+use kvtuner::util::bench::bench;
+use kvtuner::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Rust-native quant substrate (profiler hot path) ----
+    let (t, dh) = (512usize, 64usize);
+    let mut rng = Rng::seed(3);
+    let x: Vec<f32> = (0..t * dh).map(|_| rng.normal() as f32).collect();
+    for bits in [2u8, 4, 8] {
+        bench(&format!("quantize_per_token {t}x{dh} @{bits}bit"), 3, 30, || {
+            let q = quantize_per_token(&x, t, dh, bits).unwrap();
+            std::hint::black_box(&q.codes);
+        });
+        bench(&format!("quantize_per_channel {t}x{dh} @{bits}bit"), 3, 30, || {
+            let q = quantize_per_channel(&x, t, dh, bits).unwrap();
+            std::hint::black_box(&q.codes);
+        });
+    }
+    let q = quantize_per_token(&x, t, dh, 4).unwrap();
+    bench(&format!("dequantize {t}x{dh} @4bit"), 3, 30, || {
+        std::hint::black_box(q.dequantize());
+    });
+
+    // ---- PJRT engine step latency per precision pair ----
+    let dir = kvtuner::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP PJRT benches: artifacts missing");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let cfg = rt.manifest.config.clone();
+    let batch = *rt.manifest.decode_batches().last().unwrap_or(&1);
+    for (label, mode, k, v) in [
+        ("fp16", Mode::Fp, 16u8, 16u8),
+        ("token KV8", Mode::Token, 8, 8),
+        ("token KV2", Mode::Token, 2, 2),
+        ("kivi K4V2", Mode::Kivi, 4, 2),
+    ] {
+        let specs = LayerSpec::uniform(mode, PrecisionPair::new(k, v), cfg.n_layers);
+        let mut eng = Engine::new(rt.clone(), &cfg.name, specs, batch, 256, 32)?;
+        // half-full cache
+        for slot in 0..batch {
+            eng.cache.pos[slot] = 128;
+            for l in 0..cfg.n_layers {
+                let lc = &mut eng.cache.layers[l];
+                lc.cache_len[slot] = 128;
+            }
+        }
+        let tokens = vec![1i32; batch];
+        let active = vec![true; batch];
+        eng.decode_step(&tokens, &active)?;
+        bench(&format!("decode_step b{batch} s256 fill128 [{label}]"), 2, 20, || {
+            eng.decode_step(&tokens, &active).unwrap();
+        });
+    }
+
+    // ---- prefill path ----
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let mut eng = Engine::new(rt.clone(), &cfg.name, specs, batch, 256, 32)?;
+    let prompt: Vec<i32> = (0..96).map(|i| (i % cfg.vocab) as i32).collect();
+    bench("prefill 96 tokens (kivi K4V2, chunked 32)", 1, 10, || {
+        eng.cache.reset_slot(0);
+        eng.prefill(0, &prompt).unwrap();
+    });
+    Ok(())
+}

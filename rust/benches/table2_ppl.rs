@@ -1,0 +1,55 @@
+//! Bench: regenerate Table 2 — pseudo-perplexity of uniform KV precision
+//! pairs across the synthetic model family (robust / default / sensitive),
+//! the analogue of the paper's wikitext word-perplexity sweep.
+//! Run: `cargo bench --bench table2_ppl`
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::model::Weights;
+use kvtuner::tuner::{self, calib};
+use kvtuner::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = kvtuner::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table2: artifacts missing (run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let pairs = [
+        PrecisionPair::new(8, 8), PrecisionPair::new(8, 4), PrecisionPair::new(8, 2),
+        PrecisionPair::new(4, 8), PrecisionPair::new(4, 4), PrecisionPair::new(4, 2),
+        PrecisionPair::new(2, 8), PrecisionPair::new(2, 4), PrecisionPair::new(2, 2),
+    ];
+
+    for mode in [Mode::Kivi, Mode::Token] {
+        let mut t = Table::with_headers(
+            &format!("Table 2 — pseudo-perplexity, {} mode", mode.as_str()),
+            {
+                let mut h = vec!["model".to_string(), "FP".into()];
+                h.extend(pairs.iter().map(|p| p.label()));
+                h
+            },
+        );
+        for model in manifest.models.keys() {
+            let w = Weights::load(&manifest, model)?;
+            let prompts = calib::calib_set(cfg.vocab, 6, 32, 77);
+            let reference = tuner::build_reference(&cfg, &w, &prompts, 24)?;
+            let mut row = vec![model.clone()];
+            let fp_specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+            row.push(format!("{:.3}", tuner::pseudo_perplexity(&cfg, &w, &reference, &fp_specs)?));
+            for pair in pairs {
+                let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+                row.push(format!("{:.3}", tuner::pseudo_perplexity(&cfg, &w, &reference, &specs)?));
+            }
+            t.row(row);
+            eprintln!("[table2] {model} / {} done", mode.as_str());
+        }
+        t.print();
+    }
+    println!(
+        "\npaper shape check: KV8 ≈ K8V4 ≈ FP; K4V8/K2V4 blow up before K8V4/K4V2 \
+         (key precision dominates); the sensitive model degrades earliest."
+    );
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Attention-pattern analysis (paper Sec. 4.4 / App. E): classifies heads as
+//! streaming (sparse, concentrated — robust to KV quantization per Lemma 1)
+//! vs retrieval (diffuse — sensitive), and produces the token-level
+//! attention-shift rows behind Fig. 2/4 and the block maps behind Fig. 11/12.
+
+use anyhow::Result;
+
+use crate::config::LayerSpec;
+use crate::quant::error::{attention_probs, LayerCapture};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadClass {
+    /// Concentrated attention (sink/recent-window); dominated key tokens.
+    Streaming,
+    /// Diffuse, dynamic attention over many keys.
+    Retrieval,
+    Mixed,
+}
+
+impl HeadClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HeadClass::Streaming => "streaming",
+            HeadClass::Retrieval => "retrieval",
+            HeadClass::Mixed => "mixed",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HeadPattern {
+    pub layer: usize,
+    pub head: usize,
+    /// Mean top-1 attention mass over queries (concentration).
+    pub top1_mass: f64,
+    /// Mean normalized entropy over queries (1 = uniform, 0 = delta).
+    pub entropy: f64,
+    pub class: HeadClass,
+}
+
+/// Classify one layer's heads from its fp attention probabilities.
+pub fn classify_layer(cap: &LayerCapture, layer: usize, group: usize) -> Result<Vec<HeadPattern>> {
+    let probs = attention_probs(cap, LayerSpec::fp(), group)?;
+    let (s, hq) = (cap.s, cap.n_heads);
+    let mut out = Vec::with_capacity(hq);
+    for h in 0..hq {
+        let mut top1 = 0f64;
+        let mut ent = 0f64;
+        let mut n = 0usize;
+        for i in 1..s {
+            let row = &probs[(h * s + i) * s..(h * s + i) * s + i + 1];
+            let mx = row.iter().cloned().fold(0f32, f32::max) as f64;
+            let mut e = 0f64;
+            for &p in row {
+                if p > 1e-9 {
+                    e -= (p as f64) * (p as f64).ln();
+                }
+            }
+            let norm = ((i + 1) as f64).ln().max(1e-9);
+            top1 += mx;
+            ent += e / norm;
+            n += 1;
+        }
+        let top1_mass = top1 / n as f64;
+        let entropy = ent / n as f64;
+        let class = if top1_mass > 0.5 && entropy < 0.5 {
+            HeadClass::Streaming
+        } else if top1_mass < 0.25 && entropy > 0.7 {
+            HeadClass::Retrieval
+        } else {
+            HeadClass::Mixed
+        };
+        out.push(HeadPattern { layer, head: h, top1_mass, entropy, class });
+    }
+    Ok(out)
+}
+
+/// Token-level attention row of one (head, query) under fp vs a quantized
+/// spec — Fig. 2/4's "distribution shift" series. Returns (fp_row, q_row).
+pub fn attention_shift_row(
+    cap: &LayerCapture,
+    head: usize,
+    query: usize,
+    spec: LayerSpec,
+    group: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let s = cap.s;
+    anyhow::ensure!(query < s && head < cap.n_heads);
+    let fp = attention_probs(cap, LayerSpec::fp(), group)?;
+    let q = attention_probs(cap, spec, group)?;
+    let row = |p: &[f32]| p[(head * s + query) * s..(head * s + query) * s + query + 1].to_vec();
+    Ok((row(&fp), row(&q)))
+}
+
+/// Block-averaged attention map for one head (Fig. 11/12's coarse maps):
+/// returns a (S/bs) x (S/bs) row-major grid of mean probabilities.
+pub fn block_map(
+    cap: &LayerCapture,
+    head: usize,
+    block: usize,
+    group: usize,
+) -> Result<Vec<f64>> {
+    let s = cap.s;
+    let nb = s / block;
+    let probs = attention_probs(cap, LayerSpec::fp(), group)?;
+    let mut grid = vec![0f64; nb * nb];
+    let mut counts = vec![0usize; nb * nb];
+    for i in 0..nb * block {
+        for j in 0..=i {
+            let cell = (i / block) * nb + j / block;
+            grid[cell] += probs[(head * s + i) * s + j] as f64;
+            counts[cell] += 1;
+        }
+    }
+    for (g, c) in grid.iter_mut().zip(counts) {
+        if c > 0 {
+            *g /= c as f64;
+        }
+    }
+    Ok(grid)
+}
+
+/// Mean total-variation distance between fp and quantized attention rows,
+/// per head — the quantitative form of Fig. 2's shift.
+pub fn head_shift_scores(
+    cap: &LayerCapture,
+    spec: LayerSpec,
+    group: usize,
+) -> Result<Vec<f64>> {
+    let (s, hq) = (cap.s, cap.n_heads);
+    let fp = attention_probs(cap, LayerSpec::fp(), group)?;
+    let q = attention_probs(cap, spec, group)?;
+    let mut out = Vec::with_capacity(hq);
+    for h in 0..hq {
+        let mut tv = 0f64;
+        let mut n = 0usize;
+        for i in 1..s {
+            for j in 0..=i {
+                tv += (fp[(h * s + i) * s + j] - q[(h * s + i) * s + j]).abs() as f64;
+            }
+            n += 1;
+        }
+        out.push(tv / (2.0 * n as f64));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, PrecisionPair};
+    use crate::util::rng::Rng;
+
+    fn capture(sharp: f32, s: usize) -> LayerCapture {
+        let (hq, hkv, dh) = (2, 1, 16);
+        let mut r = Rng::seed(9);
+        let mut gen = |n: usize, sc: f32| (0..n).map(|_| r.normal() as f32 * sc).collect::<Vec<f32>>();
+        LayerCapture {
+            q: gen(s * hq * dh, sharp),
+            k: gen(hkv * s * dh, 1.0),
+            v: gen(hkv * s * dh, 1.0),
+            s,
+            n_heads: hq,
+            n_kv_heads: hkv,
+            head_dim: dh,
+        }
+    }
+
+    #[test]
+    fn sharp_queries_classify_concentrated() {
+        let sharp = classify_layer(&capture(8.0, 48), 0, 32).unwrap();
+        let diffuse = classify_layer(&capture(0.05, 48), 0, 32).unwrap();
+        assert!(sharp[0].top1_mass > diffuse[0].top1_mass);
+        assert!(sharp[0].entropy < diffuse[0].entropy);
+        assert_eq!(diffuse[0].class, HeadClass::Retrieval);
+    }
+
+    #[test]
+    fn shift_scores_grow_with_lower_bits() {
+        let cap = capture(2.0, 64);
+        let spec = |k| LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(k, 8) };
+        let s8: f64 = head_shift_scores(&cap, spec(8), 32).unwrap().iter().sum();
+        let s2: f64 = head_shift_scores(&cap, spec(2), 32).unwrap().iter().sum();
+        assert!(s2 > s8, "{s2} vs {s8}");
+    }
+
+    #[test]
+    fn block_map_rows_bounded() {
+        let cap = capture(1.0, 32);
+        let grid = block_map(&cap, 0, 8, 32).unwrap();
+        assert_eq!(grid.len(), 16);
+        assert!(grid.iter().all(|&g| (0.0..=1.0).contains(&g)));
+    }
+
+    #[test]
+    fn shift_row_shapes() {
+        let cap = capture(1.0, 32);
+        let spec = LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(2, 2) };
+        let (f, q) = attention_shift_row(&cap, 1, 20, spec, 32).unwrap();
+        assert_eq!(f.len(), 21);
+        assert_eq!(q.len(), 21);
+        let sf: f32 = f.iter().sum();
+        assert!((sf - 1.0).abs() < 1e-3);
+    }
+}

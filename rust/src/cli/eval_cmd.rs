@@ -1,0 +1,160 @@
+//! `kvtuner eval` — accuracy tables:
+//!   table2: pseudo-perplexity of the 9 uniform pairs across the model family
+//!   table5: fidelity accuracy vs prompt length ("shots"), uniform + tuned
+//!   table7: long-context fidelity (LongBench analogue)
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, PrecisionPair};
+use crate::model::Weights;
+use crate::tuner::{self, calib, TunedConfig};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+use super::profile_cmd::table_pair_order;
+
+pub fn run(args: &Args) -> Result<()> {
+    match args.str("exp", "table2").as_str() {
+        "table2" => table2(args),
+        "table5" => table5(args),
+        "table7" => table7(args),
+        other => anyhow::bail!("unknown --exp {other:?} (table2|table5|table7)"),
+    }
+}
+
+/// Table 2 — word-perplexity analogue across models × uniform pairs.
+fn table2(args: &Args) -> Result<()> {
+    let dir = super::artifact_dir(args);
+    let manifest = crate::config::Manifest::load(&dir)?;
+    let cfg = &manifest.config;
+    let models = args.list("models", &manifest.models.keys().cloned().collect::<Vec<_>>().join(","));
+    let mode = Mode::parse(&args.str("mode", "kivi"))?;
+    let n_prompts = args.usize("prompts", 6)?;
+    let len = args.usize("len", 32)?;
+    let horizon = args.usize("horizon", 24)?;
+
+    let mut t = Table::with_headers(&format!("Table 2 — pseudo-perplexity ({} mode)", mode.as_str()),
+        {
+            let mut h = vec!["model".to_string(), "FP".to_string()];
+            h.extend(table_pair_order().iter().map(|p| p.label()));
+            h
+        },
+    );
+    for model in &models {
+        let weights = Weights::load(&manifest, model)?;
+        let prompts = calib::calib_set(cfg.vocab, n_prompts, len, 77);
+        let reference = tuner::build_reference(cfg, &weights, &prompts, horizon)?;
+        let mut row = vec![model.clone()];
+        let fp = tuner::pseudo_perplexity(
+            cfg, &weights, &reference,
+            &LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+        )?;
+        row.push(format!("{fp:.3}"));
+        for pair in table_pair_order() {
+            let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+            let ppl = tuner::pseudo_perplexity(cfg, &weights, &reference, &specs)?;
+            row.push(format!("{ppl:.3}"));
+        }
+        t.row(row);
+        eprintln!("[table2] {model} done");
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 5/6 — fidelity accuracy vs prompt length, uniform pairs + KVTuner
+/// configs (pass tuned configs via --configs a.json,b.json).
+fn table5(args: &Args) -> Result<()> {
+    let (manifest, weights, model) = super::load_model(args)?;
+    let cfg = &manifest.config;
+    let horizon = args.usize("horizon", 24)?;
+    let lens: Vec<usize> = args
+        .list("lens", "16,48,96")
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let n_prompts = args.usize("prompts", 6)?;
+
+    // evaluated settings: BF16-style fp, uniform pairs per mode, tuned configs
+    let mut settings: Vec<(String, Vec<LayerSpec>)> = vec![(
+        "FP".into(),
+        LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+    )];
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in [PrecisionPair::new(8, 8), PrecisionPair::new(4, 4), PrecisionPair::new(2, 2)] {
+            settings.push((
+                format!("{}/{}", mode.as_str(), pair.label()),
+                LayerSpec::uniform(mode, pair, cfg.n_layers),
+            ));
+        }
+    }
+    for cpath in args.list("configs", "") {
+        let c = TunedConfig::load(std::path::Path::new(&cpath))?;
+        settings.push((c.label.clone(), c.specs.clone()));
+    }
+
+    let mut t = Table::with_headers(&format!("Table 5/6 — fidelity accuracy vs prompt length ({model})"),
+        {
+            let mut h = vec!["setting".to_string()];
+            h.extend(lens.iter().map(|l| format!("len{l}")));
+            h.push("average".into());
+            h
+        },
+    );
+    for (label, specs) in &settings {
+        let mut row = vec![label.clone()];
+        let mut sum = 0.0;
+        for &len in &lens {
+            let prompts = calib::calib_set(cfg.vocab, n_prompts, len, 55 + len as u64);
+            let reference = tuner::build_reference(cfg, &weights, &prompts, horizon)?;
+            let acc = tuner::fidelity_accuracy(cfg, &weights, &reference, specs)?;
+            sum += acc;
+            row.push(format!("{acc:.4}"));
+        }
+        row.push(format!("{:.4}", sum / lens.len() as f64));
+        t.row(row);
+        eprintln!("[table5] {label} done");
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 7 — long-context generation fidelity (LongBench analogue): long
+/// prompts near the reference engine capacity, same settings grid.
+fn table7(args: &Args) -> Result<()> {
+    let (manifest, weights, model) = super::load_model(args)?;
+    let cfg = &manifest.config;
+    let len = args.usize("len", 192)?;
+    let horizon = args.usize("horizon", 32)?;
+    let n_prompts = args.usize("prompts", 6)?;
+
+    let mut settings: Vec<(String, Vec<LayerSpec>)> = vec![(
+        "FP".into(),
+        LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+    )];
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in [PrecisionPair::new(8, 8), PrecisionPair::new(8, 4), PrecisionPair::new(4, 4)] {
+            settings.push((
+                format!("{}/{}", mode.as_str(), pair.label()),
+                LayerSpec::uniform(mode, pair, cfg.n_layers),
+            ));
+        }
+    }
+    for cpath in args.list("configs", "") {
+        let c = TunedConfig::load(std::path::Path::new(&cpath))?;
+        settings.push((c.label.clone(), c.specs.clone()));
+    }
+
+    let prompts = calib::calib_set(cfg.vocab, n_prompts, len, 99);
+    let reference = tuner::build_reference(cfg, &weights, &prompts, horizon)?;
+    let mut t = Table::new(&format!("Table 7 — long-context fidelity (len={len}, {model})"),
+        &["setting", "accuracy"],
+    );
+    for (label, specs) in &settings {
+        let acc = tuner::fidelity_accuracy(cfg, &weights, &reference, specs)?;
+        t.row(vec![label.clone(), format!("{acc:.4}")]);
+        eprintln!("[table7] {label} done");
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! `kvtuner` CLI: every paper table/figure has a regeneration subcommand
+//! (see DESIGN.md §5 for the experiment index).
+//!
+//!   kvtuner profile    — Table 3/9, Fig 3/7/13–19 (offline error profiling)
+//!   kvtuner tune       — Table 4/10/11, Fig 5/8/9/10 (the KVTuner pipeline)
+//!   kvtuner eval       — Table 2/5/6/7 (accuracy/perplexity tables)
+//!   kvtuner throughput — Table 8 (serving throughput)
+//!   kvtuner patterns   — Fig 2/4/11/12 (attention patterns & shifts)
+//!   kvtuner serve      — demo serving loop with the router
+
+mod eval_cmd;
+mod patterns_cmd;
+mod profile_cmd;
+mod serve_cmd;
+pub mod throughput_cmd;
+mod tune_cmd;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+const USAGE: &str = "\
+kvtuner — sensitivity-aware layer-wise mixed-precision KV cache quantization
+
+USAGE: kvtuner <subcommand> [flags]
+
+SUBCOMMANDS
+  profile     offline error profiling (Table 3/9, Fig 3/7)
+              --model tiny --mode token|kivi|both --prompts 6 --len 48
+              --exp table9|table3|fig3|fig7
+  tune        full KVTuner pipeline (Table 4/10/11, Fig 5/8/9; --no-prune = Fig 6/10)
+              --model tiny --mode token|kivi --algorithm nsga2|moead
+              --evals 120 --out tuned.json --no-prune
+  eval        accuracy tables (Table 2/5/6/7)
+              --exp table2|table5|table7 --model tiny --configs a.json,b.json
+  throughput  serving throughput grid (Table 8)
+              --model tiny --batch 2 --input-lens 64,128,192 --steps 40
+  patterns    head classification + attention shift (Fig 2/4/11/12)
+              --model tiny --layer 0 --tokens
+  serve       run the multi-engine router on synthetic load
+              --model tiny --requests 16 --batch 2
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default artifacts/tiny or $KVTUNER_ARTIFACTS)
+";
+
+pub fn cli_main() -> Result<()> {
+    let args = Args::from_env(&["no-prune", "tokens", "real-fill", "help"])?;
+    if args.switch("help") || args.subcommand.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "profile" => profile_cmd::run(&args),
+        "tune" => tune_cmd::run(&args),
+        "eval" => eval_cmd::run(&args),
+        "throughput" => throughput_cmd::run(&args),
+        "patterns" => patterns_cmd::run(&args),
+        "serve" => serve_cmd::run(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Shared: resolve the artifact dir from flags/env.
+pub(crate) fn artifact_dir(args: &Args) -> std::path::PathBuf {
+    match args.opt_str("artifacts") {
+        Some(d) => d.into(),
+        None => crate::default_artifact_dir(),
+    }
+}
+
+/// Shared: load manifest + weights for `--model` (defaults to the config name).
+pub(crate) fn load_model(
+    args: &Args,
+) -> Result<(crate::config::Manifest, crate::model::Weights, String)> {
+    let dir = artifact_dir(args);
+    let manifest = crate::config::Manifest::load(&dir)?;
+    let model = args.str("model", &manifest.config.name);
+    let weights = crate::model::Weights::load(&manifest, &model)?;
+    Ok((manifest, weights, model))
+}
+
+pub(crate) fn parse_modes(s: &str) -> Result<Vec<crate::config::Mode>> {
+    match s {
+        "both" => Ok(vec![crate::config::Mode::Token, crate::config::Mode::Kivi]),
+        m => Ok(vec![crate::config::Mode::parse(m)?]),
+    }
+}

@@ -1,0 +1,107 @@
+//! `kvtuner patterns` — attention-pattern analysis (Fig 2/4/11/12): head
+//! classification per layer, per-head attention shift under quantization,
+//! and (with --tokens) token-level attention rows fp vs 4/2-bit key quant.
+
+use anyhow::Result;
+
+use crate::analysis;
+use crate::config::{LayerSpec, Mode, PrecisionPair};
+use crate::tuner::{calib, profiler};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let (manifest, weights, model) = super::load_model(args)?;
+    let cfg = &manifest.config;
+    let len = args.usize("len", 64)?;
+    let prompts = calib::calib_set(cfg.vocab, 1, len, args.usize("seed", 31)? as u64);
+    let captures = profiler::capture_prompts(cfg, &weights, &prompts)?;
+    let caps = &captures[0];
+
+    // Fig 11/12 — head classes per layer + block maps summary
+    let mut t = Table::new(
+        &format!("Fig 11/12 — attention head classification ({model})"),
+        &["layer", "head", "top1 mass", "norm entropy", "class"],
+    );
+    let mut class_counts = std::collections::BTreeMap::<&str, usize>::new();
+    for (l, cap) in caps.iter().enumerate() {
+        for hp in analysis::classify_layer(cap, l, cfg.group)? {
+            *class_counts.entry(hp.class.as_str()).or_default() += 1;
+            t.row(vec![
+                l.to_string(),
+                hp.head.to_string(),
+                format!("{:.3}", hp.top1_mass),
+                format!("{:.3}", hp.entropy),
+                hp.class.as_str().to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!("class totals: {class_counts:?}");
+
+    // Fig 2/4 — per-head attention shift (mean TV distance) under key quant
+    let mode = Mode::parse(&args.str("mode", "token"))?;
+    let mut ts = Table::new(
+        "Fig 2/4 — per-head attention shift (mean TV distance) under key quantization",
+        &["layer", "head", "K8", "K4", "K2"],
+    );
+    for (l, cap) in caps.iter().enumerate() {
+        let mut per_bits = Vec::new();
+        for kb in [8u8, 4, 2] {
+            let spec = LayerSpec { mode, pair: PrecisionPair::new(kb, 8) };
+            per_bits.push(analysis::head_shift_scores(cap, spec, cfg.group)?);
+        }
+        for h in 0..cfg.n_heads {
+            ts.row(vec![
+                l.to_string(),
+                h.to_string(),
+                format!("{:.4}", per_bits[0][h]),
+                format!("{:.4}", per_bits[1][h]),
+                format!("{:.4}", per_bits[2][h]),
+            ]);
+        }
+    }
+    ts.print();
+
+    // --tokens: Fig 2's token-level rows for the most-shifted head
+    if args.switch("tokens") {
+        let layer = args.usize("layer", cfg.n_layers / 2)?;
+        let cap = &caps[layer];
+        let spec2 = LayerSpec { mode, pair: PrecisionPair::new(2, 8) };
+        let shifts = analysis::head_shift_scores(cap, spec2, cfg.group)?;
+        let head = shifts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(h, _)| h)
+            .unwrap_or(0);
+        let query = len - 1;
+        println!("\ntoken-level attention of layer {layer} head {head}, query {query}:");
+        let (fp_row, _) = analysis::attention_shift_row(cap, head, query, LayerSpec::fp(), cfg.group)?;
+        print_row("fp16", &fp_row);
+        for kb in [4u8, 2] {
+            let spec = LayerSpec { mode, pair: PrecisionPair::new(kb, 8) };
+            let (_, qrow) = analysis::attention_shift_row(cap, head, query, spec, cfg.group)?;
+            print_row(&format!("K{kb}"), &qrow);
+        }
+    }
+    Ok(())
+}
+
+fn print_row(label: &str, row: &[f32]) {
+    let line: Vec<String> = row
+        .iter()
+        .map(|&p| {
+            if p > 0.2 {
+                "#".into()
+            } else if p > 0.05 {
+                "+".into()
+            } else if p > 0.01 {
+                ".".into()
+            } else {
+                " ".into()
+            }
+        })
+        .collect();
+    println!("{label:>6} |{}|  (top={:.3})", line.join(""), row.iter().cloned().fold(0f32, f32::max));
+}

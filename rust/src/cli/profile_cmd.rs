@@ -1,0 +1,137 @@
+//! `kvtuner profile` — offline error profiling (Tables 3/9, Figs 3/7/13–19).
+
+use anyhow::Result;
+
+use crate::config::{Mode, PrecisionPair, PAIRS};
+use crate::tuner::{calib, profiler};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let (manifest, weights, model) = super::load_model(args)?;
+    let cfg = &manifest.config;
+    let modes = super::parse_modes(&args.str("mode", "both"))?;
+    let n_prompts = args.usize("prompts", 6)?;
+    let len = args.usize("len", 48)?;
+    let exp = args.str("exp", "table9");
+
+    let prompts = calib::calib_set(cfg.vocab, n_prompts, len, args.usize("seed", 2024)? as u64);
+    eprintln!("[profile] model={model} prompts={n_prompts} len={len} modes={modes:?}");
+    let prof = profiler::profile(cfg, &weights, &prompts, &modes)?;
+
+    match exp.as_str() {
+        // Table 9: model-averaged e_k/e_v/e_a/e_o per (mode, uniform precision)
+        "table9" => {
+            let mut t = Table::new("Table 9 — KV quantization error analysis (model-averaged)",
+                &["precision", "mode", "e_k", "e_v", "e_a", "e_o"],
+            );
+            for bits in [8u8, 4, 2] {
+                for &mode in &modes {
+                    let pair = PrecisionPair::new(bits, bits);
+                    let m = prof.model_avg(mode, pair);
+                    t.row(vec![
+                        pair.label(),
+                        mode_label(mode),
+                        format!("{:.6}", m.e_k),
+                        format!("{:.6}", m.e_v),
+                        format!("{:.6}", m.e_a),
+                        format!("{:.6}", m.e_o),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        // Table 3: model-averaged relative attention output error per pair
+        "table3" => {
+            for &mode in &modes {
+                let mut t = Table::new(&format!("Table 3 — relative attention output error e_o ({})", mode_label(mode)),
+                    &["metric", "KV8", "K8V4", "K8V2", "K4V8", "KV4", "K4V2", "K2V8", "K2V4", "KV2"],
+                );
+                let mut row = vec!["e_o".to_string()];
+                for pair in table_pair_order() {
+                    row.push(format!("{:.3}", prof.model_avg(mode, pair).e_o));
+                }
+                t.row(row);
+                t.print();
+            }
+        }
+        // Fig 3 / 13..19: per-layer e_a and e_o series per pair
+        "fig3" => {
+            for &mode in &modes {
+                for metric in ["e_a", "e_o"] {
+                    let mut t = Table::with_headers(&format!("Fig 3/13 — layer-wise {metric} ({})", mode_label(mode)),
+                        {
+                            let mut h = vec!["pair".to_string()];
+                            h.extend((0..cfg.n_layers).map(|l| format!("L{l}")));
+                            h
+                        },
+                    );
+                    for pair in table_pair_order() {
+                        let series = if metric == "e_a" {
+                            prof.layer_series_ea(mode, pair)
+                        } else {
+                            prof.layer_series(mode, pair)
+                        };
+                        let mut row = vec![pair.label()];
+                        row.extend(series.iter().map(|v| format!("{v:.4}")));
+                        t.row(row);
+                    }
+                    t.print();
+                }
+            }
+        }
+        // Fig 7: per-layer e_k / e_v per mode and precision
+        "fig7" => {
+            for &mode in &modes {
+                let mut t = Table::with_headers(&format!("Fig 7 — layer-wise e_k / e_v ({})", mode_label(mode)),
+                    {
+                        let mut h = vec!["metric".to_string()];
+                        h.extend((0..cfg.n_layers).map(|l| format!("L{l}")));
+                        h
+                    },
+                );
+                for bits in [8u8, 4, 2] {
+                    let pair = PrecisionPair::new(bits, bits);
+                    for (nm, f) in [("e_k", true), ("e_v", false)] {
+                        let mut row = vec![format!("{nm}@{bits}bit")];
+                        for l in 0..cfg.n_layers {
+                            let e = prof.errors[l].get(&(mode, pair)).copied().unwrap_or_default();
+                            row.push(format!("{:.4}", if f { e.e_k } else { e.e_v }));
+                        }
+                        t.row(row);
+                    }
+                }
+                t.print();
+            }
+        }
+        "json" => println!("{}", prof.to_json().to_string_pretty()),
+        other => anyhow::bail!("unknown --exp {other:?} (table9|table3|fig3|fig7|json)"),
+    }
+    Ok(())
+}
+
+fn mode_label(m: Mode) -> String {
+    match m {
+        Mode::Token => "per-token-asym".into(),
+        Mode::Kivi => "kivi (K per-channel)".into(),
+        Mode::Fp => "fp".into(),
+    }
+}
+
+/// Table 2/3's column order.
+pub(crate) fn table_pair_order() -> Vec<PrecisionPair> {
+    vec![
+        PrecisionPair::new(8, 8),
+        PrecisionPair::new(8, 4),
+        PrecisionPair::new(8, 2),
+        PrecisionPair::new(4, 8),
+        PrecisionPair::new(4, 4),
+        PrecisionPair::new(4, 2),
+        PrecisionPair::new(2, 8),
+        PrecisionPair::new(2, 4),
+        PrecisionPair::new(2, 2),
+    ]
+    .into_iter()
+    .filter(|p| PAIRS.contains(p))
+    .collect()
+}

@@ -1,0 +1,100 @@
+//! `kvtuner serve` — run the multi-engine router on synthetic load and
+//! report per-engine serving metrics. Demonstrates the deployment story:
+//! multiple precision configs of one model served side by side, routed by
+//! requested accuracy class.
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, PrecisionPair};
+use crate::coordinator::{AccuracyClass, Router, WorkerSpec};
+use crate::tuner::TunedConfig;
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = super::artifact_dir(args);
+    let manifest = crate::config::Manifest::load(&dir)?;
+    let cfg = manifest.config.clone();
+    let model = args.str("model", &cfg.name);
+    let batch = args.usize("batch", *manifest.decode_batches().last().unwrap_or(&1))?;
+    let s_max = args.usize("smax", 256)?;
+    let n_requests = args.usize("requests", 12)?;
+    let max_new = args.usize("max-new", 16)?;
+
+    // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
+    // given, else K8V4
+    let mut workers = vec![
+        WorkerSpec {
+            name: "kv8-high".into(),
+            model: model.clone(),
+            specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), cfg.n_layers),
+            class: AccuracyClass::High,
+            batch,
+            s_max,
+            prefill_chunk: 32,
+        },
+        WorkerSpec {
+            name: "k4v2-efficient".into(),
+            model: model.clone(),
+            specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers),
+            class: AccuracyClass::Efficient,
+            batch,
+            s_max,
+            prefill_chunk: 32,
+        },
+    ];
+    let balanced_specs = match args.opt_str("config") {
+        Some(p) => TunedConfig::load(std::path::Path::new(p))?.specs,
+        None => LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 4), cfg.n_layers),
+    };
+    workers.push(WorkerSpec {
+        name: "tuned-balanced".into(),
+        model: model.clone(),
+        specs: balanced_specs,
+        class: AccuracyClass::Balanced,
+        batch,
+        s_max,
+        prefill_chunk: 32,
+    });
+
+    eprintln!("[serve] starting {} workers (batch={batch}, smax={s_max})", workers.len());
+    let t0 = std::time::Instant::now();
+    let router = Router::start(dir, workers)?;
+    eprintln!("[serve] workers ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // synthetic open-loop load
+    let mut rng = Rng::seed(5);
+    let classes = [AccuracyClass::High, AccuracyClass::Balanced, AccuracyClass::Efficient];
+    let mut subs = Vec::new();
+    for i in 0..n_requests {
+        let plen = rng.range(16, 64);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let class = classes[i % classes.len()];
+        subs.push((class, router.submit(prompt, max_new, class)?));
+    }
+    let mut t = Table::new(
+        "serve — per-request results",
+        &["id", "class", "engine", "tokens", "ttft ms", "total ms"],
+    );
+    for (class, sub) in subs {
+        let r = sub.wait()?;
+        anyhow::ensure!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        t.row(vec![
+            r.id.to_string(),
+            class.as_str().into(),
+            r.engine.clone(),
+            r.tokens.len().to_string(),
+            format!("{:.1}", r.ttft.as_secs_f64() * 1e3),
+            format!("{:.1}", r.total.as_secs_f64() * 1e3),
+        ]);
+    }
+    t.print();
+
+    let mut tm = Table::new("serve — per-engine metrics", &["engine", "summary"]);
+    for (name, snap) in router.shutdown()? {
+        tm.row(vec![name, snap.to_string()]);
+    }
+    tm.print();
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! `kvtuner throughput` — Table 8: decode throughput (tokens/s) across KV
+//! precision settings and context lengths on the PJRT engine. Memory traffic
+//! genuinely scales with the precision map (bit-packed cache buffers), which
+//! is what produces the paper's ranking KV8 < K8V4 < KV4 < K4V2 < tuned.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, PrecisionPair};
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+use crate::tuner::TunedConfig;
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+pub struct ThroughputRow {
+    pub equiv_bits: f64,
+    pub kv_mib: f64,
+    pub toks_per_sec: f64,
+    /// KV bytes actually touched per decode step (valid-fraction of buffers).
+    pub kv_bytes_per_step: f64,
+}
+
+impl ThroughputRow {
+    /// Projected decode throughput on a memory-bandwidth-bound device
+    /// (attention decode is memory-bound — paper Sec. 6.4): tokens/s if each
+    /// step's cost were reading the live KV cache once at `bw` bytes/s.
+    pub fn projected_tps(&self, batch: usize, bw: f64) -> f64 {
+        batch as f64 / (self.kv_bytes_per_step / bw)
+    }
+}
+
+/// Measure steady-state decode throughput for one config at one context fill.
+pub fn measure(
+    rt: &Arc<Runtime>,
+    model: &str,
+    specs: Vec<LayerSpec>,
+    batch: usize,
+    s_max: usize,
+    input_len: usize,
+    steps: usize,
+    real_fill: bool,
+) -> Result<ThroughputRow> {
+    let mut eng = Engine::new(rt.clone(), model, specs, batch, s_max, 32)?;
+    // fill the cache to input_len: honest chunked prefill, or synthetic fill
+    // (identical memory traffic; buffers are zero-filled and masked valid)
+    if real_fill {
+        for slot in 0..batch {
+            let prompt: Vec<i32> =
+                (0..input_len).map(|i| ((i * 31 + slot * 7) % eng.cfg.vocab) as i32).collect();
+            eng.prefill(slot, &prompt)?;
+        }
+    } else {
+        let g = eng.cfg.group;
+        for slot in 0..batch {
+            eng.cache.pos[slot] = input_len as i32;
+            for l in 0..eng.cfg.n_layers {
+                let lc = &mut eng.cache.layers[l];
+                match lc.spec.mode {
+                    Mode::Kivi => {
+                        let committed = (input_len / g) * g;
+                        lc.cache_len[slot] = committed as i32;
+                        lc.res_len[slot] = (input_len - committed) as i32;
+                    }
+                    _ => lc.cache_len[slot] = input_len as i32,
+                }
+            }
+        }
+    }
+    let bits = eng.equivalent_bits();
+    let kv_mib = eng.kv_bytes() as f64 / (1024.0 * 1024.0);
+    let fill = input_len as f64 / s_max as f64;
+    let kv_bytes_per_step = eng.kv_bytes() as f64 * fill;
+
+    let tokens = vec![1i32; batch];
+    let active = vec![true; batch];
+    // warmup
+    for _ in 0..3 {
+        eng.decode_step(&tokens, &active)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        eng.decode_step(&tokens, &active)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Ok(ThroughputRow {
+        equiv_bits: bits,
+        kv_mib,
+        toks_per_sec: batch as f64 * steps as f64 / dt,
+        kv_bytes_per_step,
+    })
+}
+
+pub fn settings_grid(
+    n_layers: usize,
+    configs: &[String],
+) -> Result<Vec<(String, Vec<LayerSpec>)>> {
+    let mut settings: Vec<(String, Vec<LayerSpec>)> = vec![
+        ("KV8 (baseline)".into(), LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), n_layers)),
+        ("K8V4".into(), LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 4), n_layers)),
+        ("KV4".into(), LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 4), n_layers)),
+        ("K4V2".into(), LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), n_layers)),
+        ("KV2".into(), LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(2, 2), n_layers)),
+    ];
+    for cpath in configs {
+        if cpath.is_empty() {
+            continue;
+        }
+        let c = TunedConfig::load(std::path::Path::new(cpath))?;
+        settings.push((c.label.clone(), c.specs.clone()));
+    }
+    Ok(settings)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = super::artifact_dir(args);
+    let rt = Arc::new(Runtime::load(&dir)?);
+    let cfg = rt.manifest.config.clone();
+    let model = args.str("model", &cfg.name);
+    let batch = args.usize("batch", *rt.manifest.decode_batches().last().unwrap_or(&1))?;
+    let s_max = args.usize("smax", 256)?;
+    let steps = args.usize("steps", 40)?;
+    let input_lens: Vec<usize> = args
+        .list("input-lens", "64,128,192")
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let real_fill = args.switch("real-fill");
+    let settings = settings_grid(cfg.n_layers, &args.list("configs", ""))?;
+
+    let mut t = Table::with_headers(&format!("Table 8 — decode throughput, batch={batch}, steps={steps} (tokens/s)"),
+        {
+            let mut h = vec!["setting".to_string(), "bits".into(), "KV MiB".into()];
+            h.extend(input_lens.iter().map(|l| format!("len={l}")));
+            h.push("vs KV8".into());
+            h
+        },
+    );
+    let mut baseline: Vec<f64> = Vec::new();
+    for (i, (label, specs)) in settings.iter().enumerate() {
+        let mut row = vec![label.clone()];
+        let mut bits = 0.0;
+        let mut mib = 0.0;
+        let mut tps_list = Vec::new();
+        for &il in &input_lens {
+            let r = measure(&rt, &model, specs.clone(), batch, s_max, il, steps, real_fill)?;
+            bits = r.equiv_bits;
+            mib = r.kv_mib;
+            tps_list.push(r.toks_per_sec);
+        }
+        if i == 0 {
+            baseline = tps_list.clone();
+        }
+        row.insert(1, format!("{bits:.2}"));
+        row.insert(2, format!("{mib:.1}"));
+        for &tps in &tps_list {
+            row.push(format!("{tps:.0}"));
+        }
+        let speedup: f64 = tps_list
+            .iter()
+            .zip(&baseline)
+            .map(|(a, b)| a / b)
+            .sum::<f64>()
+            / tps_list.len() as f64;
+        row.push(format!("{:+.1}%", (speedup - 1.0) * 100.0));
+        t.row(row);
+        eprintln!("[throughput] {label} done");
+    }
+    t.print();
+    Ok(())
+}

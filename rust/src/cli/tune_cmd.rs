@@ -1,0 +1,157 @@
+//! `kvtuner tune` — the full KVTuner pipeline. Prints Table 4 (intra-layer
+//! pruning), Table 10 (clustering), Table 11 (searched configs), and the
+//! Fig 5/8/9 Pareto-front series; `--no-prune` is the Fig 6/10 ablation.
+
+use anyhow::Result;
+
+use crate::config::Mode;
+use crate::tuner::{self, Algorithm, MooOptions, TuneOptions};
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let (manifest, weights, model) = super::load_model(args)?;
+    let cfg = &manifest.config;
+    let mode = Mode::parse(&args.str("mode", "token"))?;
+    let algorithm = match args.str("algorithm", "nsga2").as_str() {
+        "nsga2" => Algorithm::Nsga2,
+        "moead" => Algorithm::Moead,
+        a => anyhow::bail!("unknown --algorithm {a:?}"),
+    };
+    let opts = TuneOptions {
+        mode,
+        n_prompts: args.usize("prompts", 6)?,
+        prompt_len: args.usize("len", 40)?,
+        horizon: args.usize("horizon", 24)?,
+        seed: args.usize("seed", 1234)? as u64,
+        moo: MooOptions {
+            evaluations: args.usize("evals", 120)?,
+            population: args.usize("population", 16)?,
+            seed: args.usize("seed", 1234)? as u64,
+            bit_constraints: args
+                .list("constraints", "4,6")
+                .iter()
+                .map(|s| s.parse::<f64>().unwrap())
+                .collect(),
+            mutation_rate: args.f64("mutation", 0.2)?,
+        },
+        algorithm,
+        no_prune: args.switch("no-prune"),
+        dbscan_eps: args.f64("eps", 0.05)?,
+    };
+
+    eprintln!(
+        "[tune] model={model} mode={} algo={algorithm:?} evals={} no_prune={}",
+        mode.as_str(),
+        opts.moo.evaluations,
+        opts.no_prune
+    );
+    let t0 = std::time::Instant::now();
+    let result = tuner::run_pipeline(cfg, &weights, &opts)?;
+    eprintln!("[tune] pipeline done in {:.1}s ({} evals)", t0.elapsed().as_secs_f64(), result.evals);
+
+    // Table 4 — intra-layer pruning
+    let mut t4 = Table::new(
+        "Table 4 — intra-layer Pareto-pruned precision pairs",
+        &["layer", "pruned candidate set"],
+    );
+    let mut by_sig: Vec<(String, Vec<usize>)> = Vec::new();
+    for (l, cands) in result.pruned.iter().enumerate() {
+        let sig = tuner::pareto::candidate_signature(cands);
+        match by_sig.iter_mut().find(|(s, _)| *s == sig) {
+            Some((_, ls)) => ls.push(l),
+            None => by_sig.push((sig, vec![l])),
+        }
+    }
+    for (sig, layers) in &by_sig {
+        t4.row(vec![fmt_ids(layers), sig.clone()]);
+    }
+    t4.print();
+    let (full, pruned) = tuner::pareto::search_space_log10(&result.pruned);
+    println!(
+        "search space: 10^{full:.1} -> 10^{pruned:.1} after intra-layer pruning, {} groups after clustering",
+        result.groups.len()
+    );
+
+    // Table 10 — clustering
+    let mut t10 = Table::new("Table 10 — inter-layer clustering", &["group", "layers", "candidates"]);
+    for (g, grp) in result.groups.iter().enumerate() {
+        t10.row(vec![
+            format!("G{g}"),
+            fmt_ids(&grp.layers),
+            tuner::pareto::candidate_signature(&grp.candidates),
+        ]);
+    }
+    t10.print();
+
+    // Fig 5/8/9 (or 6/10 with --no-prune) — the Pareto frontier
+    let mut tf = Table::new(
+        &format!(
+            "Fig {} — Pareto frontier (equiv bits vs fidelity accuracy)",
+            if opts.no_prune { "6/10 (ablation: no pruning)" } else { "5/8/9" }
+        ),
+        &["equiv bits", "accuracy", "picks"],
+    );
+    for p in &result.front {
+        tf.row(vec![
+            format!("{:.2}", p.bits),
+            format!("{:.4}", p.accuracy),
+            p.picks.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(""),
+        ]);
+    }
+    tf.print();
+
+    // Table 11 — the selected layer-wise configs
+    let mut t11 = Table::new(
+        "Table 11 — searched layer-wise KV precision configs",
+        &["config", "equiv bits", "accuracy", "layer pairs"],
+    );
+    for c in &result.configs {
+        t11.row(vec![
+            c.label.clone(),
+            format!("{:.2}", c.equivalent_bits),
+            format!("{:.4}", c.accuracy),
+            c.specs.iter().map(|s| s.pair.label()).collect::<Vec<_>>().join(" "),
+        ]);
+    }
+    t11.print();
+
+    if let Some(out) = args.opt_str("out") {
+        let base = std::path::Path::new(out);
+        for c in &result.configs {
+            let path = if result.configs.len() == 1 {
+                base.to_path_buf()
+            } else {
+                base.with_file_name(format!(
+                    "{}-{}.json",
+                    base.file_stem().unwrap_or_default().to_string_lossy(),
+                    c.label.replace("KVTuner-", "")
+                ))
+            };
+            c.save(&path)?;
+            eprintln!("[tune] wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn fmt_ids(ids: &[usize]) -> String {
+    // compress runs: 0,1,2,5 -> 0~2,5
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < ids.len() {
+        let mut j = i;
+        while j + 1 < ids.len() && ids[j + 1] == ids[j] + 1 {
+            j += 1;
+        }
+        if j > i + 1 {
+            out.push(format!("{}~{}", ids[i], ids[j]));
+        } else {
+            for k in i..=j {
+                out.push(ids[k].to_string());
+            }
+        }
+        i = j + 1;
+    }
+    out.join(",")
+}

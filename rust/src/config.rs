@@ -1,0 +1,362 @@
+//! Model / artifact configuration parsed from `artifacts/<cfg>/manifest.json`
+//! (emitted by `python -m compile.aot`), plus the per-layer precision types
+//! that are the currency of the whole system.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// KV cache quantization mode for one layer (paper App. C):
+/// `Token` = per-token-asym for both K and V; `Kivi` = key per-channel-asym +
+/// value per-token-asym with fp residual; `Fp` = the 16-bit reference arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Mode {
+    Fp,
+    Token,
+    Kivi,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Fp => "fp",
+            Mode::Token => "token",
+            Mode::Kivi => "kivi",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "fp" => Mode::Fp,
+            "token" | "per-token-asym" => Mode::Token,
+            "kivi" | "channel" | "per-channel-asym" => Mode::Kivi,
+            _ => bail!("unknown quant mode {s:?}"),
+        })
+    }
+}
+
+/// A layer's KV precision pair, e.g. K8V4. Bits are 2/4/8, or 16 for fp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PrecisionPair {
+    pub k_bits: u8,
+    pub v_bits: u8,
+}
+
+pub const PAIRS: [PrecisionPair; 9] = [
+    PrecisionPair { k_bits: 8, v_bits: 8 },
+    PrecisionPair { k_bits: 8, v_bits: 4 },
+    PrecisionPair { k_bits: 8, v_bits: 2 },
+    PrecisionPair { k_bits: 4, v_bits: 8 },
+    PrecisionPair { k_bits: 4, v_bits: 4 },
+    PrecisionPair { k_bits: 4, v_bits: 2 },
+    PrecisionPair { k_bits: 2, v_bits: 8 },
+    PrecisionPair { k_bits: 2, v_bits: 4 },
+    PrecisionPair { k_bits: 2, v_bits: 2 },
+];
+
+impl PrecisionPair {
+    pub fn new(k_bits: u8, v_bits: u8) -> Self {
+        PrecisionPair { k_bits, v_bits }
+    }
+
+    pub const FP: PrecisionPair = PrecisionPair { k_bits: 16, v_bits: 16 };
+
+    /// Mean equivalent bits, the paper's `f_m` numerator contribution.
+    pub fn equivalent_bits(&self) -> f64 {
+        (self.k_bits as f64 + self.v_bits as f64) / 2.0
+    }
+
+    pub fn label(&self) -> String {
+        if self.k_bits == self.v_bits {
+            format!("KV{}", self.k_bits)
+        } else {
+            format!("K{}V{}", self.k_bits, self.v_bits)
+        }
+    }
+
+    /// Parse "K8V4", "KV4", "8:4" etc.
+    pub fn parse(s: &str) -> Result<PrecisionPair> {
+        let t = s.trim().to_uppercase();
+        if let Some((k, v)) = t.split_once(':') {
+            return Ok(PrecisionPair::new(k.parse()?, v.parse()?));
+        }
+        if let Some(rest) = t.strip_prefix("KV") {
+            let b: u8 = rest.parse()?;
+            return Ok(PrecisionPair::new(b, b));
+        }
+        if let Some(rest) = t.strip_prefix('K') {
+            if let Some((k, v)) = rest.split_once('V') {
+                return Ok(PrecisionPair::new(k.parse()?, v.parse()?));
+            }
+        }
+        bail!("cannot parse precision pair {s:?}")
+    }
+}
+
+/// One layer's complete quantization spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerSpec {
+    pub mode: Mode,
+    pub pair: PrecisionPair,
+}
+
+impl LayerSpec {
+    pub fn fp() -> LayerSpec {
+        LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP }
+    }
+
+    pub fn uniform(mode: Mode, pair: PrecisionPair, n_layers: usize) -> Vec<LayerSpec> {
+        vec![LayerSpec { mode, pair }; n_layers]
+    }
+
+    pub fn equivalent_bits(specs: &[LayerSpec]) -> f64 {
+        specs.iter().map(|s| s.pair.equivalent_bits()).sum::<f64>() / specs.len() as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub group: usize,
+    pub residual: usize,
+    pub rms_eps: f64,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_layers: j.get("n_layers")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            group: j.get("group")?.as_usize()?,
+            residual: j.get("residual")?.as_usize()?,
+            rms_eps: j.get("rms_eps")?.as_f64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub offset: usize, // in f32 elements
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub weights_file: String,
+    pub tensors: BTreeMap<String, TensorEntry>,
+    pub outlier_profile: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // layer | quant | embed | lmhead
+    pub mode: Option<Mode>,
+    pub k_bits: u8,
+    pub v_bits: u8,
+    pub bits: u8,
+    pub batch: usize,
+    pub t: usize,
+    pub s_max: usize,
+    pub chunk: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.opt("name").map(|n| n.as_str().unwrap_or("").to_string()).unwrap_or_default(),
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+                shape: e.get("shape")?.as_shape()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text)?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let mut tensors = BTreeMap::new();
+            for (tn, te) in m.get("tensors")?.as_obj()? {
+                tensors.insert(
+                    tn.clone(),
+                    TensorEntry {
+                        offset: te.get("offset")?.as_usize()?,
+                        shape: te.get("shape")?.as_shape()?,
+                    },
+                );
+            }
+            let outlier_profile = m
+                .get("outlier_profile")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    weights_file: m.get("weights")?.as_str()?.to_string(),
+                    tensors,
+                    outlier_profile,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let kind = a.get("kind")?.as_str()?.to_string();
+            let meta = ArtifactMeta {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: a.get("file")?.as_str()?.to_string(),
+                mode: match a.opt("mode") {
+                    Some(m) => Some(Mode::parse(m.as_str()?)?),
+                    None => None,
+                },
+                k_bits: a.opt("k_bits").map(|x| x.as_i64().unwrap_or(0) as u8).unwrap_or(0),
+                v_bits: a.opt("v_bits").map(|x| x.as_i64().unwrap_or(0) as u8).unwrap_or(0),
+                bits: a.opt("bits").map(|x| x.as_i64().unwrap_or(0) as u8).unwrap_or(0),
+                batch: a.opt("batch").map(|x| x.as_usize().unwrap_or(0)).unwrap_or(0),
+                t: a.opt("t").map(|x| x.as_usize().unwrap_or(0)).unwrap_or(0),
+                s_max: a.opt("s_max").map(|x| x.as_usize().unwrap_or(0)).unwrap_or(0),
+                chunk: a.opt("chunk").map(|x| x.as_usize().unwrap_or(0)).unwrap_or(0),
+                inputs: io_specs(a.get("inputs")?)?,
+                outputs: io_specs(a.get("outputs")?)?,
+                kind,
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest { dir, config, models, artifacts })
+    }
+
+    /// Artifact name for a layer step.
+    pub fn layer_name(mode: Mode, pair: PrecisionPair, b: usize, t: usize, s: usize) -> String {
+        match mode {
+            Mode::Fp => format!("layer_fp_b{b}_t{t}_s{s}"),
+            _ => format!(
+                "layer_{}_k{}v{}_b{b}_t{t}_s{s}",
+                mode.as_str(),
+                pair.k_bits,
+                pair.v_bits
+            ),
+        }
+    }
+
+    pub fn quant_name(per_channel: bool, bits: u8, b: usize, chunk: usize) -> String {
+        let m = if per_channel { "channel" } else { "token" };
+        format!("quant_{m}_{bits}_b{b}_c{chunk}")
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest (re-run make artifacts with matching buckets)"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    /// Batch sizes available for decode (t == 1) layer steps.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "layer" && a.t == 1)
+            .map(|a| a.batch)
+            .collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+
+    pub fn prefill_ts(&self) -> Vec<usize> {
+        let mut ts: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "layer" && a.t > 1)
+            .map(|a| a.t)
+            .collect();
+        ts.sort_unstable();
+        ts.dedup();
+        ts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_labels_and_parse() {
+        assert_eq!(PrecisionPair::new(8, 4).label(), "K8V4");
+        assert_eq!(PrecisionPair::new(4, 4).label(), "KV4");
+        assert_eq!(PrecisionPair::parse("K8V4").unwrap(), PrecisionPair::new(8, 4));
+        assert_eq!(PrecisionPair::parse("kv2").unwrap(), PrecisionPair::new(2, 2));
+        assert_eq!(PrecisionPair::parse("8:2").unwrap(), PrecisionPair::new(8, 2));
+        assert!(PrecisionPair::parse("x").is_err());
+    }
+
+    #[test]
+    fn equivalent_bits() {
+        assert_eq!(PrecisionPair::new(8, 4).equivalent_bits(), 6.0);
+        let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 2), 4);
+        assert_eq!(LayerSpec::equivalent_bits(&specs), 3.0);
+    }
+
+    #[test]
+    fn layer_names() {
+        assert_eq!(
+            Manifest::layer_name(Mode::Kivi, PrecisionPair::new(4, 2), 2, 1, 256),
+            "layer_kivi_k4v2_b2_t1_s256"
+        );
+        assert_eq!(
+            Manifest::layer_name(Mode::Fp, PrecisionPair::FP, 1, 32, 256),
+            "layer_fp_b1_t32_s256"
+        );
+    }
+}

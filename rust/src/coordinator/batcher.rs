@@ -1,0 +1,106 @@
+//! Admission queue / dynamic batcher: requests wait here until the
+//! continuous-batching scheduler has free slots. Policy: admit immediately
+//! when slots are free; cap per-admission burst so prefill doesn't starve
+//! decode (prefill/decode interleaving, the Orca/vLLM scheduling shape).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Debug, Clone)]
+pub struct BatcherOptions {
+    /// Max requests admitted per scheduling tick (prefill burst cap).
+    pub max_admit_per_tick: usize,
+    /// Queue capacity; beyond this, submissions are rejected (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for BatcherOptions {
+    fn default() -> Self {
+        BatcherOptions { max_admit_per_tick: 2, max_queue: 1024 }
+    }
+}
+
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub opts: BatcherOptions,
+    pub rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(opts: BatcherOptions) -> Batcher {
+        Batcher { queue: VecDeque::new(), opts, rejected: 0 }
+    }
+
+    /// Enqueue; returns false (and drops the request) when full.
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.opts.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Admit up to `free_slots` requests (bounded by the burst cap), FIFO.
+    pub fn admit(&mut self, free_slots: usize) -> Vec<Request> {
+        let n = free_slots.min(self.opts.max_admit_per_tick).min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the oldest waiting request.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| now.duration_since(r.arrival))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // keep rx alive via leak to avoid send errors in tests that respond
+        std::mem::forget(_rx);
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            class: super::super::request::AccuracyClass::Balanced,
+            arrival: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_admission_with_burst_cap() {
+        let mut b = Batcher::new(BatcherOptions { max_admit_per_tick: 2, max_queue: 10 });
+        for i in 0..5 {
+            assert!(b.push(req(i)));
+        }
+        let a = b.admit(4);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let a = b.admit(1);
+        assert_eq!(a[0].id, 2);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = Batcher::new(BatcherOptions { max_admit_per_tick: 2, max_queue: 2 });
+        assert!(b.push(req(0)));
+        assert!(b.push(req(1)));
+        assert!(!b.push(req(2)));
+        assert_eq!(b.rejected, 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Serving metrics: throughput, TTFT/TPOT latencies, engine utilization.
+//! Lock-light: counters are atomics; latency samples batch under one mutex.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub prefill_chunks: AtomicU64,
+    pub decode_nanos: AtomicU64,
+    pub prefill_nanos: AtomicU64,
+    pub busy_slots_sum: AtomicU64,
+    latencies: Mutex<LatencySamples>,
+}
+
+#[derive(Default)]
+struct LatencySamples {
+    ttft: Vec<f64>,
+    total: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub decode_secs: f64,
+    pub prefill_secs: f64,
+    pub tokens_per_sec_decode: f64,
+    pub mean_batch_occupancy: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub total_p50: f64,
+    pub total_p95: f64,
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+impl Metrics {
+    pub fn record_decode(&self, d: Duration, busy: usize, tokens: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.decode_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.busy_slots_sum.fetch_add(busy as u64, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_prefill(&self, d: Duration) {
+        self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+        self.prefill_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, ttft: Duration, total: Duration) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        l.ttft.push(ttft.as_secs_f64());
+        l.total.push(total.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let decode_secs = self.decode_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        let tokens = self.tokens_generated.load(Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        l.ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        l.total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Snapshot {
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            tokens_generated: tokens,
+            decode_steps: steps,
+            decode_secs,
+            prefill_secs: self.prefill_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            tokens_per_sec_decode: if decode_secs > 0.0 { tokens as f64 / decode_secs } else { 0.0 },
+            mean_batch_occupancy: if steps > 0 {
+                self.busy_slots_sum.load(Ordering::Relaxed) as f64 / steps as f64
+            } else {
+                0.0
+            },
+            ttft_p50: pct(&l.ttft, 0.5),
+            ttft_p95: pct(&l.ttft, 0.95),
+            total_p50: pct(&l.total, 0.5),
+            total_p95: pct(&l.total, 0.95),
+        }
+    }
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms",
+            self.requests_completed,
+            self.tokens_generated,
+            self.tokens_per_sec_decode,
+            self.mean_batch_occupancy,
+            self.ttft_p50 * 1e3,
+            self.ttft_p95 * 1e3,
+            self.total_p50 * 1e3,
+            self.total_p95 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::default();
+        m.record_decode(Duration::from_millis(10), 2, 2);
+        m.record_decode(Duration::from_millis(10), 1, 1);
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(50));
+        let s = m.snapshot();
+        assert_eq!(s.tokens_generated, 3);
+        assert_eq!(s.decode_steps, 2);
+        assert!((s.mean_batch_occupancy - 1.5).abs() < 1e-9);
+        assert!((s.tokens_per_sec_decode - 150.0).abs() < 1.0);
+        assert!((s.ttft_p50 - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.tokens_per_sec_decode, 0.0);
+        assert_eq!(s.ttft_p95, 0.0);
+    }
+}

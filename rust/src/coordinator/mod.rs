@@ -1,0 +1,14 @@
+//! L3 serving coordinator: request types, admission batcher, continuous-
+//! batching scheduler, multi-engine router, and metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{Batcher, BatcherOptions};
+pub use metrics::{Metrics, Snapshot};
+pub use request::{AccuracyClass, Request, Response, Submission};
+pub use router::{Router, WorkerSpec};
+pub use scheduler::{Scheduler, SchedulerOptions};

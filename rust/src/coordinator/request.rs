@@ -1,0 +1,76 @@
+//! Request/response types flowing between clients, the router, and the
+//! engine workers. Plain data + channels: PJRT objects are thread-pinned
+//! (no Send), so engines never cross threads — requests do.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Client-declared accuracy requirement: the router maps this to an engine
+/// whose tuned config meets it (paper Sec. 1 issue 3 — multiple deployed
+/// LLM configs, per-request adaptation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccuracyClass {
+    /// Nearly lossless generation (e.g. KV8 or a high-bits tuned config).
+    High,
+    /// Tuned trade-off (the KVTuner-C* config).
+    Balanced,
+    /// Maximum throughput; accuracy best-effort.
+    Efficient,
+}
+
+impl AccuracyClass {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "high" => AccuracyClass::High,
+            "balanced" => AccuracyClass::Balanced,
+            "efficient" => AccuracyClass::Efficient,
+            _ => anyhow::bail!("unknown accuracy class {s:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AccuracyClass::High => "high",
+            AccuracyClass::Balanced => "balanced",
+            AccuracyClass::Efficient => "efficient",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub class: AccuracyClass,
+    pub arrival: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill latency).
+    pub ttft: Duration,
+    /// Total request latency.
+    pub total: Duration,
+    pub engine: String,
+    pub error: Option<String>,
+}
+
+/// Client-side handle: submit and wait.
+pub struct Submission {
+    pub id: u64,
+    pub rx: mpsc::Receiver<Response>,
+}
+
+impl Submission {
+    pub fn wait(self) -> anyhow::Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> anyhow::Result<Response> {
+        Ok(self.rx.recv_timeout(d)?)
+    }
+}

@@ -1,0 +1,155 @@
+//! Multi-engine router: each engine worker runs on its own thread with its
+//! own PJRT client and precision config; the router maps a request's
+//! accuracy class to a matching worker and load-balances within the class.
+//! This is the paper's deployment story — several configs of the same model
+//! served side by side, per-request precision selection at zero decode cost.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::LayerSpec;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+
+use super::request::{AccuracyClass, Request, Submission};
+
+/// Spec for one engine worker.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub name: String,
+    pub model: String,
+    pub specs: Vec<LayerSpec>,
+    pub class: AccuracyClass,
+    pub batch: usize,
+    pub s_max: usize,
+    pub prefill_chunk: usize,
+}
+
+pub struct WorkerHandle {
+    pub spec: WorkerSpec,
+    pub tx: Sender<Request>,
+    pub inflight: Arc<AtomicUsize>,
+    pub metrics: Arc<Metrics>,
+    pub join: JoinHandle<Result<()>>,
+}
+
+pub struct Router {
+    pub workers: Vec<WorkerHandle>,
+    pub shutdown: Arc<AtomicBool>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    /// Spawn one thread per worker; each constructs its own Runtime + Engine
+    /// (PJRT objects never cross threads).
+    pub fn start(artifact_dir: std::path::PathBuf, specs: Vec<WorkerSpec>) -> Result<Router> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        for wspec in specs {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let metrics = Arc::new(Metrics::default());
+            let dir = artifact_dir.clone();
+            let ws = wspec.clone();
+            let sd = shutdown.clone();
+            let inf = inflight.clone();
+            let met = metrics.clone();
+            // engine readiness signal so start() fails fast on bad configs
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let join = std::thread::Builder::new()
+                .name(format!("engine-{}", ws.name))
+                .spawn(move || -> Result<()> {
+                    let rt = match Runtime::load(&dir) {
+                        Ok(rt) => Arc::new(rt),
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return Ok(());
+                        }
+                    };
+                    let engine = match Engine::new(
+                        rt,
+                        &ws.model,
+                        ws.specs.clone(),
+                        ws.batch,
+                        ws.s_max,
+                        ws.prefill_chunk,
+                    ) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return Ok(());
+                        }
+                    };
+                    let _ = ready_tx.send(Ok(()));
+                    let mut sched =
+                        Scheduler::new(engine, &ws.name, SchedulerOptions::default(), met);
+                    sched.run(rx, sd, inf)
+                })
+                .context("spawning engine worker")?;
+            ready_rx
+                .recv()
+                .context("worker died before ready")?
+                .with_context(|| format!("starting worker {}", wspec.name))?;
+            workers.push(WorkerHandle { spec: wspec, tx, inflight, metrics, join });
+        }
+        Ok(Router { workers, shutdown, next_id: AtomicU64::new(1) })
+    }
+
+    /// Route by accuracy class, least-loaded within the class; fall back to
+    /// any worker when no engine advertises the class.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        class: AccuracyClass,
+    ) -> Result<Submission> {
+        let candidates: Vec<&WorkerHandle> = {
+            let matching: Vec<&WorkerHandle> =
+                self.workers.iter().filter(|w| w.spec.class == class).collect();
+            if matching.is_empty() {
+                self.workers.iter().collect()
+            } else {
+                matching
+            }
+        };
+        if candidates.is_empty() {
+            bail!("no engine workers");
+        }
+        let w = candidates
+            .iter()
+            .min_by_key(|w| w.inflight.load(Ordering::Relaxed))
+            .unwrap();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        w.tx.send(Request {
+            id,
+            prompt,
+            max_new_tokens,
+            class,
+            arrival: Instant::now(),
+            respond: tx,
+        })
+        .map_err(|_| anyhow::anyhow!("worker {} is gone", w.spec.name))?;
+        Ok(Submission { id, rx })
+    }
+
+    /// Graceful shutdown: signal, then join all workers.
+    pub fn shutdown(self) -> Result<Vec<(String, super::metrics::Snapshot)>> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let mut out = Vec::new();
+        for w in self.workers {
+            drop(w.tx);
+            let snap = w.metrics.snapshot();
+            w.join.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            out.push((w.spec.name, snap));
+        }
+        Ok(out)
+    }
+}

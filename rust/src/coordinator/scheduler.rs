@@ -1,0 +1,200 @@
+//! Continuous-batching scheduler: owns one Engine (and therefore one PJRT
+//! client, pinned to this thread), interleaves prefill admission with
+//! batched decode steps, and completes requests through their response
+//! channels. This is the serving loop the throughput tables run on.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+
+use super::batcher::{Batcher, BatcherOptions};
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+struct ActiveSlot {
+    req: Request,
+    generated: Vec<i32>,
+    next_token: i32,
+    started: Instant,
+    ttft: Duration,
+}
+
+pub struct Scheduler {
+    pub engine: Engine,
+    pub batcher: Batcher,
+    pub metrics: Arc<Metrics>,
+    slots: Vec<Option<ActiveSlot>>,
+    pub name: String,
+}
+
+pub struct SchedulerOptions {
+    pub batcher: BatcherOptions,
+    pub idle_poll: Duration,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { batcher: BatcherOptions::default(), idle_poll: Duration::from_millis(5) }
+    }
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, name: &str, opts: SchedulerOptions, metrics: Arc<Metrics>) -> Scheduler {
+        let batch = engine.batch;
+        Scheduler {
+            engine,
+            batcher: Batcher::new(opts.batcher),
+            metrics,
+            slots: (0..batch).map(|_| None).collect(),
+            name: name.to_string(),
+        }
+    }
+
+    fn free_slots(&self) -> Vec<usize> {
+        self.slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect()
+    }
+
+    fn busy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admit waiting requests into free slots (prefill them now).
+    fn admit(&mut self) -> Result<()> {
+        let free = self.free_slots();
+        if free.is_empty() || self.batcher.is_empty() {
+            return Ok(());
+        }
+        let admits = self.batcher.admit(free.len());
+        for (req, slot) in admits.into_iter().zip(free) {
+            let started = Instant::now();
+            self.engine.cache.reset_slot(slot);
+            // clamp the prompt to what the slot can hold with generation room
+            let cap = self.engine.s_max.saturating_sub(req.max_new_tokens + 1);
+            let prompt: Vec<i32> = if req.prompt.len() > cap {
+                req.prompt[req.prompt.len() - cap..].to_vec()
+            } else {
+                req.prompt.clone()
+            };
+            let t0 = Instant::now();
+            match self.engine.prefill(slot, &prompt) {
+                Ok(first) => {
+                    let ttft = started.elapsed();
+                    self.metrics.record_prefill(t0.elapsed());
+                    self.slots[slot] = Some(ActiveSlot {
+                        req,
+                        generated: vec![first],
+                        next_token: first,
+                        started,
+                        ttft,
+                    });
+                }
+                Err(e) => {
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        ttft: Duration::ZERO,
+                        total: started.elapsed(),
+                        engine: self.name.clone(),
+                        error: Some(format!("prefill failed: {e:#}")),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One batched decode step over all active slots; completes finished
+    /// requests. Returns number of active slots before the step.
+    fn decode_tick(&mut self) -> Result<usize> {
+        let batch = self.slots.len();
+        let mut tokens = vec![0i32; batch];
+        let mut active = vec![false; batch];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(a) = s {
+                tokens[i] = a.next_token;
+                active[i] = true;
+            }
+        }
+        let busy = self.busy();
+        if busy == 0 {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let next = self.engine.decode_step(&tokens, &active)?;
+        self.metrics.record_decode(t0.elapsed(), busy, busy);
+
+        for i in 0..batch {
+            let done = if let Some(a) = &mut self.slots[i] {
+                if active[i] {
+                    a.generated.push(next[i]);
+                    a.next_token = next[i];
+                }
+                a.generated.len() > a.req.max_new_tokens
+                    || self.engine.cache.pos[i] as usize >= self.engine.s_max
+            } else {
+                false
+            };
+            if done {
+                let a = self.slots[i].take().unwrap();
+                let mut toks = a.generated;
+                toks.truncate(a.req.max_new_tokens);
+                let total = a.started.elapsed();
+                self.metrics.record_completion(a.ttft, total);
+                let _ = a.req.respond.send(Response {
+                    id: a.req.id,
+                    tokens: toks,
+                    ttft: a.ttft,
+                    total,
+                    engine: self.name.clone(),
+                    error: None,
+                });
+                self.engine.cache.reset_slot(i);
+            }
+        }
+        Ok(busy)
+    }
+
+    /// Serve until `shutdown` flips and all in-flight work drains.
+    pub fn run(
+        &mut self,
+        rx: Receiver<Request>,
+        shutdown: Arc<AtomicBool>,
+        inflight: Arc<AtomicUsize>,
+    ) -> Result<()> {
+        loop {
+            // drain new arrivals without blocking
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => {
+                        if !self.batcher.push(r) {
+                            // rejected: backpressure counter already bumped
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            self.admit()?;
+            let busy = self.decode_tick()?;
+            inflight.store(busy + self.batcher.len(), Ordering::Relaxed);
+
+            if busy == 0 && self.batcher.is_empty() {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                // idle: block briefly for the next request
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => {
+                        self.batcher.push(r);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,476 @@
+//! Mixed-precision batched KV cache manager.
+//!
+//! Buffers are laid out exactly as the layer-step artifacts expect them
+//! (batch outermost, so a single slot's region is contiguous and B=1 prefill
+//! executables can slice it without repacking):
+//!
+//! * token mode:  packed codes `[B, H, S, DhP]` + per-token scale/zero
+//!   `[B, H, S]`; new tokens arrive already quantized from the layer step.
+//! * kivi mode:   packed key codes + per-channel scale/zero `[B, H, S/G, Dh]`,
+//!   per-token value scale/zero, plus fp residual rings `[B, H, R, Dh]`;
+//!   commits go through the `quant_*` PJRT executables.
+//! * fp mode:     raw `[B, H, S, Dh]` buffers (the KV16 reference arm).
+//!
+//! Memory accounting (`kv_bytes`, `equivalent_bits`) is what Table 8's
+//! memory-traffic story rests on: the buffers genuinely shrink with the
+//! precision map.
+
+use anyhow::{bail, Result};
+
+use crate::config::{LayerSpec, Mode, ModelConfig};
+use crate::quant::packed_width;
+use crate::tensor::Tensor;
+
+/// Per-layer cache buffers for a batch of `b` slots.
+#[derive(Debug, Clone)]
+pub struct LayerCacheBuf {
+    pub spec: LayerSpec,
+    // quantized path (token/kivi)
+    pub k_codes: Option<Tensor>,
+    pub k_scale: Option<Tensor>,
+    pub k_zero: Option<Tensor>,
+    pub v_codes: Option<Tensor>,
+    pub v_scale: Option<Tensor>,
+    pub v_zero: Option<Tensor>,
+    // kivi fp residual
+    pub k_res: Option<Tensor>,
+    pub v_res: Option<Tensor>,
+    // fp path
+    pub k_fp: Option<Tensor>,
+    pub v_fp: Option<Tensor>,
+    /// Committed (quantized or fp-stored) tokens per slot.
+    pub cache_len: Vec<i32>,
+    /// Valid fp residual tokens per slot (kivi only; 0 otherwise).
+    pub res_len: Vec<i32>,
+}
+
+impl LayerCacheBuf {
+    pub fn new(cfg: &ModelConfig, spec: LayerSpec, b: usize, s_max: usize) -> Result<Self> {
+        let (h, dh, g, r) = (cfg.n_kv_heads, cfg.head_dim, cfg.group, cfg.residual);
+        let mut buf = LayerCacheBuf {
+            spec,
+            k_codes: None, k_scale: None, k_zero: None,
+            v_codes: None, v_scale: None, v_zero: None,
+            k_res: None, v_res: None, k_fp: None, v_fp: None,
+            cache_len: vec![0; b],
+            res_len: vec![0; b],
+        };
+        match spec.mode {
+            Mode::Fp => {
+                buf.k_fp = Some(Tensor::zeros_f32(&[b, h, s_max, dh]));
+                buf.v_fp = Some(Tensor::zeros_f32(&[b, h, s_max, dh]));
+            }
+            Mode::Token => {
+                let (kp, vp) = (packed_width(dh, spec.pair.k_bits)?, packed_width(dh, spec.pair.v_bits)?);
+                buf.k_codes = Some(Tensor::zeros_u8(&[b, h, s_max, kp]));
+                buf.k_scale = Some(Tensor::f32(&[b, h, s_max], vec![1.0; b * h * s_max]));
+                buf.k_zero = Some(Tensor::zeros_f32(&[b, h, s_max]));
+                buf.v_codes = Some(Tensor::zeros_u8(&[b, h, s_max, vp]));
+                buf.v_scale = Some(Tensor::f32(&[b, h, s_max], vec![1.0; b * h * s_max]));
+                buf.v_zero = Some(Tensor::zeros_f32(&[b, h, s_max]));
+            }
+            Mode::Kivi => {
+                let (kp, vp) = (packed_width(dh, spec.pair.k_bits)?, packed_width(dh, spec.pair.v_bits)?);
+                let ng = s_max / g;
+                buf.k_codes = Some(Tensor::zeros_u8(&[b, h, s_max, kp]));
+                buf.k_scale = Some(Tensor::f32(&[b, h, ng, dh], vec![1.0; b * h * ng * dh]));
+                buf.k_zero = Some(Tensor::zeros_f32(&[b, h, ng, dh]));
+                buf.v_codes = Some(Tensor::zeros_u8(&[b, h, s_max, vp]));
+                buf.v_scale = Some(Tensor::f32(&[b, h, s_max], vec![1.0; b * h * s_max]));
+                buf.v_zero = Some(Tensor::zeros_f32(&[b, h, s_max]));
+                buf.k_res = Some(Tensor::zeros_f32(&[b, h, r, dh]));
+                buf.v_res = Some(Tensor::zeros_f32(&[b, h, r, dh]));
+            }
+        }
+        Ok(buf)
+    }
+
+    /// Cache-tensor list in the layer artifact's argument order.
+    pub fn artifact_inputs(&self) -> Vec<&Tensor> {
+        match self.spec.mode {
+            Mode::Fp => vec![self.k_fp.as_ref().unwrap(), self.v_fp.as_ref().unwrap()],
+            Mode::Token => vec![
+                self.k_codes.as_ref().unwrap(), self.k_scale.as_ref().unwrap(), self.k_zero.as_ref().unwrap(),
+                self.v_codes.as_ref().unwrap(), self.v_scale.as_ref().unwrap(), self.v_zero.as_ref().unwrap(),
+            ],
+            Mode::Kivi => vec![
+                self.k_codes.as_ref().unwrap(), self.k_scale.as_ref().unwrap(), self.k_zero.as_ref().unwrap(),
+                self.v_codes.as_ref().unwrap(), self.v_scale.as_ref().unwrap(), self.v_zero.as_ref().unwrap(),
+                self.k_res.as_ref().unwrap(), self.v_res.as_ref().unwrap(),
+            ],
+        }
+    }
+
+    /// Slice one slot out of every cache tensor (for B=1 prefill executables).
+    /// Slot regions are contiguous because batch is the outermost dim.
+    pub fn slot_inputs(&self, slot: usize) -> Vec<Tensor> {
+        self.artifact_inputs()
+            .into_iter()
+            .map(|t| {
+                let per = t.numel() / self.cache_len.len();
+                let mut shape = t.shape.clone();
+                shape[0] = 1;
+                match &t.data {
+                    crate::tensor::Data::F32(v) => Tensor::f32(&shape, v[slot * per..(slot + 1) * per].to_vec()),
+                    crate::tensor::Data::U8(v) => Tensor::u8(&shape, v[slot * per..(slot + 1) * per].to_vec()),
+                    crate::tensor::Data::I32(v) => Tensor::i32(&shape, v[slot * per..(slot + 1) * per].to_vec()),
+                }
+            })
+            .collect()
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        [
+            &self.k_codes, &self.k_scale, &self.k_zero,
+            &self.v_codes, &self.v_scale, &self.v_zero,
+            &self.k_res, &self.v_res, &self.k_fp, &self.v_fp,
+        ]
+        .iter()
+        .filter_map(|o| o.as_ref().map(|t| t.size_bytes()))
+        .sum()
+    }
+
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.cache_len[slot] = 0;
+        self.res_len[slot] = 0;
+    }
+}
+
+/// Whole-model cache: one `LayerCacheBuf` per layer + per-slot positions.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub layers: Vec<LayerCacheBuf>,
+    /// Absolute position per slot (= tokens seen; same across layers).
+    pub pos: Vec<i32>,
+    pub batch: usize,
+    pub s_max: usize,
+    group: usize,
+    residual: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, specs: &[LayerSpec], batch: usize, s_max: usize) -> Result<KvCache> {
+        if specs.len() != cfg.n_layers {
+            bail!("{} specs for {} layers", specs.len(), cfg.n_layers);
+        }
+        let layers = specs
+            .iter()
+            .map(|&sp| LayerCacheBuf::new(cfg, sp, batch, s_max))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(KvCache {
+            layers,
+            pos: vec![0; batch],
+            batch,
+            s_max,
+            group: cfg.group,
+            residual: cfg.residual,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+        })
+    }
+
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.pos[slot] = 0;
+        for l in &mut self.layers {
+            l.reset_slot(slot);
+        }
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.kv_bytes()).sum()
+    }
+
+    /// Mean equivalent KV bits across layers — the paper's `f_m`.
+    pub fn equivalent_bits(&self) -> f64 {
+        LayerSpec::equivalent_bits(
+            &self.layers.iter().map(|l| l.spec).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Remaining capacity for a slot before the committed cache overflows.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.s_max + self.residual_room() - self.pos[slot] as usize
+    }
+
+    fn residual_room(&self) -> usize {
+        0 // committed cache bound is s_max; residual always drains into it
+    }
+
+    /// Write token-mode quantized outputs (from a layer step) into the cache.
+    /// outs = (k_codes [b,h,T,kp], k_scale [b,h,T], k_zero, v_codes, v_scale,
+    /// v_zero); `valid` = number of real tokens per covered slot; `slot0` is
+    /// the first slot this (possibly B=1) execution covers.
+    pub fn append_token_outputs(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        outs: &[Tensor],
+        valid: &[usize],
+    ) -> Result<()> {
+        let lc = &mut self.layers[layer];
+        debug_assert_eq!(lc.spec.mode, Mode::Token);
+        let (h, s) = (self.n_kv_heads, self.s_max);
+        let t = outs[0].shape[2];
+        let b_exec = outs[0].shape[0];
+        let (kp, vp) = (outs[0].shape[3], outs[3].shape[3]);
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = lc.cache_len[slot] as usize;
+            anyhow::ensure!(start + nv <= s, "token cache overflow (slot {slot})");
+            for hh in 0..h {
+                for ti in 0..nv {
+                    // codes
+                    let src = ((bi * h + hh) * t + ti) * kp;
+                    let dst = ((slot * h + hh) * s + start + ti) * kp;
+                    lc.k_codes.as_mut().unwrap().as_u8_mut()?[dst..dst + kp]
+                        .copy_from_slice(&outs[0].as_u8()?[src..src + kp]);
+                    let srcv = ((bi * h + hh) * t + ti) * vp;
+                    let dstv = ((slot * h + hh) * s + start + ti) * vp;
+                    lc.v_codes.as_mut().unwrap().as_u8_mut()?[dstv..dstv + vp]
+                        .copy_from_slice(&outs[3].as_u8()?[srcv..srcv + vp]);
+                    // scales/zeros
+                    let ssrc = (bi * h + hh) * t + ti;
+                    let sdst = (slot * h + hh) * s + start + ti;
+                    lc.k_scale.as_mut().unwrap().as_f32_mut()?[sdst] = outs[1].as_f32()?[ssrc];
+                    lc.k_zero.as_mut().unwrap().as_f32_mut()?[sdst] = outs[2].as_f32()?[ssrc];
+                    lc.v_scale.as_mut().unwrap().as_f32_mut()?[sdst] = outs[4].as_f32()?[ssrc];
+                    lc.v_zero.as_mut().unwrap().as_f32_mut()?[sdst] = outs[5].as_f32()?[ssrc];
+                }
+            }
+            lc.cache_len[slot] += nv as i32;
+        }
+        Ok(())
+    }
+
+    /// Append fp new-token K/V (kivi layer step outputs) into the residual
+    /// ring. Returns, per covered slot, `true` when the residual has filled a
+    /// whole group and needs a commit.
+    pub fn append_kivi_residual(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor, // [b,h,T,Dh]
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<Vec<bool>> {
+        let lc = &mut self.layers[layer];
+        debug_assert_eq!(lc.spec.mode, Mode::Kivi);
+        let (h, dh, r) = (self.n_kv_heads, self.head_dim, self.residual);
+        let t = k_new.shape[2];
+        let b_exec = k_new.shape[0];
+        let mut need_commit = vec![false; b_exec];
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = lc.res_len[slot] as usize;
+            anyhow::ensure!(start + nv <= r, "residual overflow (slot {slot})");
+            for hh in 0..h {
+                for ti in 0..nv {
+                    let src = ((bi * h + hh) * t + ti) * dh;
+                    let dst = ((slot * h + hh) * r + start + ti) * dh;
+                    lc.k_res.as_mut().unwrap().as_f32_mut()?[dst..dst + dh]
+                        .copy_from_slice(&k_new.as_f32()?[src..src + dh]);
+                    lc.v_res.as_mut().unwrap().as_f32_mut()?[dst..dst + dh]
+                        .copy_from_slice(&v_new.as_f32()?[src..src + dh]);
+                }
+            }
+            lc.res_len[slot] += nv as i32;
+            need_commit[bi] = lc.res_len[slot] as usize >= self.group;
+        }
+        Ok(need_commit)
+    }
+
+    /// Extract the first `group` residual tokens of a slot as a [1,h,G,Dh]
+    /// chunk (input to the quant_* executables).
+    pub fn residual_chunk(&self, layer: usize, slot: usize) -> Result<(Tensor, Tensor)> {
+        let lc = &self.layers[layer];
+        let (h, dh, r, g) = (self.n_kv_heads, self.head_dim, self.residual, self.group);
+        anyhow::ensure!(lc.res_len[slot] as usize >= g, "residual not full");
+        let mut k = vec![0f32; h * g * dh];
+        let mut v = vec![0f32; h * g * dh];
+        for hh in 0..h {
+            let src = ((slot * h + hh) * r) * dh;
+            let dst = hh * g * dh;
+            k[dst..dst + g * dh].copy_from_slice(&lc.k_res.as_ref().unwrap().as_f32()?[src..src + g * dh]);
+            v[dst..dst + g * dh].copy_from_slice(&lc.v_res.as_ref().unwrap().as_f32()?[src..src + g * dh]);
+        }
+        Ok((Tensor::f32(&[1, h, g, dh], k), Tensor::f32(&[1, h, g, dh], v)))
+    }
+
+    /// Commit quantized chunk outputs (from quant_* executables) into the
+    /// main cache and drain the residual.
+    /// k_outs = (codes [1,h,G,kp], scale [1,h,Dh], zero) — per-channel;
+    /// v_outs = (codes [1,h,G,vp], scale [1,h,G], zero) — per-token.
+    pub fn commit_kivi_chunk(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k_outs: &[Tensor],
+        v_outs: &[Tensor],
+    ) -> Result<()> {
+        let g = self.group;
+        let lc = &mut self.layers[layer];
+        let (h, dh, s, r) = (self.n_kv_heads, self.head_dim, self.s_max, self.residual);
+        let start = lc.cache_len[slot] as usize;
+        anyhow::ensure!(start % g == 0, "kivi cache_len must be group-aligned");
+        anyhow::ensure!(start + g <= s, "kivi cache overflow (slot {slot})");
+        let gi = start / g;
+        let ng = s / g;
+        let (kp, vp) = (k_outs[0].shape[3], v_outs[0].shape[3]);
+        for hh in 0..h {
+            // key codes + per-channel scale/zero
+            let src = (hh * g) * kp;
+            let dst = ((slot * h + hh) * s + start) * kp;
+            lc.k_codes.as_mut().unwrap().as_u8_mut()?[dst..dst + g * kp]
+                .copy_from_slice(&k_outs[0].as_u8()?[src..src + g * kp]);
+            let ssrc = hh * dh;
+            let sdst = ((slot * h + hh) * ng + gi) * dh;
+            lc.k_scale.as_mut().unwrap().as_f32_mut()?[sdst..sdst + dh]
+                .copy_from_slice(&k_outs[1].as_f32()?[ssrc..ssrc + dh]);
+            lc.k_zero.as_mut().unwrap().as_f32_mut()?[sdst..sdst + dh]
+                .copy_from_slice(&k_outs[2].as_f32()?[ssrc..ssrc + dh]);
+            // value codes + per-token scale/zero
+            let vsrc = (hh * g) * vp;
+            let vdst = ((slot * h + hh) * s + start) * vp;
+            lc.v_codes.as_mut().unwrap().as_u8_mut()?[vdst..vdst + g * vp]
+                .copy_from_slice(&v_outs[0].as_u8()?[vsrc..vsrc + g * vp]);
+            let tsrc = hh * g;
+            let tdst = (slot * h + hh) * s + start;
+            lc.v_scale.as_mut().unwrap().as_f32_mut()?[tdst..tdst + g]
+                .copy_from_slice(&v_outs[1].as_f32()?[tsrc..tsrc + g]);
+            lc.v_zero.as_mut().unwrap().as_f32_mut()?[tdst..tdst + g]
+                .copy_from_slice(&v_outs[2].as_f32()?[tsrc..tsrc + g]);
+        }
+        // drain the committed group out of the residual ring
+        let drained = lc.res_len[slot] as usize - g;
+        if drained > 0 {
+            for hh in 0..h {
+                let base = ((slot * h + hh) * r) * dh;
+                let kres = lc.k_res.as_mut().unwrap().as_f32_mut()?;
+                kres.copy_within(base + g * dh..base + (g + drained) * dh, base);
+                let vres = lc.v_res.as_mut().unwrap().as_f32_mut()?;
+                vres.copy_within(base + g * dh..base + (g + drained) * dh, base);
+            }
+        }
+        lc.res_len[slot] = drained as i32;
+        lc.cache_len[slot] += g as i32;
+        Ok(())
+    }
+
+    /// Write fp new-token K/V into an fp-mode layer's cache.
+    pub fn append_fp(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor, // [b,h,T,Dh]
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<()> {
+        let lc = &mut self.layers[layer];
+        debug_assert_eq!(lc.spec.mode, Mode::Fp);
+        let (h, dh, s) = (self.n_kv_heads, self.head_dim, self.s_max);
+        let t = k_new.shape[2];
+        let b_exec = k_new.shape[0];
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = lc.cache_len[slot] as usize;
+            anyhow::ensure!(start + nv <= s, "fp cache overflow (slot {slot})");
+            for hh in 0..h {
+                for ti in 0..nv {
+                    let src = ((bi * h + hh) * t + ti) * dh;
+                    let dst = ((slot * h + hh) * s + start + ti) * dh;
+                    lc.k_fp.as_mut().unwrap().as_f32_mut()?[dst..dst + dh]
+                        .copy_from_slice(&k_new.as_f32()?[src..src + dh]);
+                    lc.v_fp.as_mut().unwrap().as_f32_mut()?[dst..dst + dh]
+                        .copy_from_slice(&v_new.as_f32()?[src..src + dh]);
+                }
+            }
+            lc.cache_len[slot] += nv as i32;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, PrecisionPair};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            n_layers: 2, d_model: 64, n_heads: 2, n_kv_heads: 2, head_dim: 32,
+            d_ff: 128, vocab: 64, rope_theta: 10000.0, group: 32, residual: 32,
+            rms_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn memory_scales_with_precision() {
+        let c = cfg();
+        let spec = |k, v| vec![LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(k, v) }; 2];
+        let b8 = KvCache::new(&c, &spec(8, 8), 2, 256).unwrap().kv_bytes();
+        let b4 = KvCache::new(&c, &spec(4, 4), 2, 256).unwrap().kv_bytes();
+        let b2 = KvCache::new(&c, &spec(2, 2), 2, 256).unwrap().kv_bytes();
+        assert!(b8 > b4 && b4 > b2, "{b8} {b4} {b2}");
+        // codes dominate: 8-bit codes are 4x the 2-bit codes
+        let fp = KvCache::new(&c, &LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, 2), 2, 256)
+            .unwrap()
+            .kv_bytes();
+        assert!(fp > b8);
+    }
+
+    #[test]
+    fn equivalent_bits_mixed() {
+        let c = cfg();
+        let specs = vec![
+            LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 4) },
+            LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(4, 2) },
+        ];
+        let kc = KvCache::new(&c, &specs, 1, 256).unwrap();
+        assert_eq!(kc.equivalent_bits(), 4.5);
+    }
+
+    #[test]
+    fn token_append_and_reset() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), 2);
+        let mut kc = KvCache::new(&c, &specs, 2, 256).unwrap();
+        let t = 1;
+        let outs = vec![
+            Tensor::u8(&[2, 2, t, 16], vec![7; 2 * 2 * t * 16]),
+            Tensor::f32(&[2, 2, t], vec![0.5; 4]),
+            Tensor::f32(&[2, 2, t], vec![0.1; 4]),
+            Tensor::u8(&[2, 2, t, 16], vec![3; 2 * 2 * t * 16]),
+            Tensor::f32(&[2, 2, t], vec![0.5; 4]),
+            Tensor::f32(&[2, 2, t], vec![0.1; 4]),
+        ];
+        kc.append_token_outputs(0, 0, &outs, &[1, 1]).unwrap();
+        assert_eq!(kc.layers[0].cache_len, vec![1, 1]);
+        // slot 1 row 0 of codes written
+        let codes = kc.layers[0].k_codes.as_ref().unwrap().as_u8().unwrap();
+        assert_eq!(codes[(1 * 2 + 0) * 256 * 16], 7);
+        kc.reset_slot(1);
+        assert_eq!(kc.layers[0].cache_len, vec![1, 0]);
+    }
+
+    #[test]
+    fn kivi_residual_fill_and_drain() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), 2);
+        let mut kc = KvCache::new(&c, &specs, 1, 256).unwrap();
+        let mk = |val: f32| Tensor::f32(&[1, 2, 1, 32], vec![val; 64]);
+        for i in 0..31 {
+            let nc = kc.append_kivi_residual(0, 0, &mk(i as f32), &mk(0.0), &[1]).unwrap();
+            assert!(!nc[0]);
+        }
+        let nc = kc.append_kivi_residual(0, 0, &mk(31.0), &mk(0.0), &[1]).unwrap();
+        assert!(nc[0]);
+        let (kchunk, _v) = kc.residual_chunk(0, 0).unwrap();
+        // chunk token ti has value ti
+        let kf = kchunk.as_f32().unwrap();
+        assert_eq!(kf[0], 0.0);
+        assert_eq!(kf[5 * 32], 5.0);
+    }
+}

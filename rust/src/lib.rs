@@ -1,0 +1,69 @@
+//! KVTuner: sensitivity-aware layer-wise mixed-precision KV cache
+//! quantization for LLM serving (ICML 2025 reproduction).
+//!
+//! Three-layer architecture:
+//! - L1/L2 (build-time Python): Pallas kernels + JAX layer graphs, AOT-lowered
+//!   to HLO-text artifacts (`python/compile/`).
+//! - L3 (this crate): PJRT runtime, mixed-precision KV cache manager, serving
+//!   coordinator, and the KVTuner offline calibration pipeline.
+
+pub mod analysis;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tuner;
+pub mod util;
+
+pub use cli::cli_main;
+
+/// Bench support: measure decode throughput for one precision map (Table 8).
+pub fn measure_throughput(
+    rt: &std::sync::Arc<runtime::Runtime>,
+    model: &str,
+    specs: Vec<config::LayerSpec>,
+    batch: usize,
+    s_max: usize,
+    input_len: usize,
+    steps: usize,
+) -> anyhow::Result<cli::throughput_cmd::ThroughputRow> {
+    cli::throughput_cmd::measure(rt, model, specs, batch, s_max, input_len, steps, false)
+}
+
+/// Bench support: the uniform KIVI settings grid of Table 8.
+pub fn cli_settings_grid(
+    n_layers: usize,
+) -> anyhow::Result<Vec<(String, Vec<config::LayerSpec>)>> {
+    cli::throughput_cmd::settings_grid(n_layers, &[])
+}
+
+/// A representative KVTuner-style mixed map (K8V4 edges, K4V2 middle) for
+/// benches that want a tuned-shaped config without running the search.
+pub fn tuned_style_map(n_layers: usize) -> Vec<config::LayerSpec> {
+    (0..n_layers)
+        .map(|l| config::LayerSpec {
+            mode: config::Mode::Kivi,
+            pair: if l == 0 || l + 1 == n_layers {
+                config::PrecisionPair::new(8, 4)
+            } else {
+                config::PrecisionPair::new(4, 2)
+            },
+        })
+        .collect()
+}
+
+/// Default artifact directory: `$KVTUNER_ARTIFACTS` or `<repo>/artifacts/tiny`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("KVTUNER_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p.push("tiny");
+    p
+}

@@ -1,0 +1,5 @@
+//! KVTuner CLI — subcommands are wired in `cli_main.rs` as the crate grows.
+
+fn main() -> anyhow::Result<()> {
+    kvtuner::cli_main()
+}

@@ -1,0 +1,7 @@
+//! Model substrate: weight store + the pure-Rust reference engine.
+
+pub mod ref_engine;
+pub mod weights;
+
+pub use ref_engine::RefEngine;
+pub use weights::{Weights, LAYER_WEIGHT_NAMES};

@@ -1,0 +1,372 @@
+//! Pure-Rust reference engine: the same transformer as the JAX/Pallas model
+//! (matched numerics: RMSNorm, split-half RoPE, GQA, tanh-approx GELU), with
+//! *fake-quant-at-storage* KV caching per layer spec.
+//!
+//! Three jobs:
+//! 1. The KVTuner offline pipeline's evaluation substrate — error
+//!    accumulation semantics identical to the PJRT engine, but cheap enough
+//!    to run hundreds of MOO evaluations (and it exposes per-layer Q/K/V for
+//!    the profiler, which the AOT executables do not).
+//! 2. The FP reference arm of the fidelity accuracy metric.
+//! 3. Parity oracle for the PJRT engine (integration tests diff the two).
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig};
+use crate::quant::error::LayerCapture;
+use crate::quant::{quantize_per_channel, quantize_per_token};
+
+use super::weights::Weights;
+
+/// Per-layer KV cache with quantize-at-commit semantics.
+struct LayerCache {
+    k: Vec<f32>, // [Hkv, S_cap, Dh], rows beyond `len` undefined
+    v: Vec<f32>,
+    len: usize,
+    committed: usize, // tokens already fake-quantized (kivi group commits)
+}
+
+pub struct RefEngine<'w> {
+    pub cfg: ModelConfig,
+    weights: &'w Weights,
+    pub specs: Vec<LayerSpec>,
+    caches: Vec<LayerCache>,
+    capacity: usize,
+    x_scratch: Vec<f32>,
+    /// When set, per-layer Q/K/V captures are recorded (pre-quantization).
+    pub capture: Option<Vec<LayerCapture>>,
+    /// Logits of the most recent step (for perplexity-style evals).
+    pub last_logits: Vec<f32>,
+}
+
+fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+    let d = x.len();
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * r * g[i];
+    }
+}
+
+/// y[j] += sum_i x[i] * w[i, j]  (w: [d_in, d_out] row-major)
+fn matvec_acc(x: &[f32], w: &[f32], d_in: usize, d_out: usize, y: &mut [f32]) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    for i in 0..d_in {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+fn gelu_tanh(x: f32) -> f32 {
+    // jax.nn.gelu default (approximate=True)
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Split-half RoPE matching model.py::apply_rope.
+fn apply_rope(x: &mut [f32], pos: usize, head_dim: usize, theta: f64) {
+    let half = head_dim / 2;
+    for i in 0..half {
+        let freq = (theta as f32).powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (s, c) = ang.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * c - b * s;
+        x[i + half] = a * s + b * c;
+    }
+}
+
+impl<'w> RefEngine<'w> {
+    pub fn new(cfg: &ModelConfig, weights: &'w Weights, specs: Vec<LayerSpec>, capacity: usize) -> Result<RefEngine<'w>> {
+        anyhow::ensure!(specs.len() == cfg.n_layers, "one spec per layer");
+        let hkv = cfg.n_kv_heads;
+        let caches = (0..cfg.n_layers)
+            .map(|_| LayerCache {
+                k: vec![0.0; hkv * capacity * cfg.head_dim],
+                v: vec![0.0; hkv * capacity * cfg.head_dim],
+                len: 0,
+                committed: 0,
+            })
+            .collect();
+        Ok(RefEngine {
+            cfg: cfg.clone(),
+            weights,
+            specs,
+            caches,
+            capacity,
+            x_scratch: vec![0.0; cfg.d_model],
+            capture: None,
+            last_logits: vec![0.0; cfg.vocab],
+        })
+    }
+
+    pub fn enable_capture(&mut self) {
+        let c = &self.cfg;
+        self.capture = Some(
+            (0..c.n_layers)
+                .map(|_| LayerCapture {
+                    q: Vec::new(),
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    s: 0,
+                    n_heads: c.n_heads,
+                    n_kv_heads: c.n_kv_heads,
+                    head_dim: c.head_dim,
+                })
+                .collect(),
+        );
+    }
+
+    /// Finalize captures: reshape the appended per-token K/V into [Hkv, S, Dh].
+    pub fn take_capture(&mut self) -> Option<Vec<LayerCapture>> {
+        let caps = self.capture.take()?;
+        let (hkv, dh) = (self.cfg.n_kv_heads, self.cfg.head_dim);
+        Some(
+            caps.into_iter()
+                .map(|mut c| {
+                    // stored as [S, Hkv, Dh] during append; transpose to [Hkv, S, Dh]
+                    let s = c.k.len() / (hkv * dh);
+                    let mut k = vec![0.0; c.k.len()];
+                    let mut v = vec![0.0; c.v.len()];
+                    for t in 0..s {
+                        for h in 0..hkv {
+                            let src = (t * hkv + h) * dh;
+                            let dst = (h * s + t) * dh;
+                            k[dst..dst + dh].copy_from_slice(&c.k[src..src + dh]);
+                            v[dst..dst + dh].copy_from_slice(&c.v[src..src + dh]);
+                        }
+                    }
+                    c.k = k;
+                    c.v = v;
+                    c.s = s;
+                    c
+                })
+                .collect(),
+        )
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.caches {
+            c.len = 0;
+            c.committed = 0;
+        }
+        if self.capture.is_some() {
+            self.enable_capture();
+        }
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.caches[0].len
+    }
+
+    /// Process one token; returns the logits-argmax (the next token).
+    pub fn step(&mut self, token: i32) -> Result<i32> {
+        let cfg = self.cfg.clone();
+        let (d, hq, hkv, dh, ff) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff);
+        let gqa = hq / hkv;
+        let eps = cfg.rms_eps as f32;
+        let pos = self.caches[0].len;
+        anyhow::ensure!(pos < self.capacity, "cache capacity {} exceeded", self.capacity);
+
+        // embed
+        let emb = self.weights.embed()?.as_f32()?;
+        let mut x = emb[(token as usize) * d..(token as usize + 1) * d].to_vec();
+
+        let mut h = vec![0f32; d];
+        let mut q = vec![0f32; hq * dh];
+        let mut k = vec![0f32; hkv * dh];
+        let mut v = vec![0f32; hkv * dh];
+        let mut attn_out = vec![0f32; hq * dh];
+        let mut mlp_h = vec![0f32; ff];
+
+        for l in 0..cfg.n_layers {
+            let lw = self.weights.layer(l)?;
+            let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+                lw[0].as_f32()?, lw[1].as_f32()?, lw[2].as_f32()?, lw[3].as_f32()?,
+                lw[4].as_f32()?, lw[5].as_f32()?, lw[6].as_f32()?, lw[7].as_f32()?,
+            );
+            rmsnorm(&x, ln1, eps, &mut h);
+            q.fill(0.0);
+            k.fill(0.0);
+            v.fill(0.0);
+            matvec_acc(&h, wq, d, hq * dh, &mut q);
+            matvec_acc(&h, wk, d, hkv * dh, &mut k);
+            matvec_acc(&h, wv, d, hkv * dh, &mut v);
+            for hh in 0..hq {
+                apply_rope(&mut q[hh * dh..(hh + 1) * dh], pos, dh, cfg.rope_theta);
+            }
+            for hh in 0..hkv {
+                apply_rope(&mut k[hh * dh..(hh + 1) * dh], pos, dh, cfg.rope_theta);
+            }
+
+            if let Some(caps) = &mut self.capture {
+                caps[l].q.extend_from_slice(&q);
+                caps[l].k.extend_from_slice(&k);
+                caps[l].v.extend_from_slice(&v);
+            }
+
+            // append to cache (fp now; quantized at commit below)
+            {
+                let cache = &mut self.caches[l];
+                for hh in 0..hkv {
+                    let dst = (hh * self.capacity + pos) * dh;
+                    cache.k[dst..dst + dh].copy_from_slice(&k[hh * dh..(hh + 1) * dh]);
+                    cache.v[dst..dst + dh].copy_from_slice(&v[hh * dh..(hh + 1) * dh]);
+                }
+                cache.len = pos + 1;
+            }
+            self.commit_layer(l)?;
+
+            // attention over the (possibly quantized-at-storage) cache
+            let cache = &self.caches[l];
+            let s_len = cache.len;
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut scores = vec![0f32; s_len];
+            for hh in 0..hq {
+                let kv = hh / gqa;
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                let mut maxs = f32::NEG_INFINITY;
+                for j in 0..s_len {
+                    let kj = &cache.k[(kv * self.capacity + j) * dh..(kv * self.capacity + j) * dh + dh];
+                    let mut dot = 0f32;
+                    for dd in 0..dh {
+                        dot += qh[dd] * kj[dd];
+                    }
+                    scores[j] = dot * scale;
+                    maxs = maxs.max(scores[j]);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxs).exp();
+                    denom += *sc;
+                }
+                let o = &mut attn_out[hh * dh..(hh + 1) * dh];
+                o.fill(0.0);
+                for j in 0..s_len {
+                    let p = scores[j] / denom;
+                    let vj = &cache.v[(kv * self.capacity + j) * dh..(kv * self.capacity + j) * dh + dh];
+                    for dd in 0..dh {
+                        o[dd] += p * vj[dd];
+                    }
+                }
+            }
+
+            // output proj + residual
+            self.x_scratch.fill(0.0);
+            matvec_acc(&attn_out, wo, hq * dh, d, &mut self.x_scratch);
+            for i in 0..d {
+                x[i] += self.x_scratch[i];
+            }
+
+            // MLP
+            rmsnorm(&x, ln2, eps, &mut h);
+            mlp_h.fill(0.0);
+            matvec_acc(&h, w1, d, ff, &mut mlp_h);
+            for m in mlp_h.iter_mut() {
+                *m = gelu_tanh(*m);
+            }
+            self.x_scratch.fill(0.0);
+            matvec_acc(&mlp_h, w2, ff, d, &mut self.x_scratch);
+            for i in 0..d {
+                x[i] += self.x_scratch[i];
+            }
+        }
+
+        // lm head (tied embedding)
+        rmsnorm(&x, self.weights.ln_f()?.as_f32()?, eps, &mut h);
+        let vsize = cfg.vocab;
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for t in 0..vsize {
+            let row = &emb[t * d..(t + 1) * d];
+            let mut dot = 0f32;
+            for i in 0..d {
+                dot += h[i] * row[i];
+            }
+            self.last_logits[t] = dot;
+            if dot > best.1 {
+                best = (t, dot);
+            }
+        }
+        Ok(best.0 as i32)
+    }
+
+    /// Storage-quantization commit for layer `l` per its spec.
+    fn commit_layer(&mut self, l: usize) -> Result<()> {
+        let spec = self.specs[l];
+        let (hkv, dh, group) = (self.cfg.n_kv_heads, self.cfg.head_dim, self.cfg.group);
+        let cap = self.capacity;
+        let cache = &mut self.caches[l];
+        match spec.mode {
+            Mode::Fp => {}
+            Mode::Token => {
+                // quantize the just-appended token immediately (no residual)
+                let t = cache.len - 1;
+                for hh in 0..hkv {
+                    let o = (hh * cap + t) * dh;
+                    if spec.pair.k_bits < 16 {
+                        let q = quantize_per_token(&cache.k[o..o + dh], 1, dh, spec.pair.k_bits)?;
+                        q.dequantize_into(&mut cache.k[o..o + dh]);
+                    }
+                    if spec.pair.v_bits < 16 {
+                        let q = quantize_per_token(&cache.v[o..o + dh], 1, dh, spec.pair.v_bits)?;
+                        q.dequantize_into(&mut cache.v[o..o + dh]);
+                    }
+                }
+                cache.committed = cache.len;
+            }
+            Mode::Kivi => {
+                // residual ring: commit whole groups once `group` tokens queue up
+                while cache.len - cache.committed >= group {
+                    let t0 = cache.committed;
+                    for hh in 0..hkv {
+                        let o = (hh * cap + t0) * dh;
+                        if spec.pair.k_bits < 16 {
+                            let q = quantize_per_channel(
+                                &cache.k[o..o + group * dh], group, dh, spec.pair.k_bits)?;
+                            q.dequantize_into(&mut cache.k[o..o + group * dh]);
+                        }
+                        if spec.pair.v_bits < 16 {
+                            let q = quantize_per_token(
+                                &cache.v[o..o + group * dh], group, dh, spec.pair.v_bits)?;
+                            q.dequantize_into(&mut cache.v[o..o + group * dh]);
+                        }
+                    }
+                    cache.committed += group;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Prefill a prompt token-by-token (error accumulation enabled, matching
+    /// the paper's calibration design), then greedily decode `max_new`.
+    pub fn generate(&mut self, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        self.reset();
+        let mut next = 0i32;
+        for &t in prompt {
+            next = self.step(t)?;
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            out.push(next);
+            if self.cache_len() >= self.capacity {
+                break;
+            }
+            next = self.step(next)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // RefEngine correctness is covered by integration tests that diff it
+    // against the PJRT engine (rust/tests/integration.rs) — building a
+    // weights fixture here would duplicate that.
+}

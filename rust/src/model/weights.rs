@@ -1,0 +1,81 @@
+//! Weight store: loads `weights-<model>.bin` (flat little-endian f32) using
+//! the tensor index from the manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Manifest, ModelConfig};
+use crate::tensor::Tensor;
+
+pub const LAYER_WEIGHT_NAMES: [&str; 8] = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"];
+
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub model_name: String,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest, model_name: &str) -> Result<Weights> {
+        let entry = manifest.model(model_name)?;
+        let path = manifest.dir.join(&entry.weights_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights file {path:?} not a multiple of 4 bytes");
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = BTreeMap::new();
+        for (name, te) in &entry.tensors {
+            let n: usize = te.shape.iter().product();
+            if te.offset + n > floats.len() {
+                bail!("tensor {name} out of bounds in {path:?}");
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor::f32(&te.shape, floats[te.offset..te.offset + n].to_vec()),
+            );
+        }
+        Ok(Weights { model_name: model_name.to_string(), tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing weight tensor {name:?}"))
+    }
+
+    pub fn embed(&self) -> Result<&Tensor> {
+        self.get("embed")
+    }
+
+    pub fn ln_f(&self) -> Result<&Tensor> {
+        self.get("ln_f")
+    }
+
+    /// The 8 per-layer tensors in artifact argument order.
+    pub fn layer(&self, l: usize) -> Result<Vec<&Tensor>> {
+        LAYER_WEIGHT_NAMES
+            .iter()
+            .map(|nm| self.get(&format!("layer{l}.{nm}")))
+            .collect()
+    }
+
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        let d = cfg.d_model;
+        if self.embed()?.shape != [cfg.vocab, d] {
+            bail!("embed shape mismatch");
+        }
+        for l in 0..cfg.n_layers {
+            let lw = self.layer(l)?;
+            if lw[1].shape != [d, cfg.n_heads * cfg.head_dim] {
+                bail!("layer {l} wq shape mismatch");
+            }
+            if lw[2].shape != [d, cfg.n_kv_heads * cfg.head_dim] {
+                bail!("layer {l} wk shape mismatch");
+            }
+        }
+        Ok(())
+    }
+}

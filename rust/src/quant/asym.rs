@@ -1,0 +1,190 @@
+//! Rust-native asymmetric round-to-nearest quantization — the offline
+//! substrate behind the tuner's error profiler, the reference engine's
+//! fake-quant arms, and the property tests. Mirrors the Pallas kernels in
+//! `python/compile/kernels/quant.py` bit for bit (same eps, same rounding).
+
+use anyhow::Result;
+
+use super::packing::{pack_row, packed_width, unpack_row};
+
+const EPS: f32 = 1e-8;
+
+/// Quantized chunk of shape [tokens, head_dim] for a single (batch, head).
+#[derive(Debug, Clone)]
+pub struct QuantChunk {
+    pub codes: Vec<u8>,   // packed, [tokens, packed_width]
+    pub scale: Vec<f32>,  // per-token: [tokens]; per-channel: [head_dim]
+    pub zero: Vec<f32>,
+    pub bits: u8,
+    pub per_channel: bool,
+    pub tokens: usize,
+    pub head_dim: usize,
+}
+
+/// Per-token-asym: one (scale, zero) per token over its head_dim channels.
+pub fn quantize_per_token(x: &[f32], tokens: usize, head_dim: usize, bits: u8) -> Result<QuantChunk> {
+    assert_eq!(x.len(), tokens * head_dim);
+    let dhp = packed_width(head_dim, bits)?;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut codes = vec![0u8; tokens * dhp];
+    let mut scale = vec![0f32; tokens];
+    let mut zero = vec![0f32; tokens];
+    let mut row = vec![0u8; head_dim];
+    for t in 0..tokens {
+        let xs = &x[t * head_dim..(t + 1) * head_dim];
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in xs {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let s = ((hi - lo) / qmax).max(EPS);
+        for (d, &v) in xs.iter().enumerate() {
+            row[d] = (((v - lo) / s).round().clamp(0.0, qmax)) as u8;
+        }
+        pack_row(&row, bits, &mut codes[t * dhp..(t + 1) * dhp]);
+        scale[t] = s;
+        zero[t] = lo;
+    }
+    Ok(QuantChunk { codes, scale, zero, bits, per_channel: false, tokens, head_dim })
+}
+
+/// Per-channel-asym: one (scale, zero) per channel over the chunk's tokens
+/// (KIVI-style key quantization over a token group).
+pub fn quantize_per_channel(x: &[f32], tokens: usize, head_dim: usize, bits: u8) -> Result<QuantChunk> {
+    assert_eq!(x.len(), tokens * head_dim);
+    let dhp = packed_width(head_dim, bits)?;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut lo = vec![f32::INFINITY; head_dim];
+    let mut hi = vec![f32::NEG_INFINITY; head_dim];
+    for t in 0..tokens {
+        for d in 0..head_dim {
+            let v = x[t * head_dim + d];
+            lo[d] = lo[d].min(v);
+            hi[d] = hi[d].max(v);
+        }
+    }
+    let scale: Vec<f32> = lo.iter().zip(&hi).map(|(&l, &h)| ((h - l) / qmax).max(EPS)).collect();
+    let mut codes = vec![0u8; tokens * dhp];
+    let mut row = vec![0u8; head_dim];
+    for t in 0..tokens {
+        for d in 0..head_dim {
+            let v = x[t * head_dim + d];
+            row[d] = (((v - lo[d]) / scale[d]).round().clamp(0.0, qmax)) as u8;
+        }
+        pack_row(&row, bits, &mut codes[t * dhp..(t + 1) * dhp]);
+    }
+    Ok(QuantChunk { codes, scale, zero: lo, bits, per_channel: true, tokens, head_dim })
+}
+
+impl QuantChunk {
+    /// Dequantize the whole chunk into `out` ([tokens, head_dim]).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.tokens * self.head_dim);
+        let dhp = self.codes.len() / self.tokens;
+        let mut row = vec![0u8; self.head_dim];
+        for t in 0..self.tokens {
+            unpack_row(&self.codes[t * dhp..(t + 1) * dhp], self.bits, &mut row);
+            let o = &mut out[t * self.head_dim..(t + 1) * self.head_dim];
+            if self.per_channel {
+                for d in 0..self.head_dim {
+                    o[d] = row[d] as f32 * self.scale[d] + self.zero[d];
+                }
+            } else {
+                let (s, z) = (self.scale[t], self.zero[t]);
+                for d in 0..self.head_dim {
+                    o[d] = row[d] as f32 * s + z;
+                }
+            }
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.tokens * self.head_dim];
+        self.dequantize_into(&mut out);
+        out
+    }
+}
+
+/// Quantize + dequantize in place (the error-profiling primitive; the whole
+/// slice is one group).
+pub fn fake_quant(x: &mut [f32], tokens: usize, head_dim: usize, bits: u8, per_channel: bool) -> Result<()> {
+    if bits >= 16 {
+        return Ok(());
+    }
+    let q = if per_channel {
+        quantize_per_channel(x, tokens, head_dim, bits)?
+    } else {
+        quantize_per_token(x, tokens, head_dim, bits)?
+    };
+    q.dequantize_into(x);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn error_bound_per_token() {
+        let (t, dh) = (16, 32);
+        let x = randv(t * dh, 1);
+        for bits in [2u8, 4, 8] {
+            let q = quantize_per_token(&x, t, dh, bits).unwrap();
+            let y = q.dequantize();
+            for ti in 0..t {
+                for d in 0..dh {
+                    let e = (x[ti * dh + d] - y[ti * dh + d]).abs();
+                    assert!(e <= q.scale[ti] * 0.5 + 1e-6, "bits={bits} e={e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_bound_per_channel() {
+        let (t, dh) = (32, 16);
+        let x = randv(t * dh, 2);
+        let q = quantize_per_channel(&x, t, dh, 4).unwrap();
+        let y = q.dequantize();
+        for ti in 0..t {
+            for d in 0..dh {
+                let e = (x[ti * dh + d] - y[ti * dh + d]).abs();
+                assert!(e <= q.scale[d] * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        let (t, dh) = (32, 32);
+        let x = randv(t * dh, 3);
+        let err = |bits| {
+            let mut y = x.clone();
+            fake_quant(&mut y, t, dh, bits, false).unwrap();
+            x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum::<f32>() / x.len() as f32
+        };
+        assert!(err(2) > err(4) && err(4) > err(8));
+        assert_eq!(err(16), 0.0);
+    }
+
+    #[test]
+    fn channel_outliers_favor_per_channel() {
+        let (t, dh) = (64, 32);
+        let mut x = randv(t * dh, 4);
+        for ti in 0..t {
+            x[ti * dh] *= 30.0; // channel-0 outlier
+        }
+        let e = |pc| {
+            let mut y = x.clone();
+            fake_quant(&mut y, t, dh, 4, pc).unwrap();
+            x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum::<f32>() / x.len() as f32
+        };
+        assert!(e(true) < e(false) * 0.5, "pc={} tok={}", e(true), e(false));
+    }
+}

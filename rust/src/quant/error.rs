@@ -1,0 +1,257 @@
+//! Offline KV-quantization error metrics (paper Sec. 3.2): given captured
+//! full-precision Q/K/V for one layer, simulate quantize→dequantize (no
+//! error accumulation) and measure
+//!   e_k / e_v — relative KV cache errors,
+//!   e_a       — absolute attention score error,
+//!   e_o       — relative attention output error.
+//! These drive Table 9, Table 3, Fig. 3/7/13–19, and the tuner's intra-layer
+//! Pareto pruning.
+
+use anyhow::Result;
+
+use super::asym::fake_quant;
+use crate::config::{LayerSpec, Mode};
+
+/// Captured fp tensors for one layer over one prompt:
+/// q: [S, Hq, Dh] (every position's query), k/v: [Hkv, S, Dh].
+#[derive(Debug, Clone)]
+pub struct LayerCapture {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub s: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ErrorMetrics {
+    pub e_k: f64,
+    pub e_v: f64,
+    pub e_a: f64,
+    pub e_a_max: f64,
+    pub e_o: f64,
+}
+
+impl ErrorMetrics {
+    pub fn merge(&mut self, other: &ErrorMetrics, w: f64) {
+        self.e_k += other.e_k * w;
+        self.e_v += other.e_v * w;
+        self.e_a += other.e_a * w;
+        self.e_a_max = self.e_a_max.max(other.e_a_max);
+        self.e_o += other.e_o * w;
+    }
+}
+
+/// Fake-quantize a [Hkv, S, Dh] cache tensor under `spec`, group size `g`.
+/// KIVI keys are per-channel in token groups; everything else per-token.
+/// Only whole groups are quantized in kivi mode (the tail would live in the
+/// fp residual online, so the offline sim leaves it fp too).
+pub fn fake_quant_cache(
+    x: &mut [f32],
+    is_key: bool,
+    spec: LayerSpec,
+    n_kv_heads: usize,
+    s: usize,
+    head_dim: usize,
+    group: usize,
+) -> Result<()> {
+    let bits = if is_key { spec.pair.k_bits } else { spec.pair.v_bits };
+    if spec.mode == Mode::Fp || bits >= 16 {
+        return Ok(());
+    }
+    let per_channel = is_key && spec.mode == Mode::Kivi;
+    for h in 0..n_kv_heads {
+        let base = h * s * head_dim;
+        if per_channel {
+            let whole = (s / group) * group;
+            for g0 in (0..whole).step_by(group) {
+                let lo = base + g0 * head_dim;
+                let hi = lo + group * head_dim;
+                fake_quant(&mut x[lo..hi], group, head_dim, bits, true)?;
+            }
+        } else {
+            // per-token: each token its own group; one call covers all rows
+            fake_quant(&mut x[base..base + s * head_dim], s, head_dim, bits, false)?;
+        }
+    }
+    Ok(())
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y).abs() as f64;
+        den += x.abs() as f64;
+    }
+    num / den.max(1e-12)
+}
+
+/// Causal attention over a single head's K/V; returns (scores, out) so the
+/// caller can diff against the quantized run.
+/// q: [S, Hq, Dh]; the head's kv index is h / (Hq/Hkv).
+fn causal_attention(
+    cap: &LayerCapture,
+    k: &[f32],
+    v: &[f32],
+    probs_out: &mut [f32], // [Hq, S, S] lower-triangular filled
+    out: &mut [f32],       // [Hq, S, Dh]
+) {
+    let (s, hq, hkv, dh) = (cap.s, cap.n_heads, cap.n_kv_heads, cap.head_dim);
+    let gqa = hq / hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0f32; s];
+    for h in 0..hq {
+        let kv = h / gqa;
+        for i in 0..s {
+            let q = &cap.q[(i * hq + h) * dh..(i * hq + h + 1) * dh];
+            let mut maxs = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k[(kv * s + j) * dh..(kv * s + j + 1) * dh];
+                let mut dot = 0f32;
+                for d in 0..dh {
+                    dot += q[d] * kj[d];
+                }
+                scores[j] = dot * scale;
+                maxs = maxs.max(scores[j]);
+            }
+            let mut denom = 0f32;
+            for j in 0..=i {
+                scores[j] = (scores[j] - maxs).exp();
+                denom += scores[j];
+            }
+            let o = &mut out[(h * s + i) * dh..(h * s + i + 1) * dh];
+            o.fill(0.0);
+            for j in 0..=i {
+                let p = scores[j] / denom;
+                probs_out[(h * s + i) * s + j] = p;
+                let vj = &v[(kv * s + j) * dh..(kv * s + j + 1) * dh];
+                for d in 0..dh {
+                    o[d] += p * vj[d];
+                }
+            }
+        }
+    }
+}
+
+/// Full offline error simulation for one layer capture under one spec.
+pub fn layer_errors(cap: &LayerCapture, spec: LayerSpec, group: usize) -> Result<ErrorMetrics> {
+    let (s, hq, hkv, dh) = (cap.s, cap.n_heads, cap.n_kv_heads, cap.head_dim);
+    let mut k_hat = cap.k.clone();
+    let mut v_hat = cap.v.clone();
+    fake_quant_cache(&mut k_hat, true, spec, hkv, s, dh, group)?;
+    fake_quant_cache(&mut v_hat, false, spec, hkv, s, dh, group)?;
+
+    let mut probs = vec![0f32; hq * s * s];
+    let mut probs_hat = vec![0f32; hq * s * s];
+    let mut out = vec![0f32; hq * s * dh];
+    let mut out_hat = vec![0f32; hq * s * dh];
+    causal_attention(cap, &cap.k, &cap.v, &mut probs, &mut out);
+    causal_attention(cap, &k_hat, &v_hat, &mut probs_hat, &mut out_hat);
+
+    let mut e_a = 0f64;
+    let mut e_a_max = 0f64;
+    let mut n_scores = 0usize;
+    for h in 0..hq {
+        for i in 0..s {
+            for j in 0..=i {
+                let d = (probs[(h * s + i) * s + j] - probs_hat[(h * s + i) * s + j]).abs() as f64;
+                e_a += d;
+                e_a_max = e_a_max.max(d);
+                n_scores += 1;
+            }
+        }
+    }
+    Ok(ErrorMetrics {
+        e_k: rel_err(&cap.k, &k_hat),
+        e_v: rel_err(&cap.v, &v_hat),
+        e_a: e_a / n_scores as f64,
+        e_a_max,
+        e_o: rel_err(&out, &out_hat),
+    })
+}
+
+/// Per-(query, head) attention rows for pattern analysis (Fig. 2/4/11/12):
+/// returns probs [Hq, S, S] under the given spec.
+pub fn attention_probs(cap: &LayerCapture, spec: LayerSpec, group: usize) -> Result<Vec<f32>> {
+    let (s, hq, hkv, dh) = (cap.s, cap.n_heads, cap.n_kv_heads, cap.head_dim);
+    let mut k_hat = cap.k.clone();
+    let mut v_hat = cap.v.clone();
+    fake_quant_cache(&mut k_hat, true, spec, hkv, s, dh, group)?;
+    fake_quant_cache(&mut v_hat, false, spec, hkv, s, dh, group)?;
+    let mut probs = vec![0f32; hq * s * s];
+    let mut out = vec![0f32; hq * s * dh];
+    causal_attention(cap, &k_hat, &v_hat, &mut probs, &mut out);
+    Ok(probs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrecisionPair;
+    use crate::util::rng::Rng;
+
+    fn capture(s: usize, seed: u64) -> LayerCapture {
+        let (hq, hkv, dh) = (4, 2, 16);
+        let mut r = Rng::seed(seed);
+        let mut gen = |n: usize| (0..n).map(|_| r.normal() as f32).collect::<Vec<f32>>();
+        LayerCapture {
+            q: gen(s * hq * dh),
+            k: gen(hkv * s * dh),
+            v: gen(hkv * s * dh),
+            s,
+            n_heads: hq,
+            n_kv_heads: hkv,
+            head_dim: dh,
+        }
+    }
+
+    #[test]
+    fn fp_spec_is_exact() {
+        let cap = capture(24, 0);
+        let m = layer_errors(&cap, LayerSpec::fp(), 32).unwrap();
+        assert_eq!(m.e_k, 0.0);
+        assert_eq!(m.e_o, 0.0);
+    }
+
+    #[test]
+    fn errors_monotone_in_precision() {
+        let cap = capture(48, 1);
+        let spec = |k, v| LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(k, v) };
+        let m8 = layer_errors(&cap, spec(8, 8), 32).unwrap();
+        let m4 = layer_errors(&cap, spec(4, 4), 32).unwrap();
+        let m2 = layer_errors(&cap, spec(2, 2), 32).unwrap();
+        assert!(m8.e_o < m4.e_o && m4.e_o < m2.e_o, "{} {} {}", m8.e_o, m4.e_o, m2.e_o);
+        assert!(m8.e_a < m4.e_a && m4.e_a < m2.e_a);
+    }
+
+    #[test]
+    fn key_matters_more_than_value() {
+        // K4V2 should beat K2V4 on e_o at equal memory (paper Table 3). The
+        // effect needs moderately concentrated attention (Lemma 1's regime):
+        // sharpen the queries the way the engineered temp profile does.
+        let mut cap = capture(64, 2);
+        for q in cap.q.iter_mut() {
+            *q *= 3.0;
+        }
+        let spec = |k, v| LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(k, v) };
+        let k_first = layer_errors(&cap, spec(4, 2), 32).unwrap();
+        let v_first = layer_errors(&cap, spec(2, 4), 32).unwrap();
+        assert!(k_first.e_o < v_first.e_o, "{} vs {}", k_first.e_o, v_first.e_o);
+    }
+
+    #[test]
+    fn probs_rows_sum_to_one() {
+        let cap = capture(16, 3);
+        let p = attention_probs(&cap, LayerSpec::fp(), 32).unwrap();
+        let s = cap.s;
+        for h in 0..cap.n_heads {
+            for i in 0..s {
+                let row: f32 = p[(h * s + i) * s..(h * s + i) * s + i + 1].iter().sum();
+                assert!((row - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+}

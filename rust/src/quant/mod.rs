@@ -1,0 +1,11 @@
+//! Rust-native quantization substrate: bit-packing, asymmetric quant, and
+//! offline error metrics. This mirrors the L1 Pallas kernels and powers the
+//! KVTuner offline pipeline (which must not depend on the PJRT hot path).
+
+pub mod asym;
+pub mod error;
+pub mod packing;
+
+pub use asym::{fake_quant, quantize_per_channel, quantize_per_token, QuantChunk};
+pub use error::{attention_probs, fake_quant_cache, layer_errors, ErrorMetrics, LayerCapture};
+pub use packing::{pack_row, packed_width, unpack_row};

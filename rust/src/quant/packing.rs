@@ -1,0 +1,94 @@
+//! Bit-packing, mirroring `python/compile/kernels/packing.py` exactly:
+//! codes pack along the head dim, channel `d` in byte `d / per_byte` at bit
+//! offset `bits * (d % per_byte)`.
+
+use anyhow::{bail, Result};
+
+pub const SUPPORTED_BITS: [u8; 3] = [2, 4, 8];
+
+pub fn packed_width(head_dim: usize, bits: u8) -> Result<usize> {
+    if !SUPPORTED_BITS.contains(&bits) {
+        bail!("bits must be 2/4/8, got {bits}");
+    }
+    if head_dim * bits as usize % 8 != 0 {
+        bail!("head_dim={head_dim} not packable at {bits} bits");
+    }
+    Ok(head_dim * bits as usize / 8)
+}
+
+/// Pack one row of codes (values < 2^bits) into `out` (len = packed_width).
+pub fn pack_row(codes: &[u8], bits: u8, out: &mut [u8]) {
+    match bits {
+        8 => out.copy_from_slice(codes),
+        4 => {
+            for (i, chunk) in codes.chunks_exact(2).enumerate() {
+                out[i] = chunk[0] | (chunk[1] << 4);
+            }
+        }
+        2 => {
+            for (i, chunk) in codes.chunks_exact(4).enumerate() {
+                out[i] = chunk[0] | (chunk[1] << 2) | (chunk[2] << 4) | (chunk[3] << 6);
+            }
+        }
+        _ => unreachable!("unsupported bits {bits}"),
+    }
+}
+
+/// Unpack one packed row into `out` (len = head_dim).
+pub fn unpack_row(packed: &[u8], bits: u8, out: &mut [u8]) {
+    match bits {
+        8 => out.copy_from_slice(packed),
+        4 => {
+            for (i, &b) in packed.iter().enumerate() {
+                out[2 * i] = b & 0x0F;
+                out[2 * i + 1] = b >> 4;
+            }
+        }
+        2 => {
+            for (i, &b) in packed.iter().enumerate() {
+                out[4 * i] = b & 0x03;
+                out[4 * i + 1] = (b >> 2) & 0x03;
+                out[4 * i + 2] = (b >> 4) & 0x03;
+                out[4 * i + 3] = (b >> 6) & 0x03;
+            }
+        }
+        _ => unreachable!("unsupported bits {bits}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(packed_width(64, 8).unwrap(), 64);
+        assert_eq!(packed_width(64, 4).unwrap(), 32);
+        assert_eq!(packed_width(64, 2).unwrap(), 16);
+        assert!(packed_width(64, 3).is_err());
+        assert!(packed_width(3, 2).is_err());
+    }
+
+    #[test]
+    fn roundtrip_all_bits() {
+        for bits in SUPPORTED_BITS {
+            let dh = 32;
+            let max = 1usize << bits;
+            let codes: Vec<u8> = (0..dh).map(|i| (i * 7 % max) as u8).collect();
+            let mut packed = vec![0u8; packed_width(dh, bits).unwrap()];
+            pack_row(&codes, bits, &mut packed);
+            let mut back = vec![0u8; dh];
+            unpack_row(&packed, bits, &mut back);
+            assert_eq!(codes, back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn layout_matches_python() {
+        // channel order: ch0 low bits first (see python test_unpack_channel_order)
+        let codes = [0u8, 1, 2, 3, 4, 5, 6, 7];
+        let mut packed = vec![0u8; 4];
+        pack_row(&codes, 4, &mut packed);
+        assert_eq!(packed, vec![0x10, 0x32, 0x54, 0x76]);
+    }
+}

@@ -1,0 +1,114 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them on the CPU client,
+//! and executes them from the L3 hot path. Adapted from
+//! /opt/xla-example/src/bin/load_hlo.rs (HLO text interchange — see
+//! DESIGN.md and aot.py for why text, not serialized protos).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{ArtifactMeta, Manifest};
+use crate::tensor::Tensor;
+
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    pub compile_stats: Mutex<CompileStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CompileStats {
+    pub compiled: usize,
+    pub total_secs: f64,
+}
+
+impl Runtime {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            compile_stats: Mutex::new(CompileStats::default()),
+        })
+    }
+
+    /// Compile-on-demand with caching. Compilation happens once per artifact
+    /// per process; the serving hot path only ever hits the cache.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {name}"))?,
+        );
+        {
+            let mut st = self.compile_stats.lock().unwrap();
+            st.compiled += 1;
+            st.total_secs += t0.elapsed().as_secs_f64();
+        }
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (startup warm-up so the serving path
+    /// never compiles).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns the flattened tuple of
+    /// output tensors. (All artifacts are lowered with return_tuple=True.)
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.execute_literals(name, &lits)
+    }
+
+    pub fn execute_literals(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Validate that `inputs` match the artifact's manifest input specs
+    /// (shape + dtype); used by tests and debug paths, skipped on hot paths.
+    pub fn check_inputs(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{}: got {} inputs, expected {}",
+            meta.name,
+            inputs.len(),
+            meta.inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{}: input {} shape {:?} != {:?}",
+                meta.name,
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,177 @@
+//! Host tensors: the typed, shape-carrying buffers that move between the
+//! KV-cache manager, the quantization substrate, and PJRT literals.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn u8(shape: &[usize], data: Vec<u8>) -> Tensor {
+        assert_eq!(numel(shape), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::U8(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; numel(shape)])
+    }
+
+    pub fn zeros_u8(shape: &[usize]) -> Tensor {
+        Tensor::u8(shape, vec![0u8; numel(shape)])
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor::i32(shape, vec![0i32; numel(shape)])
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len() * 4,
+            Data::U8(v) => v.len(),
+            Data::I32(v) => v.len() * 4,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Data::U8(v) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+
+    pub fn as_u8_mut(&mut self) -> Result<&mut [u8]> {
+        match &mut self.data {
+            Data::U8(v) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let st = self.strides();
+        idx.iter().zip(&st).map(|(i, s)| i * s).sum()
+    }
+
+    /// Convert to an XLA literal (dtype-preserving).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::U8(_) => ElementType::U8,
+            Data::I32(_) => ElementType::S32,
+        };
+        let bytes: &[u8] = match &self.data {
+            Data::F32(v) => bytemuck_f32(v),
+            Data::U8(v) => v,
+            Data::I32(v) => bytemuck_i32(v),
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(Tensor::f32(&dims, lit.to_vec::<f32>()?)),
+            ElementType::U8 => Ok(Tensor::u8(&dims, lit.to_vec::<u8>()?)),
+            ElementType::S32 => Ok(Tensor::i32(&dims, lit.to_vec::<i32>()?)),
+            t => bail!("unsupported literal element type {t:?}"),
+        }
+    }
+}
+
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        st[i] = st[i + 1] * shape[i + 1];
+    }
+    st
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_offsets() {
+        let t = Tensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn size_bytes() {
+        assert_eq!(Tensor::zeros_f32(&[2, 2]).size_bytes(), 16);
+        assert_eq!(Tensor::zeros_u8(&[2, 2]).size_bytes(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+}

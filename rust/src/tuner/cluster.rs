@@ -1,0 +1,161 @@
+//! Inter-layer clustering (paper Sec. 5.3 / App. D.1.2): after intra-layer
+//! pruning, layers with the same pruned candidate set are grouped, then
+//! DBSCAN (eps = 0.05, min_samples = 2) clusters them by quantization
+//! sensitivity — the vector of relative attention output errors over the
+//! pruned pairs. Search space shrinks from S_p^L to S_p^G.
+
+use std::collections::BTreeMap;
+
+use super::pareto::{candidate_signature, Candidate};
+
+/// DBSCAN over points with Euclidean distance. Returns cluster id per point;
+/// noise points get unique singleton ids (they still need a precision pick).
+pub fn dbscan(points: &[Vec<f64>], eps: f64, min_samples: usize) -> Vec<usize> {
+    let n = points.len();
+    let dist = |a: &Vec<f64>, b: &Vec<f64>| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    };
+    let neighbors: Vec<Vec<usize>> = (0..n)
+        .map(|i| (0..n).filter(|&j| dist(&points[i], &points[j]) <= eps).collect())
+        .collect();
+    const UNVISITED: usize = usize::MAX;
+    let mut label = vec![UNVISITED; n];
+    let mut cluster = 0usize;
+    for i in 0..n {
+        if label[i] != UNVISITED {
+            continue;
+        }
+        if neighbors[i].len() < min_samples {
+            continue; // provisionally noise; may be claimed as border point
+        }
+        // expand a new cluster from core point i
+        label[i] = cluster;
+        let mut stack: Vec<usize> = neighbors[i].clone();
+        while let Some(j) = stack.pop() {
+            if label[j] == UNVISITED {
+                label[j] = cluster;
+                if neighbors[j].len() >= min_samples {
+                    stack.extend(neighbors[j].iter().copied());
+                }
+            }
+        }
+        cluster += 1;
+    }
+    // noise -> singleton clusters
+    for l in label.iter_mut() {
+        if *l == UNVISITED {
+            *l = cluster;
+            cluster += 1;
+        }
+    }
+    label
+}
+
+/// A group of layers sharing a candidate set and sensitivity cluster.
+#[derive(Debug, Clone)]
+pub struct LayerGroup {
+    pub layers: Vec<usize>,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Two-stage grouping: partition by identical pruned candidate signature,
+/// then DBSCAN within each partition on the e_o sensitivity vectors.
+pub fn cluster_layers(
+    pruned: &[Vec<Candidate>],
+    eps: f64,
+    min_samples: usize,
+) -> Vec<LayerGroup> {
+    let mut by_sig: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (l, cands) in pruned.iter().enumerate() {
+        by_sig.entry(candidate_signature(cands)).or_default().push(l);
+    }
+    let mut groups = Vec::new();
+    for (_sig, layers) in by_sig {
+        // sensitivity feature: e_o per pruned candidate (same signature =>
+        // comparable vectors)
+        let feats: Vec<Vec<f64>> = layers
+            .iter()
+            .map(|&l| pruned[l].iter().map(|c| c.e_o).collect())
+            .collect();
+        let labels = dbscan(&feats, eps, min_samples);
+        let mut by_cluster: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (idx, &l) in layers.iter().enumerate() {
+            by_cluster.entry(labels[idx]).or_default().push(l);
+        }
+        for (_c, ls) in by_cluster {
+            let candidates = pruned[ls[0]].clone();
+            groups.push(LayerGroup { layers: ls, candidates });
+        }
+    }
+    // stable order by first layer id
+    groups.sort_by_key(|g| g.layers[0]);
+    groups
+}
+
+/// Map a per-group pick back to per-layer assignments.
+pub fn expand_assignment(groups: &[LayerGroup], picks: &[usize], n_layers: usize) -> Vec<Candidate> {
+    assert_eq!(groups.len(), picks.len());
+    let mut out = vec![None; n_layers];
+    for (g, &p) in groups.iter().zip(picks) {
+        for &l in &g.layers {
+            out[l] = Some(g.candidates[p]);
+        }
+    }
+    out.into_iter().map(|o| o.expect("every layer grouped")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrecisionPair;
+
+    #[test]
+    fn dbscan_two_blobs_and_noise() {
+        let mut pts: Vec<Vec<f64>> = Vec::new();
+        for i in 0..4 {
+            pts.push(vec![0.0 + i as f64 * 0.01]);
+        }
+        for i in 0..4 {
+            pts.push(vec![1.0 + i as f64 * 0.01]);
+        }
+        pts.push(vec![5.0]); // noise
+        let labels = dbscan(&pts, 0.05, 2);
+        assert_eq!(labels[0], labels[3]);
+        assert_eq!(labels[4], labels[7]);
+        assert_ne!(labels[0], labels[4]);
+        assert_ne!(labels[8], labels[0]);
+        assert_ne!(labels[8], labels[4]);
+    }
+
+    #[test]
+    fn grouping_respects_signature() {
+        let c = |k, v, e| Candidate {
+            pair: PrecisionPair::new(k, v),
+            bits: (k + v) as f64 / 2.0,
+            e_o: e,
+        };
+        // layers 0/1 share a signature and are close; layer 2 differs
+        let pruned = vec![
+            vec![c(8, 8, 0.01), c(4, 4, 0.1)],
+            vec![c(8, 8, 0.012), c(4, 4, 0.11)],
+            vec![c(8, 8, 0.01), c(4, 2, 0.3)],
+        ];
+        let groups = cluster_layers(&pruned, 0.05, 2);
+        assert_eq!(groups.len(), 2);
+        let g0 = groups.iter().find(|g| g.layers.contains(&0)).unwrap();
+        assert!(g0.layers.contains(&1));
+    }
+
+    #[test]
+    fn expand_assignment_covers_all() {
+        let c = |k: u8, e| Candidate { pair: PrecisionPair::new(k, k), bits: k as f64, e_o: e };
+        let groups = vec![
+            LayerGroup { layers: vec![0, 2], candidates: vec![c(8, 0.1), c(4, 0.2)] },
+            LayerGroup { layers: vec![1], candidates: vec![c(2, 0.5)] },
+        ];
+        let got = expand_assignment(&groups, &[1, 0], 3);
+        assert_eq!(got[0].pair, PrecisionPair::new(4, 4));
+        assert_eq!(got[1].pair, PrecisionPair::new(2, 2));
+        assert_eq!(got[2].pair, PrecisionPair::new(4, 4));
+    }
+}

@@ -1,0 +1,137 @@
+//! Accuracy evaluators (the substituted `A_LLM` of the paper, DESIGN.md §2):
+//!
+//! * `fidelity_accuracy` — token agreement between the quantized engine's
+//!   greedy generation and the fp reference generation on fixed prompts.
+//!   This is the paper's Δaccuracy definition with A = fidelity-vs-BF16.
+//! * `pseudo_perplexity` — exp(mean NLL) of the fp reference continuation
+//!   under the quantized engine (teacher-forced) — the Table 2 metric.
+//!
+//! All evaluation runs on the pure-Rust reference engine (identical
+//! quantization semantics to the PJRT path — parity-tested), prompt-parallel.
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use crate::model::{RefEngine, Weights};
+
+/// fp reference generations for a prompt set (computed once, reused across
+/// hundreds of MOO evaluations).
+pub struct Reference {
+    pub prompts: Vec<Vec<i32>>,
+    pub generations: Vec<Vec<i32>>,
+    pub horizon: usize,
+}
+
+pub fn build_reference(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    prompts: &[Vec<i32>],
+    horizon: usize,
+) -> Result<Reference> {
+    let gens = run_generations(
+        cfg,
+        weights,
+        prompts,
+        &LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+        horizon,
+    )?;
+    Ok(Reference { prompts: prompts.to_vec(), generations: gens, horizon })
+}
+
+/// Greedy generations under `specs`, parallel over prompts.
+pub fn run_generations(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    prompts: &[Vec<i32>],
+    specs: &[LayerSpec],
+    horizon: usize,
+) -> Result<Vec<Vec<i32>>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let specs = specs.to_vec();
+                scope.spawn(move || -> Result<Vec<i32>> {
+                    let cap = p.len() + horizon + 1;
+                    let mut eng = RefEngine::new(cfg, weights, specs, cap)?;
+                    eng.generate(p, horizon)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Mean per-token agreement with the reference generations in [0, 1].
+pub fn fidelity_accuracy(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    reference: &Reference,
+    specs: &[LayerSpec],
+) -> Result<f64> {
+    let gens = run_generations(cfg, weights, &reference.prompts, specs, reference.horizon)?;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (g, r) in gens.iter().zip(&reference.generations) {
+        for (a, b) in g.iter().zip(r) {
+            agree += (a == b) as usize;
+            total += 1;
+        }
+    }
+    Ok(agree as f64 / total.max(1) as f64)
+}
+
+/// exp(mean NLL) of the reference continuation under `specs`, teacher-forced.
+pub fn pseudo_perplexity(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    reference: &Reference,
+    specs: &[LayerSpec],
+) -> Result<f64> {
+    let nlls: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = reference
+            .prompts
+            .iter()
+            .zip(&reference.generations)
+            .map(|(p, gen)| {
+                let specs = specs.to_vec();
+                scope.spawn(move || -> Result<Vec<f64>> {
+                    let cap = p.len() + gen.len() + 1;
+                    let mut eng = RefEngine::new(cfg, weights, specs, cap)?;
+                    let mut nlls = Vec::with_capacity(gen.len());
+                    // prefill the prompt
+                    let mut _next = 0;
+                    for &t in p {
+                        _next = eng.step(t)?;
+                    }
+                    // teacher-force the reference continuation
+                    let mut prev = *p.last().unwrap();
+                    let _ = prev;
+                    for (i, &target) in gen.iter().enumerate() {
+                        // logits for position after the tokens fed so far
+                        let logits = &eng.last_logits;
+                        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let lse: f32 =
+                            logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+                        nlls.push((lse - logits[target as usize]) as f64);
+                        if i + 1 < gen.len() {
+                            eng.step(target)?;
+                        }
+                        prev = target;
+                        let _ = prev;
+                    }
+                    Ok(nlls)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<Vec<_>>>()
+    })?;
+    let flat: Vec<f64> = nlls.into_iter().flatten().collect();
+    let mean = flat.iter().sum::<f64>() / flat.len().max(1) as f64;
+    Ok(mean.exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // Evaluators need real weights; covered by rust/tests/integration.rs.
+}

@@ -1,0 +1,220 @@
+//! KVTuner: the paper's offline calibration pipeline (Fig. 1).
+//!
+//!   profile  → per-layer error metrics over calibration prompts
+//!   prune    → intra-layer Pareto pruning of precision pairs
+//!   cluster  → inter-layer DBSCAN grouping by sensitivity
+//!   search   → multi-objective optimization (NSGA-II / MOEA/D) over the
+//!              reduced space, objectives (equivalent bits, accuracy)
+//!   emit     → a TunedConfig the serving engine loads with zero online cost
+
+pub mod calib;
+pub mod cluster;
+pub mod eval;
+pub mod moo;
+pub mod pareto;
+pub mod profiler;
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use crate::model::Weights;
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub use cluster::{cluster_layers, expand_assignment, LayerGroup};
+pub use eval::{build_reference, fidelity_accuracy, pseudo_perplexity, Reference};
+pub use moo::{moead, nsga2, select_under_constraint, EvalCache, EvalPoint, MooOptions};
+pub use pareto::{prune_all, Candidate};
+pub use profiler::{profile, Profile};
+
+/// A searched layer-wise configuration (the artifact KVTuner ships).
+#[derive(Debug, Clone)]
+pub struct TunedConfig {
+    pub model: String,
+    pub mode: Mode,
+    pub specs: Vec<LayerSpec>,
+    pub equivalent_bits: f64,
+    pub accuracy: f64,
+    pub label: String,
+}
+
+impl TunedConfig {
+    pub fn from_point(
+        model: &str,
+        mode: Mode,
+        groups: &[LayerGroup],
+        point: &EvalPoint,
+        n_layers: usize,
+    ) -> TunedConfig {
+        let cands = expand_assignment(groups, &point.picks, n_layers);
+        let specs: Vec<LayerSpec> =
+            cands.iter().map(|c| LayerSpec { mode, pair: c.pair }).collect();
+        TunedConfig {
+            model: model.to_string(),
+            mode,
+            specs,
+            equivalent_bits: point.bits,
+            accuracy: point.accuracy,
+            label: format!("KVTuner-C{:.2}", point.bits),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(self.model.clone())),
+            ("mode", s(self.mode.as_str())),
+            ("equivalent_bits", num(self.equivalent_bits)),
+            ("accuracy", num(self.accuracy)),
+            ("label", s(self.label.clone())),
+            (
+                "layers",
+                arr(self.specs.iter().map(|sp| s(sp.pair.label()))),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TunedConfig> {
+        let mode = Mode::parse(j.get("mode")?.as_str()?)?;
+        let specs = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|p| Ok(LayerSpec { mode, pair: PrecisionPair::parse(p.as_str()?)? }))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TunedConfig {
+            model: j.get("model")?.as_str()?.to_string(),
+            mode,
+            specs,
+            equivalent_bits: j.get("equivalent_bits")?.as_f64()?,
+            accuracy: j.get("accuracy")?.as_f64()?,
+            label: j.get("label")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TunedConfig> {
+        TunedConfig::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+/// Pipeline options.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    pub mode: Mode,
+    pub n_prompts: usize,
+    pub prompt_len: usize,
+    pub horizon: usize,
+    pub seed: u64,
+    pub moo: MooOptions,
+    pub algorithm: Algorithm,
+    /// Ablation: skip the two-stage pruning and search the full S^L space.
+    pub no_prune: bool,
+    pub dbscan_eps: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Nsga2,
+    Moead,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            mode: Mode::Token,
+            n_prompts: 9,
+            prompt_len: 48,
+            horizon: 32,
+            seed: 1234,
+            moo: MooOptions::default(),
+            algorithm: Algorithm::Nsga2,
+            no_prune: false,
+            dbscan_eps: 0.05,
+        }
+    }
+}
+
+/// Full pipeline output.
+pub struct TuneResult {
+    pub profile: Profile,
+    pub pruned: Vec<Vec<Candidate>>,
+    pub groups: Vec<LayerGroup>,
+    pub front: Vec<EvalPoint>,
+    pub history: Vec<EvalPoint>,
+    pub configs: Vec<TunedConfig>,
+    pub evals: usize,
+}
+
+/// Run the complete KVTuner pipeline for one model + quant mode.
+pub fn run_pipeline(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    opts: &TuneOptions,
+) -> Result<TuneResult> {
+    // 1. calibration set + fp reference generations
+    let prompts = calib::calib_set(cfg.vocab, opts.n_prompts, opts.prompt_len, opts.seed);
+    let reference = build_reference(cfg, weights, &prompts, opts.horizon)?;
+
+    // 2. profile (offline, no accumulation)
+    let prof = profile(cfg, weights, &prompts, &[opts.mode])?;
+
+    // 3. intra-layer pruning (or the full space for the ablation)
+    let pruned: Vec<Vec<Candidate>> = if opts.no_prune {
+        (0..cfg.n_layers)
+            .map(|l| {
+                crate::config::PAIRS
+                    .iter()
+                    .map(|&pair| {
+                        let e = prof.errors[l].get(&(opts.mode, pair)).copied().unwrap_or_default();
+                        Candidate { pair, bits: pair.equivalent_bits(), e_o: e.e_o }
+                    })
+                    .collect()
+            })
+            .collect()
+    } else {
+        prune_all(&prof, opts.mode)
+    };
+
+    // 4. inter-layer clustering (ablation: every layer its own group)
+    let groups = if opts.no_prune {
+        pruned
+            .iter()
+            .enumerate()
+            .map(|(l, c)| LayerGroup { layers: vec![l], candidates: c.clone() })
+            .collect()
+    } else {
+        cluster_layers(&pruned, opts.dbscan_eps, 2)
+    };
+
+    // 5. MOO search with the fidelity evaluator
+    let n_layers = cfg.n_layers;
+    let mode = opts.mode;
+    let eval_fn = |picks: &[usize]| -> Result<f64> {
+        let cands = expand_assignment(&groups, picks, n_layers);
+        let specs: Vec<LayerSpec> =
+            cands.iter().map(|c| LayerSpec { mode, pair: c.pair }).collect();
+        fidelity_accuracy(cfg, weights, &reference, &specs)
+    };
+    let (front, history, evals) = {
+        let mut cache = EvalCache::new(&groups, eval_fn);
+        let front = match opts.algorithm {
+            Algorithm::Nsga2 => nsga2(&mut cache, &opts.moo)?,
+            Algorithm::Moead => moead(&mut cache, &opts.moo)?,
+        };
+        (front, cache.history, cache.evals)
+    };
+
+    // 6. constraint picks (paper's KVTuner-C<bits> configs)
+    let mut configs = Vec::new();
+    for &ceil in &opts.moo.bit_constraints {
+        if let Some(p) = select_under_constraint(&front, ceil) {
+            configs.push(TunedConfig::from_point(&weights.model_name, mode, &groups, &p, n_layers));
+        }
+    }
+    configs.dedup_by(|a, b| a.equivalent_bits == b.equivalent_bits);
+
+    Ok(TuneResult { profile: prof, pruned, groups, front, history, configs, evals })
+}

@@ -1,0 +1,473 @@
+//! Multi-objective search over per-group precision picks (paper Sec. 5.1):
+//!
+//!   min_P ( f_m(P), -f_acc(P) )   s.t.  f_m(P) <= M
+//!
+//! where P indexes each layer group's pruned candidate list, f_m is mean
+//! equivalent KV bits, and f_acc is the black-box accuracy evaluator
+//! (generation fidelity vs the fp reference). Two engines are provided —
+//! NSGA-II (default) and MOEA/D (the paper's choice) — both from scratch;
+//! the ablation bench compares them and the no-pruning variant.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+use super::cluster::LayerGroup;
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub picks: Vec<usize>,
+    pub bits: f64,
+    pub accuracy: f64,
+}
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct MooOptions {
+    pub evaluations: usize,
+    pub population: usize,
+    pub seed: u64,
+    /// Soft equivalent-bits ceilings; the paper searches at 4- and 6-bit.
+    pub bit_constraints: Vec<f64>,
+    pub mutation_rate: f64,
+}
+
+impl Default for MooOptions {
+    fn default() -> Self {
+        MooOptions {
+            evaluations: 200,
+            population: 20,
+            seed: 17,
+            bit_constraints: vec![4.0, 6.0],
+            mutation_rate: 0.2,
+        }
+    }
+}
+
+fn genome_bits(groups: &[LayerGroup], picks: &[usize]) -> f64 {
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (g, &p) in groups.iter().zip(picks) {
+        total += g.candidates[p].bits * g.layers.len() as f64;
+        n += g.layers.len();
+    }
+    total / n as f64
+}
+
+/// Cache of evaluated genomes (accuracy evals are expensive).
+pub struct EvalCache<'a> {
+    pub groups: &'a [LayerGroup],
+    eval_fn: Box<dyn Fn(&[usize]) -> Result<f64> + Sync + 'a>,
+    cache: BTreeMap<Vec<usize>, f64>,
+    pub evals: usize,
+    /// Total eval() calls including cache hits — the search loops' progress
+    /// guard (a genome space smaller than the eval budget must still halt).
+    pub lookups: usize,
+    pub history: Vec<EvalPoint>,
+}
+
+impl<'a> EvalCache<'a> {
+    pub fn new(
+        groups: &'a [LayerGroup],
+        eval_fn: impl Fn(&[usize]) -> Result<f64> + Sync + 'a,
+    ) -> Self {
+        EvalCache {
+            groups,
+            eval_fn: Box::new(eval_fn),
+            cache: BTreeMap::new(),
+            evals: 0,
+            lookups: 0,
+            history: Vec::new(),
+        }
+    }
+
+    /// log2 of the genome space size (saturating).
+    pub fn space_log2(&self) -> f64 {
+        self.groups.iter().map(|g| (g.candidates.len() as f64).log2()).sum()
+    }
+
+    /// True while the search budget allows more work: fresh evals remain AND
+    /// the lookup guard (10x budget) hasn't tripped (the whole space may be
+    /// smaller than the budget).
+    pub fn budget_left(&self, evaluations: usize) -> bool {
+        self.evals < evaluations && self.lookups < evaluations.saturating_mul(10)
+    }
+
+    pub fn eval(&mut self, picks: &[usize]) -> Result<EvalPoint> {
+        self.lookups += 1;
+        let bits = genome_bits(self.groups, picks);
+        if let Some(&acc) = self.cache.get(picks) {
+            return Ok(EvalPoint { picks: picks.to_vec(), bits, accuracy: acc });
+        }
+        let acc = (self.eval_fn)(picks)?;
+        self.cache.insert(picks.to_vec(), acc);
+        self.evals += 1;
+        let pt = EvalPoint { picks: picks.to_vec(), bits, accuracy: acc };
+        self.history.push(pt.clone());
+        Ok(pt)
+    }
+}
+
+/// Pareto front over (minimize bits, maximize accuracy).
+pub fn pareto_front_points(points: &[EvalPoint]) -> Vec<EvalPoint> {
+    let mut front: Vec<EvalPoint> = Vec::new();
+    'outer: for p in points {
+        for q in points {
+            if (q.bits <= p.bits && q.accuracy >= p.accuracy)
+                && (q.bits < p.bits || q.accuracy > p.accuracy)
+            {
+                continue 'outer;
+            }
+        }
+        if !front.iter().any(|f| f.picks == p.picks) {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.bits.partial_cmp(&b.bits).unwrap());
+    front
+}
+
+// ---------------------------------------------------------------------------
+// NSGA-II
+// ---------------------------------------------------------------------------
+
+fn dominates(a: &EvalPoint, b: &EvalPoint) -> bool {
+    (a.bits <= b.bits && a.accuracy >= b.accuracy) && (a.bits < b.bits || a.accuracy > b.accuracy)
+}
+
+/// Fast non-dominated sort; returns front index per point (0 = best).
+fn nondominated_rank(pts: &[EvalPoint]) -> Vec<usize> {
+    let n = pts.len();
+    let mut rank = vec![0usize; n];
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&pts[i], &pts[j]) {
+                dominates_list[i].push(j);
+            } else if i != j && dominates(&pts[j], &pts[i]) {
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut r = 0;
+    let mut remaining = dominated_by;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            rank[i] = r;
+            for &j in &dominates_list[i] {
+                remaining[j] -= 1;
+                if remaining[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        r += 1;
+    }
+    rank
+}
+
+/// Crowding distance within one front (bigger = more isolated = preferred).
+fn crowding(pts: &[EvalPoint], idxs: &[usize]) -> BTreeMap<usize, f64> {
+    let mut out: BTreeMap<usize, f64> = idxs.iter().map(|&i| (i, 0.0)).collect();
+    for dim in 0..2 {
+        let mut order = idxs.to_vec();
+        let key = |i: usize| if dim == 0 { pts[i].bits } else { pts[i].accuracy };
+        order.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+        let lo = key(order[0]);
+        let hi = key(*order.last().unwrap());
+        let span = (hi - lo).max(1e-12);
+        *out.get_mut(&order[0]).unwrap() = f64::INFINITY;
+        *out.get_mut(order.last().unwrap()).unwrap() = f64::INFINITY;
+        for w in order.windows(3) {
+            *out.get_mut(&w[1]).unwrap() += (key(w[2]) - key(w[0])) / span;
+        }
+    }
+    out
+}
+
+pub fn nsga2(cache: &mut EvalCache, opts: &MooOptions) -> Result<Vec<EvalPoint>> {
+    let groups = cache.groups;
+    let n_groups = groups.len();
+    let mut rng = Rng::seed(opts.seed);
+    let rand_genome = |rng: &mut Rng| -> Vec<usize> {
+        (0..n_groups).map(|g| rng.below(groups[g].candidates.len())).collect()
+    };
+
+    // seed the population with every uniform-PAIR config (each group picks
+    // the candidate matching that pair, or the nearest by bits) — these are
+    // exactly the paper's uniform baselines, so the searched front can only
+    // dominate them — plus randoms
+    let mut pop: Vec<EvalPoint> = Vec::new();
+    for pair in crate::config::PAIRS {
+        let genome: Vec<usize> = groups
+            .iter()
+            .map(|g| {
+                g.candidates
+                    .iter()
+                    .position(|c| c.pair == pair)
+                    .unwrap_or_else(|| {
+                        // nearest candidate by equivalent bits
+                        let target = pair.equivalent_bits();
+                        g.candidates
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| {
+                                (a.1.bits - target)
+                                    .abs()
+                                    .partial_cmp(&(b.1.bits - target).abs())
+                                    .unwrap()
+                            })
+                            .map(|(i, _)| i)
+                            .unwrap_or(0)
+                    })
+            })
+            .collect();
+        pop.push(cache.eval(&genome)?);
+        if !cache.budget_left(opts.evaluations) {
+            break;
+        }
+    }
+    while pop.len() < opts.population && cache.budget_left(opts.evaluations) {
+        let g = rand_genome(&mut rng);
+        pop.push(cache.eval(&g)?);
+    }
+    if pop.is_empty() {
+        pop.push(cache.eval(&vec![0; n_groups])?);
+    }
+
+    while cache.budget_left(opts.evaluations) {
+        // tournament selection by (rank, crowding)
+        let ranks = nondominated_rank(&pop);
+        let all_idx: Vec<usize> = (0..pop.len()).collect();
+        let crowd = crowding(&pop, &all_idx);
+        let select = |rng: &mut Rng| -> usize {
+            let a = rng.below(pop.len());
+            let b = rng.below(pop.len());
+            if ranks[a] < ranks[b] || (ranks[a] == ranks[b] && crowd[&a] > crowd[&b]) {
+                a
+            } else {
+                b
+            }
+        };
+        // offspring
+        let mut children = Vec::new();
+        while children.len() < opts.population && cache.budget_left(opts.evaluations) {
+            let (pa, pb) = (select(&mut rng), select(&mut rng));
+            let mut child: Vec<usize> = (0..n_groups)
+                .map(|g| if rng.chance(0.5) { pop[pa].picks[g] } else { pop[pb].picks[g] })
+                .collect();
+            for g in 0..n_groups {
+                if rng.chance(opts.mutation_rate) {
+                    // local move preferred: step one candidate up/down
+                    let len = groups[g].candidates.len();
+                    let cur = child[g];
+                    child[g] = if rng.chance(0.5) && len > 1 {
+                        (cur + if rng.chance(0.5) { 1 } else { len - 1 }) % len
+                    } else {
+                        rng.below(len)
+                    };
+                }
+            }
+            children.push(cache.eval(&child)?);
+        }
+        // environmental selection: combine, rank, truncate
+        pop.extend(children);
+        let ranks = nondominated_rank(&pop);
+        let all_idx: Vec<usize> = (0..pop.len()).collect();
+        let crowd = crowding(&pop, &all_idx);
+        let mut order: Vec<usize> = all_idx;
+        order.sort_by(|&a, &b| {
+            ranks[a]
+                .cmp(&ranks[b])
+                .then(crowd[&b].partial_cmp(&crowd[&a]).unwrap())
+        });
+        order.truncate(opts.population);
+        pop = order.into_iter().map(|i| pop[i].clone()).collect();
+    }
+    Ok(pareto_front_points(&cache.history))
+}
+
+// ---------------------------------------------------------------------------
+// MOEA/D (Tchebycheff decomposition; the paper's algorithm)
+// ---------------------------------------------------------------------------
+
+pub fn moead(cache: &mut EvalCache, opts: &MooOptions) -> Result<Vec<EvalPoint>> {
+    let groups = cache.groups;
+    let n_groups = groups.len();
+    let n = opts.population.max(4);
+    let mut rng = Rng::seed(opts.seed ^ 0x5eed);
+
+    // weight vectors over the 2 objectives (normalized bits / accuracy)
+    let weights: Vec<(f64, f64)> = (0..n)
+        .map(|i| {
+            let w = i as f64 / (n - 1) as f64;
+            (w, 1.0 - w)
+        })
+        .collect();
+    // neighborhoods: adjacent weight indices
+    let t_size = 4.min(n);
+    let neighbors: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&j| (j as i64 - i as i64).abs());
+            idx.truncate(t_size);
+            idx
+        })
+        .collect();
+
+    let mut pop: Vec<EvalPoint> = Vec::new();
+    for _ in 0..n {
+        let g: Vec<usize> =
+            (0..n_groups).map(|gi| rng.below(groups[gi].candidates.len())).collect();
+        pop.push(cache.eval(&g)?);
+    }
+    // ideal point
+    let mut z = (
+        pop.iter().map(|p| p.bits).fold(f64::INFINITY, f64::min),
+        pop.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max),
+    );
+    let bits_span = 8.0 - 2.0;
+    let tcheby = |p: &EvalPoint, w: (f64, f64), z: (f64, f64)| -> f64 {
+        let d1 = (p.bits - z.0).abs() / bits_span;
+        let d2 = (z.1 - p.accuracy).abs();
+        (w.0 * d1).max(w.1 * d2)
+    };
+
+    while cache.budget_left(opts.evaluations) {
+        for i in 0..n {
+            if !cache.budget_left(opts.evaluations) {
+                break;
+            }
+            // recombine within the neighborhood
+            let pa = neighbors[i][rng.below(t_size)];
+            let pb = neighbors[i][rng.below(t_size)];
+            let mut child: Vec<usize> = (0..n_groups)
+                .map(|g| if rng.chance(0.5) { pop[pa].picks[g] } else { pop[pb].picks[g] })
+                .collect();
+            for g in 0..n_groups {
+                if rng.chance(opts.mutation_rate) {
+                    child[g] = rng.below(groups[g].candidates.len());
+                }
+            }
+            let c = cache.eval(&child)?;
+            z.0 = z.0.min(c.bits);
+            z.1 = z.1.max(c.accuracy);
+            for &j in &neighbors[i] {
+                if tcheby(&c, weights[j], z) < tcheby(&pop[j], weights[j], z) {
+                    pop[j] = c.clone();
+                }
+            }
+        }
+    }
+    Ok(pareto_front_points(&cache.history))
+}
+
+/// Pick, from a front, the best-accuracy config whose bits fit a ceiling —
+/// the paper's "KVTuner-C<bits>" selections.
+pub fn select_under_constraint(front: &[EvalPoint], max_bits: f64) -> Option<EvalPoint> {
+    front
+        .iter()
+        .filter(|p| p.bits <= max_bits + 1e-9)
+        .max_by(|a, b| {
+            a.accuracy
+                .partial_cmp(&b.accuracy)
+                .unwrap()
+                .then(b.bits.partial_cmp(&a.bits).unwrap())
+        })
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PrecisionPair;
+    use crate::tuner::pareto::Candidate;
+
+    fn groups2() -> Vec<LayerGroup> {
+        let c = |k: u8, v: u8, e: f64| Candidate {
+            pair: PrecisionPair::new(k, v),
+            bits: (k as f64 + v as f64) / 2.0,
+            e_o: e,
+        };
+        vec![
+            LayerGroup {
+                layers: vec![0, 1],
+                candidates: vec![c(8, 8, 0.01), c(4, 4, 0.1), c(2, 2, 0.8)],
+            },
+            LayerGroup {
+                layers: vec![2],
+                candidates: vec![c(8, 8, 0.02), c(4, 2, 0.2), c(2, 2, 0.9)],
+            },
+        ]
+    }
+
+    /// Synthetic accuracy: layers weighted, quadratic penalty on error.
+    fn acc_fn(groups: &[LayerGroup]) -> impl Fn(&[usize]) -> Result<f64> + Sync + '_ {
+        move |picks: &[usize]| {
+            let mut acc = 1.0;
+            for (g, &p) in groups.iter().zip(picks) {
+                acc -= g.candidates[p].e_o * g.layers.len() as f64 * 0.3;
+            }
+            Ok(acc.max(0.0))
+        }
+    }
+
+    #[test]
+    fn nsga2_finds_corners() {
+        let groups = groups2();
+        let f = acc_fn(&groups);
+        let mut cache = EvalCache::new(&groups, f);
+        let opts = MooOptions { evaluations: 60, population: 8, ..Default::default() };
+        let front = nsga2(&mut cache, &opts).unwrap();
+        assert!(!front.is_empty());
+        // front must contain the all-high (8.0 bits) and all-low (2.0 bits) corners
+        assert!(front.iter().any(|p| p.bits <= 2.01));
+        assert!(front.iter().any(|p| p.accuracy > 0.97));
+        // front sorted and non-dominated
+        for w in front.windows(2) {
+            assert!(w[0].bits <= w[1].bits);
+            assert!(w[0].accuracy <= w[1].accuracy + 1e-12);
+        }
+    }
+
+    #[test]
+    fn moead_reaches_similar_front() {
+        let groups = groups2();
+        let f = acc_fn(&groups);
+        let mut cache = EvalCache::new(&groups, f);
+        let opts = MooOptions { evaluations: 60, population: 8, ..Default::default() };
+        let front = moead(&mut cache, &opts).unwrap();
+        assert!(front.iter().any(|p| p.bits <= 2.01));
+        assert!(front.iter().any(|p| p.accuracy > 0.9));
+    }
+
+    #[test]
+    fn constraint_selection() {
+        let groups = groups2();
+        let f = acc_fn(&groups);
+        let mut cache = EvalCache::new(&groups, f);
+        let opts = MooOptions { evaluations: 50, population: 8, ..Default::default() };
+        let front = nsga2(&mut cache, &opts).unwrap();
+        let c4 = select_under_constraint(&front, 4.0).unwrap();
+        assert!(c4.bits <= 4.0 + 1e-9);
+        let c8 = select_under_constraint(&front, 8.0).unwrap();
+        assert!(c8.accuracy >= c4.accuracy - 1e-12);
+    }
+
+    #[test]
+    fn eval_cache_dedups() {
+        let groups = groups2();
+        let f = acc_fn(&groups);
+        let mut cache = EvalCache::new(&groups, f);
+        cache.eval(&[0, 0]).unwrap();
+        cache.eval(&[0, 0]).unwrap();
+        assert_eq!(cache.evals, 1);
+    }
+}

@@ -1,0 +1,101 @@
+//! Intra-layer KV precision-pair pruning (paper Sec. 5.3): per layer, keep
+//! only the Pareto frontier of (equivalent bits, relative attention output
+//! error e_o) over the 9 candidate pairs. This is the first stage of the
+//! two-level search-space reduction (S^L -> S_p^L).
+
+use crate::config::{Mode, PrecisionPair, PAIRS};
+use crate::quant::ErrorMetrics;
+
+use super::profiler::Profile;
+
+/// A candidate point for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub pair: PrecisionPair,
+    pub bits: f64,
+    pub e_o: f64,
+}
+
+/// Generic 2-D Pareto filter: keep points not dominated in
+/// (minimize a, minimize b). Stable order: by bits descending (high
+/// precision first), matching the paper's table presentation.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut keep = Vec::new();
+    'outer: for (i, &(a, b)) in points.iter().enumerate() {
+        for (j, &(a2, b2)) in points.iter().enumerate() {
+            if j != i && a2 <= a && b2 <= b && (a2 < a || b2 < b) {
+                continue 'outer;
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+/// Prune one layer's candidate pairs under `mode`.
+pub fn prune_layer(profile: &Profile, layer: usize, mode: Mode) -> Vec<Candidate> {
+    let cands: Vec<Candidate> = PAIRS
+        .iter()
+        .map(|&pair| {
+            let e = profile.errors[layer]
+                .get(&(mode, pair))
+                .copied()
+                .unwrap_or(ErrorMetrics::default());
+            Candidate { pair, bits: pair.equivalent_bits(), e_o: e.e_o }
+        })
+        .collect();
+    let pts: Vec<(f64, f64)> = cands.iter().map(|c| (c.bits, c.e_o)).collect();
+    let mut keep: Vec<Candidate> = pareto_front(&pts).into_iter().map(|i| cands[i]).collect();
+    keep.sort_by(|a, b| b.bits.partial_cmp(&a.bits).unwrap());
+    keep
+}
+
+/// Prune every layer; returns per-layer candidate sets.
+pub fn prune_all(profile: &Profile, mode: Mode) -> Vec<Vec<Candidate>> {
+    (0..profile.n_layers).map(|l| prune_layer(profile, l, mode)).collect()
+}
+
+/// The label set of a layer's pruned candidates (used to group layers with
+/// identical preference structure, paper Table 4 / first clustering step).
+pub fn candidate_signature(cands: &[Candidate]) -> String {
+    cands.iter().map(|c| c.pair.label()).collect::<Vec<_>>().join(",")
+}
+
+/// log10 search-space sizes before/after pruning (paper's 9^L -> prod |S_p^l|).
+pub fn search_space_log10(cands: &[Vec<Candidate>]) -> (f64, f64) {
+    let full = cands.len() as f64 * (PAIRS.len() as f64).log10();
+    let pruned = cands.iter().map(|c| (c.len() as f64).log10()).sum();
+    (full, pruned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_front_basics() {
+        // points: (bits, err); (4,0.1) dominates (4,0.2) and (5,0.15)
+        let pts = vec![(4.0, 0.1), (4.0, 0.2), (5.0, 0.15), (3.0, 0.5), (2.0, 0.9)];
+        let keep = pareto_front(&pts);
+        assert!(keep.contains(&0));
+        assert!(!keep.contains(&1));
+        assert!(!keep.contains(&2));
+        assert!(keep.contains(&3));
+        assert!(keep.contains(&4));
+    }
+
+    #[test]
+    fn front_always_contains_extremes() {
+        let pts = vec![(8.0, 0.01), (5.0, 0.2), (2.0, 0.95), (6.0, 0.02), (3.0, 0.4)];
+        let keep = pareto_front(&pts);
+        // cheapest point and most accurate point always survive
+        assert!(keep.contains(&0));
+        assert!(keep.contains(&2));
+    }
+
+    #[test]
+    fn duplicates_both_kept() {
+        let pts = vec![(4.0, 0.1), (4.0, 0.1)];
+        assert_eq!(pareto_front(&pts).len(), 2);
+    }
+}

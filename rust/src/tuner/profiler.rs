@@ -1,0 +1,149 @@
+//! Offline sensitivity profiler (paper Sec. 4 / App. B, F): runs calibration
+//! prompts through the fp reference engine with Q/K/V capture, then
+//! simulates quantize→dequantize per (mode, precision pair) per layer and
+//! aggregates the error metrics — no error accumulation, exactly the
+//! paper's "simulated offline quantization" setting.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use crate::model::{RefEngine, Weights};
+use crate::quant::error::{layer_errors, ErrorMetrics, LayerCapture};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// errors[layer][(mode, pair)] -> metrics averaged over prompts.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub n_layers: usize,
+    pub errors: Vec<BTreeMap<(Mode, PrecisionPair), ErrorMetrics>>,
+    pub n_prompts: usize,
+}
+
+/// Capture per-layer Q/K/V for each prompt with the fp engine.
+pub fn capture_prompts(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    prompts: &[Vec<i32>],
+) -> Result<Vec<Vec<LayerCapture>>> {
+    let mut all = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+        let mut eng = RefEngine::new(cfg, weights, specs, p.len() + 1)?;
+        eng.enable_capture();
+        for &t in p {
+            eng.step(t)?;
+        }
+        all.push(eng.take_capture().unwrap());
+    }
+    Ok(all)
+}
+
+/// Profile all (mode, pair) combinations over captured prompts, in parallel
+/// across prompts.
+pub fn profile(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    prompts: &[Vec<i32>],
+    modes: &[Mode],
+) -> Result<Profile> {
+    let captures = capture_prompts(cfg, weights, prompts)?;
+    let group = cfg.group;
+    let n_layers = cfg.n_layers;
+    let w = 1.0 / captures.len() as f64;
+
+    // prompt-parallel: each thread computes the full (layer, mode, pair) grid
+    // for one prompt's captures
+    let per_prompt: Vec<Vec<BTreeMap<(Mode, PrecisionPair), ErrorMetrics>>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = captures
+                .iter()
+                .map(|caps| {
+                    let modes = modes.to_vec();
+                    scope.spawn(move || -> Result<_> {
+                        let mut per_layer = Vec::with_capacity(n_layers);
+                        for cap in caps {
+                            let mut m = BTreeMap::new();
+                            for &mode in &modes {
+                                for pair in PAIRS {
+                                    let spec = LayerSpec { mode, pair };
+                                    m.insert((mode, pair), layer_errors(cap, spec, group)?);
+                                }
+                            }
+                            per_layer.push(m);
+                        }
+                        Ok(per_layer)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<Vec<_>>>()
+        })?;
+
+    let mut errors = vec![BTreeMap::<(Mode, PrecisionPair), ErrorMetrics>::new(); n_layers];
+    for prompt_tables in &per_prompt {
+        for (l, table) in prompt_tables.iter().enumerate() {
+            for (k, v) in table {
+                errors[l].entry(*k).or_default().merge(v, w);
+            }
+        }
+    }
+    Ok(Profile { n_layers, errors, n_prompts: prompts.len() })
+}
+
+impl Profile {
+    /// Model-average metrics for one (mode, pair) — Table 9's rows.
+    pub fn model_avg(&self, mode: Mode, pair: PrecisionPair) -> ErrorMetrics {
+        let mut out = ErrorMetrics::default();
+        let w = 1.0 / self.n_layers as f64;
+        for l in &self.errors {
+            if let Some(m) = l.get(&(mode, pair)) {
+                out.merge(m, w);
+            }
+        }
+        out
+    }
+
+    /// Per-layer e_o series for one (mode, pair) — Fig. 3/13's series.
+    pub fn layer_series(&self, mode: Mode, pair: PrecisionPair) -> Vec<f64> {
+        self.errors
+            .iter()
+            .map(|m| m.get(&(mode, pair)).map(|e| e.e_o).unwrap_or(0.0))
+            .collect()
+    }
+
+    pub fn layer_series_ea(&self, mode: Mode, pair: PrecisionPair) -> Vec<f64> {
+        self.errors
+            .iter()
+            .map(|m| m.get(&(mode, pair)).map(|e| e.e_a).unwrap_or(0.0))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .errors
+            .iter()
+            .enumerate()
+            .map(|(l, m)| {
+                let entries: Vec<Json> = m
+                    .iter()
+                    .map(|((mode, pair), e)| {
+                        obj(vec![
+                            ("mode", s(mode.as_str())),
+                            ("pair", s(pair.label())),
+                            ("e_k", num(e.e_k)),
+                            ("e_v", num(e.e_v)),
+                            ("e_a", num(e.e_a)),
+                            ("e_o", num(e.e_o)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![("layer", num(l as f64)), ("errors", arr(entries))])
+            })
+            .collect();
+        obj(vec![
+            ("n_prompts", num(self.n_prompts as f64)),
+            ("layers", arr(layers)),
+        ])
+    }
+}

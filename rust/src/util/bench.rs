@@ -1,0 +1,139 @@
+//! Tiny benchmark harness (criterion is unavailable offline). Benches are
+//! `harness = false` mains that call [`bench`] / [`Table`].
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` runs; report stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = BenchStats::from_samples(name, samples);
+    println!("{stats}");
+    stats
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            name: name.to_string(),
+            mean,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            iters: n,
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.mean),
+            fmt_secs(self.p50),
+            fmt_secs(self.p95),
+            fmt_secs(self.min),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}
+
+/// Markdown-ish table printer for the paper-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table::with_headers(title, header.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn with_headers(title: &str, header: Vec<String>) -> Self {
+        Table { title: title.to_string(), header, rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.header);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = BenchStats::from_samples("t", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(2.5e-3), "2.500ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500us");
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `kvtuner <subcommand> [--flag value | --switch] ...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; `switch_names` lists valueless flags.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) => {
+                            out.flags.insert(name.to_string(), v.clone());
+                        }
+                        None => bail!("flag --{name} expects a value"),
+                    }
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, switch_names)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, name: &str, default: &str) -> Vec<String> {
+        self.str(name, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &v(&["tune", "--model", "tiny", "--iters=50", "--no-prune", "extra"]),
+            &["no-prune"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "tune");
+        assert_eq!(a.str("model", "x"), "tiny");
+        assert_eq!(a.usize("iters", 0).unwrap(), 50);
+        assert!(a.switch("no-prune"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["x", "--flag"]), &[]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&v(&["x", "--pairs", "8:4,4:2"]), &[]).unwrap();
+        assert_eq!(a.list("pairs", ""), vec!["8:4", "4:2"]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small in-tree substrates (JSON, PRNG, CLI, bench harness) — the offline
+//! crate set has only the `xla` closure + `anyhow`, so these are built here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,189 @@
+//! Edge cases and failure injection: cache overflow, bucket mismatches,
+//! corrupt artifacts, mixed per-layer modes, and slot isolation.
+
+use std::sync::Arc;
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::engine::Engine;
+use kvtuner::kvcache::KvCache;
+use kvtuner::model::Weights;
+use kvtuner::runtime::Runtime;
+use kvtuner::tensor::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    let dir = kvtuner::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest"))
+}
+
+fn mk_cfg(m: &Manifest) -> kvtuner::config::ModelConfig {
+    m.config.clone()
+}
+
+#[test]
+fn cache_overflow_is_an_error_not_corruption() {
+    let Some(m) = manifest() else { return };
+    let cfg = mk_cfg(&m);
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), cfg.n_layers);
+    let mut kc = KvCache::new(&cfg, &specs, 1, 64).unwrap();
+    // fill to capacity
+    let h = cfg.n_kv_heads;
+    let outs = vec![
+        Tensor::zeros_u8(&[1, h, 1, 16]),
+        Tensor::zeros_f32(&[1, h, 1]),
+        Tensor::zeros_f32(&[1, h, 1]),
+        Tensor::zeros_u8(&[1, h, 1, 16]),
+        Tensor::zeros_f32(&[1, h, 1]),
+        Tensor::zeros_f32(&[1, h, 1]),
+    ];
+    for _ in 0..64 {
+        kc.append_token_outputs(0, 0, &outs, &[1]).unwrap();
+    }
+    let err = kc.append_token_outputs(0, 0, &outs, &[1]);
+    assert!(err.is_err(), "overflow must error");
+    assert_eq!(kc.layers[0].cache_len[0], 64, "len unchanged after failed append");
+}
+
+#[test]
+fn kivi_commit_requires_full_group() {
+    let Some(m) = manifest() else { return };
+    let cfg = mk_cfg(&m);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let kc = KvCache::new(&cfg, &specs, 1, 64).unwrap();
+    assert!(kc.residual_chunk(0, 0).is_err(), "empty residual cannot be committed");
+}
+
+#[test]
+fn engine_rejects_missing_buckets() {
+    let Some(_m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = rt.manifest.config.clone();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), cfg.n_layers);
+    // batch=64 was never emitted
+    let err = Engine::new(rt.clone(), &cfg.name, specs.clone(), 64, 256, 32);
+    assert!(err.is_err());
+    // s_max=1024 was never emitted
+    let err = Engine::new(rt, &cfg.name, specs, 1, 1024, 32);
+    assert!(err.is_err());
+}
+
+#[test]
+fn engine_rejects_unknown_model_and_wrong_spec_count() {
+    let Some(_m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = rt.manifest.config.clone();
+    let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+    assert!(Engine::new(rt.clone(), "no-such-model", specs, 1, 256, 32).is_err());
+    let too_few = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers - 1);
+    assert!(Engine::new(rt, &cfg.name, too_few, 1, 256, 32).is_err());
+}
+
+#[test]
+fn corrupt_manifest_fails_loud() {
+    let dir = std::env::temp_dir().join("kvtuner_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"config": {}}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err(), "missing fields must error");
+}
+
+#[test]
+fn truncated_weights_fail_loud() {
+    let Some(m) = manifest() else { return };
+    // copy manifest dir entry but truncate the weights file
+    let dir = std::env::temp_dir().join("kvtuner_truncated_weights");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::copy(m.dir.join("manifest.json"), dir.join("manifest.json")).unwrap();
+    let entry = m.model(&m.config.name).unwrap();
+    let src = std::fs::read(m.dir.join(&entry.weights_file)).unwrap();
+    std::fs::write(dir.join(&entry.weights_file), &src[..src.len() / 2]).unwrap();
+    let m2 = Manifest::load(&dir).unwrap();
+    assert!(Weights::load(&m2, &m2.config.name).is_err());
+}
+
+#[test]
+fn mixed_mode_layer_map_generates() {
+    // fp + token + kivi in ONE engine — the fully heterogeneous case the
+    // layer-wise design promises.
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = m.config.clone();
+    let modes = [Mode::Fp, Mode::Token, Mode::Kivi];
+    let specs: Vec<LayerSpec> = (0..cfg.n_layers)
+        .map(|l| {
+            let mode = modes[l % 3];
+            LayerSpec {
+                mode,
+                pair: match mode {
+                    Mode::Fp => PrecisionPair::FP,
+                    Mode::Token => PrecisionPair::new(8, 4),
+                    Mode::Kivi => PrecisionPair::new(4, 2),
+                },
+            }
+        })
+        .collect();
+    let mut eng = Engine::new(rt, &cfg.name, specs, 1, 256, 32).unwrap();
+    let prompt: Vec<i32> = (0..40).map(|i| (i * 3 % cfg.vocab) as i32).collect();
+    let out = eng.generate(0, &prompt, 40).unwrap(); // crosses a kivi commit
+    assert_eq!(out.len(), 40);
+    // kivi layers committed at least one group during the run
+    let kivi_layer = (0..cfg.n_layers).find(|l| eng.specs[*l].mode == Mode::Kivi).unwrap();
+    assert!(eng.cache.layers[kivi_layer].cache_len[0] >= cfg.group as i32);
+}
+
+#[test]
+fn slot_reset_isolates_sequences() {
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = m.config.clone();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), cfg.n_layers);
+    let mut eng = Engine::new(rt, &cfg.name, specs, 1, 256, 32).unwrap();
+    let p1: Vec<i32> = (0..16).map(|i| (i % cfg.vocab) as i32).collect();
+    let a = eng.generate(0, &p1, 8).unwrap();
+    // run a different sequence, then the first again: must match exactly
+    let p2: Vec<i32> = (0..24).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+    let _ = eng.generate(0, &p2, 8).unwrap();
+    let a2 = eng.generate(0, &p1, 8).unwrap();
+    assert_eq!(a, a2, "stale cache state leaked across reset");
+}
+
+#[test]
+fn tensor_literal_roundtrip_all_dtypes() {
+    let t = Tensor::f32(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, -0.5, 9.0]);
+    let lit = t.to_literal().unwrap();
+    assert_eq!(Tensor::from_literal(&lit).unwrap(), t);
+    let t = Tensor::u8(&[4], vec![0, 127, 200, 255]);
+    let lit = t.to_literal().unwrap();
+    assert_eq!(Tensor::from_literal(&lit).unwrap(), t);
+    let t = Tensor::i32(&[2, 2], vec![-5, 0, 7, i32::MAX]);
+    let lit = t.to_literal().unwrap();
+    assert_eq!(Tensor::from_literal(&lit).unwrap(), t);
+}
+
+#[test]
+fn slot_inputs_slice_matches_full_buffer() {
+    let Some(m) = manifest() else { return };
+    let cfg = mk_cfg(&m);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let mut kc = KvCache::new(&cfg, &specs, 2, 64).unwrap();
+    // mark slot 1's residual with a distinctive value
+    let h = cfg.n_kv_heads;
+    let dh = cfg.head_dim;
+    let k_new = Tensor::f32(&[1, h, 1, dh], vec![42.0; h * dh]);
+    kc.append_kivi_residual(0, 1, &k_new, &k_new, &[1]).unwrap();
+    let slot0 = kc.layers[0].slot_inputs(0);
+    let slot1 = kc.layers[0].slot_inputs(1);
+    // k_res is the 7th tensor (codes, kscale, kzero, vcodes, vscale, vzero, kres, vres)
+    let r0 = slot0[6].as_f32().unwrap();
+    let r1 = slot1[6].as_f32().unwrap();
+    assert!(r0.iter().all(|&v| v == 0.0));
+    assert_eq!(r1[0], 42.0);
+}

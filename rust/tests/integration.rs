@@ -1,0 +1,303 @@
+//! Integration tests across the tuner pipeline, evaluators, engine batching,
+//! and the serving coordinator. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
+use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
+use kvtuner::engine::Engine;
+use kvtuner::model::Weights;
+use kvtuner::runtime::Runtime;
+use kvtuner::tuner::{self, calib, Algorithm, MooOptions, TuneOptions};
+
+fn manifest() -> Option<Manifest> {
+    let dir = kvtuner::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest"))
+}
+
+#[test]
+fn fp_reference_is_exactly_self_consistent() {
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let w = Weights::load(&m, &cfg.name).unwrap();
+    let prompts = calib::calib_set(cfg.vocab, 4, 32, 7);
+    let r = tuner::build_reference(&cfg, &w, &prompts, 16).unwrap();
+    let fp_specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+    let acc = tuner::fidelity_accuracy(&cfg, &w, &r, &fp_specs).unwrap();
+    assert_eq!(acc, 1.0);
+    // KV8 must be (near-)lossless — the paper's baseline claim
+    let kv8 = LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), cfg.n_layers);
+    let acc8 = tuner::fidelity_accuracy(&cfg, &w, &r, &kv8).unwrap();
+    assert!(acc8 > 0.95, "KV8 fidelity {acc8}");
+}
+
+#[test]
+fn perplexity_orders_with_precision() {
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let w = Weights::load(&m, &cfg.name).unwrap();
+    let prompts = calib::calib_set(cfg.vocab, 4, 24, 11);
+    let r = tuner::build_reference(&cfg, &w, &prompts, 16).unwrap();
+    let ppl = |mode, k, v| {
+        let specs = LayerSpec::uniform(mode, PrecisionPair::new(k, v), cfg.n_layers);
+        tuner::pseudo_perplexity(&cfg, &w, &r, &specs).unwrap()
+    };
+    let fp = {
+        let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+        tuner::pseudo_perplexity(&cfg, &w, &r, &specs).unwrap()
+    };
+    let p8 = ppl(Mode::Token, 8, 8);
+    let p2 = ppl(Mode::Token, 2, 2);
+    assert!(fp <= p8 * 1.05, "fp {fp} vs kv8 {p8}");
+    assert!(p2 > p8 * 1.1, "kv2 {p2} should be clearly worse than kv8 {p8}");
+}
+
+#[test]
+fn kivi_beats_token_at_4bit_keys_on_outlier_model() {
+    // The KIVI-vs-per-token gap (paper Sec. 4.2): channel outliers in keys
+    // make per-channel key quantization much more accurate.
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let w = Weights::load(&m, "tiny-robust").unwrap();
+    let prompts = calib::calib_set(cfg.vocab, 6, 40, 13);
+    let r = tuner::build_reference(&cfg, &w, &prompts, 24).unwrap();
+    let acc = |mode| {
+        let specs = LayerSpec::uniform(mode, PrecisionPair::new(4, 4), cfg.n_layers);
+        tuner::fidelity_accuracy(&cfg, &w, &r, &specs).unwrap()
+    };
+    let kivi = acc(Mode::Kivi);
+    let token = acc(Mode::Token);
+    assert!(kivi >= token - 0.02, "kivi {kivi} vs token {token}");
+    assert!(kivi > 0.8, "kivi KV4 should be near-lossless on robust model, got {kivi}");
+}
+
+#[test]
+fn tuner_pipeline_end_to_end_invariants() {
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let w = Weights::load(&m, &cfg.name).unwrap();
+    let opts = TuneOptions {
+        mode: Mode::Kivi,
+        n_prompts: 4,
+        prompt_len: 32,
+        horizon: 16,
+        moo: MooOptions { evaluations: 24, population: 8, ..Default::default() },
+        algorithm: Algorithm::Nsga2,
+        ..Default::default()
+    };
+    let r = tuner::run_pipeline(&cfg, &w, &opts).unwrap();
+    // pruning keeps at least the extremes per layer
+    for cands in &r.pruned {
+        assert!(!cands.is_empty());
+        assert!(cands.iter().any(|c| c.bits >= 8.0));
+        assert!(cands.iter().any(|c| c.bits <= 2.0));
+        // candidates sorted high-precision first and non-dominated
+        for win in cands.windows(2) {
+            assert!(win[0].bits >= win[1].bits);
+        }
+    }
+    // groups partition the layers
+    let covered: usize = r.groups.iter().map(|g| g.layers.len()).sum();
+    assert_eq!(covered, cfg.n_layers);
+    // front is non-dominated and non-empty
+    assert!(!r.front.is_empty());
+    for a in &r.front {
+        for b in &r.front {
+            let dom = b.bits <= a.bits && b.accuracy >= a.accuracy
+                && (b.bits < a.bits || b.accuracy > a.accuracy);
+            assert!(!dom, "front point dominated");
+        }
+    }
+    // selected configs respect their ceilings
+    for c in &r.configs {
+        assert!(c.equivalent_bits <= 6.0 + 1e-9);
+        assert_eq!(c.specs.len(), cfg.n_layers);
+    }
+}
+
+#[test]
+fn moead_and_nsga2_both_reach_high_accuracy_corner() {
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let w = Weights::load(&m, &cfg.name).unwrap();
+    for algo in [Algorithm::Nsga2, Algorithm::Moead] {
+        let opts = TuneOptions {
+            mode: Mode::Kivi,
+            n_prompts: 3,
+            prompt_len: 24,
+            horizon: 12,
+            moo: MooOptions { evaluations: 16, population: 6, ..Default::default() },
+            algorithm: algo,
+            ..Default::default()
+        };
+        let r = tuner::run_pipeline(&cfg, &w, &opts).unwrap();
+        let best = r.front.iter().map(|p| p.accuracy).fold(0.0, f64::max);
+        assert!(best > 0.8, "{algo:?} best accuracy {best}");
+    }
+}
+
+#[test]
+fn tuned_config_json_roundtrip() {
+    let Some(m) = manifest() else { return };
+    let cfg = m.config.clone();
+    let specs: Vec<LayerSpec> = (0..cfg.n_layers)
+        .map(|l| LayerSpec {
+            mode: Mode::Kivi,
+            pair: if l % 2 == 0 { PrecisionPair::new(8, 4) } else { PrecisionPair::new(4, 2) },
+        })
+        .collect();
+    let c = tuner::TunedConfig {
+        model: cfg.name.clone(),
+        mode: Mode::Kivi,
+        specs: specs.clone(),
+        equivalent_bits: LayerSpec::equivalent_bits(&specs),
+        accuracy: 0.93,
+        label: "KVTuner-C4.50".into(),
+    };
+    let path = std::env::temp_dir().join("kvtuner_test_cfg.json");
+    c.save(&path).unwrap();
+    let back = tuner::TunedConfig::load(&path).unwrap();
+    assert_eq!(back.specs, specs);
+    assert_eq!(back.label, c.label);
+    assert!((back.equivalent_bits - c.equivalent_bits).abs() < 1e-9);
+}
+
+#[test]
+fn engine_batch_decode_matches_single_slot() {
+    // batch=2 decode with one active slot must produce the same tokens as
+    // B=1-style generation of that sequence alone (slot isolation).
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = rt.manifest.config.clone();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), cfg.n_layers);
+
+    let prompt: Vec<i32> = (0..20).map(|i| (i * 7) % cfg.vocab as i32).collect();
+    let mut eng = Engine::new(rt.clone(), &cfg.name, specs.clone(), 2, 256, 32).unwrap();
+    // run the same prompt in both slots, decode both active
+    let a = eng.generate(0, &prompt, 12).unwrap();
+    eng.cache.reset_slot(0);
+    eng.cache.reset_slot(1);
+    let mut next0 = eng.prefill(0, &prompt).unwrap();
+    let mut next1 = eng.prefill(1, &prompt).unwrap();
+    assert_eq!(next0, next1, "same prompt, same first token");
+    let mut both = vec![vec![next0], vec![next1]];
+    for _ in 0..11 {
+        let out = eng.decode_step(&[next0, next1], &[true, true]).unwrap();
+        next0 = out[0];
+        next1 = out[1];
+        both[0].push(next0);
+        both[1].push(next1);
+    }
+    assert_eq!(both[0], both[1], "slots drifted");
+    assert_eq!(both[0], a, "batched decode differs from single-slot generate");
+}
+
+#[test]
+fn router_serves_mixed_classes_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let batch = *m.decode_batches().last().unwrap();
+    let workers = vec![
+        WorkerSpec {
+            name: "high".into(),
+            model: cfg.name.clone(),
+            specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), cfg.n_layers),
+            class: AccuracyClass::High,
+            batch,
+            s_max: 256,
+            prefill_chunk: 32,
+        },
+        WorkerSpec {
+            name: "efficient".into(),
+            model: cfg.name.clone(),
+            specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers),
+            class: AccuracyClass::Efficient,
+            batch,
+            s_max: 256,
+            prefill_chunk: 32,
+        },
+    ];
+    let router = Router::start(dir, workers).expect("router start");
+    let mut subs = Vec::new();
+    for i in 0..6u64 {
+        let class = if i % 2 == 0 { AccuracyClass::High } else { AccuracyClass::Efficient };
+        let prompt: Vec<i32> = (0..16).map(|j| ((j as u64 * 5 + i) % cfg.vocab as u64) as i32).collect();
+        subs.push((class, router.submit(prompt, 8, class).unwrap()));
+    }
+    for (class, sub) in subs {
+        let r = sub.wait_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 8);
+        let expect = match class {
+            AccuracyClass::High => "high",
+            _ => "efficient",
+        };
+        assert_eq!(r.engine, expect, "routed to wrong engine");
+        assert!(r.ttft <= r.total);
+    }
+    let snaps = router.shutdown().unwrap();
+    let total: u64 = snaps.iter().map(|(_, s)| s.requests_completed).sum();
+    assert_eq!(total, 6);
+    for (_, s) in &snaps {
+        assert!(s.tokens_per_sec_decode > 0.0);
+    }
+}
+
+#[test]
+fn scheduler_handles_more_requests_than_slots() {
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let workers = vec![WorkerSpec {
+        name: "solo".into(),
+        model: cfg.name.clone(),
+        specs: LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), cfg.n_layers),
+        class: AccuracyClass::Balanced,
+        batch: 2,
+        s_max: 256,
+        prefill_chunk: 32,
+    }];
+    let router = Router::start(dir, workers).unwrap();
+    // 7 requests through 2 slots: forces queueing + slot reuse
+    let subs: Vec<_> = (0..7u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..10).map(|j| ((j * 3 + i as usize) % cfg.vocab) as i32).collect();
+            router.submit(prompt, 6, AccuracyClass::Balanced).unwrap()
+        })
+        .collect();
+    for sub in subs {
+        let r = sub.wait_timeout(std::time::Duration::from_secs(180)).unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.tokens.len(), 6);
+    }
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn prompt_longer_than_slot_is_clamped_not_fatal() {
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let workers = vec![WorkerSpec {
+        name: "clamp".into(),
+        model: cfg.name.clone(),
+        specs: LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers),
+        class: AccuracyClass::Balanced,
+        batch: 1,
+        s_max: 256,
+        prefill_chunk: 32,
+    }];
+    let router = Router::start(dir, workers).unwrap();
+    let prompt: Vec<i32> = (0..400).map(|j| (j % cfg.vocab) as i32).collect(); // > s_max
+    let sub = router.submit(prompt, 8, AccuracyClass::Balanced).unwrap();
+    let r = sub.wait_timeout(std::time::Duration::from_secs(120)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens.len(), 8);
+    router.shutdown().unwrap();
+}

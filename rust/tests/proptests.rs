@@ -1,0 +1,225 @@
+//! Property tests over the coordinator/tuner invariants (an in-tree
+//! mini-proptest: seeded random cases — the offline crate set has no
+//! proptest crate, so cases are enumerated with the in-tree PRNG).
+
+use kvtuner::config::{LayerSpec, Mode, PrecisionPair, PAIRS};
+use kvtuner::quant::{pack_row, packed_width, quantize_per_channel, quantize_per_token, unpack_row};
+use kvtuner::tuner::cluster::{cluster_layers, dbscan, expand_assignment};
+use kvtuner::tuner::pareto::{candidate_signature, pareto_front, Candidate};
+use kvtuner::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; panics carry the failing seed.
+fn for_all(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed(seed * 7919 + 13);
+        f(&mut rng);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// packing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for_all(200, |rng| {
+        let bits = *rng.choose(&[2u8, 4, 8]);
+        let dh = *rng.choose(&[16usize, 32, 64, 128]);
+        let codes: Vec<u8> = (0..dh).map(|_| (rng.below(1 << bits as usize)) as u8).collect();
+        let mut packed = vec![0u8; packed_width(dh, bits).unwrap()];
+        pack_row(&codes, bits, &mut packed);
+        let mut back = vec![0u8; dh];
+        unpack_row(&packed, bits, &mut back);
+        assert_eq!(codes, back, "bits={bits} dh={dh}");
+    });
+}
+
+#[test]
+fn prop_packed_density() {
+    for_all(50, |rng| {
+        let bits = *rng.choose(&[2u8, 4, 8]);
+        let dh = 8 * rng.range(1, 9);
+        assert_eq!(packed_width(dh, bits).unwrap(), dh * bits as usize / 8);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// quantization
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_error_within_half_scale() {
+    for_all(60, |rng| {
+        let (t, dh) = (rng.range(1, 40), *rng.choose(&[16usize, 32]));
+        let bits = *rng.choose(&[2u8, 4, 8]);
+        let x: Vec<f32> = (0..t * dh).map(|_| rng.normal() as f32 * 4.0).collect();
+        let per_channel = rng.chance(0.5);
+        let q = if per_channel {
+            quantize_per_channel(&x, t, dh, bits).unwrap()
+        } else {
+            quantize_per_token(&x, t, dh, bits).unwrap()
+        };
+        let y = q.dequantize();
+        for ti in 0..t {
+            for d in 0..dh {
+                let s = if per_channel { q.scale[d] } else { q.scale[ti] };
+                let e = (x[ti * dh + d] - y[ti * dh + d]).abs();
+                assert!(e <= s * 0.5 + 1e-5, "e={e} s={s} bits={bits} pc={per_channel}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quant_idempotent() {
+    // dequantized grid points survive a second quantize→dequantize unchanged
+    for_all(40, |rng| {
+        let (t, dh) = (8usize, 16usize);
+        let bits = *rng.choose(&[2u8, 4, 8]);
+        let x: Vec<f32> = (0..t * dh).map(|_| rng.normal() as f32).collect();
+        let y = quantize_per_token(&x, t, dh, bits).unwrap().dequantize();
+        let z = quantize_per_token(&y, t, dh, bits).unwrap().dequantize();
+        for (a, b) in y.iter().zip(&z) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_constant_input_exact() {
+    for bits in [2u8, 4, 8] {
+        let x = vec![3.25f32; 4 * 16];
+        let y = quantize_per_token(&x, 4, 16, bits).unwrap().dequantize();
+        for v in y {
+            assert!((v - 3.25).abs() < 1e-5);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pareto / clustering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pareto_front_is_nondominated_and_complete() {
+    for_all(100, |rng| {
+        let n = rng.range(1, 20);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64() * 8.0, rng.f64())).collect();
+        let keep = pareto_front(&pts);
+        assert!(!keep.is_empty());
+        for &i in &keep {
+            for &j in &keep {
+                if i != j {
+                    let dom = pts[j].0 <= pts[i].0
+                        && pts[j].1 <= pts[i].1
+                        && (pts[j].0 < pts[i].0 || pts[j].1 < pts[i].1);
+                    assert!(!dom, "kept point {i} dominated by kept {j}");
+                }
+            }
+        }
+        for i in 0..n {
+            if !keep.contains(&i) {
+                let covered = keep.iter().any(|&j| {
+                    pts[j].0 <= pts[i].0
+                        && pts[j].1 <= pts[i].1
+                        && (pts[j].0 < pts[i].0 || pts[j].1 < pts[i].1)
+                });
+                assert!(covered, "dropped point {i} not dominated");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dbscan_labels_total_and_consistent() {
+    for_all(60, |rng| {
+        let n = rng.range(2, 24);
+        let pts: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let labels = dbscan(&pts, 0.15, 2);
+        assert_eq!(labels.len(), n);
+        // identical points always share a cluster
+        let mut pts2 = pts.clone();
+        pts2.push(pts[0].clone());
+        let labels2 = dbscan(&pts2, 0.15, 2);
+        assert_eq!(labels2[0], labels2[n]);
+    });
+}
+
+#[test]
+fn prop_cluster_expand_roundtrip() {
+    for_all(60, |rng| {
+        let n_layers = rng.range(2, 12);
+        let pruned: Vec<Vec<Candidate>> = (0..n_layers)
+            .map(|_| {
+                let n_c = rng.range(1, 4);
+                (0..n_c)
+                    .map(|i| {
+                        let pair = PAIRS[(i * 4) % PAIRS.len()];
+                        Candidate { pair, bits: pair.equivalent_bits(), e_o: rng.f64() * 0.2 }
+                    })
+                    .collect()
+            })
+            .collect();
+        let groups = cluster_layers(&pruned, 0.05, 2);
+        // groups partition the layers and respect signatures
+        let mut seen = vec![false; n_layers];
+        for g in &groups {
+            for &l in &g.layers {
+                assert!(!seen[l], "layer {l} in two groups");
+                seen[l] = true;
+                assert_eq!(
+                    candidate_signature(&pruned[l]),
+                    candidate_signature(&g.candidates),
+                    "layer {l} grouped across signatures"
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not all layers grouped");
+        let picks: Vec<usize> = groups.iter().map(|g| rng.below(g.candidates.len())).collect();
+        let assignment = expand_assignment(&groups, &picks, n_layers);
+        assert_eq!(assignment.len(), n_layers);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// config / precision pairs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pair_label_parse_roundtrip() {
+    for pair in PAIRS {
+        assert_eq!(PrecisionPair::parse(&pair.label()).unwrap(), pair);
+    }
+}
+
+#[test]
+fn prop_equivalent_bits_bounds() {
+    for_all(50, |rng| {
+        let n = rng.range(1, 16);
+        let specs: Vec<LayerSpec> = (0..n)
+            .map(|_| LayerSpec { mode: Mode::Token, pair: *rng.choose(&PAIRS) })
+            .collect();
+        let b = LayerSpec::equivalent_bits(&specs);
+        assert!((2.0..=8.0).contains(&b), "{b}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON substrate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    use kvtuner::util::json::{arr, num, obj, s, Json};
+    for_all(60, |rng| {
+        let v = obj(vec![
+            ("a", num((rng.f64() * 1e6).round())),
+            ("b", num(rng.f64())),
+            ("c", s(format!("x{}y\"z\\n{}", rng.below(100), rng.below(100)))),
+            ("d", arr((0..rng.below(5)).map(|i| num(i as f64)))),
+        ]);
+        let text = v.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "{text}");
+    });
+}
