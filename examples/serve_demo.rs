@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             batch,
             s_max: 256,
             prefill_chunk: 32,
+            paged: None,
         },
         WorkerSpec {
             name: "tuned-balanced".into(),
@@ -50,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             batch,
             s_max: 256,
             prefill_chunk: 32,
+            paged: None,
         },
     ];
 

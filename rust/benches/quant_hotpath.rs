@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use kvtuner::config::{LayerSpec, Mode, PrecisionPair};
 use kvtuner::engine::Engine;
+use kvtuner::kvcache::CacheBackend;
 use kvtuner::quant::{quantize_per_channel, quantize_per_token};
 use kvtuner::runtime::Runtime;
 use kvtuner::util::bench::bench;
@@ -51,11 +52,7 @@ fn main() -> anyhow::Result<()> {
         let mut eng = Engine::new(rt.clone(), &cfg.name, specs, batch, 256, 32)?;
         // half-full cache
         for slot in 0..batch {
-            eng.cache.pos[slot] = 128;
-            for l in 0..cfg.n_layers {
-                let lc = &mut eng.cache.layers[l];
-                lc.cache_len[slot] = 128;
-            }
+            eng.cache.synthetic_fill(slot, 128)?;
         }
         let tokens = vec![1i32; batch];
         let active = vec![true; batch];

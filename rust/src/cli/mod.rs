@@ -42,10 +42,15 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --artifacts DIR   artifact directory (default artifacts/tiny or $KVTUNER_ARTIFACTS)
+  --paged           serve/throughput: paged KV cache (block pool, prefix
+                    sharing, preemption) instead of dense slot buffers
+  --pool-blocks N   paged pool size in pages (page = quant group)
+  --pool-mib MIB    paged pool byte budget (wins over the dense-equivalent
+                    default; ignored when --pool-blocks is given)
 ";
 
 pub fn cli_main() -> Result<()> {
-    let args = Args::from_env(&["no-prune", "tokens", "real-fill", "help"])?;
+    let args = Args::from_env(&["no-prune", "tokens", "real-fill", "paged", "help"])?;
     if args.switch("help") || args.subcommand.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -82,6 +87,22 @@ pub(crate) fn load_model(
     let model = args.str("model", &manifest.config.name);
     let weights = crate::model::Weights::load(&manifest, &model)?;
     Ok((manifest, weights, model))
+}
+
+/// Shared: `--paged` / `--pool-blocks` / `--pool-mib` -> paged-arm options.
+pub(crate) fn paged_options(args: &Args) -> Result<Option<crate::kvcache::PagedOptions>> {
+    if !args.switch("paged") {
+        return Ok(None);
+    }
+    let total_blocks = match args.opt_str("pool-blocks") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let budget_mib = match args.opt_str("pool-mib") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    Ok(Some(crate::kvcache::PagedOptions { total_blocks, budget_mib }))
 }
 
 pub(crate) fn parse_modes(s: &str) -> Result<Vec<crate::config::Mode>> {

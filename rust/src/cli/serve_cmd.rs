@@ -21,6 +21,7 @@ pub fn run(args: &Args) -> Result<()> {
     let s_max = args.usize("smax", 256)?;
     let n_requests = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 16)?;
+    let paged = super::paged_options(args)?;
 
     // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
     // given, else K8V4
@@ -33,6 +34,7 @@ pub fn run(args: &Args) -> Result<()> {
             batch,
             s_max,
             prefill_chunk: 32,
+            paged: paged.clone(),
         },
         WorkerSpec {
             name: "k4v2-efficient".into(),
@@ -42,6 +44,7 @@ pub fn run(args: &Args) -> Result<()> {
             batch,
             s_max,
             prefill_chunk: 32,
+            paged: paged.clone(),
         },
     ];
     let balanced_specs = match args.opt_str("config") {
@@ -56,9 +59,14 @@ pub fn run(args: &Args) -> Result<()> {
         batch,
         s_max,
         prefill_chunk: 32,
+        paged: paged.clone(),
     });
 
-    eprintln!("[serve] starting {} workers (batch={batch}, smax={s_max})", workers.len());
+    eprintln!(
+        "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={})",
+        workers.len(),
+        if paged.is_some() { "paged" } else { "dense" }
+    );
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;
     eprintln!("[serve] workers ready in {:.1}s", t0.elapsed().as_secs_f64());

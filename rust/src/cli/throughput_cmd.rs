@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::config::{LayerSpec, Mode, PrecisionPair};
 use crate::engine::Engine;
+use crate::kvcache::{CacheBackend, PagedOptions};
 use crate::runtime::Runtime;
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
@@ -42,8 +43,12 @@ pub fn measure(
     input_len: usize,
     steps: usize,
     real_fill: bool,
+    paged: Option<PagedOptions>,
 ) -> Result<ThroughputRow> {
-    let mut eng = Engine::new(rt.clone(), model, specs, batch, s_max, 32)?;
+    let mut eng = match paged {
+        None => Engine::new(rt.clone(), model, specs, batch, s_max, 32)?,
+        Some(opts) => Engine::new_paged(rt.clone(), model, specs, batch, s_max, 32, opts)?,
+    };
     // fill the cache to input_len: honest chunked prefill, or synthetic fill
     // (identical memory traffic; buffers are zero-filled and masked valid)
     if real_fill {
@@ -53,26 +58,14 @@ pub fn measure(
             eng.prefill(slot, &prompt)?;
         }
     } else {
-        let g = eng.cfg.group;
         for slot in 0..batch {
-            eng.cache.pos[slot] = input_len as i32;
-            for l in 0..eng.cfg.n_layers {
-                let lc = &mut eng.cache.layers[l];
-                match lc.spec.mode {
-                    Mode::Kivi => {
-                        let committed = (input_len / g) * g;
-                        lc.cache_len[slot] = committed as i32;
-                        lc.res_len[slot] = (input_len - committed) as i32;
-                    }
-                    _ => lc.cache_len[slot] = input_len as i32,
-                }
-            }
+            eng.cache.synthetic_fill(slot, input_len)?;
         }
     }
     let bits = eng.equivalent_bits();
     let kv_mib = eng.kv_bytes() as f64 / (1024.0 * 1024.0);
-    let fill = input_len as f64 / s_max as f64;
-    let kv_bytes_per_step = eng.kv_bytes() as f64 * fill;
+    // KV bytes a decode step actually touches = the live (valid) region
+    let kv_bytes_per_step = eng.cache.mem_stats().bytes_live as f64;
 
     let tokens = vec![1i32; batch];
     let active = vec![true; batch];
@@ -128,9 +121,11 @@ pub fn run(args: &Args) -> Result<()> {
         .map(|s| s.parse().unwrap())
         .collect();
     let real_fill = args.switch("real-fill");
+    let paged = super::paged_options(args)?;
     let settings = settings_grid(cfg.n_layers, &args.list("configs", ""))?;
 
-    let mut t = Table::with_headers(&format!("Table 8 — decode throughput, batch={batch}, steps={steps} (tokens/s)"),
+    let cache_arm = if paged.is_some() { "paged" } else { "dense" };
+    let mut t = Table::with_headers(&format!("Table 8 — decode throughput, batch={batch}, steps={steps}, cache={cache_arm} (tokens/s)"),
         {
             let mut h = vec!["setting".to_string(), "bits".into(), "KV MiB".into()];
             h.extend(input_lens.iter().map(|l| format!("len={l}")));
@@ -145,7 +140,7 @@ pub fn run(args: &Args) -> Result<()> {
         let mut mib = 0.0;
         let mut tps_list = Vec::new();
         for &il in &input_lens {
-            let r = measure(&rt, &model, specs.clone(), batch, s_max, il, steps, real_fill)?;
+            let r = measure(&rt, &model, specs.clone(), batch, s_max, il, steps, real_fill, paged.clone())?;
             bits = r.equiv_bits;
             mib = r.kv_mib;
             tps_list.push(r.toks_per_sec);

@@ -43,10 +43,21 @@ impl Batcher {
         true
     }
 
-    /// Admit up to `free_slots` requests (bounded by the burst cap), FIFO.
-    pub fn admit(&mut self, free_slots: usize) -> Vec<Request> {
-        let n = free_slots.min(self.opts.max_admit_per_tick).min(self.queue.len());
-        self.queue.drain(..n).collect()
+    /// Head of the queue, for admission checks that must not skip ahead
+    /// (FIFO fairness: the scheduler blocks on the head rather than starving
+    /// large requests; the `max_admit_per_tick` burst cap is applied there).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.queue.pop_front()
+    }
+
+    /// Return a request to the head of the queue (admission raced the page
+    /// pool and must retry; not counted against capacity).
+    pub fn push_front(&mut self, req: Request) {
+        self.queue.push_front(req);
     }
 
     pub fn len(&self) -> usize {
@@ -83,16 +94,19 @@ mod tests {
     }
 
     #[test]
-    fn fifo_admission_with_burst_cap() {
+    fn fifo_peek_pop_and_requeue() {
         let mut b = Batcher::new(BatcherOptions { max_admit_per_tick: 2, max_queue: 10 });
-        for i in 0..5 {
+        for i in 0..3 {
             assert!(b.push(req(i)));
         }
-        let a = b.admit(4);
-        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
-        let a = b.admit(1);
-        assert_eq!(a[0].id, 2);
-        assert_eq!(b.len(), 2);
+        assert_eq!(b.peek().unwrap().id, 0);
+        assert_eq!(b.pop().unwrap().id, 0);
+        assert_eq!(b.pop().unwrap().id, 1);
+        // a requeued request (admission raced the page pool) goes back first
+        b.push_front(req(9));
+        assert_eq!(b.peek().unwrap().id, 9);
+        assert_eq!(b.pop().unwrap().id, 9);
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

@@ -14,6 +14,11 @@ pub struct Metrics {
     pub decode_nanos: AtomicU64,
     pub prefill_nanos: AtomicU64,
     pub busy_slots_sum: AtomicU64,
+    /// Paged serving: requests evicted back to the resume queue.
+    pub preemptions: AtomicU64,
+    /// Paged serving: prompts that reused shared prefix pages / tokens saved.
+    pub prefix_hits: AtomicU64,
+    pub prefix_tokens_reused: AtomicU64,
     latencies: Mutex<LatencySamples>,
 }
 
@@ -36,6 +41,9 @@ pub struct Snapshot {
     pub ttft_p95: f64,
     pub total_p50: f64,
     pub total_p95: f64,
+    pub preemptions: u64,
+    pub prefix_hits: u64,
+    pub prefix_tokens_reused: u64,
 }
 
 fn pct(sorted: &[f64], p: f64) -> f64 {
@@ -57,6 +65,17 @@ impl Metrics {
     pub fn record_prefill(&self, d: Duration) {
         self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
         self.prefill_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_prefix(&self, tokens_reused: usize) {
+        if tokens_reused > 0 {
+            self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+            self.prefix_tokens_reused.fetch_add(tokens_reused as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn record_completion(&self, ttft: Duration, total: Duration) {
@@ -89,6 +108,9 @@ impl Metrics {
             ttft_p95: pct(&l.ttft, 0.95),
             total_p50: pct(&l.total, 0.5),
             total_p95: pct(&l.total, 0.95),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_tokens_reused: self.prefix_tokens_reused.load(Ordering::Relaxed),
         }
     }
 }
@@ -97,7 +119,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms",
+            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -106,6 +128,9 @@ impl std::fmt::Display for Snapshot {
             self.ttft_p95 * 1e3,
             self.total_p50 * 1e3,
             self.total_p95 * 1e3,
+            self.preemptions,
+            self.prefix_tokens_reused,
+            self.prefix_hits,
         )
     }
 }

@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::LayerSpec;
 use crate::coordinator::metrics::Metrics;
+use crate::kvcache::PagedOptions;
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use crate::engine::Engine;
 use crate::runtime::Runtime;
@@ -30,6 +31,9 @@ pub struct WorkerSpec {
     pub batch: usize,
     pub s_max: usize,
     pub prefill_chunk: usize,
+    /// `Some` = run on the paged cache arm with this pool sizing; the
+    /// scheduler then admits by page availability and preempts on pressure.
+    pub paged: Option<PagedOptions>,
 }
 
 pub struct WorkerHandle {
@@ -73,14 +77,26 @@ impl Router {
                             return Ok(());
                         }
                     };
-                    let engine = match Engine::new(
-                        rt,
-                        &ws.model,
-                        ws.specs.clone(),
-                        ws.batch,
-                        ws.s_max,
-                        ws.prefill_chunk,
-                    ) {
+                    let built = match ws.paged.clone() {
+                        None => Engine::new(
+                            rt,
+                            &ws.model,
+                            ws.specs.clone(),
+                            ws.batch,
+                            ws.s_max,
+                            ws.prefill_chunk,
+                        ),
+                        Some(opts) => Engine::new_paged(
+                            rt,
+                            &ws.model,
+                            ws.specs.clone(),
+                            ws.batch,
+                            ws.s_max,
+                            ws.prefill_chunk,
+                            opts,
+                        ),
+                    };
+                    let engine = match built {
                         Ok(e) => e,
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));

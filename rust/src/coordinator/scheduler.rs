@@ -2,7 +2,15 @@
 //! client, pinned to this thread), interleaves prefill admission with
 //! batched decode steps, and completes requests through their response
 //! channels. This is the serving loop the throughput tables run on.
+//!
+//! With a paged engine the loop additionally admits by *block availability*
+//! (not just free slots), reuses cached prompt-prefix pages, and runs a
+//! preemption policy: when the next decode step would need more pages than
+//! the pool has free, the youngest request is evicted back to a resume queue
+//! and re-prefilled (prompt + tokens generated so far) once pages free up —
+//! recompute-style preemption, so the pool can oversubscribe.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -11,6 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::Engine;
+use crate::kvcache::{CacheBackend, OutOfPages};
 
 use super::batcher::{Batcher, BatcherOptions};
 use super::metrics::Metrics;
@@ -24,11 +33,30 @@ struct ActiveSlot {
     ttft: Duration,
 }
 
+/// A preempted request waiting to resume: its generated tokens are kept so
+/// re-prefill restores the exact decode state (modulo prefill-path
+/// quantization of the recomputed tokens).
+struct Preempted {
+    req: Request,
+    generated: Vec<i32>,
+    started: Instant,
+    ttft: Duration,
+}
+
+/// Completion predicate for one request after a decode step has pushed its
+/// token. `generated` includes the prefill's first token, so a request is
+/// done at exactly `max_new` tokens — the old `>` comparison ran one extra
+/// batched step whose token was then truncated.
+pub fn generation_done(generated: usize, max_new: usize, pos: usize, s_max: usize) -> bool {
+    generated >= max_new || pos >= s_max
+}
+
 pub struct Scheduler {
     pub engine: Engine,
     pub batcher: Batcher,
     pub metrics: Arc<Metrics>,
     slots: Vec<Option<ActiveSlot>>,
+    preempted: VecDeque<Preempted>,
     pub name: String,
 }
 
@@ -51,61 +79,241 @@ impl Scheduler {
             batcher: Batcher::new(opts.batcher),
             metrics,
             slots: (0..batch).map(|_| None).collect(),
+            preempted: VecDeque::new(),
             name: name.to_string(),
         }
-    }
-
-    fn free_slots(&self) -> Vec<usize> {
-        self.slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect()
     }
 
     fn busy(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Admit waiting requests into free slots (prefill them now).
-    fn admit(&mut self) -> Result<()> {
-        let free = self.free_slots();
-        if free.is_empty() || self.batcher.is_empty() {
-            return Ok(());
+    /// Clamp a prompt to what a slot can hold with generation room.
+    fn clamp_prompt(&self, prompt: &[i32], max_new: usize) -> Vec<i32> {
+        let cap = self.engine.s_max.saturating_sub(max_new + 1);
+        if prompt.len() > cap {
+            prompt[prompt.len() - cap..].to_vec()
+        } else {
+            prompt.to_vec()
         }
-        let admits = self.batcher.admit(free.len());
-        for (req, slot) in admits.into_iter().zip(free) {
+    }
+
+    fn respond_error(&self, req: Request, started: Instant, msg: String) {
+        let _ = req.respond.send(Response {
+            id: req.id,
+            tokens: Vec::new(),
+            ttft: Duration::ZERO,
+            total: started.elapsed(),
+            engine: self.name.clone(),
+            error: Some(msg),
+        });
+    }
+
+    /// Complete a request: truncate, record, respond, release the slot.
+    /// `error` marks degraded completions (e.g. pool-exhaustion truncation)
+    /// while still delivering the tokens generated so far.
+    fn finish(&mut self, slot: usize, a: ActiveSlot, error: Option<String>) {
+        let mut toks = a.generated;
+        toks.truncate(a.req.max_new_tokens);
+        let total = a.started.elapsed();
+        self.metrics.record_completion(a.ttft, total);
+        let _ = a.req.respond.send(Response {
+            id: a.req.id,
+            tokens: toks,
+            ttft: a.ttft,
+            total,
+            engine: self.name.clone(),
+            error,
+        });
+        self.engine.cache.reset_slot(slot);
+    }
+
+    /// True when a freshly (re-)prefilled request needs no decode step at
+    /// all (tiny `max_new_tokens` or a full cache) — completing it here
+    /// avoids a wasted batched step whose token would be truncated.
+    fn done_after_prefill(&self, a: &ActiveSlot, slot: usize) -> bool {
+        generation_done(
+            a.generated.len(),
+            a.req.max_new_tokens,
+            self.engine.cache.pos(slot) as usize,
+            self.engine.s_max,
+        )
+    }
+
+    /// Prefill `ctx` into `slot`, reusing shared prefix pages when the
+    /// backend has them. Returns the first generated token. Prefix metrics
+    /// are recorded only on success so an `OutOfPages` retry does not
+    /// double-count.
+    fn prefill_with_reuse(&mut self, slot: usize, ctx: &[i32]) -> Result<i32> {
+        self.engine.cache.reset_slot(slot);
+        let reused = self.engine.cache.prefill_reuse(slot, ctx);
+        let t0 = Instant::now();
+        let first = self.engine.prefill(slot, &ctx[reused..])?;
+        self.metrics.record_prefill(t0.elapsed());
+        self.metrics.record_prefix(reused);
+        self.engine.cache.register_prefix(slot, ctx);
+        Ok(first)
+    }
+
+    /// Admit waiting work into free slots: resumptions first (they hold
+    /// partial progress), then fresh requests FIFO. Paged engines gate on
+    /// page availability instead of admitting blindly.
+    fn admit(&mut self) -> Result<()> {
+        let mut admitted = 0usize;
+        while admitted < self.batcher.opts.max_admit_per_tick {
+            let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+
+            if let Some(pe) = self.preempted.pop_front() {
+                // resume context = clamped prompt + all generated but the
+                // last token (which becomes the next decode input)
+                let mut ctx = self.clamp_prompt(&pe.req.prompt, pe.req.max_new_tokens);
+                ctx.extend_from_slice(&pe.generated[..pe.generated.len() - 1]);
+                if !self.engine.cache.can_admit(ctx.len(), pe.req.max_new_tokens) {
+                    if self.busy() == 0 {
+                        self.respond_error(
+                            pe.req,
+                            pe.started,
+                            "request exceeds the kv page pool budget".into(),
+                        );
+                        admitted += 1;
+                        continue;
+                    }
+                    self.preempted.push_front(pe);
+                    break;
+                }
+                match self.prefill_with_reuse(slot, &ctx) {
+                    Ok(_recomputed_first) => {
+                        let next = *pe.generated.last().unwrap();
+                        let a = ActiveSlot {
+                            req: pe.req,
+                            generated: pe.generated,
+                            next_token: next,
+                            started: pe.started,
+                            ttft: pe.ttft,
+                        };
+                        if self.done_after_prefill(&a, slot) {
+                            self.finish(slot, a, None);
+                        } else {
+                            self.slots[slot] = Some(a);
+                        }
+                    }
+                    Err(e) => {
+                        if e.downcast_ref::<OutOfPages>().is_some() && self.busy() > 0 {
+                            // pages will free as in-flight work completes
+                            self.engine.cache.reset_slot(slot);
+                            self.preempted.push_front(pe);
+                            break;
+                        }
+                        self.respond_error(pe.req, pe.started, format!("resume failed: {e:#}"));
+                    }
+                }
+                admitted += 1;
+                continue;
+            }
+
+            let Some(front) = self.batcher.peek() else { break };
+            let max_new = front.max_new_tokens;
+            let cap = self.engine.s_max.saturating_sub(max_new + 1);
+            let plen = front.prompt.len().min(cap);
+            if !self.engine.cache.can_admit(plen, max_new) {
+                if self.busy() == 0 && self.preempted.is_empty() {
+                    // nothing in flight will ever free pages: fail it loud
+                    let req = self.batcher.pop().unwrap();
+                    let started = Instant::now();
+                    self.respond_error(
+                        req,
+                        started,
+                        "request exceeds the kv page pool budget".into(),
+                    );
+                    admitted += 1;
+                    continue;
+                }
+                break;
+            }
+            let req = self.batcher.pop().unwrap();
             let started = Instant::now();
-            self.engine.cache.reset_slot(slot);
-            // clamp the prompt to what the slot can hold with generation room
-            let cap = self.engine.s_max.saturating_sub(req.max_new_tokens + 1);
-            let prompt: Vec<i32> = if req.prompt.len() > cap {
-                req.prompt[req.prompt.len() - cap..].to_vec()
-            } else {
-                req.prompt.clone()
-            };
-            let t0 = Instant::now();
-            match self.engine.prefill(slot, &prompt) {
+            let prompt = self.clamp_prompt(&req.prompt, req.max_new_tokens);
+            match self.prefill_with_reuse(slot, &prompt) {
                 Ok(first) => {
                     let ttft = started.elapsed();
-                    self.metrics.record_prefill(t0.elapsed());
-                    self.slots[slot] = Some(ActiveSlot {
+                    let a = ActiveSlot {
                         req,
                         generated: vec![first],
                         next_token: first,
                         started,
                         ttft,
-                    });
+                    };
+                    if self.done_after_prefill(&a, slot) {
+                        self.finish(slot, a, None);
+                    } else {
+                        self.slots[slot] = Some(a);
+                    }
                 }
                 Err(e) => {
-                    let _ = req.respond.send(Response {
-                        id: req.id,
-                        tokens: Vec::new(),
-                        ttft: Duration::ZERO,
-                        total: started.elapsed(),
-                        engine: self.name.clone(),
-                        error: Some(format!("prefill failed: {e:#}")),
-                    });
+                    if e.downcast_ref::<OutOfPages>().is_some()
+                        && (self.busy() > 0 || !self.preempted.is_empty())
+                    {
+                        // admission raced the estimate; retry once pages free
+                        self.engine.cache.reset_slot(slot);
+                        self.batcher.push_front(req);
+                        break;
+                    }
+                    self.respond_error(req, started, format!("prefill failed: {e:#}"));
                 }
             }
+            admitted += 1;
         }
         Ok(())
+    }
+
+    /// Evict the youngest request(s) until the next decode step fits in the
+    /// page pool (no-op for the dense arm). A lone request that exhausts the
+    /// pool by itself is completed with what it has — there is nothing left
+    /// to evict.
+    fn preempt_for_headroom(&mut self) {
+        loop {
+            let active: Vec<usize> = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|_| i))
+                .collect();
+            if active.is_empty() {
+                return;
+            }
+            if self.engine.cache.decode_block_shortfall(&active) == 0 {
+                return;
+            }
+            if active.len() == 1 {
+                // nothing left to evict: deliver what we have, marked as
+                // truncated so the client can tell it from natural completion
+                let i = active[0];
+                let a = self.slots[i].take().unwrap();
+                let got = a.generated.len();
+                let want = a.req.max_new_tokens;
+                self.finish(
+                    i,
+                    a,
+                    Some(format!(
+                        "kv page pool exhausted: generation truncated at {got}/{want} tokens"
+                    )),
+                );
+                return;
+            }
+            let victim = *active
+                .iter()
+                .max_by_key(|&&i| self.slots[i].as_ref().unwrap().started)
+                .unwrap();
+            let a = self.slots[victim].take().unwrap();
+            self.engine.cache.reset_slot(victim);
+            self.metrics.record_preemption();
+            self.preempted.push_front(Preempted {
+                req: a.req,
+                generated: a.generated,
+                started: a.started,
+                ttft: a.ttft,
+            });
+        }
     }
 
     /// One batched decode step over all active slots; completes finished
@@ -134,26 +342,18 @@ impl Scheduler {
                     a.generated.push(next[i]);
                     a.next_token = next[i];
                 }
-                a.generated.len() > a.req.max_new_tokens
-                    || self.engine.cache.pos[i] as usize >= self.engine.s_max
+                generation_done(
+                    a.generated.len(),
+                    a.req.max_new_tokens,
+                    self.engine.cache.pos(i) as usize,
+                    self.engine.s_max,
+                )
             } else {
                 false
             };
             if done {
                 let a = self.slots[i].take().unwrap();
-                let mut toks = a.generated;
-                toks.truncate(a.req.max_new_tokens);
-                let total = a.started.elapsed();
-                self.metrics.record_completion(a.ttft, total);
-                let _ = a.req.respond.send(Response {
-                    id: a.req.id,
-                    tokens: toks,
-                    ttft: a.ttft,
-                    total,
-                    engine: self.name.clone(),
-                    error: None,
-                });
-                self.engine.cache.reset_slot(i);
+                self.finish(i, a, None);
             }
         }
         Ok(busy)
@@ -179,10 +379,14 @@ impl Scheduler {
                 }
             }
             self.admit()?;
+            self.preempt_for_headroom();
             let busy = self.decode_tick()?;
-            inflight.store(busy + self.batcher.len(), Ordering::Relaxed);
+            inflight.store(
+                busy + self.batcher.len() + self.preempted.len(),
+                Ordering::Relaxed,
+            );
 
-            if busy == 0 && self.batcher.is_empty() {
+            if busy == 0 && self.batcher.is_empty() && self.preempted.is_empty() {
                 if shutdown.load(Ordering::Relaxed) {
                     return Ok(());
                 }
@@ -196,5 +400,24 @@ impl Scheduler {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::generation_done;
+
+    #[test]
+    fn completion_has_no_extra_decode_step() {
+        // regression: `generated.len() > max_new` ran one wasted step whose
+        // token was truncated; completion must hit at exactly max_new
+        assert!(!generation_done(3, 4, 10, 256));
+        assert!(generation_done(4, 4, 10, 256));
+        assert!(generation_done(5, 4, 10, 256));
+        // cache-full still completes early
+        assert!(generation_done(1, 8, 256, 256));
+        assert!(!generation_done(1, 8, 255, 256));
+        // max_new = 0 completes immediately after prefill's token
+        assert!(generation_done(1, 0, 1, 256));
     }
 }

@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::config::{LayerSpec, Manifest, Mode, ModelConfig};
-use crate::kvcache::KvCache;
+use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -22,7 +22,8 @@ pub struct Engine {
     pub rt: Arc<Runtime>,
     pub cfg: ModelConfig,
     pub specs: Vec<LayerSpec>,
-    pub cache: KvCache,
+    /// Dense reference arm or the paged block-pool arm, behind one interface.
+    pub cache: Box<dyn CacheBackend>,
     pub batch: usize,
     pub s_max: usize,
     pub prefill_chunk: usize,
@@ -43,8 +44,9 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Build an engine for `model` with one `LayerSpec` per layer.
-    /// `batch` and `s_max` must match emitted artifact buckets.
+    /// Build an engine for `model` with one `LayerSpec` per layer, on the
+    /// dense (reference) cache arm. `batch` and `s_max` must match emitted
+    /// artifact buckets.
     pub fn new(
         rt: Arc<Runtime>,
         model: &str,
@@ -52,6 +54,34 @@ impl Engine {
         batch: usize,
         s_max: usize,
         prefill_chunk: usize,
+    ) -> Result<Engine> {
+        Engine::build(rt, model, specs, batch, s_max, prefill_chunk, None)
+    }
+
+    /// Build an engine on the paged cache arm: same artifacts, same layer
+    /// steps, but KV state lives in a block pool sized by `opts` — the
+    /// scheduler can then run more slots than the pool could hold at full
+    /// length, preempting on page pressure.
+    pub fn new_paged(
+        rt: Arc<Runtime>,
+        model: &str,
+        specs: Vec<LayerSpec>,
+        batch: usize,
+        s_max: usize,
+        prefill_chunk: usize,
+        opts: PagedOptions,
+    ) -> Result<Engine> {
+        Engine::build(rt, model, specs, batch, s_max, prefill_chunk, Some(opts))
+    }
+
+    fn build(
+        rt: Arc<Runtime>,
+        model: &str,
+        specs: Vec<LayerSpec>,
+        batch: usize,
+        s_max: usize,
+        prefill_chunk: usize,
+        paged: Option<PagedOptions>,
     ) -> Result<Engine> {
         let cfg = rt.manifest.config.clone();
         anyhow::ensure!(specs.len() == cfg.n_layers, "one spec per layer");
@@ -105,7 +135,10 @@ impl Engine {
         }
         rt.warmup(&names)?;
 
-        let cache = KvCache::new(&cfg, &specs, batch, s_max)?;
+        let cache: Box<dyn CacheBackend> = match paged {
+            None => Box::new(KvCache::new(&cfg, &specs, batch, s_max)?),
+            Some(opts) => Box::new(PagedKvCache::new(&cfg, &specs, batch, s_max, &opts)?),
+        };
         Ok(Engine {
             rt,
             cfg,
@@ -155,25 +188,23 @@ impl Engine {
         valid: &[usize],
     ) -> Result<Literal> {
         let spec = self.specs[l];
-        let lc = &self.cache.layers[l];
         let single = b_exec == 1 && self.batch != 1;
 
-        let pos: Vec<i32> = (0..b_exec).map(|i| self.cache.pos[slot0 + i]).collect();
-        let cache_len: Vec<i32> = (0..b_exec).map(|i| lc.cache_len[slot0 + i]).collect();
-        let res_len: Vec<i32> = (0..b_exec).map(|i| lc.res_len[slot0 + i]).collect();
+        let pos: Vec<i32> = (0..b_exec).map(|i| self.cache.pos(slot0 + i)).collect();
+        let cache_len: Vec<i32> =
+            (0..b_exec).map(|i| self.cache.cache_len(l, slot0 + i)).collect();
+        let res_len: Vec<i32> = (0..b_exec).map(|i| self.cache.res_len(l, slot0 + i)).collect();
         let pos_lit = Tensor::i32(&[b_exec], pos).to_literal()?;
         let clen_lit = Tensor::i32(&[b_exec], cache_len).to_literal()?;
         let rlen_lit = Tensor::i32(&[b_exec], res_len).to_literal()?;
 
-        // cache tensors: whole buffers for full-batch exec, slot slices for B=1
-        let slot_tensors;
+        // cache tensors in the artifact layout: whole buffers for full-batch
+        // exec, one slot's region for B=1 (the paged arm gathers its pages
+        // into the same shapes, so artifacts never see the difference)
         let cache_lits: Vec<Literal> = if single {
-            slot_tensors = lc.slot_inputs(slot0);
-            slot_tensors.iter().map(|t| t.to_literal()).collect::<Result<_>>()?
+            self.cache.slot_literals(l, slot0)?
         } else {
-            slot_tensors = Vec::new();
-            let _ = &slot_tensors;
-            lc.artifact_inputs().iter().map(|t| t.to_literal()).collect::<Result<_>>()?
+            self.cache.layer_literals(l)?
         };
 
         let mut inputs: Vec<&Literal> = vec![x_lit, &pos_lit, &clen_lit];
@@ -249,7 +280,7 @@ impl Engine {
         }
         for b in 0..self.batch {
             if active[b] {
-                self.cache.pos[b] += 1;
+                self.cache.advance_pos(b, 1);
             }
         }
         Ok(outs[1].as_i32()?.to_vec())
@@ -262,7 +293,7 @@ impl Engine {
     pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
-            (self.cache.pos[slot] as usize + prompt.len()) <= self.s_max,
+            (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
             "prompt overflows cache"
         );
         let tc = self.prefill_chunk;
@@ -282,7 +313,7 @@ impl Engine {
                 let x_in = x;
                 x = self.run_layer(l, &art, &x_in, slot, 1, &[nv])?;
             }
-            self.cache.pos[slot] += nv as i32;
+            self.cache.advance_pos(slot, nv);
             let xt = Tensor::from_literal(&x)?;
             let xf = xt.as_f32()?;
             let d = self.cfg.d_model;
@@ -309,7 +340,7 @@ impl Engine {
         active[slot] = true;
         for _ in 0..max_new {
             out.push(next);
-            if self.cache.pos[slot] as usize >= self.s_max {
+            if self.cache.pos(slot) as usize >= self.s_max {
                 break;
             }
             tokens[slot] = next;

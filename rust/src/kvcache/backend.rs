@@ -1,0 +1,153 @@
+//! `CacheBackend`: the interface the engine and the serving coordinator use
+//! to talk to a KV cache arm. Two implementations exist:
+//!
+//! * `KvCache` (dense) — the reference arm: per-slot `[B, H, S_max, ·]`
+//!   regions pre-allocated at engine build, exactly the layout the PJRT
+//!   layer-step artifacts consume.
+//! * `PagedKvCache` — a block-pool arm: fixed-size token pages allocated
+//!   lazily as sequences grow, recycled through a free list, and shared
+//!   across requests via hash-based prefix matching. Pages are gathered into
+//!   the dense artifact layout at each layer step, so no Python-side
+//!   artifact changes are required.
+//!
+//! The paged-only hooks (`can_admit`, `decode_block_shortfall`,
+//! `prefill_reuse`, `register_prefix`) default to dense no-ops: a dense
+//! engine admits purely by free slots and never preempts.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::tensor::Tensor;
+
+/// Pool sizing for the paged arm. Precedence: `total_blocks`, then
+/// `budget_mib`, then a dense-equivalent default (`batch * ceil(s_max/page)`
+/// blocks — same token capacity as the dense arm, so oversubscription comes
+/// from running more scheduler slots than the pool could hold at full
+/// length).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PagedOptions {
+    /// Explicit pool size in pages.
+    pub total_blocks: Option<usize>,
+    /// Pool byte budget; converted to pages at construction.
+    pub budget_mib: Option<f64>,
+}
+
+/// Memory accounting snapshot. `bytes_total` is the resident footprint
+/// (pre-allocated pool for the paged arm, full buffers for dense);
+/// `bytes_live` is the portion referenced by in-flight sequences;
+/// `frag_bytes` is allocated-but-unfilled space (partial tail pages for
+/// paged, the unreached `[len, s_max)` tail for dense).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemStats {
+    pub bytes_total: usize,
+    pub bytes_live: usize,
+    pub frag_bytes: usize,
+    pub blocks_total: usize,
+    pub blocks_live: usize,
+    pub blocks_free: usize,
+}
+
+/// Typed marker for page-pool exhaustion. The scheduler downcasts prefill
+/// errors to this to requeue (rather than fail) a request when pages will
+/// free up as in-flight work completes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfPages;
+
+impl std::fmt::Display for OutOfPages {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv page pool exhausted")
+    }
+}
+
+impl std::error::Error for OutOfPages {}
+
+pub trait CacheBackend {
+    fn batch(&self) -> usize;
+    fn s_max(&self) -> usize;
+    /// Absolute position of a slot (= tokens seen; same across layers).
+    fn pos(&self, slot: usize) -> i32;
+    fn advance_pos(&mut self, slot: usize, by: usize);
+    /// Committed (quantized or fp-stored) tokens for one layer's slot.
+    fn cache_len(&self, layer: usize, slot: usize) -> i32;
+    /// Valid fp residual tokens for one layer's slot (kivi only).
+    fn res_len(&self, layer: usize, slot: usize) -> i32;
+    /// Cache tensors for a full-batch layer step, in artifact argument order.
+    fn layer_literals(&self, layer: usize) -> Result<Vec<Literal>>;
+    /// Cache tensors for one slot (B=1 prefill executables).
+    fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<Literal>>;
+    fn append_token_outputs(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        outs: &[Tensor],
+        valid: &[usize],
+    ) -> Result<()>;
+    fn append_kivi_residual(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<Vec<bool>>;
+    fn residual_chunk(&self, layer: usize, slot: usize) -> Result<(Tensor, Tensor)>;
+    fn commit_kivi_chunk(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k_outs: &[Tensor],
+        v_outs: &[Tensor],
+    ) -> Result<()>;
+    fn append_fp(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<()>;
+    /// Release a slot's state (and, for paged, its pages back to the pool).
+    fn reset_slot(&mut self, slot: usize);
+    fn kv_bytes(&self) -> usize;
+    fn equivalent_bits(&self) -> f64;
+    /// Remaining capacity for a slot before the committed cache overflows.
+    fn remaining(&self, slot: usize) -> usize;
+    /// Mark a slot as holding `input_len` tokens without writing data
+    /// (throughput benches: identical memory traffic, no honest prefill).
+    /// Grows lengths/pages; never shrinks.
+    fn synthetic_fill(&mut self, slot: usize, input_len: usize) -> Result<()>;
+    fn mem_stats(&self) -> MemStats;
+
+    // ---- paged admission / preemption / prefix hooks (dense no-ops) ----
+
+    fn is_paged(&self) -> bool {
+        false
+    }
+
+    /// Whether a request with this prompt length can be admitted now.
+    /// Dense: always (a free slot implies reserved capacity). Paged: enough
+    /// free pages for the prompt plus one decode page of headroom —
+    /// deliberately NOT the full `max_new_tokens` reservation, which is what
+    /// lets the pool oversubscribe.
+    fn can_admit(&self, _prompt_len: usize, _max_new_tokens: usize) -> bool {
+        true
+    }
+
+    /// Number of pages missing for the next decode step over `active` slots
+    /// (0 = the step is safe). The scheduler preempts until this reaches 0.
+    fn decode_block_shortfall(&self, _active: &[usize]) -> usize {
+        0
+    }
+
+    /// Try to serve a prompt prefix from shared pages. Returns the number of
+    /// prompt tokens now present in the slot's cache (0 = no reuse); the
+    /// caller prefills only `prompt[reused..]`. At least one suffix token is
+    /// always left for prefill.
+    fn prefill_reuse(&mut self, _slot: usize, _prompt: &[i32]) -> usize {
+        0
+    }
+
+    /// Publish a slot's full prompt pages into the prefix index so later
+    /// requests with the same prefix can reuse them.
+    fn register_prefix(&mut self, _slot: usize, _prompt: &[i32]) {}
+}

@@ -1,0 +1,163 @@
+//! Block pool: refcounted physical pages with free-list recycling.
+//!
+//! A `BlockId` is one fixed-size token page *across all layers* — each
+//! layer's arena is indexed by the same id (every layer caches every token,
+//! so per-sequence block tables are shared layer-wide, vLLM-style). Bytes per
+//! block differ per layer with the precision map; the pool only tracks ids,
+//! refcounts and the free list.
+//!
+//! Freed blocks keep their content addressable until recycled: the paged
+//! cache leaves a completed request's prompt pages in the prefix index and
+//! "resurrects" them on a later prefix hit. The free list is FIFO, so the
+//! least-recently-freed cached page is evicted first.
+
+use std::collections::VecDeque;
+
+pub type BlockId = u32;
+
+#[derive(Debug)]
+pub struct BlockPool {
+    refc: Vec<u32>,
+    /// FIFO of freed blocks. May hold stale entries for blocks resurrected
+    /// out of turn; `in_free` is authoritative and `alloc` skips stale
+    /// entries lazily, keeping `resurrect` O(1) instead of O(free list).
+    free: VecDeque<BlockId>,
+    in_free: Vec<bool>,
+    n_free: usize,
+    /// Total successful allocations over the pool's lifetime.
+    pub alloc_count: u64,
+}
+
+impl BlockPool {
+    pub fn new(n_blocks: usize) -> BlockPool {
+        BlockPool {
+            refc: vec![0; n_blocks],
+            free: (0..n_blocks as BlockId).collect(),
+            in_free: vec![true; n_blocks],
+            n_free: n_blocks,
+            alloc_count: 0,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.refc.len()
+    }
+
+    /// Blocks available for allocation (includes cached prefix pages, which
+    /// are recycled on demand).
+    pub fn free_count(&self) -> usize {
+        self.n_free
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.total() - self.n_free
+    }
+
+    /// Pop the least-recently-freed block; `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        loop {
+            let id = self.free.pop_front()?;
+            if !self.in_free[id as usize] {
+                continue; // stale entry left behind by resurrect
+            }
+            self.in_free[id as usize] = false;
+            self.n_free -= 1;
+            self.refc[id as usize] = 1;
+            self.alloc_count += 1;
+            return Some(id);
+        }
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.refc[id as usize]
+    }
+
+    pub fn incref(&mut self, id: BlockId) {
+        debug_assert!(!self.in_free[id as usize], "incref on a free block");
+        self.refc[id as usize] += 1;
+    }
+
+    /// Drop one reference; at zero the block returns to the free list (its
+    /// content stays addressable for prefix resurrection until recycled).
+    pub fn decref(&mut self, id: BlockId) {
+        let i = id as usize;
+        debug_assert!(self.refc[i] > 0, "decref on an unreferenced block");
+        self.refc[i] -= 1;
+        if self.refc[i] == 0 {
+            self.free.push_back(id);
+            self.in_free[i] = true;
+            self.n_free += 1;
+        }
+    }
+
+    /// Reclaim a refcount-0 block from the free list (prefix-cache hit on a
+    /// completed sequence's page). Returns false when the block is live —
+    /// callers share live blocks with `incref` instead. O(1): the block's
+    /// deque entry goes stale and is skipped by a later `alloc`.
+    pub fn resurrect(&mut self, id: BlockId) -> bool {
+        let i = id as usize;
+        if !self.in_free[i] {
+            return false;
+        }
+        self.in_free[i] = false;
+        self.n_free -= 1;
+        self.refc[i] = 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_recycle() {
+        let mut p = BlockPool::new(2);
+        assert_eq!(p.free_count(), 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc().is_none(), "pool exhausted");
+        p.decref(a);
+        assert_eq!(p.free_count(), 1);
+        // FIFO recycle hands back the freed block
+        assert_eq!(p.alloc().unwrap(), a);
+        assert_eq!(p.live_count(), 2);
+    }
+
+    #[test]
+    fn refcount_sharing() {
+        let mut p = BlockPool::new(1);
+        let a = p.alloc().unwrap();
+        p.incref(a);
+        assert_eq!(p.ref_count(a), 2);
+        p.decref(a);
+        assert_eq!(p.free_count(), 0, "still referenced");
+        p.decref(a);
+        assert_eq!(p.free_count(), 1);
+    }
+
+    #[test]
+    fn resurrect_cached_block() {
+        let mut p = BlockPool::new(2);
+        let a = p.alloc().unwrap();
+        assert!(!p.resurrect(a), "live block cannot be resurrected");
+        p.decref(a);
+        assert!(p.resurrect(a));
+        assert_eq!(p.ref_count(a), 1);
+        assert_eq!(p.free_count(), 1, "only the never-allocated block is free");
+    }
+
+    #[test]
+    fn stale_free_entries_are_skipped() {
+        let mut p = BlockPool::new(1);
+        let a = p.alloc().unwrap();
+        p.decref(a);
+        assert!(p.resurrect(a)); // leaves a stale deque entry behind
+        p.decref(a); // freed again: deque now holds a duplicate
+        assert_eq!(p.free_count(), 1);
+        assert_eq!(p.alloc().unwrap(), a, "stale entry skipped, real one served");
+        assert_eq!(p.free_count(), 0);
+        assert!(p.alloc().is_none(), "leftover stale duplicate is not allocatable");
+    }
+}

@@ -15,11 +15,19 @@
 //! memory-traffic story rests on: the buffers genuinely shrink with the
 //! precision map.
 
+pub mod backend;
+pub mod block;
+pub mod paged;
+
 use anyhow::{bail, Result};
 
 use crate::config::{LayerSpec, Mode, ModelConfig};
 use crate::quant::packed_width;
 use crate::tensor::Tensor;
+
+pub use backend::{CacheBackend, MemStats, OutOfPages, PagedOptions};
+pub use block::{BlockId, BlockPool};
+pub use paged::PagedKvCache;
 
 /// Per-layer cache buffers for a batch of `b` slots.
 #[derive(Debug, Clone)]
@@ -47,6 +55,14 @@ pub struct LayerCacheBuf {
 impl LayerCacheBuf {
     pub fn new(cfg: &ModelConfig, spec: LayerSpec, b: usize, s_max: usize) -> Result<Self> {
         let (h, dh, g, r) = (cfg.n_kv_heads, cfg.head_dim, cfg.group, cfg.residual);
+        if spec.mode == Mode::Kivi && s_max % g != 0 {
+            // `ng = s_max / g` would truncate and undersize k_scale/k_zero;
+            // the AOT artifacts only emit group-aligned buckets anyway.
+            bail!(
+                "kivi layers require s_max ({s_max}) to be a multiple of the \
+                 quantization group ({g})"
+            );
+        }
         let mut buf = LayerCacheBuf {
             spec,
             k_codes: None, k_scale: None, k_zero: None,
@@ -392,6 +408,158 @@ impl KvCache {
     }
 }
 
+/// The dense arm is the reference `CacheBackend`: every method forwards to
+/// the existing buffer layout, and the paged-only hooks keep their no-op
+/// defaults (slot admission, no preemption, no prefix sharing).
+impl CacheBackend for KvCache {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    fn pos(&self, slot: usize) -> i32 {
+        self.pos[slot]
+    }
+
+    fn advance_pos(&mut self, slot: usize, by: usize) {
+        self.pos[slot] += by as i32;
+    }
+
+    fn cache_len(&self, layer: usize, slot: usize) -> i32 {
+        self.layers[layer].cache_len[slot]
+    }
+
+    fn res_len(&self, layer: usize, slot: usize) -> i32 {
+        self.layers[layer].res_len[slot]
+    }
+
+    fn layer_literals(&self, layer: usize) -> Result<Vec<xla::Literal>> {
+        self.layers[layer]
+            .artifact_inputs()
+            .into_iter()
+            .map(|t| t.to_literal())
+            .collect()
+    }
+
+    fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<xla::Literal>> {
+        self.layers[layer]
+            .slot_inputs(slot)
+            .iter()
+            .map(|t| t.to_literal())
+            .collect()
+    }
+
+    fn append_token_outputs(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        outs: &[Tensor],
+        valid: &[usize],
+    ) -> Result<()> {
+        KvCache::append_token_outputs(self, layer, slot0, outs, valid)
+    }
+
+    fn append_kivi_residual(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<Vec<bool>> {
+        KvCache::append_kivi_residual(self, layer, slot0, k_new, v_new, valid)
+    }
+
+    fn residual_chunk(&self, layer: usize, slot: usize) -> Result<(Tensor, Tensor)> {
+        KvCache::residual_chunk(self, layer, slot)
+    }
+
+    fn commit_kivi_chunk(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k_outs: &[Tensor],
+        v_outs: &[Tensor],
+    ) -> Result<()> {
+        KvCache::commit_kivi_chunk(self, layer, slot, k_outs, v_outs)
+    }
+
+    fn append_fp(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<()> {
+        KvCache::append_fp(self, layer, slot0, k_new, v_new, valid)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        KvCache::reset_slot(self, slot)
+    }
+
+    fn kv_bytes(&self) -> usize {
+        KvCache::kv_bytes(self)
+    }
+
+    fn equivalent_bits(&self) -> f64 {
+        KvCache::equivalent_bits(self)
+    }
+
+    fn remaining(&self, slot: usize) -> usize {
+        KvCache::remaining(self, slot)
+    }
+
+    fn synthetic_fill(&mut self, slot: usize, input_len: usize) -> Result<()> {
+        anyhow::ensure!(input_len <= self.s_max, "synthetic fill beyond s_max");
+        let g = self.group;
+        self.pos[slot] = self.pos[slot].max(input_len as i32);
+        for lc in &mut self.layers {
+            match lc.spec.mode {
+                Mode::Kivi => {
+                    let committed = (input_len / g) * g;
+                    lc.cache_len[slot] = lc.cache_len[slot].max(committed as i32);
+                    lc.res_len[slot] = lc.res_len[slot].max((input_len - committed) as i32);
+                }
+                _ => lc.cache_len[slot] = lc.cache_len[slot].max(input_len as i32),
+            }
+        }
+        Ok(())
+    }
+
+    fn mem_stats(&self) -> MemStats {
+        let total = KvCache::kv_bytes(self);
+        let mut live = 0f64;
+        for lc in &self.layers {
+            let res: usize = [&lc.k_res, &lc.v_res]
+                .iter()
+                .filter_map(|o| o.as_ref().map(|t| t.size_bytes()))
+                .sum();
+            let main = lc.kv_bytes() - res;
+            let toks: usize = lc.cache_len.iter().map(|&c| c as usize).sum();
+            live += main as f64 * toks as f64 / (self.batch * self.s_max) as f64;
+            if res > 0 {
+                let rrows: usize = lc.res_len.iter().map(|&c| c as usize).sum();
+                live += res as f64 * rrows as f64 / (self.batch * self.residual) as f64;
+            }
+        }
+        let bytes_live = live as usize;
+        MemStats {
+            bytes_total: total,
+            bytes_live,
+            // dense "fragmentation" is the pre-reserved [len, s_max) tail
+            frag_bytes: total.saturating_sub(bytes_live),
+            blocks_total: 0,
+            blocks_live: 0,
+            blocks_free: 0,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +621,38 @@ mod tests {
         assert_eq!(codes[(1 * 2 + 0) * 256 * 16], 7);
         kc.reset_slot(1);
         assert_eq!(kc.layers[0].cache_len, vec![1, 0]);
+    }
+
+    #[test]
+    fn kivi_misaligned_s_max_rejected() {
+        let c = cfg(); // group = 32
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), 2);
+        let err = KvCache::new(&c, &specs, 1, 250);
+        assert!(err.is_err(), "s_max=250 with group=32 must be rejected");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("multiple of"), "unclear error: {msg}");
+        // token/fp layers don't care about alignment
+        let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), 2);
+        assert!(KvCache::new(&c, &specs, 1, 250).is_ok());
+    }
+
+    #[test]
+    fn dense_synthetic_fill_and_mem_stats() {
+        let c = cfg();
+        let specs = vec![
+            LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 4) },
+            LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(4, 2) },
+        ];
+        let mut kc = KvCache::new(&c, &specs, 2, 256).unwrap();
+        CacheBackend::synthetic_fill(&mut kc, 0, 100).unwrap();
+        assert_eq!(kc.pos[0], 100);
+        assert_eq!(kc.layers[0].cache_len[0], 100);
+        assert_eq!(kc.layers[1].cache_len[0], 96, "kivi commits whole groups");
+        assert_eq!(kc.layers[1].res_len[0], 4);
+        let st = CacheBackend::mem_stats(&kc);
+        assert_eq!(st.bytes_total, kc.kv_bytes());
+        assert!(st.bytes_live > 0 && st.bytes_live < st.bytes_total);
+        assert_eq!(st.bytes_total, st.bytes_live + st.frag_bytes);
     }
 
     #[test]

@@ -1,0 +1,905 @@
+//! Paged mixed-precision KV cache: a block pool of fixed-size token pages
+//! with lazy allocation, free-list recycling, hash-based prefix sharing with
+//! copy-on-write, and budget-capped admission.
+//!
+//! Page size = the KIVI group `g`, so per-channel key scales are page-aligned
+//! (one scale/zero vector per page) and kivi commits always land on a page
+//! boundary. A `BlockId` names one page across *all* layers; each layer owns
+//! arenas (codes, scales, zeros, fp) indexed by block id with a per-layer
+//! per-precision stride, so a K8V4 layer's page is physically larger than a
+//! K4V2 layer's while sharing the same id space and block tables.
+//!
+//! The PJRT layer-step artifacts still consume the dense `[B, H, S_max, ·]`
+//! layout: at each layer step the live pages are gathered into transient
+//! dense staging buffers (or a single-slot slice for B=1 prefill), and the
+//! step's new-token outputs are scattered back into pages. Nothing changes on
+//! the Python/AOT side; what the pool buys is *capacity* — the resident
+//! footprint is the page pool, not `batch * s_max`, so a fixed `kv_bytes`
+//! budget admits more concurrent requests than it has dense slots.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::config::{LayerSpec, Mode, ModelConfig};
+use crate::quant::packed_width;
+use crate::tensor::Tensor;
+
+use super::backend::{CacheBackend, MemStats, OutOfPages, PagedOptions};
+use super::block::{BlockId, BlockPool};
+
+/// One layer's page arenas. Unused arenas for the layer's mode stay empty.
+#[derive(Debug)]
+struct PagedLayer {
+    spec: LayerSpec,
+    kp: usize,
+    vp: usize,
+    /// Bytes of one page in this layer (codes + scales + zeros or fp).
+    block_bytes: usize,
+    k_codes: Vec<u8>,
+    k_scale: Vec<f32>,
+    k_zero: Vec<f32>,
+    v_codes: Vec<u8>,
+    v_scale: Vec<f32>,
+    v_zero: Vec<f32>,
+    k_fp: Vec<f32>,
+    v_fp: Vec<f32>,
+    /// Kivi fp residual rings, per slot (outside the page pool): [B, H, R, Dh].
+    k_res: Vec<f32>,
+    v_res: Vec<f32>,
+    cache_len: Vec<i32>,
+    res_len: Vec<i32>,
+}
+
+impl PagedLayer {
+    fn new(
+        cfg: &ModelConfig,
+        spec: LayerSpec,
+        batch: usize,
+        n_blocks: usize,
+        page: usize,
+    ) -> Result<PagedLayer> {
+        let (h, dh, r) = (cfg.n_kv_heads, cfg.head_dim, cfg.residual);
+        let mut l = PagedLayer {
+            spec,
+            kp: 0,
+            vp: 0,
+            block_bytes: 0,
+            k_codes: Vec::new(),
+            k_scale: Vec::new(),
+            k_zero: Vec::new(),
+            v_codes: Vec::new(),
+            v_scale: Vec::new(),
+            v_zero: Vec::new(),
+            k_fp: Vec::new(),
+            v_fp: Vec::new(),
+            k_res: Vec::new(),
+            v_res: Vec::new(),
+            cache_len: vec![0; batch],
+            res_len: vec![0; batch],
+        };
+        match spec.mode {
+            Mode::Fp => {
+                l.k_fp = vec![0.0; n_blocks * h * page * dh];
+                l.v_fp = vec![0.0; n_blocks * h * page * dh];
+                l.block_bytes = 2 * h * page * dh * 4;
+            }
+            Mode::Token => {
+                l.kp = packed_width(dh, spec.pair.k_bits)?;
+                l.vp = packed_width(dh, spec.pair.v_bits)?;
+                l.k_codes = vec![0; n_blocks * h * page * l.kp];
+                l.v_codes = vec![0; n_blocks * h * page * l.vp];
+                l.k_scale = vec![0.0; n_blocks * h * page];
+                l.k_zero = vec![0.0; n_blocks * h * page];
+                l.v_scale = vec![0.0; n_blocks * h * page];
+                l.v_zero = vec![0.0; n_blocks * h * page];
+                l.block_bytes = h * page * (l.kp + l.vp) + 4 * h * page * 4;
+            }
+            Mode::Kivi => {
+                l.kp = packed_width(dh, spec.pair.k_bits)?;
+                l.vp = packed_width(dh, spec.pair.v_bits)?;
+                l.k_codes = vec![0; n_blocks * h * page * l.kp];
+                l.v_codes = vec![0; n_blocks * h * page * l.vp];
+                // one per-channel scale/zero vector per page (page == group)
+                l.k_scale = vec![0.0; n_blocks * h * dh];
+                l.k_zero = vec![0.0; n_blocks * h * dh];
+                l.v_scale = vec![0.0; n_blocks * h * page];
+                l.v_zero = vec![0.0; n_blocks * h * page];
+                l.k_res = vec![0.0; batch * h * r * dh];
+                l.v_res = vec![0.0; batch * h * r * dh];
+                l.block_bytes =
+                    h * page * (l.kp + l.vp) + (2 * h * dh + 2 * h * page) * 4;
+            }
+        }
+        Ok(l)
+    }
+
+    fn residual_bytes(&self) -> usize {
+        (self.k_res.len() + self.v_res.len()) * 4
+    }
+}
+
+/// Bytes of one page summed over all layers (a `BlockId`'s true cost).
+fn per_block_bytes(cfg: &ModelConfig, specs: &[LayerSpec], page: usize) -> Result<usize> {
+    let (h, dh) = (cfg.n_kv_heads, cfg.head_dim);
+    let mut total = 0usize;
+    for spec in specs {
+        total += match spec.mode {
+            Mode::Fp => 2 * h * page * dh * 4,
+            Mode::Token => {
+                let kp = packed_width(dh, spec.pair.k_bits)?;
+                let vp = packed_width(dh, spec.pair.v_bits)?;
+                h * page * (kp + vp) + 4 * h * page * 4
+            }
+            Mode::Kivi => {
+                let kp = packed_width(dh, spec.pair.k_bits)?;
+                let vp = packed_width(dh, spec.pair.v_bits)?;
+                h * page * (kp + vp) + (2 * h * dh + 2 * h * page) * 4
+            }
+        };
+    }
+    Ok(total)
+}
+
+fn chain_hash(parent: u64, toks: &[i32]) -> u64 {
+    // FNV-1a over the parent hash and the page's token ids; exact token
+    // comparison on lookup makes collisions harmless.
+    let mut h = parent ^ 0x9e37_79b9_7f4a_7c15;
+    for &t in toks {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+const PREFIX_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[derive(Debug)]
+pub struct PagedKvCache {
+    layers: Vec<PagedLayer>,
+    /// Per-slot block tables: token block `i` of a slot lives in physical
+    /// block `tables[slot][i]` of every layer's arena.
+    tables: Vec<Vec<BlockId>>,
+    pool: BlockPool,
+    /// Prefix-chain hash -> physical block holding that page.
+    index: HashMap<u64, BlockId>,
+    block_hash: Vec<Option<u64>>,
+    /// Per registered block: (parent chain hash, page tokens). Both are
+    /// verified on lookup, so a 64-bit chain-hash collision can never serve
+    /// KV pages computed under a different prefix (by induction over the
+    /// chain: a page matches only if its parent matched the same way).
+    block_tokens: Vec<Option<(u64, Vec<i32>)>>,
+    pos: Vec<i32>,
+    batch: usize,
+    s_max: usize,
+    page: usize,
+    group: usize,
+    residual: usize,
+    h: usize,
+    dh: usize,
+    block_bytes_all: usize,
+    pub cow_copies: u64,
+    pub prefix_hits: u64,
+    pub prefix_tokens_reused: u64,
+    pub evictions: u64,
+}
+
+impl PagedKvCache {
+    pub fn new(
+        cfg: &ModelConfig,
+        specs: &[LayerSpec],
+        batch: usize,
+        s_max: usize,
+        opts: &PagedOptions,
+    ) -> Result<PagedKvCache> {
+        if specs.len() != cfg.n_layers {
+            bail!("{} specs for {} layers", specs.len(), cfg.n_layers);
+        }
+        let page = cfg.group;
+        if page == 0 {
+            bail!("page size (group) must be > 0");
+        }
+        if specs.iter().any(|s| s.mode == Mode::Kivi) && s_max % page != 0 {
+            bail!(
+                "kivi layers require s_max ({s_max}) to be a multiple of the \
+                 quantization group ({page})"
+            );
+        }
+        let block_bytes_all = per_block_bytes(cfg, specs, page)?;
+        let max_blocks_per_slot = (s_max + page - 1) / page;
+        // per-slot kivi residual rings live outside the page pool but inside
+        // the resident footprint: a byte budget must cover them first
+        let residual_fixed = specs.iter().filter(|s| s.mode == Mode::Kivi).count()
+            * batch
+            * cfg.n_kv_heads
+            * cfg.residual
+            * cfg.head_dim
+            * 4
+            * 2;
+        let total_blocks = match (opts.total_blocks, opts.budget_mib) {
+            (Some(n), _) => n,
+            (None, Some(mib)) => {
+                let budget = (mib * 1024.0 * 1024.0) as usize;
+                budget.saturating_sub(residual_fixed) / block_bytes_all
+            }
+            (None, None) => batch * max_blocks_per_slot,
+        };
+        if total_blocks == 0 {
+            bail!(
+                "page pool budget too small: one page costs {} bytes across \
+                 all layers",
+                block_bytes_all
+            );
+        }
+        let layers = specs
+            .iter()
+            .map(|&sp| PagedLayer::new(cfg, sp, batch, total_blocks, page))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PagedKvCache {
+            layers,
+            tables: vec![Vec::new(); batch],
+            pool: BlockPool::new(total_blocks),
+            index: HashMap::new(),
+            block_hash: vec![None; total_blocks],
+            block_tokens: vec![None; total_blocks],
+            pos: vec![0; batch],
+            batch,
+            s_max,
+            page,
+            group: cfg.group,
+            residual: cfg.residual,
+            h: cfg.n_kv_heads,
+            dh: cfg.head_dim,
+            block_bytes_all,
+            cow_copies: 0,
+            prefix_hits: 0,
+            prefix_tokens_reused: 0,
+            evictions: 0,
+        })
+    }
+
+    // ---- introspection (tests, benches, metrics) ----
+
+    pub fn page_size(&self) -> usize {
+        self.page
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.pool.total()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_count()
+    }
+
+    pub fn block_table(&self, slot: usize) -> &[BlockId] {
+        &self.tables[slot]
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.pool.ref_count(id)
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.page - 1) / self.page
+    }
+
+    // ---- allocation / copy-on-write ----
+
+    /// Allocate a fresh block, recycling the least-recently-freed cached
+    /// prefix page when necessary (its index entry is evicted).
+    fn alloc_block(&mut self) -> Result<BlockId> {
+        let Some(id) = self.pool.alloc() else {
+            return Err(anyhow::Error::new(OutOfPages));
+        };
+        if let Some(h) = self.block_hash[id as usize].take() {
+            if self.index.get(&h) == Some(&id) {
+                self.index.remove(&h);
+            }
+            self.block_tokens[id as usize] = None;
+            self.evictions += 1;
+        }
+        Ok(id)
+    }
+
+    /// Grow `slot`'s table until it covers `tokens_end` tokens.
+    fn ensure_capacity(&mut self, slot: usize, tokens_end: usize) -> Result<()> {
+        anyhow::ensure!(
+            tokens_end <= self.s_max,
+            "paged cache overflow (slot {slot}: {tokens_end} > {})",
+            self.s_max
+        );
+        let need = self.blocks_for(tokens_end);
+        while self.tables[slot].len() < need {
+            let id = self.alloc_block()?;
+            self.tables[slot].push(id);
+        }
+        Ok(())
+    }
+
+    /// Make `slot`'s `block_idx`-th page exclusively writable: shared pages
+    /// (refcount > 1) are copied first — copy-on-write — and a sole-owned
+    /// page that was published to the prefix index is unpublished, since its
+    /// content is about to diverge. Every scatter path funnels through here.
+    pub fn ensure_writable(&mut self, slot: usize, block_idx: usize) -> Result<BlockId> {
+        let id = self.tables[slot][block_idx];
+        if self.pool.ref_count(id) > 1 {
+            let nid = self.alloc_block()?;
+            self.copy_block(id, nid);
+            self.pool.decref(id);
+            self.tables[slot][block_idx] = nid;
+            self.cow_copies += 1;
+            return Ok(nid);
+        }
+        if let Some(h) = self.block_hash[id as usize].take() {
+            if self.index.get(&h) == Some(&id) {
+                self.index.remove(&h);
+            }
+            self.block_tokens[id as usize] = None;
+        }
+        Ok(id)
+    }
+
+    fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        let (h, p, dh) = (self.h, self.page, self.dh);
+        let (s, d) = (src as usize, dst as usize);
+        for l in self.layers.iter_mut() {
+            match l.spec.mode {
+                Mode::Fp => {
+                    let n = h * p * dh;
+                    l.k_fp.copy_within(s * n..(s + 1) * n, d * n);
+                    l.v_fp.copy_within(s * n..(s + 1) * n, d * n);
+                }
+                Mode::Token => {
+                    let nk = h * p * l.kp;
+                    let nv = h * p * l.vp;
+                    let ns = h * p;
+                    l.k_codes.copy_within(s * nk..(s + 1) * nk, d * nk);
+                    l.v_codes.copy_within(s * nv..(s + 1) * nv, d * nv);
+                    l.k_scale.copy_within(s * ns..(s + 1) * ns, d * ns);
+                    l.k_zero.copy_within(s * ns..(s + 1) * ns, d * ns);
+                    l.v_scale.copy_within(s * ns..(s + 1) * ns, d * ns);
+                    l.v_zero.copy_within(s * ns..(s + 1) * ns, d * ns);
+                }
+                Mode::Kivi => {
+                    let nk = h * p * l.kp;
+                    let nv = h * p * l.vp;
+                    let nc = h * dh;
+                    let ns = h * p;
+                    l.k_codes.copy_within(s * nk..(s + 1) * nk, d * nk);
+                    l.v_codes.copy_within(s * nv..(s + 1) * nv, d * nv);
+                    l.k_scale.copy_within(s * nc..(s + 1) * nc, d * nc);
+                    l.k_zero.copy_within(s * nc..(s + 1) * nc, d * nc);
+                    l.v_scale.copy_within(s * ns..(s + 1) * ns, d * ns);
+                    l.v_zero.copy_within(s * ns..(s + 1) * ns, d * ns);
+                }
+            }
+        }
+    }
+
+    // ---- gather: pages -> dense artifact layout ----
+
+    /// Gather `slots` into dense cache tensors ([len(slots), H, S, ·]) in the
+    /// layer artifact's argument order. Unwritten regions carry the same
+    /// defaults the dense arm allocates with (scales 1.0, everything else 0),
+    /// so a fresh dense cache and a paged gather are bit-identical.
+    fn gather_layer(&self, layer: usize, slots: &[usize]) -> Result<Vec<Tensor>> {
+        let lc = &self.layers[layer];
+        let (h, p, dh, s, r) = (self.h, self.page, self.dh, self.s_max, self.residual);
+        let b = slots.len();
+        match lc.spec.mode {
+            Mode::Fp => {
+                let mut k = vec![0f32; b * h * s * dh];
+                let mut v = vec![0f32; b * h * s * dh];
+                for (di, &slot) in slots.iter().enumerate() {
+                    let len = lc.cache_len[slot] as usize;
+                    for bi in 0..self.blocks_for(len) {
+                        let rows = (len - bi * p).min(p);
+                        let id = self.tables[slot][bi] as usize;
+                        for hh in 0..h {
+                            let src = ((id * h + hh) * p) * dh;
+                            let dst = ((di * h + hh) * s + bi * p) * dh;
+                            k[dst..dst + rows * dh]
+                                .copy_from_slice(&lc.k_fp[src..src + rows * dh]);
+                            v[dst..dst + rows * dh]
+                                .copy_from_slice(&lc.v_fp[src..src + rows * dh]);
+                        }
+                    }
+                }
+                Ok(vec![
+                    Tensor::f32(&[b, h, s, dh], k),
+                    Tensor::f32(&[b, h, s, dh], v),
+                ])
+            }
+            Mode::Token => {
+                let (kp, vp) = (lc.kp, lc.vp);
+                let mut kc = vec![0u8; b * h * s * kp];
+                let mut ks = vec![1f32; b * h * s];
+                let mut kz = vec![0f32; b * h * s];
+                let mut vc = vec![0u8; b * h * s * vp];
+                let mut vs = vec![1f32; b * h * s];
+                let mut vz = vec![0f32; b * h * s];
+                for (di, &slot) in slots.iter().enumerate() {
+                    let len = lc.cache_len[slot] as usize;
+                    for bi in 0..self.blocks_for(len) {
+                        let rows = (len - bi * p).min(p);
+                        let id = self.tables[slot][bi] as usize;
+                        for hh in 0..h {
+                            let src = ((id * h + hh) * p) * kp;
+                            let dst = ((di * h + hh) * s + bi * p) * kp;
+                            kc[dst..dst + rows * kp]
+                                .copy_from_slice(&lc.k_codes[src..src + rows * kp]);
+                            let srcv = ((id * h + hh) * p) * vp;
+                            let dstv = ((di * h + hh) * s + bi * p) * vp;
+                            vc[dstv..dstv + rows * vp]
+                                .copy_from_slice(&lc.v_codes[srcv..srcv + rows * vp]);
+                            let ssrc = (id * h + hh) * p;
+                            let sdst = (di * h + hh) * s + bi * p;
+                            ks[sdst..sdst + rows]
+                                .copy_from_slice(&lc.k_scale[ssrc..ssrc + rows]);
+                            kz[sdst..sdst + rows]
+                                .copy_from_slice(&lc.k_zero[ssrc..ssrc + rows]);
+                            vs[sdst..sdst + rows]
+                                .copy_from_slice(&lc.v_scale[ssrc..ssrc + rows]);
+                            vz[sdst..sdst + rows]
+                                .copy_from_slice(&lc.v_zero[ssrc..ssrc + rows]);
+                        }
+                    }
+                }
+                Ok(vec![
+                    Tensor::u8(&[b, h, s, kp], kc),
+                    Tensor::f32(&[b, h, s], ks),
+                    Tensor::f32(&[b, h, s], kz),
+                    Tensor::u8(&[b, h, s, vp], vc),
+                    Tensor::f32(&[b, h, s], vs),
+                    Tensor::f32(&[b, h, s], vz),
+                ])
+            }
+            Mode::Kivi => {
+                let (kp, vp) = (lc.kp, lc.vp);
+                let ng = s / p;
+                let mut kc = vec![0u8; b * h * s * kp];
+                let mut ks = vec![1f32; b * h * ng * dh];
+                let mut kz = vec![0f32; b * h * ng * dh];
+                let mut vc = vec![0u8; b * h * s * vp];
+                let mut vs = vec![1f32; b * h * s];
+                let mut vz = vec![0f32; b * h * s];
+                let mut kr = vec![0f32; b * h * r * dh];
+                let mut vr = vec![0f32; b * h * r * dh];
+                for (di, &slot) in slots.iter().enumerate() {
+                    let len = lc.cache_len[slot] as usize; // multiple of p
+                    for bi in 0..self.blocks_for(len) {
+                        let rows = (len - bi * p).min(p);
+                        let id = self.tables[slot][bi] as usize;
+                        for hh in 0..h {
+                            let src = ((id * h + hh) * p) * kp;
+                            let dst = ((di * h + hh) * s + bi * p) * kp;
+                            kc[dst..dst + rows * kp]
+                                .copy_from_slice(&lc.k_codes[src..src + rows * kp]);
+                            let srcv = ((id * h + hh) * p) * vp;
+                            let dstv = ((di * h + hh) * s + bi * p) * vp;
+                            vc[dstv..dstv + rows * vp]
+                                .copy_from_slice(&lc.v_codes[srcv..srcv + rows * vp]);
+                            // per-channel key scales: one vector per page
+                            let csrc = (id * h + hh) * dh;
+                            let cdst = ((di * h + hh) * ng + bi) * dh;
+                            ks[cdst..cdst + dh]
+                                .copy_from_slice(&lc.k_scale[csrc..csrc + dh]);
+                            kz[cdst..cdst + dh]
+                                .copy_from_slice(&lc.k_zero[csrc..csrc + dh]);
+                            // per-token value scales
+                            let ssrc = (id * h + hh) * p;
+                            let sdst = (di * h + hh) * s + bi * p;
+                            vs[sdst..sdst + rows]
+                                .copy_from_slice(&lc.v_scale[ssrc..ssrc + rows]);
+                            vz[sdst..sdst + rows]
+                                .copy_from_slice(&lc.v_zero[ssrc..ssrc + rows]);
+                        }
+                    }
+                    // residual ring is per-slot and contiguous
+                    let n = h * r * dh;
+                    kr[di * n..(di + 1) * n].copy_from_slice(&lc.k_res[slot * n..(slot + 1) * n]);
+                    vr[di * n..(di + 1) * n].copy_from_slice(&lc.v_res[slot * n..(slot + 1) * n]);
+                }
+                Ok(vec![
+                    Tensor::u8(&[b, h, s, kp], kc),
+                    Tensor::f32(&[b, h, ng, dh], ks),
+                    Tensor::f32(&[b, h, ng, dh], kz),
+                    Tensor::u8(&[b, h, s, vp], vc),
+                    Tensor::f32(&[b, h, s], vs),
+                    Tensor::f32(&[b, h, s], vz),
+                    Tensor::f32(&[b, h, r, dh], kr),
+                    Tensor::f32(&[b, h, r, dh], vr),
+                ])
+            }
+        }
+    }
+
+    /// Gathered cache tensors for one slot / the whole batch (host form; the
+    /// trait wraps these into literals). Public for equivalence tests.
+    pub fn gather_slot(&self, layer: usize, slot: usize) -> Result<Vec<Tensor>> {
+        self.gather_layer(layer, &[slot])
+    }
+
+    pub fn gather_batch(&self, layer: usize) -> Result<Vec<Tensor>> {
+        let slots: Vec<usize> = (0..self.batch).collect();
+        self.gather_layer(layer, &slots)
+    }
+}
+
+impl CacheBackend for PagedKvCache {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    fn pos(&self, slot: usize) -> i32 {
+        self.pos[slot]
+    }
+
+    fn advance_pos(&mut self, slot: usize, by: usize) {
+        self.pos[slot] += by as i32;
+    }
+
+    fn cache_len(&self, layer: usize, slot: usize) -> i32 {
+        self.layers[layer].cache_len[slot]
+    }
+
+    fn res_len(&self, layer: usize, slot: usize) -> i32 {
+        self.layers[layer].res_len[slot]
+    }
+
+    fn layer_literals(&self, layer: usize) -> Result<Vec<Literal>> {
+        self.gather_batch(layer)?.iter().map(|t| t.to_literal()).collect()
+    }
+
+    fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<Literal>> {
+        self.gather_slot(layer, slot)?.iter().map(|t| t.to_literal()).collect()
+    }
+
+    fn append_token_outputs(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        outs: &[Tensor],
+        valid: &[usize],
+    ) -> Result<()> {
+        debug_assert_eq!(self.layers[layer].spec.mode, Mode::Token);
+        let (h, p) = (self.h, self.page);
+        let t = outs[0].shape[2];
+        let b_exec = outs[0].shape[0];
+        let (kp, vp) = (outs[0].shape[3], outs[3].shape[3]);
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = self.layers[layer].cache_len[slot] as usize;
+            self.ensure_capacity(slot, start + nv)?;
+            for ti in 0..nv {
+                let tok = start + ti;
+                let id = self.ensure_writable(slot, tok / p)? as usize;
+                let row = tok % p;
+                let lc = &mut self.layers[layer];
+                for hh in 0..h {
+                    let src = ((bi * h + hh) * t + ti) * kp;
+                    let dst = ((id * h + hh) * p + row) * kp;
+                    lc.k_codes[dst..dst + kp].copy_from_slice(&outs[0].as_u8()?[src..src + kp]);
+                    let srcv = ((bi * h + hh) * t + ti) * vp;
+                    let dstv = ((id * h + hh) * p + row) * vp;
+                    lc.v_codes[dstv..dstv + vp]
+                        .copy_from_slice(&outs[3].as_u8()?[srcv..srcv + vp]);
+                    let ssrc = (bi * h + hh) * t + ti;
+                    let sdst = (id * h + hh) * p + row;
+                    lc.k_scale[sdst] = outs[1].as_f32()?[ssrc];
+                    lc.k_zero[sdst] = outs[2].as_f32()?[ssrc];
+                    lc.v_scale[sdst] = outs[4].as_f32()?[ssrc];
+                    lc.v_zero[sdst] = outs[5].as_f32()?[ssrc];
+                }
+            }
+            self.layers[layer].cache_len[slot] += nv as i32;
+        }
+        Ok(())
+    }
+
+    fn append_kivi_residual(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<Vec<bool>> {
+        debug_assert_eq!(self.layers[layer].spec.mode, Mode::Kivi);
+        let (h, dh, r, g) = (self.h, self.dh, self.residual, self.group);
+        let t = k_new.shape[2];
+        let b_exec = k_new.shape[0];
+        let mut need_commit = vec![false; b_exec];
+        let lc = &mut self.layers[layer];
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = lc.res_len[slot] as usize;
+            anyhow::ensure!(start + nv <= r, "residual overflow (slot {slot})");
+            for hh in 0..h {
+                for ti in 0..nv {
+                    let src = ((bi * h + hh) * t + ti) * dh;
+                    let dst = ((slot * h + hh) * r + start + ti) * dh;
+                    lc.k_res[dst..dst + dh].copy_from_slice(&k_new.as_f32()?[src..src + dh]);
+                    lc.v_res[dst..dst + dh].copy_from_slice(&v_new.as_f32()?[src..src + dh]);
+                }
+            }
+            lc.res_len[slot] += nv as i32;
+            need_commit[bi] = lc.res_len[slot] as usize >= g;
+        }
+        Ok(need_commit)
+    }
+
+    fn residual_chunk(&self, layer: usize, slot: usize) -> Result<(Tensor, Tensor)> {
+        let lc = &self.layers[layer];
+        let (h, dh, r, g) = (self.h, self.dh, self.residual, self.group);
+        anyhow::ensure!(lc.res_len[slot] as usize >= g, "residual not full");
+        let mut k = vec![0f32; h * g * dh];
+        let mut v = vec![0f32; h * g * dh];
+        for hh in 0..h {
+            let src = ((slot * h + hh) * r) * dh;
+            let dst = hh * g * dh;
+            k[dst..dst + g * dh].copy_from_slice(&lc.k_res[src..src + g * dh]);
+            v[dst..dst + g * dh].copy_from_slice(&lc.v_res[src..src + g * dh]);
+        }
+        Ok((Tensor::f32(&[1, h, g, dh], k), Tensor::f32(&[1, h, g, dh], v)))
+    }
+
+    fn commit_kivi_chunk(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        k_outs: &[Tensor],
+        v_outs: &[Tensor],
+    ) -> Result<()> {
+        let (h, dh, r, g, p) = (self.h, self.dh, self.residual, self.group, self.page);
+        let start = self.layers[layer].cache_len[slot] as usize;
+        anyhow::ensure!(start % g == 0, "kivi cache_len must be group-aligned");
+        self.ensure_capacity(slot, start + g)?;
+        let id = self.ensure_writable(slot, start / p)? as usize;
+        let (kp, vp) = (k_outs[0].shape[3], v_outs[0].shape[3]);
+        let lc = &mut self.layers[layer];
+        for hh in 0..h {
+            // key codes + per-channel scale/zero (page row 0, one vector/page)
+            let src = (hh * g) * kp;
+            let dst = ((id * h + hh) * p) * kp;
+            lc.k_codes[dst..dst + g * kp].copy_from_slice(&k_outs[0].as_u8()?[src..src + g * kp]);
+            let ssrc = hh * dh;
+            let sdst = (id * h + hh) * dh;
+            lc.k_scale[sdst..sdst + dh].copy_from_slice(&k_outs[1].as_f32()?[ssrc..ssrc + dh]);
+            lc.k_zero[sdst..sdst + dh].copy_from_slice(&k_outs[2].as_f32()?[ssrc..ssrc + dh]);
+            // value codes + per-token scale/zero
+            let vsrc = (hh * g) * vp;
+            let vdst = ((id * h + hh) * p) * vp;
+            lc.v_codes[vdst..vdst + g * vp]
+                .copy_from_slice(&v_outs[0].as_u8()?[vsrc..vsrc + g * vp]);
+            let tsrc = hh * g;
+            let tdst = (id * h + hh) * p;
+            lc.v_scale[tdst..tdst + g].copy_from_slice(&v_outs[1].as_f32()?[tsrc..tsrc + g]);
+            lc.v_zero[tdst..tdst + g].copy_from_slice(&v_outs[2].as_f32()?[tsrc..tsrc + g]);
+        }
+        // drain the committed group out of the residual ring
+        let drained = lc.res_len[slot] as usize - g;
+        if drained > 0 {
+            for hh in 0..h {
+                let base = ((slot * h + hh) * r) * dh;
+                lc.k_res.copy_within(base + g * dh..base + (g + drained) * dh, base);
+                lc.v_res.copy_within(base + g * dh..base + (g + drained) * dh, base);
+            }
+        }
+        lc.res_len[slot] = drained as i32;
+        lc.cache_len[slot] += g as i32;
+        Ok(())
+    }
+
+    fn append_fp(
+        &mut self,
+        layer: usize,
+        slot0: usize,
+        k_new: &Tensor,
+        v_new: &Tensor,
+        valid: &[usize],
+    ) -> Result<()> {
+        debug_assert_eq!(self.layers[layer].spec.mode, Mode::Fp);
+        let (h, dh, p) = (self.h, self.dh, self.page);
+        let t = k_new.shape[2];
+        let b_exec = k_new.shape[0];
+        for (bi, &nv) in valid.iter().enumerate().take(b_exec) {
+            let slot = slot0 + bi;
+            let start = self.layers[layer].cache_len[slot] as usize;
+            self.ensure_capacity(slot, start + nv)?;
+            for ti in 0..nv {
+                let tok = start + ti;
+                let id = self.ensure_writable(slot, tok / p)? as usize;
+                let row = tok % p;
+                let lc = &mut self.layers[layer];
+                for hh in 0..h {
+                    let src = ((bi * h + hh) * t + ti) * dh;
+                    let dst = ((id * h + hh) * p + row) * dh;
+                    lc.k_fp[dst..dst + dh].copy_from_slice(&k_new.as_f32()?[src..src + dh]);
+                    lc.v_fp[dst..dst + dh].copy_from_slice(&v_new.as_f32()?[src..src + dh]);
+                }
+            }
+            self.layers[layer].cache_len[slot] += nv as i32;
+        }
+        Ok(())
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.pos[slot] = 0;
+        for id in std::mem::take(&mut self.tables[slot]) {
+            self.pool.decref(id);
+        }
+        for l in &mut self.layers {
+            l.cache_len[slot] = 0;
+            l.res_len[slot] = 0;
+        }
+    }
+
+    fn kv_bytes(&self) -> usize {
+        let arena = self.pool.total() * self.block_bytes_all;
+        let res: usize = self.layers.iter().map(|l| l.residual_bytes()).sum();
+        let tables: usize = self.tables.iter().map(|t| t.len() * 4).sum();
+        arena + res + tables
+    }
+
+    fn equivalent_bits(&self) -> f64 {
+        LayerSpec::equivalent_bits(&self.layers.iter().map(|l| l.spec).collect::<Vec<_>>())
+    }
+
+    fn remaining(&self, slot: usize) -> usize {
+        self.s_max - self.pos[slot] as usize
+    }
+
+    fn synthetic_fill(&mut self, slot: usize, input_len: usize) -> Result<()> {
+        anyhow::ensure!(input_len <= self.s_max, "synthetic fill beyond s_max");
+        let g = self.group;
+        let mut max_tokens = 0usize;
+        for l in 0..self.layers.len() {
+            let (cl, rl) = match self.layers[l].spec.mode {
+                Mode::Kivi => ((input_len / g) * g, input_len % g),
+                _ => (input_len, 0),
+            };
+            let lc = &mut self.layers[l];
+            lc.cache_len[slot] = lc.cache_len[slot].max(cl as i32);
+            lc.res_len[slot] = lc.res_len[slot].max(rl as i32);
+            max_tokens = max_tokens.max(lc.cache_len[slot] as usize);
+        }
+        self.pos[slot] = self.pos[slot].max(input_len as i32);
+        self.ensure_capacity(slot, max_tokens)
+    }
+
+    fn mem_stats(&self) -> MemStats {
+        let blocks_live = self.pool.live_count();
+        let live_block_bytes = blocks_live * self.block_bytes_all;
+        // live tokens, weighted by each layer's per-token page cost
+        let mut live_token_bytes = 0usize;
+        let mut res_live = 0usize;
+        for l in &self.layers {
+            let per_tok = l.block_bytes / self.page;
+            let toks: usize = l.cache_len.iter().map(|&c| c as usize).sum();
+            live_token_bytes += toks * per_tok;
+            let rrows: usize = l.res_len.iter().map(|&c| c as usize).sum();
+            res_live += rrows * self.h * self.dh * 4 * 2;
+        }
+        MemStats {
+            bytes_total: self.kv_bytes(),
+            bytes_live: live_block_bytes + res_live,
+            // shared pages are counted once on the block side but per-slot on
+            // the token side, hence the saturation
+            frag_bytes: live_block_bytes.saturating_sub(live_token_bytes),
+            blocks_total: self.pool.total(),
+            blocks_live,
+            blocks_free: self.pool.free_count(),
+        }
+    }
+
+    fn is_paged(&self) -> bool {
+        true
+    }
+
+    fn can_admit(&self, prompt_len: usize, _max_new_tokens: usize) -> bool {
+        // prompt pages + one decode page of headroom; generation growth is
+        // deliberately unreserved (oversubscription, covered by preemption)
+        self.pool.free_count() >= self.blocks_for(prompt_len) + 1
+    }
+
+    fn decode_block_shortfall(&self, active: &[usize]) -> usize {
+        let p = self.page;
+        let mut need = 0usize;
+        for &slot in active {
+            let cap = self.tables[slot].len() * p;
+            let mut max_after = 0usize;
+            for lc in &self.layers {
+                let len = lc.cache_len[slot] as usize;
+                let after = match lc.spec.mode {
+                    Mode::Kivi => {
+                        // one more token commits a whole group when the
+                        // residual is about to fill
+                        len + if lc.res_len[slot] as usize + 1 >= self.group {
+                            self.group
+                        } else {
+                            0
+                        }
+                    }
+                    _ => len + 1,
+                };
+                max_after = max_after.max(after);
+            }
+            let max_after = max_after.min(self.s_max);
+            if max_after > cap {
+                need += (max_after - cap + p - 1) / p;
+            }
+        }
+        need.saturating_sub(self.pool.free_count())
+    }
+
+    fn prefill_reuse(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        let p = self.page;
+        debug_assert!(self.tables[slot].is_empty(), "prefill_reuse needs a fresh slot");
+        if prompt.len() <= p {
+            return 0; // a full page plus ≥1 suffix token is required
+        }
+        let shareable_pages = (prompt.len() - 1) / p;
+        let mut parent = PREFIX_SEED;
+        let mut blocks: Vec<BlockId> = Vec::new();
+        for i in 0..shareable_pages {
+            let toks = &prompt[i * p..(i + 1) * p];
+            let hsh = chain_hash(parent, toks);
+            let verified = self.index.get(&hsh).copied().filter(|&id| {
+                self.block_tokens[id as usize]
+                    .as_ref()
+                    .map(|(par, t)| *par == parent && t.as_slice() == toks)
+                    .unwrap_or(false)
+            });
+            match verified {
+                Some(id) => {
+                    blocks.push(id);
+                    parent = hsh;
+                }
+                None => break,
+            }
+        }
+        if blocks.is_empty() {
+            return 0;
+        }
+        for &id in &blocks {
+            if !self.pool.resurrect(id) {
+                self.pool.incref(id);
+            }
+        }
+        let matched = blocks.len() * p;
+        self.tables[slot] = blocks;
+        for lc in &mut self.layers {
+            lc.cache_len[slot] = matched as i32;
+            lc.res_len[slot] = 0;
+        }
+        self.pos[slot] = matched as i32;
+        self.prefix_hits += 1;
+        self.prefix_tokens_reused += matched as u64;
+        matched
+    }
+
+    fn register_prefix(&mut self, slot: usize, prompt: &[i32]) {
+        let p = self.page;
+        let full = (prompt.len() / p).min(self.tables[slot].len());
+        let mut parent = PREFIX_SEED;
+        for i in 0..full {
+            let toks = &prompt[i * p..(i + 1) * p];
+            let hsh = chain_hash(parent, toks);
+            let id = self.tables[slot][i];
+            if self.block_hash[id as usize].is_none() && !self.index.contains_key(&hsh) {
+                self.block_hash[id as usize] = Some(hsh);
+                self.block_tokens[id as usize] = Some((parent, toks.to_vec()));
+                self.index.insert(hsh, id);
+            }
+            parent = hsh;
+        }
+    }
+}

@@ -32,7 +32,7 @@ pub fn measure_throughput(
     input_len: usize,
     steps: usize,
 ) -> anyhow::Result<cli::throughput_cmd::ThroughputRow> {
-    cli::throughput_cmd::measure(rt, model, specs, batch, s_max, input_len, steps, false)
+    cli::throughput_cmd::measure(rt, model, specs, batch, s_max, input_len, steps, false, None)
 }
 
 /// Bench support: the uniform KIVI settings grid of Table 8.

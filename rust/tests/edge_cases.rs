@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
 use kvtuner::engine::Engine;
-use kvtuner::kvcache::KvCache;
+use kvtuner::kvcache::{CacheBackend, KvCache};
 use kvtuner::model::Weights;
 use kvtuner::runtime::Runtime;
 use kvtuner::tensor::Tensor;
@@ -135,7 +135,7 @@ fn mixed_mode_layer_map_generates() {
     assert_eq!(out.len(), 40);
     // kivi layers committed at least one group during the run
     let kivi_layer = (0..cfg.n_layers).find(|l| eng.specs[*l].mode == Mode::Kivi).unwrap();
-    assert!(eng.cache.layers[kivi_layer].cache_len[0] >= cfg.group as i32);
+    assert!(eng.cache.cache_len(kivi_layer, 0) >= cfg.group as i32);
 }
 
 #[test]

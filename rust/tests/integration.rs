@@ -6,6 +6,7 @@ use std::sync::Arc;
 use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
 use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
 use kvtuner::engine::Engine;
+use kvtuner::kvcache::{CacheBackend, PagedOptions};
 use kvtuner::model::Weights;
 use kvtuner::runtime::Runtime;
 use kvtuner::tuner::{self, calib, Algorithm, MooOptions, TuneOptions};
@@ -212,6 +213,7 @@ fn router_serves_mixed_classes_end_to_end() {
             batch,
             s_max: 256,
             prefill_chunk: 32,
+            paged: None,
         },
         WorkerSpec {
             name: "efficient".into(),
@@ -221,6 +223,7 @@ fn router_serves_mixed_classes_end_to_end() {
             batch,
             s_max: 256,
             prefill_chunk: 32,
+            paged: None,
         },
     ];
     let router = Router::start(dir, workers).expect("router start");
@@ -262,6 +265,7 @@ fn scheduler_handles_more_requests_than_slots() {
         batch: 2,
         s_max: 256,
         prefill_chunk: 32,
+        paged: None,
     }];
     let router = Router::start(dir, workers).unwrap();
     // 7 requests through 2 slots: forces queueing + slot reuse
@@ -292,6 +296,7 @@ fn prompt_longer_than_slot_is_clamped_not_fatal() {
         batch: 1,
         s_max: 256,
         prefill_chunk: 32,
+        paged: None,
     }];
     let router = Router::start(dir, workers).unwrap();
     let prompt: Vec<i32> = (0..400).map(|j| (j % cfg.vocab) as i32).collect(); // > s_max
@@ -300,4 +305,122 @@ fn prompt_longer_than_slot_is_clamped_not_fatal() {
     assert!(r.error.is_none(), "{:?}", r.error);
     assert_eq!(r.tokens.len(), 8);
     router.shutdown().unwrap();
+}
+
+#[test]
+fn paged_engine_matches_dense_end_to_end() {
+    // the paged arm must be bit-exact with the dense reference: same
+    // executables, same quantization path, pages gathered into the same
+    // layout — identical tokens AND identical final logits.
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = m.config.clone();
+    let modes = [Mode::Fp, Mode::Token, Mode::Kivi];
+    let specs: Vec<LayerSpec> = (0..cfg.n_layers)
+        .map(|l| {
+            let mode = modes[l % 3];
+            LayerSpec {
+                mode,
+                pair: match mode {
+                    Mode::Fp => PrecisionPair::FP,
+                    Mode::Token => PrecisionPair::new(8, 4),
+                    Mode::Kivi => PrecisionPair::new(4, 2),
+                },
+            }
+        })
+        .collect();
+    let prompt: Vec<i32> = (0..48).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+
+    let mut dense = Engine::new(rt.clone(), &cfg.name, specs.clone(), 1, 256, 32).unwrap();
+    let a = dense.generate(0, &prompt, 24).unwrap();
+    let dense_logits = dense.last_logits[0].clone();
+
+    let mut paged = Engine::new_paged(
+        rt,
+        &cfg.name,
+        specs,
+        1,
+        256,
+        32,
+        PagedOptions::default(),
+    )
+    .unwrap();
+    let b = paged.generate(0, &prompt, 24).unwrap();
+    assert_eq!(a, b, "paged tokens diverged from dense");
+    assert_eq!(dense_logits, paged.last_logits[0], "paged logits diverged from dense");
+    assert!(paged.cache.is_paged());
+}
+
+#[test]
+fn paged_router_oversubscribes_slots_beyond_pool() {
+    // batch=2 slots but a page pool sized for roughly one full sequence:
+    // the scheduler must queue/preempt/resume instead of failing, and every
+    // request must still complete with its full token budget.
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let workers = vec![WorkerSpec {
+        name: "paged".into(),
+        model: cfg.name.clone(),
+        specs: LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), cfg.n_layers),
+        class: AccuracyClass::Balanced,
+        batch: 2,
+        s_max: 256,
+        prefill_chunk: 32,
+        // ~1.5 sequences of prompt 40 + 24 new tokens (64 tokens = 2 pages
+        // of 32) -> 3 blocks; admission headroom forces contention
+        paged: Some(PagedOptions { total_blocks: Some(3), budget_mib: None }),
+    }];
+    let router = Router::start(dir, workers).unwrap();
+    let subs: Vec<_> = (0..5u64)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..40).map(|j| ((j * 3 + i as usize) % cfg.vocab) as i32).collect();
+            router.submit(prompt, 24, AccuracyClass::Balanced).unwrap()
+        })
+        .collect();
+    for sub in subs {
+        let r = sub.wait_timeout(std::time::Duration::from_secs(300)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 24);
+    }
+    let snaps = router.shutdown().unwrap();
+    assert_eq!(snaps[0].1.requests_completed, 5);
+}
+
+#[test]
+fn paged_router_reuses_shared_prompt_prefixes() {
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let workers = vec![WorkerSpec {
+        name: "paged".into(),
+        model: cfg.name.clone(),
+        specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers),
+        class: AccuracyClass::Balanced,
+        batch: 2,
+        s_max: 256,
+        prefill_chunk: 32,
+        paged: Some(PagedOptions::default()),
+    }];
+    let router = Router::start(dir, workers).unwrap();
+    // identical 64-token system prompt + distinct 8-token tails
+    let system: Vec<i32> = (0..64).map(|j| (j * 7 % cfg.vocab) as i32).collect();
+    let subs: Vec<_> = (0..4u64)
+        .map(|i| {
+            let mut prompt = system.clone();
+            prompt.extend((0..8).map(|j| ((j + i as usize) % cfg.vocab) as i32));
+            router.submit(prompt, 8, AccuracyClass::Balanced).unwrap()
+        })
+        .collect();
+    for sub in subs {
+        let r = sub.wait_timeout(std::time::Duration::from_secs(300)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 8);
+    }
+    let snaps = router.shutdown().unwrap();
+    let s = &snaps[0].1;
+    assert!(s.prefix_hits >= 1, "no prefix reuse recorded: {s}");
+    assert!(s.prefix_tokens_reused >= 64, "reused too little: {s}");
 }

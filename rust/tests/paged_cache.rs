@@ -1,0 +1,345 @@
+//! Pure-host tests for the paged KV cache subsystem: dense-vs-paged gather
+//! equivalence, free-list recycling, prefix sharing (refcounts, resurrection,
+//! copy-on-write), admission/preemption arithmetic, and memory accounting.
+//! These need no artifacts — they exercise the cache layer directly.
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::kvcache::{CacheBackend, KvCache, OutOfPages, PagedKvCache, PagedOptions};
+use kvtuner::tensor::Tensor;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "test".into(),
+        n_layers: 3,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 128,
+        vocab: 64,
+        rope_theta: 10000.0,
+        group: 8, // page size
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+fn mixed_specs() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP },
+        LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 4) },
+        LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(4, 2) },
+    ]
+}
+
+fn token_specs(n: usize) -> Vec<LayerSpec> {
+    LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), n)
+}
+
+/// Deterministic pseudo-random fill so dense and paged see identical writes.
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    (0..n)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x % 1000) as f32 / 250.0 - 2.0
+        })
+        .collect()
+}
+
+fn fill_u8(n: usize, seed: u64) -> Vec<u8> {
+    fill(n, seed).iter().map(|v| (v.abs() * 40.0) as u8).collect()
+}
+
+/// Apply the same appends to both arms: fp rows, token rows, kivi residual
+/// rows + one fabricated group commit.
+fn drive_both(dense: &mut KvCache, paged: &mut PagedKvCache, c: &ModelConfig) {
+    let (h, dh, g) = (c.n_kv_heads, c.head_dim, c.group);
+    let both = |d: &mut KvCache, p: &mut PagedKvCache, f: &mut dyn FnMut(&mut dyn CacheBackend)| {
+        f(d);
+        f(p);
+    };
+
+    // layer 0 (fp): 5 tokens on slot 0, 3 on slot 1, batched exec of 2
+    let t = 5;
+    let k = Tensor::f32(&[2, h, t, dh], fill(2 * h * t * dh, 1));
+    let v = Tensor::f32(&[2, h, t, dh], fill(2 * h * t * dh, 2));
+    both(dense, paged, &mut |cb| cb.append_fp(0, 0, &k, &v, &[5, 3]).unwrap());
+
+    // layer 1 (token, K8V4): kp=16, vp=8 for dh=16
+    let (kp, vp) = (16, 8);
+    let outs = vec![
+        Tensor::u8(&[2, h, t, kp], fill_u8(2 * h * t * kp, 3)),
+        Tensor::f32(&[2, h, t], fill(2 * h * t, 4)),
+        Tensor::f32(&[2, h, t], fill(2 * h * t, 5)),
+        Tensor::u8(&[2, h, t, vp], fill_u8(2 * h * t * vp, 6)),
+        Tensor::f32(&[2, h, t], fill(2 * h * t, 7)),
+        Tensor::f32(&[2, h, t], fill(2 * h * t, 8)),
+    ];
+    both(dense, paged, &mut |cb| cb.append_token_outputs(1, 0, &outs, &[5, 3]).unwrap());
+    // second append crosses the 8-token page boundary on slot 0
+    both(dense, paged, &mut |cb| cb.append_token_outputs(1, 0, &outs, &[5, 0]).unwrap());
+
+    // layer 2 (kivi, K4V2): fill the residual to a full group and commit
+    for i in 0..g {
+        let kr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 100 + i as u64));
+        let vr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 200 + i as u64));
+        both(dense, paged, &mut |cb| {
+            let need = cb.append_kivi_residual(2, 0, &kr, &vr, &[1]).unwrap();
+            assert_eq!(need[0], i + 1 == g);
+        });
+    }
+    let (kp2, vp2) = (8, 4); // dh=16 at 4/2 bits
+    let k_outs = vec![
+        Tensor::u8(&[1, h, g, kp2], fill_u8(h * g * kp2, 9)),
+        Tensor::f32(&[1, h, dh], fill(h * dh, 10)),
+        Tensor::f32(&[1, h, dh], fill(h * dh, 11)),
+    ];
+    let v_outs = vec![
+        Tensor::u8(&[1, h, g, vp2], fill_u8(h * g * vp2, 12)),
+        Tensor::f32(&[1, h, g], fill(h * g, 13)),
+        Tensor::f32(&[1, h, g], fill(h * g, 14)),
+    ];
+    both(dense, paged, &mut |cb| cb.commit_kivi_chunk(2, 0, &k_outs, &v_outs).unwrap());
+    // leave a partial residual behind on slot 0
+    let kr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 300));
+    both(dense, paged, &mut |cb| {
+        cb.append_kivi_residual(2, 0, &kr, &kr, &[1]).unwrap();
+    });
+}
+
+#[test]
+fn dense_and_paged_gathers_are_bit_identical() {
+    let c = cfg();
+    let specs = mixed_specs();
+    let mut dense = KvCache::new(&c, &specs, 2, 32).unwrap();
+    let mut paged = PagedKvCache::new(&c, &specs, 2, 32, &PagedOptions::default()).unwrap();
+    drive_both(&mut dense, &mut paged, &c);
+
+    for l in 0..specs.len() {
+        assert_eq!(dense.layers[l].cache_len, vec![
+            CacheBackend::cache_len(&paged, l, 0),
+            CacheBackend::cache_len(&paged, l, 1)
+        ]);
+        // full-batch gather vs the dense buffers (fresh caches: the dense
+        // arm's unwritten tail still holds its init values, which the paged
+        // gather reproduces)
+        let d: Vec<Tensor> = dense.layers[l].artifact_inputs().into_iter().cloned().collect();
+        let p = paged.gather_batch(l).unwrap();
+        assert_eq!(d.len(), p.len(), "layer {l} tensor count");
+        for (i, (a, b)) in d.iter().zip(&p).enumerate() {
+            assert_eq!(a, b, "layer {l} tensor {i} diverged");
+        }
+        // single-slot gather vs the dense slot slice
+        for slot in 0..2 {
+            let ds = dense.layers[l].slot_inputs(slot);
+            let ps = paged.gather_slot(l, slot).unwrap();
+            for (i, (a, b)) in ds.iter().zip(&ps).enumerate() {
+                assert_eq!(a, b, "layer {l} slot {slot} tensor {i} diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn pages_recycle_through_the_free_list() {
+    let c = cfg();
+    let specs = token_specs(3);
+    let mut kc = PagedKvCache::new(&c, &specs, 2, 32, &PagedOptions::default()).unwrap();
+    let total = kc.total_blocks();
+    assert_eq!(total, 2 * 32 / 8, "dense-equivalent default pool");
+
+    // 20 tokens = 3 pages (one partial)
+    CacheBackend::synthetic_fill(&mut kc, 0, 20).unwrap();
+    assert_eq!(kc.block_table(0).len(), 3);
+    assert_eq!(kc.free_blocks(), total - 3);
+    let st = kc.mem_stats();
+    assert_eq!(st.blocks_live, 3);
+    // 4 unfilled rows in the partial tail page, across 3 token layers
+    assert!(st.frag_bytes > 0, "partial page must report fragmentation");
+    assert_eq!(st.bytes_total, CacheBackend::kv_bytes(&kc));
+
+    let first_table: Vec<u32> = kc.block_table(0).to_vec();
+    CacheBackend::reset_slot(&mut kc, 0);
+    assert_eq!(kc.free_blocks(), total, "completion returns pages to the pool");
+    assert_eq!(kc.mem_stats().frag_bytes, 0);
+
+    // refill both slots: 6 of the 8 blocks get used, which wraps the FIFO
+    // free list around to the recycled ids
+    CacheBackend::synthetic_fill(&mut kc, 1, 20).unwrap();
+    CacheBackend::synthetic_fill(&mut kc, 0, 20).unwrap();
+    let reused = kc
+        .block_table(0)
+        .iter()
+        .chain(kc.block_table(1))
+        .filter(|id| first_table.contains(id))
+        .count();
+    assert!(reused >= 1, "free list should recycle freed ids");
+}
+
+#[test]
+fn prefix_sharing_refcounts_resurrection_and_cow() {
+    let c = cfg();
+    let specs = token_specs(2);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        3,
+        32,
+        &PagedOptions { total_blocks: Some(12), budget_mib: None },
+    )
+    .unwrap();
+    let prompt: Vec<i32> = (0..20).map(|i| (i * 3 % 64) as i32).collect();
+    let h = c.n_kv_heads;
+
+    // slot 0 "prefills" the prompt — real scatter writes, so shared pages
+    // carry distinctive content — and publishes its full pages (2 of 8 tok;
+    // the partial 4-token tail page is never shared)
+    assert_eq!(CacheBackend::prefill_reuse(&mut kc, 0, &prompt), 0, "cold index");
+    let t = 5;
+    for l in 0..2usize {
+        for a in 0..4u64 {
+            let seed = l as u64 * 10 + a * 50;
+            let outs = vec![
+                Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, seed + 40)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 41)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 42)),
+                Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, seed + 43)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 44)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 45)),
+            ];
+            CacheBackend::append_token_outputs(&mut kc, l, 0, &outs, &[t]).unwrap();
+        }
+    }
+    CacheBackend::register_prefix(&mut kc, 0, &prompt);
+
+    // slot 1 with the same prompt reuses the 2 full pages
+    let reused = CacheBackend::prefill_reuse(&mut kc, 1, &prompt);
+    assert_eq!(reused, 16);
+    assert_eq!(kc.prefix_hits, 1);
+    assert_eq!(CacheBackend::pos(&kc, 1), 16);
+    assert_eq!(kc.block_table(1)[..2], kc.block_table(0)[..2]);
+    for &id in &kc.block_table(1)[..2] {
+        assert_eq!(kc.ref_count(id), 2, "shared pages are refcounted");
+    }
+    CacheBackend::synthetic_fill(&mut kc, 1, prompt.len()).unwrap();
+    assert_ne!(
+        kc.block_table(1)[2],
+        kc.block_table(0)[2],
+        "suffix pages are private"
+    );
+
+    // a different prompt only matches the common prefix chain
+    let mut other = prompt.clone();
+    other[9] = 63; // diverge inside page 1
+    let reused = CacheBackend::prefill_reuse(&mut kc, 2, &other);
+    assert_eq!(reused, 8, "only page 0 matches after divergence");
+    CacheBackend::reset_slot(&mut kc, 2);
+
+    // copy-on-write: making slot 1's shared page writable copies it
+    let before = kc.gather_slot(0, 1).unwrap();
+    let shared = kc.block_table(1)[0];
+    let new_id = kc.ensure_writable(1, 0).unwrap();
+    assert_ne!(new_id, shared);
+    assert_eq!(kc.cow_copies, 1);
+    assert_eq!(kc.ref_count(shared), 1, "source page back to one owner");
+    assert_eq!(kc.block_table(0)[0], shared, "owner's table untouched");
+    let after = kc.gather_slot(0, 1).unwrap();
+    assert_eq!(before, after, "CoW must preserve content");
+
+    // free slot 0: its remaining shared page drops to refcount 1 (slot 1)
+    let page1 = kc.block_table(0)[1];
+    CacheBackend::reset_slot(&mut kc, 0);
+    assert_eq!(kc.ref_count(page1), 1);
+
+    // free slot 1 too: pages go to the free list but stay in the index —
+    // a new identical prompt resurrects them without recompute
+    CacheBackend::reset_slot(&mut kc, 1);
+    let free_before = kc.free_blocks();
+    let reused = CacheBackend::prefill_reuse(&mut kc, 0, &prompt);
+    assert!(reused >= 8, "cached pages must resurrect, got {reused}");
+    assert!(kc.free_blocks() < free_before);
+}
+
+#[test]
+fn admission_and_decode_shortfall_track_the_pool() {
+    let c = cfg();
+    let specs = token_specs(2);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        2,
+        32,
+        &PagedOptions { total_blocks: Some(3), budget_mib: None },
+    )
+    .unwrap();
+    // 3 free blocks: a 9-token prompt needs 2 pages + 1 headroom = 3 -> ok
+    assert!(CacheBackend::can_admit(&kc, 9, 16));
+    // a 17-token prompt needs 3 pages + 1 headroom -> refused
+    assert!(!CacheBackend::can_admit(&kc, 17, 16));
+
+    // fill a slot to an exact page boundary: the next decode token needs a
+    // fresh page per the shortfall accounting
+    CacheBackend::synthetic_fill(&mut kc, 0, 16).unwrap();
+    assert_eq!(kc.free_blocks(), 1);
+    assert_eq!(CacheBackend::decode_block_shortfall(&kc, &[0]), 0, "one page left");
+    CacheBackend::synthetic_fill(&mut kc, 1, 8).unwrap();
+    assert_eq!(kc.free_blocks(), 0);
+    // both slots sit on page boundaries, zero pages free -> shortfall 2
+    assert_eq!(CacheBackend::decode_block_shortfall(&kc, &[0, 1]), 2);
+
+    // an actual append past the boundary errors with the typed marker
+    let (h, kp, vp) = (c.n_kv_heads, 8, 8);
+    let outs = vec![
+        Tensor::u8(&[1, h, 1, kp], vec![1; h * kp]),
+        Tensor::f32(&[1, h, 1], vec![0.5; h]),
+        Tensor::f32(&[1, h, 1], vec![0.1; h]),
+        Tensor::u8(&[1, h, 1, vp], vec![2; h * vp]),
+        Tensor::f32(&[1, h, 1], vec![0.5; h]),
+        Tensor::f32(&[1, h, 1], vec![0.1; h]),
+    ];
+    let err = CacheBackend::append_token_outputs(&mut kc, 0, 0, &outs, &[1]).unwrap_err();
+    assert!(err.downcast_ref::<OutOfPages>().is_some(), "{err:#}");
+
+    // freeing the other slot unblocks the append
+    CacheBackend::reset_slot(&mut kc, 1);
+    CacheBackend::append_token_outputs(&mut kc, 0, 0, &outs, &[1]).unwrap();
+    assert_eq!(CacheBackend::cache_len(&kc, 0, 0), 17);
+}
+
+#[test]
+fn paged_rejects_misaligned_kivi_s_max() {
+    let c = cfg(); // group 8
+    let specs = vec![LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(4, 2) }; 3];
+    assert!(PagedKvCache::new(&c, &specs, 1, 30, &PagedOptions::default()).is_err());
+    assert!(PagedKvCache::new(&c, &specs, 1, 32, &PagedOptions::default()).is_ok());
+}
+
+#[test]
+fn budget_caps_the_pool() {
+    let c = cfg();
+    let specs = mixed_specs();
+    let full = PagedKvCache::new(&c, &specs, 4, 32, &PagedOptions::default()).unwrap();
+    // halve the byte budget: the pool must shrink accordingly
+    let budget_mib = CacheBackend::kv_bytes(&full) as f64 / (1024.0 * 1024.0) / 2.0;
+    let half = PagedKvCache::new(
+        &c,
+        &specs,
+        4,
+        32,
+        &PagedOptions { total_blocks: None, budget_mib: Some(budget_mib) },
+    )
+    .unwrap();
+    assert!(half.total_blocks() < full.total_blocks());
+    assert!(half.total_blocks() >= full.total_blocks() / 4);
+    assert!(PagedKvCache::new(
+        &c,
+        &specs,
+        4,
+        32,
+        &PagedOptions { total_blocks: None, budget_mib: Some(0.000001) }
+    )
+    .is_err());
+}

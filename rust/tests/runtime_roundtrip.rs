@@ -5,6 +5,7 @@
 //! Requires `make artifacts` (skips with a message otherwise).
 
 use kvtuner::config::{LayerSpec, Mode, PrecisionPair};
+use kvtuner::kvcache::CacheBackend;
 use kvtuner::model::{RefEngine, Weights};
 use kvtuner::quant::{quantize_per_channel, quantize_per_token};
 use kvtuner::runtime::Runtime;
@@ -168,9 +169,8 @@ fn kivi_engine_residual_semantics() {
     for _ in 0..(cfg.group + 4) {
         t = eng.decode_step(&[t], &[true]).unwrap()[0];
     }
-    let lc = &eng.cache.layers[0];
-    assert_eq!(lc.cache_len[0], cfg.group as i32, "one group committed");
-    assert_eq!(lc.res_len[0], 4, "remainder in residual");
+    assert_eq!(eng.cache.cache_len(0, 0), cfg.group as i32, "one group committed");
+    assert_eq!(eng.cache.res_len(0, 0), 4, "remainder in residual");
 
     // K8V8 kivi should track the ref engine's kivi arm closely
     let w = Weights::load(&rt.manifest, &model).unwrap();
