@@ -1,0 +1,18 @@
+# Build-time entry points. `make artifacts` is what the Rust-side error
+# messages and docs refer to: it AOT-lowers every layer-step / quant / embed /
+# lm-head bucket to HLO text under artifacts/ and writes the manifest the
+# runtime loads. Python runs only here, never on the serving path.
+
+.PHONY: artifacts verify bench
+
+artifacts:
+	cd python && python -m compile.aot
+
+# tier-1 gate (same as CI)
+verify:
+	cargo build --release && cargo test -q
+
+# paper-table benches that run with or without artifacts
+bench:
+	cargo bench --bench table8_paged
+	cargo bench --bench table9_swap

@@ -242,8 +242,8 @@ fn main() -> anyhow::Result<()> {
             PAGED_SLOTS,
             S_MAX,
             &PagedOptions {
-                total_blocks: None,
                 budget_mib: Some(budget as f64 / (1024.0 * 1024.0)),
+                ..PagedOptions::default()
             },
         )?;
         assert!(

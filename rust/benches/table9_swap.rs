@@ -1,0 +1,468 @@
+//! Bench: recompute-only vs swap-enabled preemption under an oversubscribed
+//! page pool with a mixed short/long-context workload.
+//!
+//! The pool is sized well below the steady-state page demand of the slot
+//! count, so the scheduler policy must shed load mid-flight. Three arms per
+//! precision map:
+//!
+//! * `recompute` — `--swap-policy off`: every victim drops its pages and is
+//!   later re-prefilled (prompt + generated-so-far), PR 1 behavior but with
+//!   the new cost-aware victim selection.
+//! * `swap-auto` — per-victim cost model: long contexts (quadratic re-prefill
+//!   traffic) swap to the host tier; short ones recompute.
+//! * `swap-always` — every victim swaps while the host arena has room.
+//!
+//! The sim drives the real allocator, prefix index, swap arena and the real
+//! scheduler decision functions (`victim_score`, `choose_preempt_action`) —
+//! page writes stand in for PJRT layer steps, so this runs with or without
+//! artifacts. Every successful swap-in is checked bit-exact against a gather
+//! snapshot taken at swap-out: a swapped-and-resumed sequence must be
+//! indistinguishable from one that was never evicted.
+//! Run: `cargo bench --bench table9_swap`
+
+use std::collections::VecDeque;
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::coordinator::{choose_preempt_action, victim_score, PreemptAction};
+use kvtuner::kvcache::{CacheBackend, PagedKvCache, PagedOptions, SwapHandle, SwapPolicy};
+use kvtuner::quant::packed_width;
+use kvtuner::tensor::Tensor;
+use kvtuner::util::bench::Table;
+
+const S_MAX: usize = 512;
+const SLOTS: usize = 6;
+const POOL_BLOCKS: usize = 24;
+const PREFILL_CHUNK: usize = 32;
+const N_REQUESTS: usize = 14;
+
+fn sim_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim".into(),
+        n_layers: 4,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 32,
+        d_ff: 128,
+        vocab: 256,
+        rope_theta: 10000.0,
+        group: 32, // page size
+        residual: 32,
+        rms_eps: 1e-5,
+    }
+}
+
+struct SimReq {
+    id: usize,
+    prompt: Vec<i32>,
+    gen_target: usize,
+    generated: usize,
+    arrived: usize,
+}
+
+/// Mixed workload: every 4th-ish request is a long-context one (KVQuant-style
+/// re-prefill-unaffordable), every 3rd shares a 64-token system prefix, the
+/// rest are unique mid-size prompts. Arrivals are staggered 2 ticks apart.
+fn workload(vocab: usize) -> VecDeque<SimReq> {
+    let system: Vec<i32> = (0..64).map(|i| (i * 7 % vocab) as i32).collect();
+    (0..N_REQUESTS)
+        .map(|i| {
+            let (prompt, gen_target) = if i % 4 == 2 {
+                // long context: 7 prompt pages, grows to 9
+                ((0..224).map(|j| ((j * 11 + i * 131) % vocab) as i32).collect::<Vec<i32>>(), 64)
+            } else if i % 3 == 0 {
+                let mut p = system.clone();
+                p.extend((0..26).map(|j| ((j * 13 + i * 17) % vocab) as i32));
+                (p, 30)
+            } else {
+                ((0..90).map(|j| ((j * 11 + i * 53) % vocab) as i32).collect::<Vec<i32>>(), 30)
+            };
+            SimReq { id: i, prompt, gen_target, generated: 0, arrived: 2 * i }
+        })
+        .collect()
+}
+
+/// Token value at absolute position `pos` of a request's context: prompt
+/// tokens, then deterministic "generated" tokens — so a recompute re-prefill
+/// reproduces the same context and prefix pages stay content-consistent.
+fn token_at(req: &SimReq, pos: usize) -> i32 {
+    if pos < req.prompt.len() {
+        req.prompt[pos]
+    } else {
+        ((req.id * 31 + (pos - req.prompt.len()) * 7) % 256) as i32
+    }
+}
+
+/// Single-token append tensors for one layer, seeded by (layer, position,
+/// token value): distinctive content so the bit-exactness checks are
+/// meaningful, identical across requests sharing a prefix.
+fn step_outs(cfg: &ModelConfig, spec: &LayerSpec, layer: usize, pos: usize, tv: i32) -> Vec<Tensor> {
+    let (h, dh) = (cfg.n_kv_heads, cfg.head_dim);
+    let kp = packed_width(dh, spec.pair.k_bits).unwrap();
+    let vp = packed_width(dh, spec.pair.v_bits).unwrap();
+    let mut x = (layer as u64 + 1)
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add((pos as u64) << 32 | tv as u64)
+        | 1;
+    let mut next = move || {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        x
+    };
+    let bytes = |n: usize, next: &mut dyn FnMut() -> u64| -> Vec<u8> {
+        (0..n).map(|_| (next() % 251) as u8).collect()
+    };
+    let floats = |n: usize, next: &mut dyn FnMut() -> u64| -> Vec<f32> {
+        (0..n).map(|_| (next() % 1000) as f32 / 250.0 - 2.0).collect()
+    };
+    vec![
+        Tensor::u8(&[1, h, 1, kp], bytes(h * kp, &mut next)),
+        Tensor::f32(&[1, h, 1], floats(h, &mut next)),
+        Tensor::f32(&[1, h, 1], floats(h, &mut next)),
+        Tensor::u8(&[1, h, 1, vp], bytes(h * vp, &mut next)),
+        Tensor::f32(&[1, h, 1], floats(h, &mut next)),
+        Tensor::f32(&[1, h, 1], floats(h, &mut next)),
+    ]
+}
+
+struct Waiting {
+    req: SimReq,
+    swap: Option<SwapHandle>,
+    /// Per-layer gather snapshot at swap-out, for the bit-exactness check.
+    snapshot: Vec<Vec<Tensor>>,
+}
+
+#[derive(Default)]
+struct SimOutcome {
+    completed: usize,
+    ticks: usize,
+    preemptions: u64,
+    swap_outs: u64,
+    swap_ins: u64,
+    swap_fallbacks: u64,
+    /// Tokens re-run through prefill to resume preempted requests.
+    reprefill_tokens: u64,
+    prefix_tokens: u64,
+    bitexact_checks: u64,
+    peak_host_bytes: usize,
+    p99_latency_ticks: usize,
+}
+
+/// Append `ctx[from..]` into `slot` through the real scatter path.
+fn append_ctx(
+    cache: &mut PagedKvCache,
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    slot: usize,
+    req: &SimReq,
+    from: usize,
+    to: usize,
+) -> anyhow::Result<()> {
+    for pos in from..to {
+        let tv = token_at(req, pos);
+        for (l, sp) in specs.iter().enumerate() {
+            let outs = step_outs(cfg, sp, l, pos, tv);
+            cache.append_token_outputs(l, slot, &outs, &[1])?;
+        }
+        cache.advance_pos(slot, 1);
+    }
+    Ok(())
+}
+
+fn run_sim(
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    policy: SwapPolicy,
+    swap_mib: Option<f64>,
+) -> anyhow::Result<SimOutcome> {
+    let mut cache = PagedKvCache::new(
+        cfg,
+        specs,
+        SLOTS,
+        S_MAX,
+        &PagedOptions {
+            total_blocks: Some(POOL_BLOCKS),
+            swap_mib,
+            swap_policy: policy,
+            ..PagedOptions::default()
+        },
+    )?;
+    let mut arrivals = workload(cfg.vocab);
+    let mut pending: VecDeque<SimReq> = VecDeque::new();
+    let mut resume: VecDeque<Waiting> = VecDeque::new();
+    let mut slots: Vec<Option<(SimReq, u64)>> = (0..SLOTS).map(|_| None).collect();
+    let mut out = SimOutcome::default();
+    let mut latencies: Vec<usize> = Vec::new();
+    let mut admit_seq = 0u64;
+
+    while out.completed < N_REQUESTS {
+        let tick = out.ticks;
+        out.ticks += 1;
+        anyhow::ensure!(out.ticks < 100_000, "sim wedged");
+        while arrivals.front().map(|r| r.arrived <= tick).unwrap_or(false) {
+            pending.push_back(arrivals.pop_front().unwrap());
+        }
+
+        // admission: swapped/preempted resumptions first (FIFO), then fresh
+        while let Some(slot) = slots.iter().position(|s| s.is_none()) {
+            let busy = slots.iter().filter(|s| s.is_some()).count();
+            if let Some(mut w) = resume.pop_front() {
+                if let Some(h) = w.swap.take() {
+                    let mut restored = false;
+                    if cache.can_swap_in(&h) {
+                        match cache.swap_in(slot, &h) {
+                            Ok(()) => {
+                                // the tentpole claim: swapped-and-resumed
+                                // state is bit-exact vs never-evicted
+                                for (l, snap) in w.snapshot.iter().enumerate() {
+                                    let now = cache.gather_slot(l, slot)?;
+                                    anyhow::ensure!(
+                                        &now == snap,
+                                        "swap round trip diverged (layer {l})"
+                                    );
+                                    out.bitexact_checks += 1;
+                                }
+                                cache.release_swap(h);
+                                out.swap_ins += 1;
+                                restored = true;
+                            }
+                            Err(_) => {
+                                // linked prefix pages recycled: recompute
+                                cache.release_swap(h);
+                                out.swap_fallbacks += 1;
+                            }
+                        }
+                    } else if busy > 0 {
+                        w.swap = Some(h);
+                        resume.push_front(w);
+                        break;
+                    } else {
+                        cache.release_swap(h);
+                        out.swap_fallbacks += 1; // recompute below
+                    }
+                    if restored {
+                        admit_seq += 1;
+                        slots[slot] = Some((w.req, admit_seq));
+                        continue;
+                    }
+                }
+                // recompute resume
+                let ctx_len = w.req.prompt.len() + w.req.generated;
+                if !cache.can_admit(ctx_len, w.req.gen_target - w.req.generated) {
+                    anyhow::ensure!(busy > 0, "sim pool too small for one request");
+                    resume.push_front(w);
+                    break;
+                }
+                let ctx: Vec<i32> = (0..ctx_len).map(|p| token_at(&w.req, p)).collect();
+                let reused = cache.prefill_reuse(slot, &ctx);
+                out.prefix_tokens += reused as u64;
+                append_ctx(&mut cache, cfg, specs, slot, &w.req, reused, ctx_len)?;
+                cache.register_prefix(slot, &ctx);
+                out.reprefill_tokens += (ctx_len - reused) as u64;
+                admit_seq += 1;
+                slots[slot] = Some((w.req, admit_seq));
+                continue;
+            }
+            let Some(req) = pending.front() else { break };
+            if !cache.can_admit(req.prompt.len(), req.gen_target) {
+                anyhow::ensure!(
+                    busy > 0 || !resume.is_empty(),
+                    "sim pool too small for one request"
+                );
+                break;
+            }
+            let req = pending.pop_front().unwrap();
+            let reused = cache.prefill_reuse(slot, &req.prompt);
+            out.prefix_tokens += reused as u64;
+            append_ctx(&mut cache, cfg, specs, slot, &req, reused, req.prompt.len())?;
+            cache.register_prefix(slot, &req.prompt);
+            admit_seq += 1;
+            slots[slot] = Some((req, admit_seq));
+        }
+
+        // preemption: cost-aware victim, swap-vs-recompute per victim
+        loop {
+            let active: Vec<usize> =
+                slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|_| i)).collect();
+            if active.is_empty() || cache.decode_block_shortfall(&active) == 0 {
+                break;
+            }
+            anyhow::ensure!(active.len() > 1, "sim pool too small for one request");
+            let victim = *active
+                .iter()
+                .max_by_key(|&&i| {
+                    let (req, seq) = slots[i].as_ref().unwrap();
+                    (victim_score(cache.slot_pages(i), req.gen_target - req.generated), *seq)
+                })
+                .unwrap();
+            let (req, _) = slots[victim].take().unwrap();
+            let action = choose_preempt_action(
+                policy,
+                cache.swap_enabled(),
+                cache.swap_out_bytes(victim),
+                req.prompt.len() + req.generated.saturating_sub(1),
+                cache.per_token_kv_bytes(),
+                PREFILL_CHUNK,
+            );
+            out.preemptions += 1;
+            let mut swapped = None;
+            if action == PreemptAction::SwapOut {
+                let snapshot: Vec<Vec<Tensor>> = (0..specs.len())
+                    .map(|l| cache.gather_slot(l, victim))
+                    .collect::<anyhow::Result<_>>()?;
+                match cache.swap_out(victim) {
+                    Ok(h) => {
+                        out.swap_outs += 1;
+                        swapped = Some((h, snapshot));
+                    }
+                    Err(_) => out.swap_fallbacks += 1, // host arena full
+                }
+            }
+            match swapped {
+                Some((h, snapshot)) => {
+                    resume.push_back(Waiting { req, swap: Some(h), snapshot });
+                }
+                None => {
+                    cache.reset_slot(victim);
+                    resume.push_back(Waiting { req, swap: None, snapshot: Vec::new() });
+                }
+            }
+        }
+
+        // decode tick: one token per active slot via the real scatter path
+        let active: Vec<usize> =
+            slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|_| i)).collect();
+        out.peak_host_bytes = out.peak_host_bytes.max(cache.mem_stats().host_bytes_used);
+        for &i in &active {
+            let (pos, tv) = {
+                let (req, _) = slots[i].as_ref().unwrap();
+                let pos = req.prompt.len() + req.generated;
+                (pos, token_at(req, pos))
+            };
+            for (l, sp) in specs.iter().enumerate() {
+                let outs = step_outs(cfg, sp, l, pos, tv);
+                cache.append_token_outputs(l, i, &outs, &[1])?;
+            }
+            cache.advance_pos(i, 1);
+            let done = {
+                let (req, _) = slots[i].as_mut().unwrap();
+                req.generated += 1;
+                req.generated >= req.gen_target
+            };
+            if done {
+                let (req, _) = slots[i].take().unwrap();
+                latencies.push(tick - req.arrived);
+                cache.reset_slot(i);
+                out.completed += 1;
+            }
+        }
+    }
+    latencies.sort_unstable();
+    out.p99_latency_ticks = latencies[((latencies.len() - 1) as f64 * 0.99).round() as usize];
+    let st = cache.swap_stats();
+    anyhow::ensure!(st.swap_outs == out.swap_outs && st.swap_ins == out.swap_ins);
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = sim_cfg();
+    let nl = cfg.n_layers;
+    let tuned: Vec<LayerSpec> = (0..nl)
+        .map(|l| LayerSpec {
+            mode: Mode::Token,
+            pair: if l == 0 || l + 1 == nl {
+                PrecisionPair::new(8, 4)
+            } else {
+                PrecisionPair::new(4, 2)
+            },
+        })
+        .collect();
+    let settings: Vec<(String, Vec<LayerSpec>)> = vec![
+        ("K8V4".into(), LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 4), nl)),
+        ("KVTuner-style mix".into(), tuned),
+    ];
+    let arms: [(&str, SwapPolicy, Option<f64>); 3] = [
+        ("recompute", SwapPolicy::Off, None),
+        ("swap-auto", SwapPolicy::Auto, Some(2.0)),
+        ("swap-always", SwapPolicy::Always, Some(2.0)),
+    ];
+
+    let mut t = Table::with_headers(
+        &format!(
+            "table9_swap — preemption policy under an oversubscribed pool \
+             ({POOL_BLOCKS} pages, {SLOTS} slots, {N_REQUESTS} mixed reqs, s_max={S_MAX})"
+        ),
+        vec![
+            "setting".into(),
+            "arm".into(),
+            "completed".into(),
+            "ticks".into(),
+            "p99 lat".into(),
+            "preempt".into(),
+            "swap out/in".into(),
+            "reprefill tok".into(),
+            "reuse tok".into(),
+            "host peak KiB".into(),
+        ],
+    );
+
+    for (label, specs) in &settings {
+        let mut per_arm: Vec<SimOutcome> = Vec::new();
+        for (arm, policy, swap_mib) in &arms {
+            let o = run_sim(&cfg, specs, *policy, *swap_mib)?;
+            t.row(vec![
+                label.clone(),
+                arm.to_string(),
+                o.completed.to_string(),
+                o.ticks.to_string(),
+                o.p99_latency_ticks.to_string(),
+                o.preemptions.to_string(),
+                format!("{}/{}", o.swap_outs, o.swap_ins),
+                o.reprefill_tokens.to_string(),
+                o.prefix_tokens.to_string(),
+                format!("{:.0}", o.peak_host_bytes as f64 / 1024.0),
+            ]);
+            per_arm.push(o);
+        }
+        let (off, auto) = (&per_arm[0], &per_arm[1]);
+        // the acceptance claims, checked on every run
+        assert_eq!(off.completed, N_REQUESTS, "{label}: recompute arm must drain");
+        assert_eq!(auto.completed, N_REQUESTS, "{label}: swap arm must drain");
+        assert!(off.preemptions >= 1, "{label}: workload must exercise preemption");
+        assert!(
+            off.reprefill_tokens > 0,
+            "{label}: recompute-only preemption must pay re-prefill tokens"
+        );
+        assert!(auto.swap_ins >= 1, "{label}: cost model must swap at least one victim");
+        assert!(
+            auto.bitexact_checks >= 1,
+            "{label}: swapped resumes must be verified bit-exact"
+        );
+        assert!(
+            auto.reprefill_tokens < off.reprefill_tokens,
+            "{label}: swapping must save re-prefill tokens ({} vs {})",
+            auto.reprefill_tokens,
+            off.reprefill_tokens
+        );
+        eprintln!(
+            "[table9_swap] {label}: swap-auto re-prefilled {} tokens vs {} recompute-only \
+             ({} swaps, {} bit-exact checks, p99 {} vs {} ticks)",
+            auto.reprefill_tokens,
+            off.reprefill_tokens,
+            auto.swap_ins,
+            auto.bitexact_checks,
+            auto.p99_latency_ticks,
+            off.p99_latency_ticks,
+        );
+    }
+    t.print();
+    println!(
+        "\nswap arm: preemption victims are chosen by pages_held x remaining_tokens and \
+         evicted to a host arena in packed quantized form; prefix-indexed pages re-link \
+         on resume instead of copying. Recompute-only preemption re-runs the whole \
+         context through prefill per resume — the re-prefill token column is the work \
+         the host tier saves."
+    );
+    Ok(())
+}

@@ -47,6 +47,11 @@ COMMON FLAGS
   --pool-blocks N   paged pool size in pages (page = quant group)
   --pool-mib MIB    paged pool byte budget (wins over the dense-equivalent
                     default; ignored when --pool-blocks is given)
+  --swap-mib MIB    host swap-tier budget: preempted sequences can be
+                    swapped out in packed quantized form and resumed
+                    bit-exact instead of re-prefilled (needs --paged)
+  --swap-policy P   off | always | auto (default auto when --swap-mib is
+                    set): per-victim choice between swap-out and recompute
 ";
 
 pub fn cli_main() -> Result<()> {
@@ -89,9 +94,15 @@ pub(crate) fn load_model(
     Ok((manifest, weights, model))
 }
 
-/// Shared: `--paged` / `--pool-blocks` / `--pool-mib` -> paged-arm options.
+/// Shared: `--paged` / `--pool-blocks` / `--pool-mib` / `--swap-mib` /
+/// `--swap-policy` -> paged-arm options.
 pub(crate) fn paged_options(args: &Args) -> Result<Option<crate::kvcache::PagedOptions>> {
     if !args.switch("paged") {
+        // fail loud rather than silently serving dense without a swap tier
+        anyhow::ensure!(
+            args.opt_str("swap-mib").is_none() && args.opt_str("swap-policy").is_none(),
+            "--swap-mib/--swap-policy need the paged cache arm: pass --paged"
+        );
         return Ok(None);
     }
     let total_blocks = match args.opt_str("pool-blocks") {
@@ -102,7 +113,41 @@ pub(crate) fn paged_options(args: &Args) -> Result<Option<crate::kvcache::PagedO
         Some(v) => Some(v.parse()?),
         None => None,
     };
-    Ok(Some(crate::kvcache::PagedOptions { total_blocks, budget_mib }))
+    let swap_mib = match args.opt_str("swap-mib") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let swap_policy = match args.opt_str("swap-policy") {
+        Some(v) => {
+            let p = crate::kvcache::SwapPolicy::parse(v)?;
+            anyhow::ensure!(
+                p == crate::kvcache::SwapPolicy::Off || swap_mib.is_some(),
+                "--swap-policy {} needs a host tier: pass --swap-mib",
+                p.as_str()
+            );
+            p
+        }
+        // a swap budget without an explicit policy means "use it sensibly"
+        None if swap_mib.is_some() => crate::kvcache::SwapPolicy::Auto,
+        None => crate::kvcache::SwapPolicy::Off,
+    };
+    Ok(Some(crate::kvcache::PagedOptions {
+        total_blocks,
+        budget_mib,
+        swap_mib,
+        swap_policy,
+    }))
+}
+
+/// One-line cache-arm description for serve/throughput headers.
+pub(crate) fn cache_desc(paged: &Option<crate::kvcache::PagedOptions>) -> String {
+    match paged {
+        None => "dense".to_string(),
+        Some(p) => match p.swap_mib {
+            Some(mib) => format!("paged+swap({mib}MiB,{})", p.swap_policy.as_str()),
+            None => "paged".to_string(),
+        },
+    }
 }
 
 pub(crate) fn parse_modes(s: &str) -> Result<Vec<crate::config::Mode>> {

@@ -65,7 +65,7 @@ pub fn run(args: &Args) -> Result<()> {
     eprintln!(
         "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={})",
         workers.len(),
-        if paged.is_some() { "paged" } else { "dense" }
+        super::cache_desc(&paged),
     );
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;

@@ -124,7 +124,9 @@ pub fn run(args: &Args) -> Result<()> {
     let paged = super::paged_options(args)?;
     let settings = settings_grid(cfg.n_layers, &args.list("configs", ""))?;
 
-    let cache_arm = if paged.is_some() { "paged" } else { "dense" };
+    // the decode grid never preempts, but the arena is sized/reported so
+    // capacity runs account the host tier alongside kv_bytes
+    let cache_arm = super::cache_desc(&paged);
     let mut t = Table::with_headers(&format!("Table 8 — decode throughput, batch={batch}, steps={steps}, cache={cache_arm} (tokens/s)"),
         {
             let mut h = vec!["setting".to_string(), "bits".into(), "KV MiB".into()];

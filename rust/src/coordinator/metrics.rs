@@ -19,6 +19,20 @@ pub struct Metrics {
     /// Paged serving: prompts that reused shared prefix pages / tokens saved.
     pub prefix_hits: AtomicU64,
     pub prefix_tokens_reused: AtomicU64,
+    /// Host swap tier: eviction decisions that moved state device<->host.
+    pub swap_outs: AtomicU64,
+    pub swap_ins: AtomicU64,
+    pub swap_bytes_out: AtomicU64,
+    pub swap_bytes_in: AtomicU64,
+    /// Swap-out chosen by the cost model but refused (host arena full);
+    /// the victim fell back to recompute.
+    pub swap_stalls: AtomicU64,
+    /// Swapped state unrecoverable at resume (re-linked prefix pages were
+    /// recycled) or permanently unadmittable; resumed by re-prefill instead.
+    pub swap_fallbacks: AtomicU64,
+    /// Tokens re-prefilled to resume recompute-preempted requests — the
+    /// work a swap-out avoids.
+    pub reprefill_tokens: AtomicU64,
     latencies: Mutex<LatencySamples>,
 }
 
@@ -44,6 +58,13 @@ pub struct Snapshot {
     pub preemptions: u64,
     pub prefix_hits: u64,
     pub prefix_tokens_reused: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub swap_bytes_out: u64,
+    pub swap_bytes_in: u64,
+    pub swap_stalls: u64,
+    pub swap_fallbacks: u64,
+    pub reprefill_tokens: u64,
 }
 
 fn pct(sorted: &[f64], p: f64) -> f64 {
@@ -76,6 +97,28 @@ impl Metrics {
             self.prefix_hits.fetch_add(1, Ordering::Relaxed);
             self.prefix_tokens_reused.fetch_add(tokens_reused as u64, Ordering::Relaxed);
         }
+    }
+
+    pub fn record_swap_out(&self, bytes: usize) {
+        self.swap_outs.fetch_add(1, Ordering::Relaxed);
+        self.swap_bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_swap_in(&self, bytes: usize) {
+        self.swap_ins.fetch_add(1, Ordering::Relaxed);
+        self.swap_bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_swap_stall(&self) {
+        self.swap_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_swap_fallback(&self) {
+        self.swap_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reprefill(&self, tokens: usize) {
+        self.reprefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
     pub fn record_completion(&self, ttft: Duration, total: Duration) {
@@ -111,6 +154,13 @@ impl Metrics {
             preemptions: self.preemptions.load(Ordering::Relaxed),
             prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
             prefix_tokens_reused: self.prefix_tokens_reused.load(Ordering::Relaxed),
+            swap_outs: self.swap_outs.load(Ordering::Relaxed),
+            swap_ins: self.swap_ins.load(Ordering::Relaxed),
+            swap_bytes_out: self.swap_bytes_out.load(Ordering::Relaxed),
+            swap_bytes_in: self.swap_bytes_in.load(Ordering::Relaxed),
+            swap_stalls: self.swap_stalls.load(Ordering::Relaxed),
+            swap_fallbacks: self.swap_fallbacks.load(Ordering::Relaxed),
+            reprefill_tokens: self.reprefill_tokens.load(Ordering::Relaxed),
         }
     }
 }
@@ -119,7 +169,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit",
+            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -131,6 +181,11 @@ impl std::fmt::Display for Snapshot {
             self.preemptions,
             self.prefix_tokens_reused,
             self.prefix_hits,
+            self.swap_outs,
+            self.swap_ins,
+            self.swap_bytes_out / 1024,
+            self.swap_bytes_in / 1024,
+            self.reprefill_tokens,
         )
     }
 }

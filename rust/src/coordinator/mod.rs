@@ -11,4 +11,6 @@ pub use batcher::{Batcher, BatcherOptions};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{AccuracyClass, Request, Response, Submission};
 pub use router::{Router, WorkerSpec};
-pub use scheduler::{Scheduler, SchedulerOptions};
+pub use scheduler::{
+    choose_preempt_action, victim_score, PreemptAction, Scheduler, SchedulerOptions,
+};

@@ -104,8 +104,17 @@ impl Router {
                         }
                     };
                     let _ = ready_tx.send(Ok(()));
-                    let mut sched =
-                        Scheduler::new(engine, &ws.name, SchedulerOptions::default(), met);
+                    // the swap policy rides inside the paged options so
+                    // WorkerSpec stays one struct per engine arm
+                    let opts = SchedulerOptions {
+                        swap_policy: ws
+                            .paged
+                            .as_ref()
+                            .map(|p| p.swap_policy)
+                            .unwrap_or_default(),
+                        ..SchedulerOptions::default()
+                    };
+                    let mut sched = Scheduler::new(engine, &ws.name, opts, met);
                     sched.run(rx, sd, inf)
                 })
                 .context("spawning engine worker")?;

@@ -5,10 +5,25 @@
 //!
 //! With a paged engine the loop additionally admits by *block availability*
 //! (not just free slots), reuses cached prompt-prefix pages, and runs a
-//! preemption policy: when the next decode step would need more pages than
-//! the pool has free, the youngest request is evicted back to a resume queue
-//! and re-prefilled (prompt + tokens generated so far) once pages free up —
-//! recompute-style preemption, so the pool can oversubscribe.
+//! preemption policy when the next decode step would need more pages than
+//! the pool has free:
+//!
+//! * **Victim selection** is cost-aware: the evicted request is the one with
+//!   the largest `pages_held x remaining_tokens` — the request that would
+//!   otherwise pin the most page-time, so one eviction buys the most
+//!   headroom, and whose one-time eviction cost amortizes over the most
+//!   remaining work. Ties fall to the youngest (the old policy).
+//! * **Eviction mechanism** is chosen per victim by `--swap-policy`:
+//!   recompute (drop pages, later re-prefill prompt + generated-so-far) or
+//!   swap-out to the host tier (pages move in packed quantized form and come
+//!   back bit-exact, zero re-prefill). `auto` compares the swap's byte
+//!   traffic against a chunked-prefill cost model; see
+//!   `choose_preempt_action`.
+//! * **Resume** is strictly FIFO over preempted requests (the longest-waiting
+//!   victim resumes first), and swap-aware: a swapped sequence resumes only
+//!   when its pages fit back into the pool (`can_swap_in`); if its re-linked
+//!   prefix pages were recycled while it was away, it falls back to the
+//!   recompute path.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -19,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::Engine;
-use crate::kvcache::{CacheBackend, OutOfPages};
+use crate::kvcache::{CacheBackend, OutOfPages, SwapHandle, SwapPolicy};
 
 use super::batcher::{Batcher, BatcherOptions};
 use super::metrics::Metrics;
@@ -33,14 +48,111 @@ struct ActiveSlot {
     ttft: Duration,
 }
 
-/// A preempted request waiting to resume: its generated tokens are kept so
-/// re-prefill restores the exact decode state (modulo prefill-path
-/// quantization of the recomputed tokens).
+/// A preempted request waiting to resume. `swap: Some` means its KV state
+/// sits in the host tier and comes back bit-exact without re-prefill;
+/// `None` means recompute — the generated tokens are kept so re-prefill
+/// restores the exact decode state (modulo prefill-path quantization of the
+/// recomputed tokens).
 struct Preempted {
     req: Request,
     generated: Vec<i32>,
     started: Instant,
     ttft: Duration,
+    swap: Option<SwapHandle>,
+}
+
+/// FIFO bookkeeping for preempted requests, separated so the ordering policy
+/// is testable: preemption enqueues at the back, resume pops the front, and
+/// a popped-but-unadmittable entry is requeued at the front (order kept).
+/// Regression note: the scheduler used `push_front` + `pop_front` (LIFO), so
+/// the most-recently-preempted request resumed first and repeatedly starved
+/// the oldest victims under sustained pressure.
+pub struct ResumeQueue<T> {
+    q: VecDeque<T>,
+}
+
+impl<T> Default for ResumeQueue<T> {
+    fn default() -> Self {
+        ResumeQueue { q: VecDeque::new() }
+    }
+}
+
+impl<T> ResumeQueue<T> {
+    pub fn enqueue(&mut self, t: T) {
+        self.q.push_back(t);
+    }
+
+    pub fn next(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn requeue(&mut self, t: T) {
+        self.q.push_front(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// Cost-aware victim score: the page-time a request would pin if kept
+/// resident (`pages_held x remaining_tokens`). Preempting the max-score
+/// victim frees the most pages for the longest expected absence, and its
+/// one-time eviction cost (re-prefill or swap round trip) amortizes over
+/// the most remaining decode work — "cheap victims first" in cost per page
+/// of relief. The `max(1)` floors keep zero-page / zero-remaining requests
+/// comparable instead of collapsing every score to zero.
+pub fn victim_score(pages_held: usize, remaining_tokens: usize) -> u64 {
+    pages_held.max(1) as u64 * remaining_tokens.max(1) as u64
+}
+
+/// How one preemption victim is evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptAction {
+    SwapOut,
+    Recompute,
+}
+
+/// Pick the eviction mechanism for one victim.
+///
+/// `auto` compares, in device-byte units:
+/// * swap cost = `2 x swap_out_bytes` (copy out + copy back; pages re-linked
+///   through the prefix index move nothing), against
+/// * recompute cost = `recompute_tokens^2 / prefill_chunk x per_token_bytes`
+///   — chunked re-prefill runs `T/chunk` layer sweeps, each reading the
+///   O(T)-token cache written so far, so the re-read traffic grows
+///   quadratically with context length.
+///
+/// The crossover sits near `T = 2 x prefill_chunk`: short contexts re-prefill
+/// cheaply (one or two chunk sweeps) while long contexts — the KVQuant-style
+/// workloads the swap tier exists for — get swapped.
+pub fn choose_preempt_action(
+    policy: SwapPolicy,
+    swap_available: bool,
+    swap_out_bytes: usize,
+    recompute_tokens: usize,
+    per_token_kv_bytes: usize,
+    prefill_chunk: usize,
+) -> PreemptAction {
+    if !swap_available || policy == SwapPolicy::Off {
+        return PreemptAction::Recompute;
+    }
+    if policy == SwapPolicy::Always {
+        return PreemptAction::SwapOut;
+    }
+    let swap_cost = 2 * swap_out_bytes as u64;
+    let t = recompute_tokens as u64;
+    let recompute_cost =
+        t * t * per_token_kv_bytes.max(1) as u64 / prefill_chunk.max(1) as u64;
+    if swap_cost < recompute_cost {
+        PreemptAction::SwapOut
+    } else {
+        PreemptAction::Recompute
+    }
 }
 
 /// Completion predicate for one request after a decode step has pushed its
@@ -56,18 +168,26 @@ pub struct Scheduler {
     pub batcher: Batcher,
     pub metrics: Arc<Metrics>,
     slots: Vec<Option<ActiveSlot>>,
-    preempted: VecDeque<Preempted>,
+    preempted: ResumeQueue<Preempted>,
+    swap_policy: SwapPolicy,
     pub name: String,
 }
 
 pub struct SchedulerOptions {
     pub batcher: BatcherOptions,
     pub idle_poll: Duration,
+    /// Preemption eviction policy (recompute vs host swap); only effective
+    /// when the engine's cache backend has a swap tier.
+    pub swap_policy: SwapPolicy,
 }
 
 impl Default for SchedulerOptions {
     fn default() -> Self {
-        SchedulerOptions { batcher: BatcherOptions::default(), idle_poll: Duration::from_millis(5) }
+        SchedulerOptions {
+            batcher: BatcherOptions::default(),
+            idle_poll: Duration::from_millis(5),
+            swap_policy: SwapPolicy::default(),
+        }
     }
 }
 
@@ -79,7 +199,8 @@ impl Scheduler {
             batcher: Batcher::new(opts.batcher),
             metrics,
             slots: (0..batch).map(|_| None).collect(),
-            preempted: VecDeque::new(),
+            preempted: ResumeQueue::default(),
+            swap_policy: opts.swap_policy,
             name: name.to_string(),
         }
     }
@@ -141,10 +262,10 @@ impl Scheduler {
     }
 
     /// Prefill `ctx` into `slot`, reusing shared prefix pages when the
-    /// backend has them. Returns the first generated token. Prefix metrics
-    /// are recorded only on success so an `OutOfPages` retry does not
-    /// double-count.
-    fn prefill_with_reuse(&mut self, slot: usize, ctx: &[i32]) -> Result<i32> {
+    /// backend has them. Returns the first generated token and the number of
+    /// prefix tokens served from cache. Prefix metrics are recorded only on
+    /// success so an `OutOfPages` retry does not double-count.
+    fn prefill_with_reuse(&mut self, slot: usize, ctx: &[i32]) -> Result<(i32, usize)> {
         self.engine.cache.reset_slot(slot);
         let reused = self.engine.cache.prefill_reuse(slot, ctx);
         let t0 = Instant::now();
@@ -152,20 +273,74 @@ impl Scheduler {
         self.metrics.record_prefill(t0.elapsed());
         self.metrics.record_prefix(reused);
         self.engine.cache.register_prefix(slot, ctx);
-        Ok(first)
+        Ok((first, reused))
+    }
+
+    /// Place a resumed/admitted request into its slot (or finish it when no
+    /// decode step is needed at all).
+    fn occupy(&mut self, slot: usize, a: ActiveSlot) {
+        if self.done_after_prefill(&a, slot) {
+            self.finish(slot, a, None);
+        } else {
+            self.slots[slot] = Some(a);
+        }
     }
 
     /// Admit waiting work into free slots: resumptions first (they hold
-    /// partial progress), then fresh requests FIFO. Paged engines gate on
-    /// page availability instead of admitting blindly.
+    /// partial progress, FIFO over preemption order), then fresh requests
+    /// FIFO. Paged engines gate on page availability instead of admitting
+    /// blindly; swapped sequences additionally gate on their pages fitting
+    /// back (`can_swap_in`).
     fn admit(&mut self) -> Result<()> {
         let mut admitted = 0usize;
         while admitted < self.batcher.opts.max_admit_per_tick {
             let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
 
-            if let Some(pe) = self.preempted.pop_front() {
-                // resume context = clamped prompt + all generated but the
-                // last token (which becomes the next decode input)
+            if let Some(mut pe) = self.preempted.next() {
+                if let Some(sh) = pe.swap.take() {
+                    // swapped resume: pages re-link / copy back, no re-prefill
+                    if self.engine.cache.can_swap_in(&sh) {
+                        match self.engine.cache.swap_in(slot, &sh) {
+                            Ok(()) => {
+                                self.metrics.record_swap_in(sh.host_bytes);
+                                self.engine.cache.release_swap(sh);
+                                let next = *pe.generated.last().unwrap();
+                                let a = ActiveSlot {
+                                    req: pe.req,
+                                    generated: pe.generated,
+                                    next_token: next,
+                                    started: pe.started,
+                                    ttft: pe.ttft,
+                                };
+                                self.occupy(slot, a);
+                                admitted += 1;
+                                continue;
+                            }
+                            Err(_) => {
+                                // swapped state unrecoverable (re-linked
+                                // prefix pages were recycled): release the
+                                // handle and re-prefill below instead
+                                self.engine.cache.release_swap(sh);
+                                self.engine.cache.reset_slot(slot);
+                                self.metrics.record_swap_fallback();
+                            }
+                        }
+                    } else if self.busy() > 0 {
+                        // its pages do not fit yet; in-flight completions
+                        // will free some — keep it at the head of the queue
+                        pe.swap = Some(sh);
+                        self.preempted.requeue(pe);
+                        break;
+                    } else {
+                        // nothing in flight will ever free pages: a clamped
+                        // re-prefill may fit where the full page set cannot
+                        self.engine.cache.release_swap(sh);
+                        self.metrics.record_swap_fallback();
+                    }
+                }
+
+                // recompute resume: context = clamped prompt + all generated
+                // but the last token (which becomes the next decode input)
                 let mut ctx = self.clamp_prompt(&pe.req.prompt, pe.req.max_new_tokens);
                 ctx.extend_from_slice(&pe.generated[..pe.generated.len() - 1]);
                 if !self.engine.cache.can_admit(ctx.len(), pe.req.max_new_tokens) {
@@ -178,11 +353,12 @@ impl Scheduler {
                         admitted += 1;
                         continue;
                     }
-                    self.preempted.push_front(pe);
+                    self.preempted.requeue(pe);
                     break;
                 }
                 match self.prefill_with_reuse(slot, &ctx) {
-                    Ok(_recomputed_first) => {
+                    Ok((_recomputed_first, reused)) => {
+                        self.metrics.record_reprefill(ctx.len() - reused);
                         let next = *pe.generated.last().unwrap();
                         let a = ActiveSlot {
                             req: pe.req,
@@ -191,17 +367,13 @@ impl Scheduler {
                             started: pe.started,
                             ttft: pe.ttft,
                         };
-                        if self.done_after_prefill(&a, slot) {
-                            self.finish(slot, a, None);
-                        } else {
-                            self.slots[slot] = Some(a);
-                        }
+                        self.occupy(slot, a);
                     }
                     Err(e) => {
                         if e.downcast_ref::<OutOfPages>().is_some() && self.busy() > 0 {
                             // pages will free as in-flight work completes
                             self.engine.cache.reset_slot(slot);
-                            self.preempted.push_front(pe);
+                            self.preempted.requeue(pe);
                             break;
                         }
                         self.respond_error(pe.req, pe.started, format!("resume failed: {e:#}"));
@@ -234,7 +406,7 @@ impl Scheduler {
             let started = Instant::now();
             let prompt = self.clamp_prompt(&req.prompt, req.max_new_tokens);
             match self.prefill_with_reuse(slot, &prompt) {
-                Ok(first) => {
+                Ok((first, _reused)) => {
                     let ttft = started.elapsed();
                     let a = ActiveSlot {
                         req,
@@ -243,11 +415,7 @@ impl Scheduler {
                         started,
                         ttft,
                     };
-                    if self.done_after_prefill(&a, slot) {
-                        self.finish(slot, a, None);
-                    } else {
-                        self.slots[slot] = Some(a);
-                    }
+                    self.occupy(slot, a);
                 }
                 Err(e) => {
                     if e.downcast_ref::<OutOfPages>().is_some()
@@ -266,10 +434,11 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Evict the youngest request(s) until the next decode step fits in the
-    /// page pool (no-op for the dense arm). A lone request that exhausts the
-    /// pool by itself is completed with what it has — there is nothing left
-    /// to evict.
+    /// Evict request(s) until the next decode step fits in the page pool
+    /// (no-op for the dense arm). Victims are chosen by `victim_score` and
+    /// evicted by swap-out or recompute per `choose_preempt_action`. A lone
+    /// request that exhausts the pool by itself is completed with what it
+    /// has — there is nothing left to evict.
     fn preempt_for_headroom(&mut self) {
         loop {
             let active: Vec<usize> = self
@@ -302,16 +471,59 @@ impl Scheduler {
             }
             let victim = *active
                 .iter()
-                .max_by_key(|&&i| self.slots[i].as_ref().unwrap().started)
+                .max_by_key(|&&i| {
+                    let a = self.slots[i].as_ref().unwrap();
+                    let pages = self.engine.cache.slot_pages(i);
+                    let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
+                    // ties fall to the youngest (largest start time)
+                    (victim_score(pages, remaining), a.started)
+                })
                 .unwrap();
             let a = self.slots[victim].take().unwrap();
-            self.engine.cache.reset_slot(victim);
+            // what a recompute resume would have to re-prefill
+            let cap = self.engine.s_max.saturating_sub(a.req.max_new_tokens + 1);
+            let recompute_tokens = a.req.prompt.len().min(cap) + a.generated.len() - 1;
+            // swap_out_bytes walks the victim's block table; skip it (and the
+            // cost model) entirely on the default recompute-only path
+            let action = if self.swap_policy != SwapPolicy::Off
+                && self.engine.cache.swap_enabled()
+            {
+                choose_preempt_action(
+                    self.swap_policy,
+                    true,
+                    self.engine.cache.swap_out_bytes(victim),
+                    recompute_tokens,
+                    self.engine.cache.per_token_kv_bytes(),
+                    self.engine.prefill_chunk,
+                )
+            } else {
+                PreemptAction::Recompute
+            };
+            let swap = if action == PreemptAction::SwapOut {
+                match self.engine.cache.swap_out(victim) {
+                    Ok(h) => {
+                        self.metrics.record_swap_out(h.host_bytes);
+                        Some(h)
+                    }
+                    Err(_) => {
+                        // host arena full: recompute instead
+                        self.metrics.record_swap_stall();
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            if swap.is_none() {
+                self.engine.cache.reset_slot(victim);
+            }
             self.metrics.record_preemption();
-            self.preempted.push_front(Preempted {
+            self.preempted.enqueue(Preempted {
                 req: a.req,
                 generated: a.generated,
                 started: a.started,
                 ttft: a.ttft,
+                swap,
             });
         }
     }
@@ -405,7 +617,7 @@ impl Scheduler {
 
 #[cfg(test)]
 mod tests {
-    use super::generation_done;
+    use super::*;
 
     #[test]
     fn completion_has_no_extra_decode_step() {
@@ -419,5 +631,68 @@ mod tests {
         assert!(!generation_done(1, 8, 255, 256));
         // max_new = 0 completes immediately after prefill's token
         assert!(generation_done(1, 0, 1, 256));
+    }
+
+    #[test]
+    fn preempted_requests_resume_in_fifo_order() {
+        // regression: push_front + pop_front (LIFO) resumed the most recent
+        // victim first, starving the oldest under sustained pressure
+        let mut q = ResumeQueue::default();
+        q.enqueue("a");
+        q.enqueue("b");
+        q.enqueue("c");
+        assert_eq!(q.next(), Some("a"), "oldest victim resumes first");
+        // could not admit "a" yet: it keeps its place at the head
+        q.requeue("a");
+        q.enqueue("d");
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.next(), Some("a"));
+        assert_eq!(q.next(), Some("b"));
+        assert_eq!(q.next(), Some("c"));
+        assert_eq!(q.next(), Some("d"));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn victim_score_ranks_by_page_time() {
+        // long-context mid-generation request outranks a short nearly-done one
+        assert!(victim_score(9, 50) > victim_score(3, 2));
+        // same pages: more remaining work -> better victim (eviction cost
+        // amortizes over more future decode steps)
+        assert!(victim_score(4, 30) > victim_score(4, 3));
+        // floors keep degenerate inputs ordered rather than all-zero
+        assert_eq!(victim_score(0, 0), 1);
+        assert!(victim_score(2, 0) > victim_score(0, 0));
+    }
+
+    #[test]
+    fn preempt_action_policy_table() {
+        use PreemptAction::*;
+        let ptb = 64; // per-token kv bytes
+        let chunk = 32;
+        // off / no swap tier: always recompute
+        assert_eq!(choose_preempt_action(SwapPolicy::Off, true, 1 << 20, 512, ptb, chunk), Recompute);
+        assert_eq!(choose_preempt_action(SwapPolicy::Auto, false, 0, 512, ptb, chunk), Recompute);
+        // always: swap whenever a tier exists
+        assert_eq!(choose_preempt_action(SwapPolicy::Always, true, 1 << 20, 8, ptb, chunk), SwapOut);
+        // auto crossover: short context recomputes, long context swaps.
+        // swap bytes ~ ctx tokens * ptb (fully private pages)
+        let short = 32;
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, short * ptb, short, ptb, chunk),
+            Recompute,
+            "one-chunk re-prefill beats a 2x byte round trip"
+        );
+        let long = 512;
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, long * ptb, long, ptb, chunk),
+            SwapOut,
+            "quadratic re-prefill traffic dwarfs the swap copy"
+        );
+        // prefix-shared victim: most pages re-link, so swapping gets cheaper
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, 8 * ptb, 96, ptb, chunk),
+            SwapOut
+        );
     }
 }

@@ -14,9 +14,10 @@
 //! `prefill_reuse`, `register_prefix`) default to dense no-ops: a dense
 //! engine admits purely by free slots and never preempts.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use xla::Literal;
 
+use super::swap::{SwapHandle, SwapPolicy, SwapStats};
 use crate::tensor::Tensor;
 
 /// Pool sizing for the paged arm. Precedence: `total_blocks`, then
@@ -30,13 +31,20 @@ pub struct PagedOptions {
     pub total_blocks: Option<usize>,
     /// Pool byte budget; converted to pages at construction.
     pub budget_mib: Option<f64>,
+    /// Host swap-tier byte budget; `Some` attaches a `HostSwapArena` so the
+    /// scheduler can evict by swap-out instead of recompute.
+    pub swap_mib: Option<f64>,
+    /// Scheduler eviction policy (only meaningful with a swap tier).
+    pub swap_policy: SwapPolicy,
 }
 
-/// Memory accounting snapshot. `bytes_total` is the resident footprint
-/// (pre-allocated pool for the paged arm, full buffers for dense);
+/// Memory accounting snapshot. `bytes_total` is the *device* resident
+/// footprint (pre-allocated pool for the paged arm, full buffers for dense);
 /// `bytes_live` is the portion referenced by in-flight sequences;
 /// `frag_bytes` is allocated-but-unfilled space (partial tail pages for
-/// paged, the unreached `[len, s_max)` tail for dense).
+/// paged, the unreached `[len, s_max)` tail for dense). The host tier is
+/// accounted separately — `kv_bytes()` stays device-only so capacity benches
+/// can report both tiers without double counting.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MemStats {
     pub bytes_total: usize,
@@ -45,6 +53,10 @@ pub struct MemStats {
     pub blocks_total: usize,
     pub blocks_live: usize,
     pub blocks_free: usize,
+    /// Host swap-tier reservation (0 when no swap tier is configured).
+    pub host_bytes_total: usize,
+    /// Host swap-tier bytes pinned by outstanding `SwapHandle`s.
+    pub host_bytes_used: usize,
 }
 
 /// Typed marker for page-pool exhaustion. The scheduler downcasts prefill
@@ -150,4 +162,62 @@ pub trait CacheBackend {
     /// Publish a slot's full prompt pages into the prefix index so later
     /// requests with the same prefix can reuse them.
     fn register_prefix(&mut self, _slot: usize, _prompt: &[i32]) {}
+
+    // ---- host swap tier (two-level cache hierarchy) ----
+
+    /// Whether this backend has a host swap tier to evict into. Dense: true
+    /// (the reference arm swaps whole slot regions, unbounded — it never
+    /// preempts, so this exists for parity and tests). Paged: true when a
+    /// `HostSwapArena` was configured via `swap_mib`.
+    fn swap_enabled(&self) -> bool {
+        false
+    }
+
+    /// Device pages a slot currently holds (cost-model input; 0 for dense).
+    fn slot_pages(&self, _slot: usize) -> usize {
+        0
+    }
+
+    /// Bytes a `swap_out` of this slot would move to the host right now
+    /// (prefix-index-linked pages move nothing). Cost-model input.
+    fn swap_out_bytes(&self, _slot: usize) -> usize {
+        0
+    }
+
+    /// Mean device bytes one cached token costs across layers (cost-model
+    /// input for comparing swap traffic against re-prefill work).
+    fn per_token_kv_bytes(&self) -> usize {
+        self.kv_bytes() / (self.batch() * self.s_max()).max(1)
+    }
+
+    /// Evict a slot's KV state to the host tier, freeing its device pages.
+    /// On `HostArenaFull` the slot is left intact and the caller falls back
+    /// to recompute preemption.
+    fn swap_out(&mut self, _slot: usize) -> Result<SwapHandle> {
+        bail!("this cache backend has no swap tier")
+    }
+
+    /// Whether a swapped sequence's device pages fit right now (pages that
+    /// must be allocated or resurrected, plus one decode page of headroom —
+    /// the swap-aware admission gate).
+    fn can_swap_in(&self, _h: &SwapHandle) -> bool {
+        false
+    }
+
+    /// Restore a swapped sequence into a fresh slot: host pages are copied
+    /// back, prefix-index-linked pages are re-linked (resurrect/incref).
+    /// Validates before mutating; on `SwapLost` the cache is unchanged and
+    /// the caller should `release_swap` and re-prefill instead.
+    fn swap_in(&mut self, _slot: usize, _h: &SwapHandle) -> Result<()> {
+        bail!("this cache backend has no swap tier")
+    }
+
+    /// Free the handle's host-tier bytes (after a successful `swap_in`, or
+    /// when abandoning the handle for the recompute fallback).
+    fn release_swap(&mut self, _h: SwapHandle) {}
+
+    /// Host-tier traffic counters.
+    fn swap_stats(&self) -> SwapStats {
+        SwapStats::default()
+    }
 }

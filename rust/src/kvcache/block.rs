@@ -72,6 +72,13 @@ impl BlockPool {
         self.refc[id as usize]
     }
 
+    /// Whether a block currently sits on the free list (refcount 0, content
+    /// still addressable until recycled). Swap-in uses this to count how
+    /// many free-list entries a re-link pass will consume via `resurrect`.
+    pub fn is_free(&self, id: BlockId) -> bool {
+        self.in_free[id as usize]
+    }
+
     pub fn incref(&mut self, id: BlockId) {
         debug_assert!(!self.in_free[id as usize], "incref on a free block");
         self.refc[id as usize] += 1;

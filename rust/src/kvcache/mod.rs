@@ -18,6 +18,7 @@
 pub mod backend;
 pub mod block;
 pub mod paged;
+pub mod swap;
 
 use anyhow::{bail, Result};
 
@@ -28,6 +29,28 @@ use crate::tensor::Tensor;
 pub use backend::{CacheBackend, MemStats, OutOfPages, PagedOptions};
 pub use block::{BlockId, BlockPool};
 pub use paged::PagedKvCache;
+pub use swap::{
+    HostArenaFull, HostSwapArena, SwapHandle, SwapLost, SwapPage, SwapPayload, SwapPolicy,
+    SwapStats,
+};
+
+/// The tensors of one layer in dense swap serialization order (every
+/// allocated buffer; unset modes contribute nothing). One macro generates
+/// the shared-`&` and `&mut` variants, so swap-out and swap-in can never
+/// disagree on the byte order — a reorder of equal-size tensors would
+/// otherwise slip past the blob-length check.
+/// `swap_tensor_list!(lc)` -> `[&Option<Tensor>; 10]`,
+/// `swap_tensor_list!(lc, mut)` -> `[&mut Option<Tensor>; 10]`.
+macro_rules! swap_tensor_list {
+    ($lc:expr $(, $mt:tt)?) => {
+        [
+            & $($mt)? $lc.k_codes, & $($mt)? $lc.k_scale, & $($mt)? $lc.k_zero,
+            & $($mt)? $lc.v_codes, & $($mt)? $lc.v_scale, & $($mt)? $lc.v_zero,
+            & $($mt)? $lc.k_res, & $($mt)? $lc.v_res,
+            & $($mt)? $lc.k_fp, & $($mt)? $lc.v_fp,
+        ]
+    };
+}
 
 /// Per-layer cache buffers for a batch of `b` slots.
 #[derive(Debug, Clone)]
@@ -164,6 +187,10 @@ pub struct KvCache {
     residual: usize,
     n_kv_heads: usize,
     head_dim: usize,
+    /// Host-tier bytes pinned by outstanding swap handles (the dense arm's
+    /// swap tier is unbounded: slot regions are serialized into the handle).
+    swap_bytes_used: usize,
+    swap_stats: SwapStats,
 }
 
 impl KvCache {
@@ -184,8 +211,11 @@ impl KvCache {
             residual: cfg.residual,
             n_kv_heads: cfg.n_kv_heads,
             head_dim: cfg.head_dim,
+            swap_bytes_used: 0,
+            swap_stats: SwapStats::default(),
         })
     }
+
 
     pub fn reset_slot(&mut self, slot: usize) {
         self.pos[slot] = 0;
@@ -556,7 +586,125 @@ impl CacheBackend for KvCache {
             blocks_total: 0,
             blocks_live: 0,
             blocks_free: 0,
+            // dense swap tier is unbounded: the reservation IS the usage
+            host_bytes_total: self.swap_bytes_used,
+            host_bytes_used: self.swap_bytes_used,
         }
+    }
+
+    // ---- host swap tier (dense reference arm) ----
+    //
+    // The dense arm never preempts (its capacity is pre-reserved), but it
+    // implements swap so the two arms stay behaviorally interchangeable and
+    // swap round-trips can be verified against the reference layout. A
+    // slot's entire per-layer regions are serialized into the handle.
+
+    fn swap_enabled(&self) -> bool {
+        true
+    }
+
+    fn swap_out_bytes(&self, _slot: usize) -> usize {
+        self.layers.iter().map(|l| l.kv_bytes()).sum::<usize>() / self.batch
+    }
+
+    fn swap_out(&mut self, slot: usize) -> Result<SwapHandle> {
+        let batch = self.batch;
+        let mut blob: Vec<u8> = Vec::new();
+        for lc in &self.layers {
+            for t in swap_tensor_list!(lc).iter().filter_map(|o| o.as_ref()) {
+                let per = t.numel() / batch;
+                match &t.data {
+                    crate::tensor::Data::F32(v) => {
+                        swap::append_f32s(&mut blob, &v[slot * per..(slot + 1) * per])
+                    }
+                    crate::tensor::Data::U8(v) => {
+                        blob.extend_from_slice(&v[slot * per..(slot + 1) * per])
+                    }
+                    crate::tensor::Data::I32(v) => {
+                        swap::append_i32s(&mut blob, &v[slot * per..(slot + 1) * per])
+                    }
+                }
+            }
+        }
+        let handle = SwapHandle {
+            pos: self.pos[slot],
+            cache_len: self.layers.iter().map(|l| l.cache_len[slot]).collect(),
+            res_len: self.layers.iter().map(|l| l.res_len[slot]).collect(),
+            host_bytes: blob.len(),
+            payload: SwapPayload::Dense(blob),
+        };
+        self.reset_slot(slot);
+        self.swap_bytes_used += handle.host_bytes;
+        self.swap_stats.swap_outs += 1;
+        self.swap_stats.bytes_out += handle.host_bytes as u64;
+        Ok(handle)
+    }
+
+    fn can_swap_in(&self, h: &SwapHandle) -> bool {
+        matches!(h.payload, SwapPayload::Dense(_))
+    }
+
+    fn swap_in(&mut self, slot: usize, h: &SwapHandle) -> Result<()> {
+        let SwapPayload::Dense(blob) = &h.payload else {
+            bail!("paged swap handle offered to the dense arm");
+        };
+        anyhow::ensure!(
+            h.cache_len.len() == self.layers.len(),
+            "swap handle layer count mismatch"
+        );
+        // validate the byte layout before touching anything
+        let batch = self.batch;
+        let mut expected = 0usize;
+        for lc in &self.layers {
+            for t in swap_tensor_list!(lc).iter().filter_map(|o| o.as_ref()) {
+                let per = t.numel() / batch;
+                expected += match &t.data {
+                    crate::tensor::Data::U8(_) => per,
+                    _ => per * 4,
+                };
+            }
+        }
+        anyhow::ensure!(
+            blob.len() == expected,
+            "swap handle holds {} bytes but this cache's slot region is {expected}",
+            blob.len()
+        );
+        let mut off = 0usize;
+        for lc in &mut self.layers {
+            for t in swap_tensor_list!(lc, mut).into_iter().filter_map(|o| o.as_mut()) {
+                let per = t.numel() / batch;
+                match &mut t.data {
+                    crate::tensor::Data::F32(v) => {
+                        swap::read_f32s(blob, &mut off, &mut v[slot * per..(slot + 1) * per])
+                    }
+                    crate::tensor::Data::U8(v) => {
+                        swap::read_u8s(blob, &mut off, &mut v[slot * per..(slot + 1) * per])
+                    }
+                    crate::tensor::Data::I32(v) => {
+                        swap::read_i32s(blob, &mut off, &mut v[slot * per..(slot + 1) * per])
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(off, blob.len());
+        for (l, lc) in self.layers.iter_mut().enumerate() {
+            lc.cache_len[slot] = h.cache_len[l];
+            lc.res_len[slot] = h.res_len[l];
+        }
+        self.pos[slot] = h.pos;
+        self.swap_stats.swap_ins += 1;
+        self.swap_stats.bytes_in += h.host_bytes as u64;
+        Ok(())
+    }
+
+    fn release_swap(&mut self, h: SwapHandle) {
+        if let SwapPayload::Dense(blob) = &h.payload {
+            self.swap_bytes_used = self.swap_bytes_used.saturating_sub(blob.len());
+        }
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        self.swap_stats.clone()
     }
 }
 

@@ -28,6 +28,9 @@ use crate::tensor::Tensor;
 
 use super::backend::{CacheBackend, MemStats, OutOfPages, PagedOptions};
 use super::block::{BlockId, BlockPool};
+use super::swap::{
+    self, HostArenaFull, HostSwapArena, SwapHandle, SwapLost, SwapPage, SwapPayload, SwapStats,
+};
 
 /// One layer's page arenas. Unused arenas for the layer's mode stay empty.
 #[derive(Debug)]
@@ -142,6 +145,84 @@ fn per_block_bytes(cfg: &ModelConfig, specs: &[LayerSpec], page: usize) -> Resul
     Ok(total)
 }
 
+/// Serialize one physical page (all layers) into a host slot, with the same
+/// per-layer per-precision strides the device arenas use, so a later
+/// `deserialize_page` is a pure byte copy — bit-exact with never-evicted
+/// state. Free function so callers can borrow the layer arenas and the host
+/// arena disjointly.
+fn serialize_page(layers: &[PagedLayer], h: usize, p: usize, dh: usize, id: usize, dst: &mut [u8]) {
+    let mut off = 0usize;
+    for l in layers {
+        match l.spec.mode {
+            Mode::Fp => {
+                let n = h * p * dh;
+                swap::write_f32s(dst, &mut off, &l.k_fp[id * n..(id + 1) * n]);
+                swap::write_f32s(dst, &mut off, &l.v_fp[id * n..(id + 1) * n]);
+            }
+            Mode::Token => {
+                let (nk, nv, ns) = (h * p * l.kp, h * p * l.vp, h * p);
+                swap::write_u8s(dst, &mut off, &l.k_codes[id * nk..(id + 1) * nk]);
+                swap::write_f32s(dst, &mut off, &l.k_scale[id * ns..(id + 1) * ns]);
+                swap::write_f32s(dst, &mut off, &l.k_zero[id * ns..(id + 1) * ns]);
+                swap::write_u8s(dst, &mut off, &l.v_codes[id * nv..(id + 1) * nv]);
+                swap::write_f32s(dst, &mut off, &l.v_scale[id * ns..(id + 1) * ns]);
+                swap::write_f32s(dst, &mut off, &l.v_zero[id * ns..(id + 1) * ns]);
+            }
+            Mode::Kivi => {
+                let (nk, nv, nc, ns) = (h * p * l.kp, h * p * l.vp, h * dh, h * p);
+                swap::write_u8s(dst, &mut off, &l.k_codes[id * nk..(id + 1) * nk]);
+                swap::write_f32s(dst, &mut off, &l.k_scale[id * nc..(id + 1) * nc]);
+                swap::write_f32s(dst, &mut off, &l.k_zero[id * nc..(id + 1) * nc]);
+                swap::write_u8s(dst, &mut off, &l.v_codes[id * nv..(id + 1) * nv]);
+                swap::write_f32s(dst, &mut off, &l.v_scale[id * ns..(id + 1) * ns]);
+                swap::write_f32s(dst, &mut off, &l.v_zero[id * ns..(id + 1) * ns]);
+            }
+        }
+    }
+    debug_assert_eq!(off, dst.len(), "host slot size must equal block_bytes_all");
+}
+
+/// Inverse of `serialize_page`: scatter a host slot's bytes back into a
+/// freshly allocated device page.
+fn deserialize_page(
+    layers: &mut [PagedLayer],
+    h: usize,
+    p: usize,
+    dh: usize,
+    id: usize,
+    src: &[u8],
+) {
+    let mut off = 0usize;
+    for l in layers {
+        match l.spec.mode {
+            Mode::Fp => {
+                let n = h * p * dh;
+                swap::read_f32s(src, &mut off, &mut l.k_fp[id * n..(id + 1) * n]);
+                swap::read_f32s(src, &mut off, &mut l.v_fp[id * n..(id + 1) * n]);
+            }
+            Mode::Token => {
+                let (nk, nv, ns) = (h * p * l.kp, h * p * l.vp, h * p);
+                swap::read_u8s(src, &mut off, &mut l.k_codes[id * nk..(id + 1) * nk]);
+                swap::read_f32s(src, &mut off, &mut l.k_scale[id * ns..(id + 1) * ns]);
+                swap::read_f32s(src, &mut off, &mut l.k_zero[id * ns..(id + 1) * ns]);
+                swap::read_u8s(src, &mut off, &mut l.v_codes[id * nv..(id + 1) * nv]);
+                swap::read_f32s(src, &mut off, &mut l.v_scale[id * ns..(id + 1) * ns]);
+                swap::read_f32s(src, &mut off, &mut l.v_zero[id * ns..(id + 1) * ns]);
+            }
+            Mode::Kivi => {
+                let (nk, nv, nc, ns) = (h * p * l.kp, h * p * l.vp, h * dh, h * p);
+                swap::read_u8s(src, &mut off, &mut l.k_codes[id * nk..(id + 1) * nk]);
+                swap::read_f32s(src, &mut off, &mut l.k_scale[id * nc..(id + 1) * nc]);
+                swap::read_f32s(src, &mut off, &mut l.k_zero[id * nc..(id + 1) * nc]);
+                swap::read_u8s(src, &mut off, &mut l.v_codes[id * nv..(id + 1) * nv]);
+                swap::read_f32s(src, &mut off, &mut l.v_scale[id * ns..(id + 1) * ns]);
+                swap::read_f32s(src, &mut off, &mut l.v_zero[id * ns..(id + 1) * ns]);
+            }
+        }
+    }
+    debug_assert_eq!(off, src.len(), "host slot size must equal block_bytes_all");
+}
+
 fn chain_hash(parent: u64, toks: &[i32]) -> u64 {
     // FNV-1a over the parent hash and the page's token ids; exact token
     // comparison on lookup makes collisions harmless.
@@ -180,6 +261,8 @@ pub struct PagedKvCache {
     h: usize,
     dh: usize,
     block_bytes_all: usize,
+    /// Host swap tier (None = recompute-only preemption, PR 1 behavior).
+    swap: Option<HostSwapArena>,
     pub cow_copies: u64,
     pub prefix_hits: u64,
     pub prefix_tokens_reused: u64,
@@ -237,6 +320,10 @@ impl PagedKvCache {
             .iter()
             .map(|&sp| PagedLayer::new(cfg, sp, batch, total_blocks, page))
             .collect::<Result<Vec<_>>>()?;
+        let swap = match opts.swap_mib {
+            Some(mib) => Some(HostSwapArena::new(block_bytes_all, mib)?),
+            None => None,
+        };
         Ok(PagedKvCache {
             layers,
             tables: vec![Vec::new(); batch],
@@ -253,6 +340,7 @@ impl PagedKvCache {
             h: cfg.n_kv_heads,
             dh: cfg.head_dim,
             block_bytes_all,
+            swap,
             cow_copies: 0,
             prefix_hits: 0,
             prefix_tokens_reused: 0,
@@ -282,8 +370,58 @@ impl PagedKvCache {
         self.pool.ref_count(id)
     }
 
+    /// Bytes of one page summed over all layers (host swap slot size).
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes_all
+    }
+
+    pub fn host_swap_slots(&self) -> Option<(usize, usize)> {
+        self.swap.as_ref().map(|a| (a.free_slots(), a.total_slots()))
+    }
+
     fn blocks_for(&self, tokens: usize) -> usize {
         (tokens + self.page - 1) / self.page
+    }
+
+    /// One slot's kivi fp residual-ring bytes across layers (swapped along
+    /// with the pages; they live outside the page pool).
+    fn residual_slot_bytes(&self) -> usize {
+        self.layers.iter().filter(|l| l.spec.mode == Mode::Kivi).count()
+            * 2
+            * self.h
+            * self.residual
+            * self.dh
+            * 4
+    }
+
+    /// Resolve a recorded prefix link against the index, with the same
+    /// exact-token verification `prefill_reuse` applies.
+    fn lookup_linked(&self, hash: u64, parent: u64, tokens: &[i32]) -> Option<BlockId> {
+        self.index.get(&hash).copied().filter(|&id| {
+            self.block_tokens[id as usize]
+                .as_ref()
+                .map(|(par, t)| *par == parent && t.as_slice() == tokens)
+                .unwrap_or(false)
+        })
+    }
+
+    /// Whether this block is currently addressable through the prefix index.
+    fn is_indexed(&self, id: BlockId) -> bool {
+        matches!(self.block_hash[id as usize], Some(h) if self.index.get(&h) == Some(&id))
+            && self.block_tokens[id as usize].is_some()
+    }
+
+    /// Whether a swap-out of one of this block's holders can record the page
+    /// by chain hash instead of copying its bytes. Being indexed is not
+    /// enough: after the victim's decref a refcount-0 page sits on the free
+    /// list, and the very pool pressure that caused the preemption will
+    /// recycle it before the sequence resumes — the link must be backed by
+    /// another *resident* holder (refcount > 1), so the page stays live.
+    /// Pages whose co-holders exit while the victim is away drop to the free
+    /// list and can still be resurrected at swap-in; if even that fails the
+    /// `SwapLost` fallback re-prefills.
+    fn can_relink(&self, id: BlockId) -> bool {
+        self.is_indexed(id) && self.pool.ref_count(id) > 1
     }
 
     // ---- allocation / copy-on-write ----
@@ -797,6 +935,8 @@ impl CacheBackend for PagedKvCache {
             blocks_total: self.pool.total(),
             blocks_live,
             blocks_free: self.pool.free_count(),
+            host_bytes_total: self.swap.as_ref().map(|a| a.bytes_total()).unwrap_or(0),
+            host_bytes_used: self.swap.as_ref().map(|a| a.bytes_used()).unwrap_or(0),
         }
     }
 
@@ -901,5 +1041,235 @@ impl CacheBackend for PagedKvCache {
             }
             parent = hsh;
         }
+    }
+
+    // ---- host swap tier ----
+
+    fn swap_enabled(&self) -> bool {
+        self.swap.is_some()
+    }
+
+    fn slot_pages(&self, slot: usize) -> usize {
+        self.tables[slot].len()
+    }
+
+    fn swap_out_bytes(&self, slot: usize) -> usize {
+        let host_pages = self
+            .tables[slot]
+            .iter()
+            .filter(|&&id| !self.can_relink(id))
+            .count();
+        host_pages * self.block_bytes_all + self.residual_slot_bytes()
+    }
+
+    fn per_token_kv_bytes(&self) -> usize {
+        (self.block_bytes_all / self.page).max(1)
+    }
+
+    fn swap_out(&mut self, slot: usize) -> Result<SwapHandle> {
+        anyhow::ensure!(self.swap.is_some(), "no host swap tier (--swap-mib)");
+        // classify pages: prefix-indexed pages that another resident
+        // sequence keeps live are recorded by chain hash only (re-linked at
+        // swap-in); everything else — private pages, and indexed pages this
+        // victim is the last holder of — is copied into a host slot
+        let table = self.tables[slot].clone();
+        let mut pages: Vec<SwapPage> = Vec::with_capacity(table.len());
+        let mut need_host = 0usize;
+        for &id in &table {
+            if self.can_relink(id) {
+                let hash = self.block_hash[id as usize].unwrap();
+                let (parent, tokens) = self.block_tokens[id as usize].clone().unwrap();
+                pages.push(SwapPage::Linked { hash, parent, tokens });
+            } else {
+                need_host += 1;
+                pages.push(SwapPage::Host(u32::MAX)); // slot filled below
+            }
+        }
+        // the byte budget covers the residual blobs too, so host_bytes_used
+        // can never exceed host_bytes_total
+        let res_bytes = self.residual_slot_bytes();
+        {
+            let arena = self.swap.as_mut().unwrap();
+            if !arena.can_hold(need_host, res_bytes) {
+                arena.stats.swap_out_rejected += 1;
+                return Err(anyhow::Error::new(HostArenaFull));
+            }
+        }
+        // kivi residual rings ride along inside the handle (full ring region
+        // for bit-exactness; res_len masks validity exactly as on device)
+        let mut residual: Vec<u8> = Vec::new();
+        let rn = self.h * self.residual * self.dh;
+        for l in &self.layers {
+            if l.spec.mode == Mode::Kivi {
+                swap::append_f32s(&mut residual, &l.k_res[slot * rn..(slot + 1) * rn]);
+                swap::append_f32s(&mut residual, &l.v_res[slot * rn..(slot + 1) * rn]);
+            }
+        }
+        // commit: copy private pages out, then drop every device reference
+        let (h, p, dh) = (self.h, self.page, self.dh);
+        let mut copied = 0u64;
+        for (bi, pg) in pages.iter_mut().enumerate() {
+            let id = table[bi];
+            if let SwapPage::Host(hs) = pg {
+                let arena = self.swap.as_mut().unwrap();
+                *hs = arena.alloc().expect("free_slots checked above");
+                let dst = arena.slot_mut(*hs);
+                serialize_page(&self.layers, h, p, dh, id as usize, dst);
+                copied += 1;
+            }
+            self.pool.decref(id);
+        }
+        self.tables[slot].clear();
+        let handle = SwapHandle {
+            pos: self.pos[slot],
+            cache_len: self.layers.iter().map(|l| l.cache_len[slot]).collect(),
+            res_len: self.layers.iter().map(|l| l.res_len[slot]).collect(),
+            host_bytes: copied as usize * self.block_bytes_all + residual.len(),
+            payload: SwapPayload::Paged { pages, residual },
+        };
+        for l in &mut self.layers {
+            l.cache_len[slot] = 0;
+            l.res_len[slot] = 0;
+        }
+        self.pos[slot] = 0;
+        let arena = self.swap.as_mut().unwrap();
+        arena.add_residual_bytes(match &handle.payload {
+            SwapPayload::Paged { residual, .. } => residual.len(),
+            _ => 0,
+        });
+        arena.stats.swap_outs += 1;
+        arena.stats.bytes_out += handle.host_bytes as u64;
+        arena.stats.pages_copied_out += copied;
+        Ok(handle)
+    }
+
+    fn can_swap_in(&self, sh: &SwapHandle) -> bool {
+        let SwapPayload::Paged { pages, .. } = &sh.payload else {
+            return false;
+        };
+        // pages that will consume a free-list entry: host copies (fresh
+        // alloc) and linked pages whose block is currently free (resurrect);
+        // a lost link is counted like a fresh page so the attempt proceeds
+        // and the SwapLost fallback fires instead of stalling forever
+        let mut need_free = 0usize;
+        for pg in pages {
+            match pg {
+                SwapPage::Host(_) => need_free += 1,
+                SwapPage::Linked { hash, parent, tokens } => {
+                    match self.lookup_linked(*hash, *parent, tokens) {
+                        Some(id) if !self.pool.is_free(id) => {}
+                        _ => need_free += 1,
+                    }
+                }
+            }
+        }
+        // one decode page of headroom, mirroring `can_admit`
+        self.pool.free_count() >= need_free + 1
+    }
+
+    fn swap_in(&mut self, slot: usize, sh: &SwapHandle) -> Result<()> {
+        let SwapPayload::Paged { pages, residual } = &sh.payload else {
+            bail!("dense swap handle offered to the paged arm");
+        };
+        anyhow::ensure!(
+            sh.cache_len.len() == self.layers.len(),
+            "swap handle layer count mismatch"
+        );
+        anyhow::ensure!(self.tables[slot].is_empty(), "swap_in needs a fresh slot");
+        // validate before mutating: every linked page must still resolve
+        let mut resolved: Vec<Option<BlockId>> = Vec::with_capacity(pages.len());
+        let mut need_free = 0usize;
+        for pg in pages {
+            match pg {
+                SwapPage::Host(_) => {
+                    resolved.push(None);
+                    need_free += 1;
+                }
+                SwapPage::Linked { hash, parent, tokens } => {
+                    match self.lookup_linked(*hash, *parent, tokens) {
+                        Some(id) => {
+                            if self.pool.is_free(id) {
+                                need_free += 1;
+                            }
+                            resolved.push(Some(id));
+                        }
+                        None => {
+                            if let Some(a) = self.swap.as_mut() {
+                                a.stats.swap_in_lost += 1;
+                            }
+                            return Err(anyhow::Error::new(SwapLost));
+                        }
+                    }
+                }
+            }
+        }
+        if self.pool.free_count() < need_free {
+            return Err(anyhow::Error::new(OutOfPages));
+        }
+        // commit pass 1: pin every linked page (resurrect/incref) so pass 2
+        // allocations cannot recycle them out from under this handle
+        let mut new_table: Vec<BlockId> = vec![0; pages.len()];
+        let mut relinked = 0u64;
+        for (bi, r) in resolved.iter().enumerate() {
+            if let Some(id) = *r {
+                if !self.pool.resurrect(id) {
+                    self.pool.incref(id);
+                }
+                new_table[bi] = id;
+                relinked += 1;
+            }
+        }
+        // commit pass 2: copy host pages into fresh device pages (cannot
+        // fail: free_count was checked and pass 1 pinned the linked pages)
+        let (h, p, dh) = (self.h, self.page, self.dh);
+        let mut copied = 0u64;
+        for (bi, pg) in pages.iter().enumerate() {
+            if let SwapPage::Host(hs) = pg {
+                let id = self.alloc_block()?;
+                let arena = self.swap.as_ref().unwrap();
+                let src = arena.slot(*hs);
+                deserialize_page(&mut self.layers, h, p, dh, id as usize, src);
+                new_table[bi] = id;
+                copied += 1;
+            }
+        }
+        self.tables[slot] = new_table;
+        for (l, lc) in self.layers.iter_mut().enumerate() {
+            lc.cache_len[slot] = sh.cache_len[l];
+            lc.res_len[slot] = sh.res_len[l];
+        }
+        self.pos[slot] = sh.pos;
+        let rn = self.h * self.residual * self.dh;
+        let mut off = 0usize;
+        for l in &mut self.layers {
+            if l.spec.mode == Mode::Kivi {
+                swap::read_f32s(residual, &mut off, &mut l.k_res[slot * rn..(slot + 1) * rn]);
+                swap::read_f32s(residual, &mut off, &mut l.v_res[slot * rn..(slot + 1) * rn]);
+            }
+        }
+        debug_assert_eq!(off, residual.len());
+        let arena = self.swap.as_mut().unwrap();
+        arena.stats.swap_ins += 1;
+        arena.stats.bytes_in += sh.host_bytes as u64;
+        arena.stats.pages_copied_in += copied;
+        arena.stats.pages_relinked += relinked;
+        Ok(())
+    }
+
+    fn release_swap(&mut self, sh: SwapHandle) {
+        if let SwapPayload::Paged { pages, residual } = &sh.payload {
+            if let Some(arena) = self.swap.as_mut() {
+                for pg in pages {
+                    if let SwapPage::Host(hs) = pg {
+                        arena.release(*hs);
+                    }
+                }
+                arena.sub_residual_bytes(residual.len());
+            }
+        }
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        self.swap.as_ref().map(|a| a.stats.clone()).unwrap_or_default()
     }
 }

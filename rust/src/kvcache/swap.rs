@@ -1,0 +1,345 @@
+//! Host-tier swap arena: the cold half of a two-level KV cache hierarchy.
+//!
+//! When the scheduler preempts a sequence it can now *swap* instead of
+//! recompute: every device page the sequence holds is copied — still in its
+//! packed quantized form, with the same per-layer per-precision strides as
+//! the device arenas — into a host page slot, EXCEPT prefix-indexed pages
+//! that another resident sequence keeps live (refcount > 1 after the
+//! victim's decref): those are recorded by their chain hash only, because
+//! the co-holder pins them in the pool. Swap-in is therefore a byte copy
+//! for copied pages and a *re-link* (resurrect / incref through the prefix
+//! index) for shared ones, which makes a swapped-and-resumed sequence
+//! bit-exact with one that was never evicted: no dequantize/requantize
+//! round trip, no re-prefill. (Merely-indexed refcount-0 pages are NOT
+//! linked: they sit on the free list, and the same pool pressure that
+//! forced the preemption would recycle them before the resume.)
+//!
+//! The arena is a flat `n_slots x slot_bytes` buffer (slot = one `BlockId`'s
+//! bytes summed over all layers) with a free list, sized by `--swap-mib`.
+//! Kivi residual rings live outside the page pool on the device side and ride
+//! along inside the `SwapHandle` on the host side; they are not
+//! slot-granular, but `can_hold` charges them against the same byte budget,
+//! so `bytes_used` never exceeds `bytes_total`.
+//!
+//! Failure handling is explicitly two-sided:
+//! * swap-out can fail (`HostArenaFull`) — the caller falls back to
+//!   recompute preemption, the slot untouched.
+//! * swap-in can fail (`SwapLost`) when a re-linkable page was recycled out
+//!   of the prefix index while the sequence was away — the caller releases
+//!   the handle and falls back to re-prefill (prompt + generated so far).
+
+use anyhow::{bail, Result};
+
+/// Where one logical page of a swapped sequence lives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SwapPage {
+    /// Copied into the host arena at this slot index.
+    Host(u32),
+    /// Left addressable through the device prefix index: the page's chain
+    /// hash plus its (parent hash, tokens) for exact verification at
+    /// swap-in, mirroring `prefill_reuse`'s collision check.
+    Linked { hash: u64, parent: u64, tokens: Vec<i32> },
+}
+
+/// Backend-specific payload of a swapped sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SwapPayload {
+    /// Dense arm: the slot's full per-layer buffer regions, serialized in
+    /// layer order (the dense reference arm has no pages to speak of).
+    Dense(Vec<u8>),
+    /// Paged arm: one entry per logical page, plus the kivi fp residual
+    /// rings (serialized k_res then v_res per kivi layer).
+    Paged { pages: Vec<SwapPage>, residual: Vec<u8> },
+}
+
+/// Everything needed to restore a preempted sequence into any free slot:
+/// per-layer committed/residual lengths, the absolute position, and the
+/// page payload. Produced by `CacheBackend::swap_out`, consumed (by
+/// reference) by `swap_in`, and finally freed with `release_swap`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapHandle {
+    pub pos: i32,
+    /// Committed tokens per layer at swap-out.
+    pub cache_len: Vec<i32>,
+    /// Residual tokens per layer at swap-out (kivi only).
+    pub res_len: Vec<i32>,
+    /// Host bytes this handle pins (arena page slots + residual/blob bytes);
+    /// what the swap counters report as moved per direction.
+    pub host_bytes: usize,
+    pub payload: SwapPayload,
+}
+
+/// Scheduler policy for preemption eviction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SwapPolicy {
+    /// Recompute-only preemption (PR 1 behavior, minus youngest-first).
+    #[default]
+    Off,
+    /// Swap every victim that fits in the host arena.
+    Always,
+    /// Per-victim cost model: swap when moving the bytes beats re-running
+    /// the prefill (see `choose_preempt_action`).
+    Auto,
+}
+
+impl SwapPolicy {
+    pub fn parse(s: &str) -> Result<SwapPolicy> {
+        match s {
+            "off" => Ok(SwapPolicy::Off),
+            "always" => Ok(SwapPolicy::Always),
+            "auto" => Ok(SwapPolicy::Auto),
+            other => bail!("unknown swap policy {other:?} (expected off|always|auto)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SwapPolicy::Off => "off",
+            SwapPolicy::Always => "always",
+            SwapPolicy::Auto => "auto",
+        }
+    }
+}
+
+/// Typed marker: the host arena has no free page slots for a swap-out.
+/// Callers fall back to recompute preemption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostArenaFull;
+
+impl std::fmt::Display for HostArenaFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "host swap arena exhausted")
+    }
+}
+
+impl std::error::Error for HostArenaFull {}
+
+/// Typed marker: a re-linkable prefix page was recycled out of the index
+/// while the sequence was swapped out; the swapped state is unrecoverable
+/// and the caller must fall back to re-prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwapLost;
+
+impl std::fmt::Display for SwapLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "swapped prefix pages were recycled from the device index")
+    }
+}
+
+impl std::error::Error for SwapLost {}
+
+/// Host-tier traffic and outcome counters, reported by
+/// `CacheBackend::swap_stats`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SwapStats {
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    /// Bytes moved device -> host / host -> device (re-linked pages move 0).
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+    pub pages_copied_out: u64,
+    pub pages_copied_in: u64,
+    /// Pages restored by prefix-index re-link (resurrect/incref), no copy.
+    pub pages_relinked: u64,
+    /// Swap-outs refused because the host arena was full.
+    pub swap_out_rejected: u64,
+    /// Swap-ins that failed because linked pages were recycled.
+    pub swap_in_lost: u64,
+}
+
+/// The host arena proper: `n_slots` page slots of `slot_bytes` each, a free
+/// list, and the traffic counters. One slot holds one `BlockId`'s bytes
+/// across every layer (the device pool's `block_bytes_all`).
+#[derive(Debug)]
+pub struct HostSwapArena {
+    data: Vec<u8>,
+    slot_bytes: usize,
+    free: Vec<u32>,
+    /// Handle-owned residual/blob bytes outstanding (outside the slot grid).
+    residual_bytes: usize,
+    pub stats: SwapStats,
+}
+
+impl HostSwapArena {
+    pub fn new(slot_bytes: usize, budget_mib: f64) -> Result<HostSwapArena> {
+        anyhow::ensure!(slot_bytes > 0, "host arena slot size must be > 0");
+        let budget = (budget_mib * 1024.0 * 1024.0) as usize;
+        let n_slots = budget / slot_bytes;
+        if n_slots == 0 {
+            bail!(
+                "swap budget too small: one page slot costs {slot_bytes} bytes \
+                 across all layers"
+            );
+        }
+        Ok(HostSwapArena {
+            data: vec![0u8; n_slots * slot_bytes],
+            slot_bytes,
+            free: (0..n_slots as u32).rev().collect(),
+            residual_bytes: 0,
+            stats: SwapStats::default(),
+        })
+    }
+
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.data.len() / self.slot_bytes
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Whether `host_pages` page copies plus `residual_bytes` of
+    /// handle-owned blob fit inside the configured budget right now.
+    /// Residual rings ride outside the slot grid, so the byte bound — not
+    /// just the free-slot count — is what keeps `bytes_used` under
+    /// `bytes_total`.
+    pub fn can_hold(&self, host_pages: usize, residual_bytes: usize) -> bool {
+        self.free_slots() >= host_pages
+            && self.bytes_used() + host_pages * self.slot_bytes + residual_bytes
+                <= self.bytes_total()
+    }
+
+    pub fn alloc(&mut self) -> Option<u32> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, id: u32) {
+        debug_assert!(!self.free.contains(&id), "double release of host slot {id}");
+        self.free.push(id);
+    }
+
+    pub fn slot(&self, id: u32) -> &[u8] {
+        let i = id as usize;
+        &self.data[i * self.slot_bytes..(i + 1) * self.slot_bytes]
+    }
+
+    pub fn slot_mut(&mut self, id: u32) -> &mut [u8] {
+        let i = id as usize;
+        &mut self.data[i * self.slot_bytes..(i + 1) * self.slot_bytes]
+    }
+
+    pub fn add_residual_bytes(&mut self, n: usize) {
+        self.residual_bytes += n;
+    }
+
+    pub fn sub_residual_bytes(&mut self, n: usize) {
+        self.residual_bytes = self.residual_bytes.saturating_sub(n);
+    }
+
+    /// Host tier reservation (the slot grid).
+    pub fn bytes_total(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Host bytes pinned right now: occupied slots plus handle-owned
+    /// residual bytes (which ride outside the slot grid).
+    pub fn bytes_used(&self) -> usize {
+        (self.total_slots() - self.free_slots()) * self.slot_bytes + self.residual_bytes
+    }
+}
+
+// ---- byte (de)serialization helpers ----
+//
+// f32 <-> little-endian bytes round-trips bit patterns exactly (including
+// NaN payloads), so host copies are bit-identical to the device arenas.
+
+pub(crate) fn append_f32s(dst: &mut Vec<u8>, src: &[f32]) {
+    for v in src {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) fn append_i32s(dst: &mut Vec<u8>, src: &[i32]) {
+    for v in src {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) fn write_f32s(dst: &mut [u8], off: &mut usize, src: &[f32]) {
+    for v in src {
+        dst[*off..*off + 4].copy_from_slice(&v.to_le_bytes());
+        *off += 4;
+    }
+}
+
+pub(crate) fn write_u8s(dst: &mut [u8], off: &mut usize, src: &[u8]) {
+    dst[*off..*off + src.len()].copy_from_slice(src);
+    *off += src.len();
+}
+
+pub(crate) fn read_f32s(src: &[u8], off: &mut usize, dst: &mut [f32]) {
+    for d in dst.iter_mut() {
+        *d = f32::from_le_bytes(src[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+    }
+}
+
+pub(crate) fn read_i32s(src: &[u8], off: &mut usize, dst: &mut [i32]) {
+    for d in dst.iter_mut() {
+        *d = i32::from_le_bytes(src[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+    }
+}
+
+pub(crate) fn read_u8s(src: &[u8], off: &mut usize, dst: &mut [u8]) {
+    dst.copy_from_slice(&src[*off..*off + dst.len()]);
+    *off += dst.len();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_alloc_release_and_accounting() {
+        let mut a = HostSwapArena::new(1024, 4096.0 / (1024.0 * 1024.0)).unwrap();
+        assert_eq!(a.total_slots(), 4);
+        assert_eq!(a.bytes_total(), 4096);
+        let s0 = a.alloc().unwrap();
+        let s1 = a.alloc().unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(a.free_slots(), 2);
+        a.add_residual_bytes(100);
+        assert_eq!(a.bytes_used(), 2 * 1024 + 100);
+        a.slot_mut(s0)[0] = 0xAB;
+        assert_eq!(a.slot(s0)[0], 0xAB);
+        assert_eq!(a.slot(s1)[0], 0);
+        a.release(s0);
+        a.sub_residual_bytes(100);
+        assert_eq!(a.bytes_used(), 1024);
+        assert_eq!(a.free_slots(), 3);
+    }
+
+    #[test]
+    fn arena_budget_too_small_rejected() {
+        assert!(HostSwapArena::new(1 << 20, 0.5).is_err());
+        assert!(HostSwapArena::new(0, 1.0).is_err());
+    }
+
+    #[test]
+    fn f32_bytes_round_trip_bit_exact() {
+        let src = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, 1e-38];
+        let mut blob = Vec::new();
+        append_f32s(&mut blob, &src);
+        let mut back = vec![0f32; src.len()];
+        let mut off = 0;
+        read_f32s(&blob, &mut off, &mut back);
+        assert_eq!(off, blob.len());
+        for (a, b) in src.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SwapPolicy::parse("off").unwrap(), SwapPolicy::Off);
+        assert_eq!(SwapPolicy::parse("always").unwrap(), SwapPolicy::Always);
+        assert_eq!(SwapPolicy::parse("auto").unwrap(), SwapPolicy::Auto);
+        assert!(SwapPolicy::parse("sometimes").is_err());
+        assert_eq!(SwapPolicy::default(), SwapPolicy::Off);
+    }
+}

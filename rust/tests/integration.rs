@@ -6,7 +6,7 @@ use std::sync::Arc;
 use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
 use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
 use kvtuner::engine::Engine;
-use kvtuner::kvcache::{CacheBackend, PagedOptions};
+use kvtuner::kvcache::{CacheBackend, PagedOptions, SwapPolicy};
 use kvtuner::model::Weights;
 use kvtuner::runtime::Runtime;
 use kvtuner::tuner::{self, calib, Algorithm, MooOptions, TuneOptions};
@@ -370,7 +370,7 @@ fn paged_router_oversubscribes_slots_beyond_pool() {
         prefill_chunk: 32,
         // ~1.5 sequences of prompt 40 + 24 new tokens (64 tokens = 2 pages
         // of 32) -> 3 blocks; admission headroom forces contention
-        paged: Some(PagedOptions { total_blocks: Some(3), budget_mib: None }),
+        paged: Some(PagedOptions { total_blocks: Some(3), ..PagedOptions::default() }),
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..5u64)
@@ -423,4 +423,100 @@ fn paged_router_reuses_shared_prompt_prefixes() {
     let s = &snaps[0].1;
     assert!(s.prefix_hits >= 1, "no prefix reuse recorded: {s}");
     assert!(s.prefix_tokens_reused >= 64, "reused too little: {s}");
+}
+
+#[test]
+fn swapped_engine_resume_is_bit_exact() {
+    // prefill + half the decode, swap the sequence out of the paged pool,
+    // swap it back into the *other* slot, finish decoding: the token stream
+    // and final logits must be bit-identical to an uninterrupted run.
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let rt = Arc::new(Runtime::load(dir).unwrap());
+    let cfg = rt.manifest.config.clone();
+    // kivi layers so the fp residual ring rides through the swap too
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let popts = PagedOptions { swap_mib: Some(8.0), ..PagedOptions::default() };
+    let prompt: Vec<i32> = (0..40).map(|i| (i * 3) % cfg.vocab as i32).collect();
+
+    let mut eng =
+        Engine::new_paged(rt.clone(), &cfg.name, specs.clone(), 2, 256, 32, popts).unwrap();
+    assert!(eng.cache.swap_enabled());
+    let reference = eng.generate(0, &prompt, 12).unwrap();
+    let ref_logits = eng.last_logits[0].clone();
+    eng.cache.reset_slot(0);
+
+    let mut next = eng.prefill(0, &prompt).unwrap();
+    let mut got = vec![next];
+    for _ in 0..6 {
+        next = eng.decode_step(&[next, 0], &[true, false]).unwrap()[0];
+        got.push(next);
+    }
+    let h = eng.cache.swap_out(0).unwrap();
+    assert!(h.host_bytes > 0, "private pages must move to the host tier");
+    assert!(eng.cache.can_swap_in(&h));
+    eng.cache.swap_in(1, &h).unwrap();
+    eng.cache.release_swap(h);
+    for _ in 0..5 {
+        next = eng.decode_step(&[0, next], &[false, true]).unwrap()[1];
+        got.push(next);
+    }
+    assert_eq!(got, reference, "swap round trip changed the decode");
+    assert_eq!(eng.last_logits[1].len(), ref_logits.len());
+    for (i, (a, b)) in eng.last_logits[1].iter().zip(&ref_logits).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i} diverged after swap");
+    }
+    let st = eng.cache.swap_stats();
+    assert_eq!((st.swap_outs, st.swap_ins), (1, 1));
+}
+
+#[test]
+fn swap_enabled_router_drains_oversubscribed_pool() {
+    // a pool too small for two growing sequences, with an always-swap
+    // policy: the scheduler must preempt by swap-out and resume the victim
+    // bit-exact (full token budget, no error), with swap counters moving.
+    let Some(m) = manifest() else { return };
+    let dir = kvtuner::default_artifact_dir();
+    let cfg = m.config.clone();
+    let page = cfg.group;
+    let prompt_len = page.saturating_sub(8).max(4);
+    let max_new = page + page / 2; // each sequence outgrows 2 pages
+    let workers = vec![WorkerSpec {
+        name: "paged-swap".into(),
+        model: cfg.name.clone(),
+        specs: LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), cfg.n_layers),
+        class: AccuracyClass::Balanced,
+        batch: 2,
+        s_max: 256,
+        prefill_chunk: 32,
+        paged: Some(PagedOptions {
+            total_blocks: Some(4),
+            swap_mib: Some(8.0),
+            swap_policy: SwapPolicy::Always,
+            ..PagedOptions::default()
+        }),
+    }];
+    let router = Router::start(dir, workers).unwrap();
+    let subs: Vec<_> = (0..3u64)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|j| ((j * 3 + i as usize) % cfg.vocab) as i32).collect();
+            router.submit(prompt, max_new, AccuracyClass::Balanced).unwrap()
+        })
+        .collect();
+    for sub in subs {
+        let r = sub.wait_timeout(std::time::Duration::from_secs(300)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), max_new);
+    }
+    let snaps = router.shutdown().unwrap();
+    let s = &snaps[0].1;
+    assert_eq!(s.requests_completed, 3);
+    assert!(s.preemptions >= 1, "pool must be oversubscribed: {s}");
+    assert!(s.swap_outs >= 1, "always-policy must swap victims out: {s}");
+    assert!(
+        s.swap_ins + s.swap_fallbacks >= 1,
+        "swapped victims must resume one way or the other: {s}"
+    );
+    assert_eq!(s.swap_stalls, 0, "8 MiB arena must not overflow: {s}");
 }

@@ -188,7 +188,7 @@ fn prefix_sharing_refcounts_resurrection_and_cow() {
         &specs,
         3,
         32,
-        &PagedOptions { total_blocks: Some(12), budget_mib: None },
+        &PagedOptions { total_blocks: Some(12), ..PagedOptions::default() },
     )
     .unwrap();
     let prompt: Vec<i32> = (0..20).map(|i| (i * 3 % 64) as i32).collect();
@@ -272,7 +272,7 @@ fn admission_and_decode_shortfall_track_the_pool() {
         &specs,
         2,
         32,
-        &PagedOptions { total_blocks: Some(3), budget_mib: None },
+        &PagedOptions { total_blocks: Some(3), ..PagedOptions::default() },
     )
     .unwrap();
     // 3 free blocks: a 9-token prompt needs 2 pages + 1 headroom = 3 -> ok
@@ -329,7 +329,7 @@ fn budget_caps_the_pool() {
         &specs,
         4,
         32,
-        &PagedOptions { total_blocks: None, budget_mib: Some(budget_mib) },
+        &PagedOptions { budget_mib: Some(budget_mib), ..PagedOptions::default() },
     )
     .unwrap();
     assert!(half.total_blocks() < full.total_blocks());
@@ -339,7 +339,7 @@ fn budget_caps_the_pool() {
         &specs,
         4,
         32,
-        &PagedOptions { total_blocks: None, budget_mib: Some(0.000001) }
+        &PagedOptions { budget_mib: Some(0.000001), ..PagedOptions::default() }
     )
     .is_err());
 }

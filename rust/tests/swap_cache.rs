@@ -1,0 +1,432 @@
+//! Host-tier swap correctness, pure-host (no artifacts): bit-equality of a
+//! swapped-out-and-back slot vs. never-evicted state on the dense arm, the
+//! paged arm, and the paged arm with prefix-shared pages; refcount
+//! correctness when a swapped sequence's prefix pages are concurrently
+//! resurrected by another request; the recycled-link fallback; and host
+//! arena budget/accounting.
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::kvcache::{
+    CacheBackend, HostArenaFull, KvCache, PagedKvCache, PagedOptions, SwapLost, SwapPage,
+    SwapPayload, SwapPolicy,
+};
+use kvtuner::tensor::Tensor;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "test".into(),
+        n_layers: 3,
+        d_model: 64,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 128,
+        vocab: 64,
+        rope_theta: 10000.0,
+        group: 8, // page size
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+fn mixed_specs() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP },
+        LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 4) },
+        LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(4, 2) },
+    ]
+}
+
+fn token_specs(n: usize) -> Vec<LayerSpec> {
+    LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), n)
+}
+
+/// Deterministic pseudo-random fill so round-trip comparisons are
+/// meaningful (page scrambling cannot cancel out).
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    let mut x = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    (0..n)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x % 1000) as f32 / 250.0 - 2.0
+        })
+        .collect()
+}
+
+fn fill_u8(n: usize, seed: u64) -> Vec<u8> {
+    fill(n, seed).iter().map(|v| (v.abs() * 40.0) as u8).collect()
+}
+
+/// Write distinctive content into slot 0 of every layer of the mixed-specs
+/// cache: 5 fp rows, 10 token rows (crossing the 8-token page boundary),
+/// one committed kivi group plus one leftover residual row. Ends with
+/// `advance_pos(0, 10)` so the position round-trips too.
+fn drive_slot0(cb: &mut dyn CacheBackend, c: &ModelConfig) {
+    let (h, dh, g) = (c.n_kv_heads, c.head_dim, c.group);
+    let t = 5;
+    let k = Tensor::f32(&[1, h, t, dh], fill(h * t * dh, 1));
+    let v = Tensor::f32(&[1, h, t, dh], fill(h * t * dh, 2));
+    cb.append_fp(0, 0, &k, &v, &[t]).unwrap();
+
+    let (kp, vp) = (16, 8); // dh=16 at K8V4
+    for round in 0..2u64 {
+        let outs = vec![
+            Tensor::u8(&[1, h, t, kp], fill_u8(h * t * kp, 30 + round)),
+            Tensor::f32(&[1, h, t], fill(h * t, 40 + round)),
+            Tensor::f32(&[1, h, t], fill(h * t, 50 + round)),
+            Tensor::u8(&[1, h, t, vp], fill_u8(h * t * vp, 60 + round)),
+            Tensor::f32(&[1, h, t], fill(h * t, 70 + round)),
+            Tensor::f32(&[1, h, t], fill(h * t, 80 + round)),
+        ];
+        cb.append_token_outputs(1, 0, &outs, &[t]).unwrap();
+    }
+
+    for i in 0..g {
+        let kr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 100 + i as u64));
+        let vr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 200 + i as u64));
+        let need = cb.append_kivi_residual(2, 0, &kr, &vr, &[1]).unwrap();
+        assert_eq!(need[0], i + 1 == g);
+    }
+    let (kp2, vp2) = (8, 4); // dh=16 at K4V2
+    let k_outs = vec![
+        Tensor::u8(&[1, h, g, kp2], fill_u8(h * g * kp2, 9)),
+        Tensor::f32(&[1, h, dh], fill(h * dh, 10)),
+        Tensor::f32(&[1, h, dh], fill(h * dh, 11)),
+    ];
+    let v_outs = vec![
+        Tensor::u8(&[1, h, g, vp2], fill_u8(h * g * vp2, 12)),
+        Tensor::f32(&[1, h, g], fill(h * g, 13)),
+        Tensor::f32(&[1, h, g], fill(h * g, 14)),
+    ];
+    cb.commit_kivi_chunk(2, 0, &k_outs, &v_outs).unwrap();
+    // leftover residual row, so res_len > 0 must survive the round trip
+    let kr = Tensor::f32(&[1, h, 1, dh], fill(h * dh, 300));
+    cb.append_kivi_residual(2, 0, &kr, &kr, &[1]).unwrap();
+
+    cb.advance_pos(0, 10);
+}
+
+#[test]
+fn dense_swap_roundtrip_is_bit_exact_across_slots() {
+    let c = cfg();
+    let specs = mixed_specs();
+    let mut kc = KvCache::new(&c, &specs, 2, 32).unwrap();
+    assert!(CacheBackend::swap_enabled(&kc));
+    drive_slot0(&mut kc, &c);
+
+    let snap: Vec<Vec<Tensor>> = (0..specs.len()).map(|l| kc.layers[l].slot_inputs(0)).collect();
+    let lens: Vec<(i32, i32)> = (0..specs.len())
+        .map(|l| (CacheBackend::cache_len(&kc, l, 0), CacheBackend::res_len(&kc, l, 0)))
+        .collect();
+
+    let h = CacheBackend::swap_out(&mut kc, 0).unwrap();
+    assert_eq!(h.pos, 10);
+    assert!(matches!(&h.payload, SwapPayload::Dense(_)));
+    assert_eq!(CacheBackend::pos(&kc, 0), 0, "slot released");
+    assert_eq!(CacheBackend::cache_len(&kc, 1, 0), 0);
+    let st = CacheBackend::mem_stats(&kc);
+    assert_eq!(st.host_bytes_used, h.host_bytes, "host tier pins the blob");
+    assert!(st.host_bytes_used > 0);
+
+    // restore into the *other* slot: the handle is slot-agnostic
+    assert!(CacheBackend::can_swap_in(&kc, &h));
+    CacheBackend::swap_in(&mut kc, 1, &h).unwrap();
+    let host_bytes = h.host_bytes;
+    CacheBackend::release_swap(&mut kc, h);
+    assert_eq!(CacheBackend::mem_stats(&kc).host_bytes_used, 0);
+
+    assert_eq!(CacheBackend::pos(&kc, 1), 10);
+    for l in 0..specs.len() {
+        assert_eq!(
+            (CacheBackend::cache_len(&kc, l, 1), CacheBackend::res_len(&kc, l, 1)),
+            lens[l],
+            "layer {l} lengths"
+        );
+        assert_eq!(kc.layers[l].slot_inputs(1), snap[l], "layer {l} bytes diverged");
+    }
+    let stats = CacheBackend::swap_stats(&kc);
+    assert_eq!((stats.swap_outs, stats.swap_ins), (1, 1));
+    assert_eq!(stats.bytes_out, host_bytes as u64);
+    assert_eq!(stats.bytes_out, stats.bytes_in);
+}
+
+#[test]
+fn paged_swap_roundtrip_is_bit_exact_across_slots() {
+    let c = cfg();
+    let specs = mixed_specs();
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        2,
+        32,
+        &PagedOptions { swap_mib: Some(1.0), swap_policy: SwapPolicy::Auto, ..PagedOptions::default() },
+    )
+    .unwrap();
+    assert!(CacheBackend::swap_enabled(&kc));
+    let total = kc.total_blocks();
+    drive_slot0(&mut kc, &c);
+    assert_eq!(kc.block_table(0).len(), 2, "10 token rows = 2 pages of 8");
+    assert!(CacheBackend::swap_out_bytes(&kc, 0) > 0);
+
+    let snap: Vec<Vec<Tensor>> = (0..specs.len()).map(|l| kc.gather_slot(l, 0).unwrap()).collect();
+    let lens: Vec<(i32, i32)> = (0..specs.len())
+        .map(|l| (CacheBackend::cache_len(&kc, l, 0), CacheBackend::res_len(&kc, l, 0)))
+        .collect();
+
+    let h = CacheBackend::swap_out(&mut kc, 0).unwrap();
+    assert_eq!(kc.free_blocks(), total, "device pages all released");
+    assert!(kc.block_table(0).is_empty());
+    match &h.payload {
+        SwapPayload::Paged { pages, residual } => {
+            assert_eq!(pages.len(), 2);
+            assert!(pages.iter().all(|p| matches!(p, SwapPage::Host(_))), "nothing registered -> all copied");
+            assert!(!residual.is_empty(), "kivi residual ring rides along");
+        }
+        _ => panic!("paged arm must emit a paged payload"),
+    }
+    let st = CacheBackend::mem_stats(&kc);
+    assert_eq!(st.host_bytes_used, h.host_bytes);
+    assert!(st.host_bytes_total >= st.host_bytes_used);
+
+    assert!(CacheBackend::can_swap_in(&kc, &h));
+    CacheBackend::swap_in(&mut kc, 1, &h).unwrap();
+    CacheBackend::release_swap(&mut kc, h);
+    assert_eq!(CacheBackend::mem_stats(&kc).host_bytes_used, 0);
+
+    assert_eq!(CacheBackend::pos(&kc, 1), 10);
+    for l in 0..specs.len() {
+        assert_eq!(
+            (CacheBackend::cache_len(&kc, l, 1), CacheBackend::res_len(&kc, l, 1)),
+            lens[l],
+            "layer {l} lengths"
+        );
+        assert_eq!(kc.gather_slot(l, 1).unwrap(), snap[l], "layer {l} bytes diverged");
+    }
+    let stats = CacheBackend::swap_stats(&kc);
+    assert_eq!((stats.pages_copied_out, stats.pages_copied_in), (2, 2));
+    assert_eq!(stats.pages_relinked, 0);
+    assert_eq!(stats.bytes_out, stats.bytes_in);
+}
+
+/// Build a 2-layer token cache, prefill slot 0 with 20 tokens of real
+/// content, publish its prompt pages, and prefix-share them into slot 1
+/// (16 reused + 4 private tail tokens). Returns the prompt.
+fn share_into_slot1(kc: &mut PagedKvCache, c: &ModelConfig) -> Vec<i32> {
+    let h = c.n_kv_heads;
+    let prompt: Vec<i32> = (0..20).map(|i| (i * 3 % 64) as i32).collect();
+    assert_eq!(CacheBackend::prefill_reuse(kc, 0, &prompt), 0, "cold index");
+    let t = 5;
+    for l in 0..2usize {
+        for a in 0..4u64 {
+            let seed = l as u64 * 10 + a * 50;
+            let outs = vec![
+                Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, seed + 40)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 41)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 42)),
+                Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, seed + 43)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 44)),
+                Tensor::f32(&[1, h, t], fill(h * t, seed + 45)),
+            ];
+            CacheBackend::append_token_outputs(kc, l, 0, &outs, &[t]).unwrap();
+        }
+    }
+    CacheBackend::register_prefix(kc, 0, &prompt);
+    CacheBackend::advance_pos(kc, 0, 20);
+
+    assert_eq!(CacheBackend::prefill_reuse(kc, 1, &prompt), 16);
+    let t = 4; // private tail: positions 16..20
+    for l in 0..2usize {
+        let outs = vec![
+            Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, 900 + l as u64)),
+            Tensor::f32(&[1, h, t], fill(h * t, 910 + l as u64)),
+            Tensor::f32(&[1, h, t], fill(h * t, 920 + l as u64)),
+            Tensor::u8(&[1, h, t, 8], fill_u8(h * t * 8, 930 + l as u64)),
+            Tensor::f32(&[1, h, t], fill(h * t, 940 + l as u64)),
+            Tensor::f32(&[1, h, t], fill(h * t, 950 + l as u64)),
+        ];
+        CacheBackend::append_token_outputs(kc, l, 1, &outs, &[t]).unwrap();
+    }
+    CacheBackend::advance_pos(kc, 1, 4);
+    prompt
+}
+
+#[test]
+fn swap_relinks_prefix_pages_shared_with_a_concurrent_request() {
+    let c = cfg();
+    let specs = token_specs(2);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        3,
+        32,
+        &PagedOptions {
+            total_blocks: Some(12),
+            swap_mib: Some(1.0),
+            swap_policy: SwapPolicy::Auto,
+            ..PagedOptions::default()
+        },
+    )
+    .unwrap();
+    let prompt = share_into_slot1(&mut kc, &c);
+    let shared: Vec<u32> = kc.block_table(1)[..2].to_vec();
+    for &id in &shared {
+        assert_eq!(kc.ref_count(id), 2);
+    }
+    let snap: Vec<Vec<Tensor>> = (0..2).map(|l| kc.gather_slot(l, 1).unwrap()).collect();
+
+    let h = CacheBackend::swap_out(&mut kc, 1).unwrap();
+    match &h.payload {
+        SwapPayload::Paged { pages, .. } => {
+            assert!(matches!(pages[0], SwapPage::Linked { .. }));
+            assert!(matches!(pages[1], SwapPage::Linked { .. }));
+            assert!(matches!(pages[2], SwapPage::Host(_)), "private tail page is copied");
+        }
+        _ => panic!("expected paged payload"),
+    }
+    for &id in &shared {
+        assert_eq!(kc.ref_count(id), 1, "swap-out drops the victim's reference");
+    }
+    assert_eq!(CacheBackend::swap_stats(&kc).pages_copied_out, 1);
+
+    // while slot 1 is away: its publisher finishes, then a third request
+    // resurrects the same prefix pages — the swapped handle must re-link
+    // against whatever reference state it finds
+    CacheBackend::reset_slot(&mut kc, 0);
+    assert_eq!(CacheBackend::prefill_reuse(&mut kc, 2, &prompt), 16);
+    for &id in &shared {
+        assert_eq!(kc.ref_count(id), 1, "resurrected by slot 2");
+    }
+
+    assert!(CacheBackend::can_swap_in(&kc, &h));
+    CacheBackend::swap_in(&mut kc, 1, &h).unwrap();
+    CacheBackend::release_swap(&mut kc, h);
+    for &id in &shared {
+        assert_eq!(kc.ref_count(id), 2, "slot 1 re-linked alongside slot 2");
+    }
+    for l in 0..2 {
+        assert_eq!(kc.gather_slot(l, 1).unwrap(), snap[l], "layer {l} bytes diverged");
+    }
+    let stats = CacheBackend::swap_stats(&kc);
+    assert_eq!(stats.pages_relinked, 2);
+    assert_eq!(stats.pages_copied_in, 1);
+
+    // refcounts unwind cleanly
+    CacheBackend::reset_slot(&mut kc, 1);
+    for &id in &shared {
+        assert_eq!(kc.ref_count(id), 1);
+    }
+    CacheBackend::reset_slot(&mut kc, 2);
+    assert_eq!(kc.free_blocks(), kc.total_blocks());
+}
+
+#[test]
+fn swap_resurrects_prefix_pages_freed_while_away() {
+    let c = cfg();
+    let specs = token_specs(2);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        3,
+        32,
+        &PagedOptions {
+            total_blocks: Some(12),
+            swap_mib: Some(1.0),
+            swap_policy: SwapPolicy::Auto,
+            ..PagedOptions::default()
+        },
+    )
+    .unwrap();
+    share_into_slot1(&mut kc, &c);
+    let snap: Vec<Vec<Tensor>> = (0..2).map(|l| kc.gather_slot(l, 1).unwrap()).collect();
+
+    let h = CacheBackend::swap_out(&mut kc, 1).unwrap();
+    CacheBackend::reset_slot(&mut kc, 0);
+    assert_eq!(kc.free_blocks(), kc.total_blocks(), "everything on the free list");
+
+    // linked pages are refcount-0 but still indexed: swap-in resurrects
+    // them instead of copying
+    assert!(CacheBackend::can_swap_in(&kc, &h));
+    CacheBackend::swap_in(&mut kc, 1, &h).unwrap();
+    CacheBackend::release_swap(&mut kc, h);
+    assert_eq!(kc.free_blocks(), kc.total_blocks() - 3);
+    for l in 0..2 {
+        assert_eq!(kc.gather_slot(l, 1).unwrap(), snap[l], "layer {l} bytes diverged");
+    }
+    assert_eq!(CacheBackend::swap_stats(&kc).pages_relinked, 2);
+}
+
+#[test]
+fn swap_in_reports_lost_when_linked_pages_were_recycled() {
+    let c = cfg();
+    let specs = token_specs(2);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        3,
+        32,
+        &PagedOptions {
+            total_blocks: Some(6),
+            swap_mib: Some(1.0),
+            swap_policy: SwapPolicy::Auto,
+            ..PagedOptions::default()
+        },
+    )
+    .unwrap();
+    share_into_slot1(&mut kc, &c);
+    let h = CacheBackend::swap_out(&mut kc, 1).unwrap();
+    CacheBackend::reset_slot(&mut kc, 0);
+
+    // churn the pool until the indexed prefix pages are recycled for new
+    // content — the swapped sequence's linked pages are gone for good
+    CacheBackend::synthetic_fill(&mut kc, 2, 32).unwrap();
+    assert!(CacheBackend::swap_stats(&kc).swap_in_lost == 0);
+    CacheBackend::reset_slot(&mut kc, 2); // free pages again so capacity passes
+
+    assert!(CacheBackend::can_swap_in(&kc, &h), "capacity is there; content is not");
+    let free_before = kc.free_blocks();
+    let err = CacheBackend::swap_in(&mut kc, 1, &h).unwrap_err();
+    assert!(err.downcast_ref::<SwapLost>().is_some(), "{err:#}");
+    // validate-before-mutate: the failed swap-in touched nothing
+    assert_eq!(kc.free_blocks(), free_before);
+    assert!(kc.block_table(1).is_empty());
+    assert_eq!(CacheBackend::cache_len(&kc, 0, 1), 0);
+    assert_eq!(CacheBackend::swap_stats(&kc).swap_in_lost, 1);
+
+    // the caller's fallback: release the handle, then recompute-prefill
+    CacheBackend::release_swap(&mut kc, h);
+    assert_eq!(CacheBackend::mem_stats(&kc).host_bytes_used, 0);
+}
+
+#[test]
+fn swap_out_rejected_when_host_arena_is_full_leaves_slot_intact() {
+    let c = cfg();
+    let specs = mixed_specs();
+    // size the arena to exactly one page slot
+    let probe = PagedKvCache::new(&c, &specs, 2, 32, &PagedOptions::default()).unwrap();
+    let one_slot_mib = probe.block_bytes() as f64 * 1.5 / (1024.0 * 1024.0);
+    let mut kc = PagedKvCache::new(
+        &c,
+        &specs,
+        2,
+        32,
+        &PagedOptions { swap_mib: Some(one_slot_mib), swap_policy: SwapPolicy::Always, ..PagedOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(kc.host_swap_slots(), Some((1, 1)));
+
+    drive_slot0(&mut kc, &c); // 2 private pages > 1 host slot
+    let snap: Vec<Vec<Tensor>> = (0..specs.len()).map(|l| kc.gather_slot(l, 0).unwrap()).collect();
+    let err = CacheBackend::swap_out(&mut kc, 0).unwrap_err();
+    assert!(err.downcast_ref::<HostArenaFull>().is_some(), "{err:#}");
+    // the victim is untouched: the scheduler falls back to recompute
+    assert_eq!(CacheBackend::pos(&kc, 0), 10);
+    assert_eq!(kc.block_table(0).len(), 2);
+    for l in 0..specs.len() {
+        assert_eq!(kc.gather_slot(l, 0).unwrap(), snap[l]);
+    }
+    let stats = CacheBackend::swap_stats(&kc);
+    assert_eq!(stats.swap_out_rejected, 1);
+    assert_eq!(stats.swap_outs, 0);
+}
