@@ -7,6 +7,7 @@
 
 use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
 use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
+use kvtuner::engine::BackendKind;
 use kvtuner::util::bench::Table;
 use kvtuner::util::rng::Rng;
 
@@ -42,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             s_max: 256,
             prefill_chunk: 32,
             paged: None,
+            backend: BackendKind::Xla,
         },
         WorkerSpec {
             name: "tuned-balanced".into(),
@@ -52,6 +54,7 @@ fn main() -> anyhow::Result<()> {
             s_max: 256,
             prefill_chunk: 32,
             paged: None,
+            backend: BackendKind::Xla,
         },
     ];
 

@@ -42,6 +42,10 @@ SUBCOMMANDS
 
 COMMON FLAGS
   --artifacts DIR   artifact directory (default artifacts/tiny or $KVTUNER_ARTIFACTS)
+  --backend B       serve/throughput engine backend: xla (PJRT executables,
+                    needs AOT artifacts + the XLA extension) or native
+                    (in-process kernels, block-table-direct attention, zero
+                    artifacts — only manifest.json + the weights file)
   --paged           serve/throughput: paged KV cache (block pool, prefix
                     sharing, preemption) instead of dense slot buffers
   --pool-blocks N   paged pool size in pages (page = quant group)
@@ -56,9 +60,17 @@ COMMON FLAGS
 
 pub fn cli_main() -> Result<()> {
     let args = Args::from_env(&["no-prune", "tokens", "real-fill", "paged", "help"])?;
-    if args.switch("help") || args.subcommand.is_empty() {
+    if args.switch("help") {
         print!("{USAGE}");
         return Ok(());
+    }
+    if args.subcommand.is_empty() {
+        // a missing subcommand is an error, not a success: print usage and
+        // exit nonzero (regression: this used to exit 0, and before that the
+        // parser was one refactor away from panicking on bare flags)
+        eprintln!("missing subcommand\n");
+        eprint!("{USAGE}");
+        std::process::exit(2);
     }
     match args.subcommand.as_str() {
         "profile" => profile_cmd::run(&args),
@@ -72,6 +84,15 @@ pub fn cli_main() -> Result<()> {
             print!("{USAGE}");
             std::process::exit(2);
         }
+    }
+}
+
+/// Shared: `--backend {xla,native}` -> engine backend kind. Defaults to the
+/// strongest backend this build carries: xla when compiled in, else native.
+pub(crate) fn backend_kind(args: &Args) -> Result<crate::engine::BackendKind> {
+    match args.opt_str("backend") {
+        Some(s) => crate::engine::BackendKind::parse(s),
+        None => Ok(crate::engine::BackendKind::default()),
     }
 }
 

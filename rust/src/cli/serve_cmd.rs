@@ -22,6 +22,7 @@ pub fn run(args: &Args) -> Result<()> {
     let n_requests = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 16)?;
     let paged = super::paged_options(args)?;
+    let backend = super::backend_kind(args)?;
 
     // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
     // given, else K8V4
@@ -35,6 +36,7 @@ pub fn run(args: &Args) -> Result<()> {
             s_max,
             prefill_chunk: 32,
             paged: paged.clone(),
+            backend,
         },
         WorkerSpec {
             name: "k4v2-efficient".into(),
@@ -45,6 +47,7 @@ pub fn run(args: &Args) -> Result<()> {
             s_max,
             prefill_chunk: 32,
             paged: paged.clone(),
+            backend,
         },
     ];
     let balanced_specs = match args.opt_str("config") {
@@ -60,12 +63,14 @@ pub fn run(args: &Args) -> Result<()> {
         s_max,
         prefill_chunk: 32,
         paged: paged.clone(),
+        backend,
     });
 
     eprintln!(
-        "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={})",
+        "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={}, backend={})",
         workers.len(),
         super::cache_desc(&paged),
+        backend.as_str(),
     );
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;

@@ -1,17 +1,22 @@
 //! `kvtuner throughput` — Table 8: decode throughput (tokens/s) across KV
-//! precision settings and context lengths on the PJRT engine. Memory traffic
-//! genuinely scales with the precision map (bit-packed cache buffers), which
-//! is what produces the paper's ranking KV8 < K8V4 < KV4 < K4V2 < tuned.
+//! precision settings and context lengths. Memory traffic genuinely scales
+//! with the precision map (bit-packed cache buffers), which is what produces
+//! the paper's ranking KV8 < K8V4 < KV4 < K4V2 < tuned.
+//!
+//! Two engine backends, selected by `--backend`:
+//! * `xla` — the PJRT engine over AOT artifacts (the original path).
+//! * `native` — in-process kernels with block-table-direct attention; needs
+//!   only `manifest.json` + the weights file, no HLO artifacts and no XLA
+//!   extension, so the grid runs anywhere (including hosted CI).
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{LayerSpec, Mode, PrecisionPair};
-use crate::engine::Engine;
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use crate::engine::{BackendKind, NativeEngine};
 use crate::kvcache::{CacheBackend, PagedOptions};
-use crate::runtime::Runtime;
+use crate::model::Weights;
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -33,9 +38,11 @@ impl ThroughputRow {
     }
 }
 
-/// Measure steady-state decode throughput for one config at one context fill.
+/// Measure steady-state decode throughput for one config at one context fill
+/// on the PJRT (xla) engine.
+#[cfg(feature = "xla")]
 pub fn measure(
-    rt: &Arc<Runtime>,
+    rt: &std::sync::Arc<crate::runtime::Runtime>,
     model: &str,
     specs: Vec<LayerSpec>,
     batch: usize,
@@ -45,6 +52,7 @@ pub fn measure(
     real_fill: bool,
     paged: Option<PagedOptions>,
 ) -> Result<ThroughputRow> {
+    use crate::engine::Engine;
     let mut eng = match paged {
         None => Engine::new(rt.clone(), model, specs, batch, s_max, 32)?,
         Some(opts) => Engine::new_paged(rt.clone(), model, specs, batch, s_max, 32, opts)?,
@@ -64,12 +72,58 @@ pub fn measure(
     }
     let bits = eng.equivalent_bits();
     let kv_mib = eng.kv_bytes() as f64 / (1024.0 * 1024.0);
-    // KV bytes a decode step actually touches = the live (valid) region
     let kv_bytes_per_step = eng.cache.mem_stats().bytes_live as f64;
 
     let tokens = vec![1i32; batch];
     let active = vec![true; batch];
-    // warmup
+    for _ in 0..3 {
+        eng.decode_step(&tokens, &active)?;
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        eng.decode_step(&tokens, &active)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Ok(ThroughputRow {
+        equiv_bits: bits,
+        kv_mib,
+        toks_per_sec: batch as f64 * steps as f64 / dt,
+        kv_bytes_per_step,
+    })
+}
+
+/// Measure the same grid point on the native backend: honest prefill
+/// (token-by-token, so kivi groups really commit) and block-direct decode.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_native(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    specs: Vec<LayerSpec>,
+    batch: usize,
+    s_max: usize,
+    input_len: usize,
+    steps: usize,
+    real_fill: bool,
+    paged: Option<PagedOptions>,
+) -> Result<ThroughputRow> {
+    let mut eng = NativeEngine::new(cfg, weights.clone(), specs, batch, s_max, 32, paged)?;
+    if real_fill {
+        for slot in 0..batch {
+            let prompt: Vec<i32> =
+                (0..input_len).map(|i| ((i * 31 + slot * 7) % eng.cfg.vocab) as i32).collect();
+            eng.prefill(slot, &prompt)?;
+        }
+    } else {
+        for slot in 0..batch {
+            eng.cache.synthetic_fill(slot, input_len)?;
+        }
+    }
+    let bits = eng.equivalent_bits();
+    let kv_mib = eng.kv_bytes() as f64 / (1024.0 * 1024.0);
+    let kv_bytes_per_step = eng.cache.mem_stats().bytes_live as f64;
+
+    let tokens = vec![1i32; batch];
+    let active = vec![true; batch];
     for _ in 0..3 {
         eng.decode_step(&tokens, &active)?;
     }
@@ -107,27 +161,28 @@ pub fn settings_grid(
     Ok(settings)
 }
 
-pub fn run(args: &Args) -> Result<()> {
-    let dir = super::artifact_dir(args);
-    let rt = Arc::new(Runtime::load(&dir)?);
-    let cfg = rt.manifest.config.clone();
-    let model = args.str("model", &cfg.name);
-    let batch = args.usize("batch", *rt.manifest.decode_batches().last().unwrap_or(&1))?;
-    let s_max = args.usize("smax", 256)?;
-    let steps = args.usize("steps", 40)?;
+/// Shared grid driver: `measure_fn(specs, input_len)` -> one cell.
+fn run_grid(
+    args: &Args,
+    cfg: &ModelConfig,
+    batch: usize,
+    steps: usize,
+    cache_arm: &str,
+    backend: BackendKind,
+    mut measure_fn: impl FnMut(&[LayerSpec], usize) -> Result<ThroughputRow>,
+) -> Result<()> {
     let input_lens: Vec<usize> = args
         .list("input-lens", "64,128,192")
         .iter()
         .map(|s| s.parse().unwrap())
         .collect();
-    let real_fill = args.switch("real-fill");
-    let paged = super::paged_options(args)?;
     let settings = settings_grid(cfg.n_layers, &args.list("configs", ""))?;
-
-    // the decode grid never preempts, but the arena is sized/reported so
-    // capacity runs account the host tier alongside kv_bytes
-    let cache_arm = super::cache_desc(&paged);
-    let mut t = Table::with_headers(&format!("Table 8 — decode throughput, batch={batch}, steps={steps}, cache={cache_arm} (tokens/s)"),
+    let mut t = Table::with_headers(
+        &format!(
+            "Table 8 — decode throughput, batch={batch}, steps={steps}, cache={cache_arm}, \
+             backend={} (tokens/s)",
+            backend.as_str()
+        ),
         {
             let mut h = vec!["setting".to_string(), "bits".into(), "KV MiB".into()];
             h.extend(input_lens.iter().map(|l| format!("len={l}")));
@@ -142,7 +197,7 @@ pub fn run(args: &Args) -> Result<()> {
         let mut mib = 0.0;
         let mut tps_list = Vec::new();
         for &il in &input_lens {
-            let r = measure(&rt, &model, specs.clone(), batch, s_max, il, steps, real_fill, paged.clone())?;
+            let r = measure_fn(specs, il)?;
             bits = r.equiv_bits;
             mib = r.kv_mib;
             tps_list.push(r.toks_per_sec);
@@ -167,4 +222,61 @@ pub fn run(args: &Args) -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    match super::backend_kind(args)? {
+        BackendKind::Native => run_native(args),
+        BackendKind::Xla => run_xla(args),
+    }
+}
+
+fn run_native(args: &Args) -> Result<()> {
+    let (manifest, weights, _model) = super::load_model(args)?;
+    let cfg = manifest.config.clone();
+    let batch = args.usize("batch", *manifest.decode_batches().last().unwrap_or(&1))?;
+    let s_max = args.usize("smax", 256)?;
+    let steps = args.usize("steps", 40)?;
+    let real_fill = args.switch("real-fill");
+    let paged = super::paged_options(args)?;
+    let cache_arm = super::cache_desc(&paged);
+    run_grid(args, &cfg, batch, steps, &cache_arm, BackendKind::Native, |specs, il| {
+        measure_native(
+            &cfg,
+            &weights,
+            specs.to_vec(),
+            batch,
+            s_max,
+            il,
+            steps,
+            real_fill,
+            paged.clone(),
+        )
+    })
+}
+
+#[cfg(feature = "xla")]
+fn run_xla(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    let dir = super::artifact_dir(args);
+    let rt = Arc::new(crate::runtime::Runtime::load(&dir)?);
+    let cfg = rt.manifest.config.clone();
+    let model = args.str("model", &cfg.name);
+    let batch = args.usize("batch", *rt.manifest.decode_batches().last().unwrap_or(&1))?;
+    let s_max = args.usize("smax", 256)?;
+    let steps = args.usize("steps", 40)?;
+    let real_fill = args.switch("real-fill");
+    let paged = super::paged_options(args)?;
+    let cache_arm = super::cache_desc(&paged);
+    run_grid(args, &cfg, batch, steps, &cache_arm, BackendKind::Xla, |specs, il| {
+        measure(&rt, &model, specs.to_vec(), batch, s_max, il, steps, real_fill, paged.clone())
+    })
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "this build has no XLA backend (compiled without the `xla` feature); \
+         run with --backend native"
+    )
 }

@@ -33,6 +33,11 @@ pub struct Metrics {
     /// Tokens re-prefilled to resume recompute-preempted requests — the
     /// work a swap-out avoids.
     pub reprefill_tokens: AtomicU64,
+    /// Cumulative gather-to-dense staging bytes (XLA paged arm: live pages
+    /// copied into the dense artifact layout every layer step). The native
+    /// block-direct backend reports a structural 0 — this counter is
+    /// exactly the traffic it eliminates (`table10_kernel` quantifies it).
+    pub gather_bytes: AtomicU64,
     latencies: Mutex<LatencySamples>,
 }
 
@@ -65,6 +70,7 @@ pub struct Snapshot {
     pub swap_stalls: u64,
     pub swap_fallbacks: u64,
     pub reprefill_tokens: u64,
+    pub gather_bytes: u64,
 }
 
 fn pct(sorted: &[f64], p: f64) -> f64 {
@@ -161,6 +167,7 @@ impl Metrics {
             swap_stalls: self.swap_stalls.load(Ordering::Relaxed),
             swap_fallbacks: self.swap_fallbacks.load(Ordering::Relaxed),
             reprefill_tokens: self.reprefill_tokens.load(Ordering::Relaxed),
+            gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -169,7 +176,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok",
+            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -186,6 +193,7 @@ impl std::fmt::Display for Snapshot {
             self.swap_bytes_out / 1024,
             self.swap_bytes_in / 1024,
             self.reprefill_tokens,
+            self.gather_bytes / 1024,
         )
     }
 }

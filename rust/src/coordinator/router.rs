@@ -14,9 +14,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::LayerSpec;
 use crate::coordinator::metrics::Metrics;
-use crate::kvcache::PagedOptions;
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
+#[cfg(feature = "xla")]
 use crate::engine::Engine;
+use crate::engine::{BackendKind, EngineCore, NativeEngine};
+use crate::kvcache::PagedOptions;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
 use super::request::{AccuracyClass, Request, Submission};
@@ -34,6 +37,61 @@ pub struct WorkerSpec {
     /// `Some` = run on the paged cache arm with this pool sizing; the
     /// scheduler then admits by page availability and preempts on pressure.
     pub paged: Option<PagedOptions>,
+    /// Which engine implementation backs this worker: `Xla` (PJRT
+    /// executables, needs artifacts + the XLA extension) or `Native`
+    /// (in-process kernels, zero artifacts).
+    pub backend: BackendKind,
+}
+
+/// Construct the worker's engine per its backend kind. Runs on the worker
+/// thread (PJRT objects never cross threads; the native engine does not
+/// care).
+fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn EngineCore>> {
+    match ws.backend {
+        BackendKind::Native => {
+            let manifest = crate::config::Manifest::load(dir)?;
+            let weights = crate::model::Weights::load(&manifest, &ws.model)?;
+            Ok(Box::new(NativeEngine::new(
+                &manifest.config,
+                weights,
+                ws.specs.clone(),
+                ws.batch,
+                ws.s_max,
+                ws.prefill_chunk,
+                ws.paged.clone(),
+            )?))
+        }
+        #[cfg(feature = "xla")]
+        BackendKind::Xla => {
+            let rt = Arc::new(Runtime::load(dir)?);
+            let eng = match ws.paged.clone() {
+                None => Engine::new(
+                    rt,
+                    &ws.model,
+                    ws.specs.clone(),
+                    ws.batch,
+                    ws.s_max,
+                    ws.prefill_chunk,
+                )?,
+                Some(opts) => Engine::new_paged(
+                    rt,
+                    &ws.model,
+                    ws.specs.clone(),
+                    ws.batch,
+                    ws.s_max,
+                    ws.prefill_chunk,
+                    opts,
+                )?,
+            };
+            Ok(Box::new(eng))
+        }
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Xla => bail!(
+            "worker {}: this build has no XLA backend (compiled without the \
+             `xla` feature); use the native backend",
+            ws.name
+        ),
+    }
 }
 
 pub struct WorkerHandle {
@@ -70,33 +128,7 @@ impl Router {
             let join = std::thread::Builder::new()
                 .name(format!("engine-{}", ws.name))
                 .spawn(move || -> Result<()> {
-                    let rt = match Runtime::load(&dir) {
-                        Ok(rt) => Arc::new(rt),
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return Ok(());
-                        }
-                    };
-                    let built = match ws.paged.clone() {
-                        None => Engine::new(
-                            rt,
-                            &ws.model,
-                            ws.specs.clone(),
-                            ws.batch,
-                            ws.s_max,
-                            ws.prefill_chunk,
-                        ),
-                        Some(opts) => Engine::new_paged(
-                            rt,
-                            &ws.model,
-                            ws.specs.clone(),
-                            ws.batch,
-                            ws.s_max,
-                            ws.prefill_chunk,
-                            opts,
-                        ),
-                    };
-                    let engine = match built {
+                    let engine = match build_worker_engine(&dir, &ws) {
                         Ok(e) => e,
                         Err(e) => {
                             let _ = ready_tx.send(Err(e));

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::Engine;
+use crate::engine::EngineCore;
 use crate::kvcache::{CacheBackend, OutOfPages, SwapHandle, SwapPolicy};
 
 use super::batcher::{Batcher, BatcherOptions};
@@ -164,7 +164,7 @@ pub fn generation_done(generated: usize, max_new: usize, pos: usize, s_max: usiz
 }
 
 pub struct Scheduler {
-    pub engine: Engine,
+    pub engine: Box<dyn EngineCore>,
     pub batcher: Batcher,
     pub metrics: Arc<Metrics>,
     slots: Vec<Option<ActiveSlot>>,
@@ -192,8 +192,13 @@ impl Default for SchedulerOptions {
 }
 
 impl Scheduler {
-    pub fn new(engine: Engine, name: &str, opts: SchedulerOptions, metrics: Arc<Metrics>) -> Scheduler {
-        let batch = engine.batch;
+    pub fn new(
+        engine: Box<dyn EngineCore>,
+        name: &str,
+        opts: SchedulerOptions,
+        metrics: Arc<Metrics>,
+    ) -> Scheduler {
+        let batch = engine.batch();
         Scheduler {
             engine,
             batcher: Batcher::new(opts.batcher),
@@ -211,7 +216,7 @@ impl Scheduler {
 
     /// Clamp a prompt to what a slot can hold with generation room.
     fn clamp_prompt(&self, prompt: &[i32], max_new: usize) -> Vec<i32> {
-        let cap = self.engine.s_max.saturating_sub(max_new + 1);
+        let cap = self.engine.s_max().saturating_sub(max_new + 1);
         if prompt.len() > cap {
             prompt[prompt.len() - cap..].to_vec()
         } else {
@@ -246,7 +251,7 @@ impl Scheduler {
             engine: self.name.clone(),
             error,
         });
-        self.engine.cache.reset_slot(slot);
+        self.engine.cache_mut().reset_slot(slot);
     }
 
     /// True when a freshly (re-)prefilled request needs no decode step at
@@ -256,8 +261,8 @@ impl Scheduler {
         generation_done(
             a.generated.len(),
             a.req.max_new_tokens,
-            self.engine.cache.pos(slot) as usize,
-            self.engine.s_max,
+            self.engine.cache().pos(slot) as usize,
+            self.engine.s_max(),
         )
     }
 
@@ -266,13 +271,13 @@ impl Scheduler {
     /// prefix tokens served from cache. Prefix metrics are recorded only on
     /// success so an `OutOfPages` retry does not double-count.
     fn prefill_with_reuse(&mut self, slot: usize, ctx: &[i32]) -> Result<(i32, usize)> {
-        self.engine.cache.reset_slot(slot);
-        let reused = self.engine.cache.prefill_reuse(slot, ctx);
+        self.engine.cache_mut().reset_slot(slot);
+        let reused = self.engine.cache_mut().prefill_reuse(slot, ctx);
         let t0 = Instant::now();
         let first = self.engine.prefill(slot, &ctx[reused..])?;
         self.metrics.record_prefill(t0.elapsed());
         self.metrics.record_prefix(reused);
-        self.engine.cache.register_prefix(slot, ctx);
+        self.engine.cache_mut().register_prefix(slot, ctx);
         Ok((first, reused))
     }
 
@@ -299,11 +304,11 @@ impl Scheduler {
             if let Some(mut pe) = self.preempted.next() {
                 if let Some(sh) = pe.swap.take() {
                     // swapped resume: pages re-link / copy back, no re-prefill
-                    if self.engine.cache.can_swap_in(&sh) {
-                        match self.engine.cache.swap_in(slot, &sh) {
+                    if self.engine.cache().can_swap_in(&sh) {
+                        match self.engine.cache_mut().swap_in(slot, &sh) {
                             Ok(()) => {
                                 self.metrics.record_swap_in(sh.host_bytes);
-                                self.engine.cache.release_swap(sh);
+                                self.engine.cache_mut().release_swap(sh);
                                 let next = *pe.generated.last().unwrap();
                                 let a = ActiveSlot {
                                     req: pe.req,
@@ -320,8 +325,8 @@ impl Scheduler {
                                 // swapped state unrecoverable (re-linked
                                 // prefix pages were recycled): release the
                                 // handle and re-prefill below instead
-                                self.engine.cache.release_swap(sh);
-                                self.engine.cache.reset_slot(slot);
+                                self.engine.cache_mut().release_swap(sh);
+                                self.engine.cache_mut().reset_slot(slot);
                                 self.metrics.record_swap_fallback();
                             }
                         }
@@ -334,7 +339,7 @@ impl Scheduler {
                     } else {
                         // nothing in flight will ever free pages: a clamped
                         // re-prefill may fit where the full page set cannot
-                        self.engine.cache.release_swap(sh);
+                        self.engine.cache_mut().release_swap(sh);
                         self.metrics.record_swap_fallback();
                     }
                 }
@@ -343,7 +348,7 @@ impl Scheduler {
                 // but the last token (which becomes the next decode input)
                 let mut ctx = self.clamp_prompt(&pe.req.prompt, pe.req.max_new_tokens);
                 ctx.extend_from_slice(&pe.generated[..pe.generated.len() - 1]);
-                if !self.engine.cache.can_admit(ctx.len(), pe.req.max_new_tokens) {
+                if !self.engine.cache().can_admit(ctx.len(), pe.req.max_new_tokens) {
                     if self.busy() == 0 {
                         self.respond_error(
                             pe.req,
@@ -372,7 +377,7 @@ impl Scheduler {
                     Err(e) => {
                         if e.downcast_ref::<OutOfPages>().is_some() && self.busy() > 0 {
                             // pages will free as in-flight work completes
-                            self.engine.cache.reset_slot(slot);
+                            self.engine.cache_mut().reset_slot(slot);
                             self.preempted.requeue(pe);
                             break;
                         }
@@ -385,9 +390,9 @@ impl Scheduler {
 
             let Some(front) = self.batcher.peek() else { break };
             let max_new = front.max_new_tokens;
-            let cap = self.engine.s_max.saturating_sub(max_new + 1);
+            let cap = self.engine.s_max().saturating_sub(max_new + 1);
             let plen = front.prompt.len().min(cap);
-            if !self.engine.cache.can_admit(plen, max_new) {
+            if !self.engine.cache().can_admit(plen, max_new) {
                 if self.busy() == 0 && self.preempted.is_empty() {
                     // nothing in flight will ever free pages: fail it loud
                     let req = self.batcher.pop().unwrap();
@@ -422,7 +427,7 @@ impl Scheduler {
                         && (self.busy() > 0 || !self.preempted.is_empty())
                     {
                         // admission raced the estimate; retry once pages free
-                        self.engine.cache.reset_slot(slot);
+                        self.engine.cache_mut().reset_slot(slot);
                         self.batcher.push_front(req);
                         break;
                     }
@@ -431,6 +436,11 @@ impl Scheduler {
             }
             admitted += 1;
         }
+        // cumulative staging-copy traffic (prefill gathers included); the
+        // native backend reports a structural 0 here
+        self.metrics
+            .gather_bytes
+            .store(self.engine.gather_bytes(), Ordering::Relaxed);
         Ok(())
     }
 
@@ -450,7 +460,7 @@ impl Scheduler {
             if active.is_empty() {
                 return;
             }
-            if self.engine.cache.decode_block_shortfall(&active) == 0 {
+            if self.engine.cache().decode_block_shortfall(&active) == 0 {
                 return;
             }
             if active.len() == 1 {
@@ -473,7 +483,7 @@ impl Scheduler {
                 .iter()
                 .max_by_key(|&&i| {
                     let a = self.slots[i].as_ref().unwrap();
-                    let pages = self.engine.cache.slot_pages(i);
+                    let pages = self.engine.cache().slot_pages(i);
                     let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
                     // ties fall to the youngest (largest start time)
                     (victim_score(pages, remaining), a.started)
@@ -481,26 +491,26 @@ impl Scheduler {
                 .unwrap();
             let a = self.slots[victim].take().unwrap();
             // what a recompute resume would have to re-prefill
-            let cap = self.engine.s_max.saturating_sub(a.req.max_new_tokens + 1);
+            let cap = self.engine.s_max().saturating_sub(a.req.max_new_tokens + 1);
             let recompute_tokens = a.req.prompt.len().min(cap) + a.generated.len() - 1;
             // swap_out_bytes walks the victim's block table; skip it (and the
             // cost model) entirely on the default recompute-only path
             let action = if self.swap_policy != SwapPolicy::Off
-                && self.engine.cache.swap_enabled()
+                && self.engine.cache().swap_enabled()
             {
                 choose_preempt_action(
                     self.swap_policy,
                     true,
-                    self.engine.cache.swap_out_bytes(victim),
+                    self.engine.cache().swap_out_bytes(victim),
                     recompute_tokens,
-                    self.engine.cache.per_token_kv_bytes(),
-                    self.engine.prefill_chunk,
+                    self.engine.cache().per_token_kv_bytes(),
+                    self.engine.prefill_chunk(),
                 )
             } else {
                 PreemptAction::Recompute
             };
             let swap = if action == PreemptAction::SwapOut {
-                match self.engine.cache.swap_out(victim) {
+                match self.engine.cache_mut().swap_out(victim) {
                     Ok(h) => {
                         self.metrics.record_swap_out(h.host_bytes);
                         Some(h)
@@ -515,7 +525,7 @@ impl Scheduler {
                 None
             };
             if swap.is_none() {
-                self.engine.cache.reset_slot(victim);
+                self.engine.cache_mut().reset_slot(victim);
             }
             self.metrics.record_preemption();
             self.preempted.enqueue(Preempted {
@@ -547,6 +557,9 @@ impl Scheduler {
         let t0 = Instant::now();
         let next = self.engine.decode_step(&tokens, &active)?;
         self.metrics.record_decode(t0.elapsed(), busy, busy);
+        self.metrics
+            .gather_bytes
+            .store(self.engine.gather_bytes(), Ordering::Relaxed);
 
         for i in 0..batch {
             let done = if let Some(a) = &mut self.slots[i] {
@@ -557,8 +570,8 @@ impl Scheduler {
                 generation_done(
                     a.generated.len(),
                     a.req.max_new_tokens,
-                    self.engine.cache.pos(i) as usize,
-                    self.engine.s_max,
+                    self.engine.cache().pos(i) as usize,
+                    self.engine.s_max(),
                 )
             } else {
                 false

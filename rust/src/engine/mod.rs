@@ -1,359 +1,116 @@
-//! The PJRT inference engine: composes one layer-step executable per
-//! transformer layer, picked by that layer's precision pair — the paper's
-//! layer-wise mixed-precision serving path with zero online decision
-//! overhead (the "decision" is an array index resolved at engine build).
+//! Inference engine backends behind one surface (`EngineCore`):
 //!
-//! Python never appears here: artifacts were AOT-lowered by `make artifacts`
-//! and are loaded as HLO text through `runtime::Runtime`.
+//! * `pjrt::Engine` (feature `xla`, the default) — AOT-lowered PJRT
+//!   executables, one layer-step artifact per precision pair. Needs
+//!   `make artifacts` and the XLA extension; its paged arm pays a
+//!   gather-to-dense staging copy per layer step (counted in
+//!   `gather_bytes`).
+//! * `native::NativeEngine` — in-process CPU kernels (`crate::kernel`)
+//!   that walk the cache's block tables directly and dequantize pages on
+//!   read. Zero artifacts, zero staging bytes; runs on hosts without the
+//!   XLA extension, which is what lets the engine/router test suite run on
+//!   hosted CI.
+//!
+//! The scheduler, router and CLI only see `EngineCore`, so the two
+//! backends are interchangeable behind `--backend {xla,native}`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-use anyhow::{Context, Result};
-use xla::Literal;
+pub use native::NativeEngine;
+#[cfg(feature = "xla")]
+pub use pjrt::Engine;
 
-use crate::config::{LayerSpec, Manifest, Mode, ModelConfig};
-use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
-use crate::model::Weights;
-use crate::runtime::Runtime;
-use crate::tensor::Tensor;
+use anyhow::{bail, Result};
 
-pub struct Engine {
-    pub rt: Arc<Runtime>,
-    pub cfg: ModelConfig,
-    pub specs: Vec<LayerSpec>,
-    /// Dense reference arm or the paged block-pool arm, behind one interface.
-    pub cache: Box<dyn CacheBackend>,
-    pub batch: usize,
-    pub s_max: usize,
-    pub prefill_chunk: usize,
-    /// Logits of the last step per slot (for perplexity / eval paths).
-    pub last_logits: Vec<Vec<f32>>,
+use crate::config::ModelConfig;
+use crate::kvcache::CacheBackend;
 
-    weight_lits: Vec<Vec<Literal>>, // [layer][8]
-    embed_lit: Literal,
-    ln_f_lit: Literal,
-    layer_decode: Vec<String>,
-    layer_prefill: Vec<String>,
-    embed_decode: String,
-    embed_prefill: String,
-    lmhead_decode: String,
-    lmhead_prefill: String,
-    /// Per-step executable invocations (for perf accounting).
-    pub exec_count: AtomicU64,
+/// Which engine implementation a worker / CLI run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT executables from AOT artifacts (needs the XLA extension).
+    Xla,
+    /// Native CPU kernels, block-table-direct (zero artifacts).
+    Native,
 }
 
-impl Engine {
-    /// Build an engine for `model` with one `LayerSpec` per layer, on the
-    /// dense (reference) cache arm. `batch` and `s_max` must match emitted
-    /// artifact buckets.
-    pub fn new(
-        rt: Arc<Runtime>,
-        model: &str,
-        specs: Vec<LayerSpec>,
-        batch: usize,
-        s_max: usize,
-        prefill_chunk: usize,
-    ) -> Result<Engine> {
-        Engine::build(rt, model, specs, batch, s_max, prefill_chunk, None)
-    }
-
-    /// Build an engine on the paged cache arm: same artifacts, same layer
-    /// steps, but KV state lives in a block pool sized by `opts` — the
-    /// scheduler can then run more slots than the pool could hold at full
-    /// length, preempting on page pressure.
-    pub fn new_paged(
-        rt: Arc<Runtime>,
-        model: &str,
-        specs: Vec<LayerSpec>,
-        batch: usize,
-        s_max: usize,
-        prefill_chunk: usize,
-        opts: PagedOptions,
-    ) -> Result<Engine> {
-        Engine::build(rt, model, specs, batch, s_max, prefill_chunk, Some(opts))
-    }
-
-    fn build(
-        rt: Arc<Runtime>,
-        model: &str,
-        specs: Vec<LayerSpec>,
-        batch: usize,
-        s_max: usize,
-        prefill_chunk: usize,
-        paged: Option<PagedOptions>,
-    ) -> Result<Engine> {
-        let cfg = rt.manifest.config.clone();
-        anyhow::ensure!(specs.len() == cfg.n_layers, "one spec per layer");
-        let weights = Weights::load(&rt.manifest, model)?;
-        weights.validate(&cfg)?;
-
-        let mut weight_lits = Vec::with_capacity(cfg.n_layers);
-        for l in 0..cfg.n_layers {
-            let lits = weights
-                .layer(l)?
-                .iter()
-                .map(|t| t.to_literal())
-                .collect::<Result<Vec<_>>>()?;
-            weight_lits.push(lits);
-        }
-        let embed_lit = weights.embed()?.to_literal()?;
-        let ln_f_lit = weights.ln_f()?.to_literal()?;
-
-        let layer_decode: Vec<String> = specs
-            .iter()
-            .map(|sp| Manifest::layer_name(sp.mode, sp.pair, batch, 1, s_max))
-            .collect();
-        let layer_prefill: Vec<String> = specs
-            .iter()
-            .map(|sp| Manifest::layer_name(sp.mode, sp.pair, 1, prefill_chunk, s_max))
-            .collect();
-        let embed_decode = format!("embed_b{batch}_t1");
-        let embed_prefill = format!("embed_b1_t{prefill_chunk}");
-        let lmhead_decode = format!("lmhead_b{batch}");
-        let lmhead_prefill = "lmhead_b1".to_string();
-
-        // fail fast if any bucket is missing, and pre-compile everything so
-        // the serving path never compiles
-        let mut names: Vec<String> = Vec::new();
-        names.extend(layer_decode.iter().cloned());
-        names.extend(layer_prefill.iter().cloned());
-        names.push(embed_decode.clone());
-        names.push(embed_prefill.clone());
-        names.push(lmhead_decode.clone());
-        names.push(lmhead_prefill.clone());
-        for sp in &specs {
-            if sp.mode == Mode::Kivi {
-                names.push(Manifest::quant_name(true, sp.pair.k_bits, 1, cfg.group));
-                names.push(Manifest::quant_name(false, sp.pair.v_bits, 1, cfg.group));
-            }
-        }
-        names.sort();
-        names.dedup();
-        for n in &names {
-            rt.manifest.artifact(n).context("engine bucket check")?;
-        }
-        rt.warmup(&names)?;
-
-        let cache: Box<dyn CacheBackend> = match paged {
-            None => Box::new(KvCache::new(&cfg, &specs, batch, s_max)?),
-            Some(opts) => Box::new(PagedKvCache::new(&cfg, &specs, batch, s_max, &opts)?),
-        };
-        Ok(Engine {
-            rt,
-            cfg,
-            specs,
-            cache,
-            batch,
-            s_max,
-            prefill_chunk,
-            last_logits: vec![Vec::new(); batch],
-            weight_lits,
-            embed_lit,
-            ln_f_lit,
-            layer_decode,
-            layer_prefill,
-            embed_decode,
-            embed_prefill,
-            lmhead_decode,
-            lmhead_prefill,
-            exec_count: AtomicU64::new(0),
-        })
-    }
-
-    fn exec(&self, name: &str, inputs: Vec<&Literal>) -> Result<Vec<Tensor>> {
-        self.exec_lits(name, inputs)?.iter().map(Tensor::from_literal).collect()
-    }
-
-    /// Execute returning raw literals (hot path: avoids Tensor round-trips
-    /// for outputs that feed straight into the next executable — §Perf L3-1).
-    fn exec_lits(&self, name: &str, inputs: Vec<&Literal>) -> Result<Vec<Literal>> {
-        self.exec_count.fetch_add(1, Ordering::Relaxed);
-        let exe = self.rt.executable(name)?;
-        let result = exe.execute::<&Literal>(&inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Run one transformer layer over `x` for slots starting at `slot0`
-    /// covering `b_exec` slots, updating the cache with the new tokens.
-    /// Returns the layer's hidden output.
-    fn run_layer(
-        &mut self,
-        l: usize,
-        artifact: &str,
-        x_lit: &Literal,
-        slot0: usize,
-        b_exec: usize,
-        valid: &[usize],
-    ) -> Result<Literal> {
-        let spec = self.specs[l];
-        let single = b_exec == 1 && self.batch != 1;
-
-        let pos: Vec<i32> = (0..b_exec).map(|i| self.cache.pos(slot0 + i)).collect();
-        let cache_len: Vec<i32> =
-            (0..b_exec).map(|i| self.cache.cache_len(l, slot0 + i)).collect();
-        let res_len: Vec<i32> = (0..b_exec).map(|i| self.cache.res_len(l, slot0 + i)).collect();
-        let pos_lit = Tensor::i32(&[b_exec], pos).to_literal()?;
-        let clen_lit = Tensor::i32(&[b_exec], cache_len).to_literal()?;
-        let rlen_lit = Tensor::i32(&[b_exec], res_len).to_literal()?;
-
-        // cache tensors in the artifact layout: whole buffers for full-batch
-        // exec, one slot's region for B=1 (the paged arm gathers its pages
-        // into the same shapes, so artifacts never see the difference)
-        let cache_lits: Vec<Literal> = if single {
-            self.cache.slot_literals(l, slot0)?
+impl Default for BackendKind {
+    fn default() -> Self {
+        if cfg!(feature = "xla") {
+            BackendKind::Xla
         } else {
-            self.cache.layer_literals(l)?
-        };
+            BackendKind::Native
+        }
+    }
+}
 
-        let mut inputs: Vec<&Literal> = vec![x_lit, &pos_lit, &clen_lit];
-        if spec.mode == Mode::Kivi {
-            inputs.push(&rlen_lit);
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            "native" | "kernel" => Ok(BackendKind::Native),
+            other => bail!("unknown backend {other:?} (expected xla|native)"),
         }
-        for w in &self.weight_lits[l] {
-            inputs.push(w);
-        }
-        for c in &cache_lits {
-            inputs.push(c);
-        }
-        let mut outs = self.exec_lits(artifact, inputs)?;
-
-        // route the new-token outputs into the cache per mode (only those
-        // tensors cross back to the host; x stays a Literal — §Perf L3-1)
-        let host: Vec<Tensor> =
-            outs[1..].iter().map(Tensor::from_literal).collect::<Result<_>>()?;
-        match spec.mode {
-            Mode::Fp => self.cache.append_fp(l, slot0, &host[0], &host[1], valid)?,
-            Mode::Token => self.cache.append_token_outputs(l, slot0, &host[..6], valid)?,
-            Mode::Kivi => {
-                let commits = self.cache.append_kivi_residual(l, slot0, &host[0], &host[1], valid)?;
-                for (bi, need) in commits.iter().enumerate() {
-                    if *need {
-                        self.commit_kivi(l, slot0 + bi)?;
-                    }
-                }
-            }
-        }
-        Ok(outs.remove(0))
     }
 
-    fn commit_kivi(&mut self, l: usize, slot: usize) -> Result<()> {
-        let spec = self.specs[l];
-        let (kchunk, vchunk) = self.cache.residual_chunk(l, slot)?;
-        let g = self.cfg.group;
-        let kname = Manifest::quant_name(true, spec.pair.k_bits, 1, g);
-        let vname = Manifest::quant_name(false, spec.pair.v_bits, 1, g);
-        let klit = kchunk.to_literal()?;
-        let vlit = vchunk.to_literal()?;
-        let k_outs = self.exec(&kname, vec![&klit])?;
-        let v_outs = self.exec(&vname, vec![&vlit])?;
-        self.cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// The engine surface the serving stack programs against: prefill + batched
+/// decode over a `CacheBackend`, per-slot logits, and perf accounting.
+pub trait EngineCore {
+    fn cfg(&self) -> &ModelConfig;
+    fn batch(&self) -> usize;
+    fn s_max(&self) -> usize;
+    fn prefill_chunk(&self) -> usize;
+    fn cache(&self) -> &dyn CacheBackend;
+    fn cache_mut(&mut self) -> &mut dyn CacheBackend;
+    /// Prefill a slot with a prompt; returns the first generated token.
+    fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32>;
+    /// One decode step over the whole batch; `active[b]` gates cache writes.
+    /// Returns the argmax next token per slot (garbage for inactive slots).
+    fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>>;
+    /// Logits of the slot's most recent step.
+    fn logits(&self, slot: usize) -> &[f32];
+    /// Cumulative bytes moved by gather-to-dense staging copies (the XLA
+    /// paged arm). The native block-direct path never stages: always 0.
+    fn gather_bytes(&self) -> u64 {
+        0
     }
 
-    /// One decode step over the whole batch. `tokens[b]` is slot b's input
-    /// token; `active[b]` gates cache writes and position advance. Returns
-    /// the argmax next token per slot (garbage for inactive slots).
-    pub fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>> {
-        anyhow::ensure!(tokens.len() == self.batch && active.len() == self.batch);
-        let valid: Vec<usize> = active.iter().map(|&a| a as usize).collect();
-
-        let ids = Tensor::i32(&[self.batch, 1], tokens.to_vec()).to_literal()?;
-        let name = self.embed_decode.clone();
-        let mut x = self
-            .exec_lits(&name, vec![&ids, &self.embed_lit])?
-            .remove(0);
-
-        for l in 0..self.cfg.n_layers {
-            let art = self.layer_decode[l].clone();
-            let x_in = x;
-            x = self.run_layer(l, &art, &x_in, 0, self.batch, &valid)?;
-        }
-
-        // lm head over [B, D] ([B,1,D] reshaped in place, no copy semantics)
-        let x_lit = x.reshape(&[self.batch as i64, self.cfg.d_model as i64])?;
-        let lm = self.lmhead_decode.clone();
-        let outs = self.exec(&lm, vec![&x_lit, &self.ln_f_lit, &self.embed_lit])?;
-        let logits = outs[0].as_f32()?;
-        for b in 0..self.batch {
-            self.last_logits[b] = logits[b * self.cfg.vocab..(b + 1) * self.cfg.vocab].to_vec();
-        }
-        for b in 0..self.batch {
-            if active[b] {
-                self.cache.advance_pos(b, 1);
-            }
-        }
-        Ok(outs[1].as_i32()?.to_vec())
+    fn kv_bytes(&self) -> usize {
+        self.cache().kv_bytes()
     }
 
-    /// Prefill a slot with a prompt, chunked at `prefill_chunk` (B=1
-    /// executables slice the slot's cache region). Returns the first
-    /// generated token. Chunked prefill quantizes each chunk before the next
-    /// attends, giving prefill-stage error accumulation (paper App. C).
-    pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(
-            (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
-            "prompt overflows cache"
-        );
-        let tc = self.prefill_chunk;
-        let mut last_hidden: Option<Vec<f32>> = None;
-        let mut last_nv = 0usize;
-        for chunk in prompt.chunks(tc) {
-            let nv = chunk.len();
-            let mut ids = chunk.to_vec();
-            ids.resize(tc, 0);
-            let ids_lit = Tensor::i32(&[1, tc], ids).to_literal()?;
-            let ename = self.embed_prefill.clone();
-            let mut x = self
-                .exec_lits(&ename, vec![&ids_lit, &self.embed_lit])?
-                .remove(0);
-            for l in 0..self.cfg.n_layers {
-                let art = self.layer_prefill[l].clone();
-                let x_in = x;
-                x = self.run_layer(l, &art, &x_in, slot, 1, &[nv])?;
-            }
-            self.cache.advance_pos(slot, nv);
-            let xt = Tensor::from_literal(&x)?;
-            let xf = xt.as_f32()?;
-            let d = self.cfg.d_model;
-            last_hidden = Some(xf[(nv - 1) * d..nv * d].to_vec());
-            last_nv = nv;
-        }
-        let _ = last_nv;
-        let xb = Tensor::f32(&[1, self.cfg.d_model], last_hidden.unwrap());
-        let x_lit = xb.to_literal()?;
-        let lm = self.lmhead_prefill.clone();
-        let outs = self.exec(&lm, vec![&x_lit, &self.ln_f_lit, &self.embed_lit])?;
-        self.last_logits[slot] = outs[0].as_f32()?.to_vec();
-        Ok(outs[1].as_i32()?[0])
+    fn equivalent_bits(&self) -> f64 {
+        self.cache().equivalent_bits()
     }
 
     /// Greedy generation for a single slot (prefill + decode), utility for
     /// eval paths. Uses full-batch decode with only this slot active.
-    pub fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
-        self.cache.reset_slot(slot);
+    fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        self.cache_mut().reset_slot(slot);
         let mut next = self.prefill(slot, prompt)?;
+        let (batch, s_max) = (self.batch(), self.s_max());
         let mut out = Vec::with_capacity(max_new);
-        let mut tokens = vec![0i32; self.batch];
-        let mut active = vec![false; self.batch];
+        let mut tokens = vec![0i32; batch];
+        let mut active = vec![false; batch];
         active[slot] = true;
         for _ in 0..max_new {
             out.push(next);
-            if self.cache.pos(slot) as usize >= self.s_max {
+            if self.cache().pos(slot) as usize >= s_max {
                 break;
             }
             tokens[slot] = next;
             next = self.decode_step(&tokens, &active)?[slot];
         }
         Ok(out)
-    }
-
-    pub fn kv_bytes(&self) -> usize {
-        self.cache.kv_bytes()
-    }
-
-    pub fn equivalent_bits(&self) -> f64 {
-        self.cache.equivalent_bits()
     }
 }

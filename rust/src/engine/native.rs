@@ -1,0 +1,314 @@
+//! Native engine backend: the transformer computed in-process by
+//! `crate::kernel` — no PJRT, no AOT artifacts, no XLA extension.
+//!
+//! Two things distinguish it from the reference engine (which it matches
+//! numerically, operation for operation):
+//!
+//! * It runs over the real `CacheBackend` arms. KV state is stored
+//!   *actually quantized* (packed codes + scales, via `kernel::quantize`,
+//!   the same `quant::asym` math the PJRT quant executables implement), in
+//!   either the dense slot buffers or the paged block pool — so paged
+//!   serving semantics (admission, preemption, prefix sharing, swap) are
+//!   identical across backends.
+//! * Attention never builds a dense staging copy: `kernel::attend_one`
+//!   walks the cache's `KvView` — block tables on the paged arm —
+//!   dequantizing each page inside the accumulation loops. The
+//!   `gather_bytes` counter is structurally zero here, which is the whole
+//!   point (see `table10_kernel`).
+//!
+//! Prefill is token-by-token, which on kivi layers commits each full group
+//! before later tokens attend — the same prefill-stage error-accumulation
+//! semantics the paper calibrates with (App. C) and the reference engine
+//! implements.
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig};
+use crate::kernel;
+use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
+use crate::model::Weights;
+use crate::tensor::Tensor;
+
+pub struct NativeEngine {
+    pub cfg: ModelConfig,
+    pub specs: Vec<LayerSpec>,
+    weights: Weights,
+    /// Dense reference arm or the paged block-pool arm, behind one interface.
+    pub cache: Box<dyn CacheBackend>,
+    pub batch: usize,
+    pub s_max: usize,
+    /// Kept for the scheduler's preemption cost model; native prefill is
+    /// token-by-token, so this does not change numerics.
+    pub prefill_chunk: usize,
+    /// Logits of the last step per slot (for perplexity / eval paths).
+    pub last_logits: Vec<Vec<f32>>,
+}
+
+impl NativeEngine {
+    /// Build a native engine. `paged: None` = dense reference arm,
+    /// `Some(opts)` = paged block pool (admission/preemption/prefix sharing
+    /// exactly as under the XLA backend).
+    pub fn new(
+        cfg: &ModelConfig,
+        weights: Weights,
+        specs: Vec<LayerSpec>,
+        batch: usize,
+        s_max: usize,
+        prefill_chunk: usize,
+        paged: Option<PagedOptions>,
+    ) -> Result<NativeEngine> {
+        anyhow::ensure!(specs.len() == cfg.n_layers, "one spec per layer");
+        anyhow::ensure!(batch > 0, "batch must be > 0");
+        weights.validate(cfg)?;
+        let cache: Box<dyn CacheBackend> = match paged {
+            None => Box::new(KvCache::new(cfg, &specs, batch, s_max)?),
+            Some(opts) => Box::new(PagedKvCache::new(cfg, &specs, batch, s_max, &opts)?),
+        };
+        Ok(NativeEngine {
+            cfg: cfg.clone(),
+            specs,
+            weights,
+            cache,
+            batch,
+            s_max,
+            prefill_chunk,
+            last_logits: vec![Vec::new(); batch],
+        })
+    }
+
+    /// Run one token through every layer for `slot`: project, rope, commit
+    /// K/V quantized-at-storage, then attend block-table-direct. Returns the
+    /// final hidden state; the caller advances the slot's position.
+    fn forward_token(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        let (d, hq, hkv, dh, ff) = (
+            self.cfg.d_model,
+            self.cfg.n_heads,
+            self.cfg.n_kv_heads,
+            self.cfg.head_dim,
+            self.cfg.d_ff,
+        );
+        let eps = self.cfg.rms_eps as f32;
+        let theta = self.cfg.rope_theta;
+        let g = self.cfg.group;
+        let n_layers = self.cfg.n_layers;
+        let pos = self.cache.pos(slot) as usize;
+        anyhow::ensure!(pos < self.s_max, "cache capacity {} exceeded", self.s_max);
+        anyhow::ensure!((token as usize) < self.cfg.vocab, "token id {token} out of range");
+
+        let mut x = {
+            let emb = self.weights.embed()?.as_f32()?;
+            emb[(token as usize) * d..(token as usize + 1) * d].to_vec()
+        };
+
+        let mut h = vec![0f32; d];
+        let mut q = vec![0f32; hq * dh];
+        let mut k = vec![0f32; hkv * dh];
+        let mut v = vec![0f32; hkv * dh];
+        let mut attn_out = vec![0f32; hq * dh];
+        let mut proj = vec![0f32; d];
+        let mut mlp_h = vec![0f32; ff];
+
+        for l in 0..n_layers {
+            let spec = self.specs[l];
+            let lw = self.weights.layer(l)?;
+            let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+                lw[0].as_f32()?,
+                lw[1].as_f32()?,
+                lw[2].as_f32()?,
+                lw[3].as_f32()?,
+                lw[4].as_f32()?,
+                lw[5].as_f32()?,
+                lw[6].as_f32()?,
+                lw[7].as_f32()?,
+            );
+            kernel::rms_norm(&x, ln1, eps, &mut h);
+            q.fill(0.0);
+            k.fill(0.0);
+            v.fill(0.0);
+            kernel::matvec_acc(&h, wq, d, hq * dh, &mut q);
+            kernel::matvec_acc(&h, wk, d, hkv * dh, &mut k);
+            kernel::matvec_acc(&h, wv, d, hkv * dh, &mut v);
+            kernel::apply_rope_heads(&mut q, hq, dh, pos, theta);
+            kernel::apply_rope_heads(&mut k, hkv, dh, pos, theta);
+
+            // commit the new token to the cache, quantized per the layer spec
+            match spec.mode {
+                Mode::Fp => {
+                    let kt = Tensor::f32(&[1, hkv, 1, dh], k.clone());
+                    let vt = Tensor::f32(&[1, hkv, 1, dh], v.clone());
+                    self.cache.append_fp(l, slot, &kt, &vt, &[1])?;
+                }
+                Mode::Token => {
+                    let outs = kernel::token_step_outputs(&k, &v, hkv, dh, spec.pair)?;
+                    self.cache.append_token_outputs(l, slot, &outs, &[1])?;
+                }
+                Mode::Kivi => {
+                    let kt = Tensor::f32(&[1, hkv, 1, dh], k.clone());
+                    let vt = Tensor::f32(&[1, hkv, 1, dh], v.clone());
+                    let commit = self.cache.append_kivi_residual(l, slot, &kt, &vt, &[1])?;
+                    if commit[0] {
+                        let (kchunk, vchunk) = self.cache.residual_chunk(l, slot)?;
+                        let (k_outs, v_outs) =
+                            kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, g, dh, spec.pair)?;
+                        self.cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
+                    }
+                }
+            }
+
+            // dequant-on-read attention over committed pages + residual —
+            // no dense staging buffer on this path
+            {
+                let view = self.cache.kv_view(l, slot)?;
+                kernel::attend_one(&q, hq, &view, &mut attn_out)?;
+            }
+
+            proj.fill(0.0);
+            kernel::matvec_acc(&attn_out, wo, hq * dh, d, &mut proj);
+            for i in 0..d {
+                x[i] += proj[i];
+            }
+
+            kernel::rms_norm(&x, ln2, eps, &mut h);
+            mlp_h.fill(0.0);
+            kernel::matvec_acc(&h, w1, d, ff, &mut mlp_h);
+            kernel::gelu_tanh_inplace(&mut mlp_h);
+            proj.fill(0.0);
+            kernel::matvec_acc(&mlp_h, w2, ff, d, &mut proj);
+            for i in 0..d {
+                x[i] += proj[i];
+            }
+        }
+        Ok(x)
+    }
+
+    /// Final norm + tied-embedding head: (argmax token, full logits).
+    fn lm_head(&self, x: &[f32]) -> Result<(i32, Vec<f32>)> {
+        let d = self.cfg.d_model;
+        let eps = self.cfg.rms_eps as f32;
+        let mut h = vec![0f32; d];
+        kernel::rms_norm(x, self.weights.ln_f()?.as_f32()?, eps, &mut h);
+        let emb = self.weights.embed()?.as_f32()?;
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0f32; vocab];
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for t in 0..vocab {
+            let row = &emb[t * d..(t + 1) * d];
+            let mut dot = 0f32;
+            for i in 0..d {
+                dot += h[i] * row[i];
+            }
+            logits[t] = dot;
+            if dot > best.1 {
+                best = (t, dot);
+            }
+        }
+        Ok((best.0 as i32, logits))
+    }
+
+    /// One decode step over the whole batch (slots are independent, so the
+    /// native backend steps them sequentially — numerics identical to a
+    /// batched step). Returns the argmax next token per slot.
+    pub fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        anyhow::ensure!(tokens.len() == self.batch && active.len() == self.batch);
+        let mut out = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            if !active[b] {
+                continue;
+            }
+            let x = self.forward_token(b, tokens[b])?;
+            let (next, logits) = self.lm_head(&x)?;
+            self.last_logits[b] = logits;
+            self.cache.advance_pos(b, 1);
+            out[b] = next;
+        }
+        Ok(out)
+    }
+
+    /// Prefill a slot token by token (kivi groups commit as they fill, so
+    /// later prompt tokens attend over already-quantized earlier ones).
+    /// Returns the first generated token.
+    pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
+            "prompt overflows cache"
+        );
+        let mut last_x = Vec::new();
+        for &t in prompt {
+            last_x = self.forward_token(slot, t)?;
+            self.cache.advance_pos(slot, 1);
+        }
+        let (next, logits) = self.lm_head(&last_x)?;
+        self.last_logits[slot] = logits;
+        Ok(next)
+    }
+
+    /// Greedy generation for one slot (prefill + decode).
+    pub fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        self.cache.reset_slot(slot);
+        let mut next = self.prefill(slot, prompt)?;
+        let mut out = Vec::with_capacity(max_new);
+        let mut tokens = vec![0i32; self.batch];
+        let mut active = vec![false; self.batch];
+        active[slot] = true;
+        for _ in 0..max_new {
+            out.push(next);
+            if self.cache.pos(slot) as usize >= self.s_max {
+                break;
+            }
+            tokens[slot] = next;
+            next = self.decode_step(&tokens, &active)?[slot];
+        }
+        Ok(out)
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.cache.kv_bytes()
+    }
+
+    pub fn equivalent_bits(&self) -> f64 {
+        self.cache.equivalent_bits()
+    }
+}
+
+impl super::EngineCore for NativeEngine {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    fn cache(&self) -> &dyn CacheBackend {
+        self.cache.as_ref()
+    }
+
+    fn cache_mut(&mut self) -> &mut dyn CacheBackend {
+        self.cache.as_mut()
+    }
+
+    fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
+        NativeEngine::prefill(self, slot, prompt)
+    }
+
+    fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        NativeEngine::decode_step(self, tokens, active)
+    }
+
+    fn logits(&self, slot: usize) -> &[f32] {
+        &self.last_logits[slot]
+    }
+
+    fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
+        NativeEngine::generate(self, slot, prompt, max_new)
+    }
+}

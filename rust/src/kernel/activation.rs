@@ -1,0 +1,52 @@
+//! MLP activations. The model family here uses tanh-approximate GELU
+//! (matching `jax.nn.gelu(approximate=True)` and the reference engine);
+//! `swiglu` ships alongside it for SwiGLU-gated checkpoints (the InfiniLM
+//! lineage), so the kernel set covers both MLP shapes.
+
+/// Tanh-approximate GELU, bit-matching `ref_engine::gelu_tanh`.
+pub fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_tanh_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = gelu_tanh(*x);
+    }
+}
+
+/// SwiGLU gate: out[i] = silu(gate[i]) * up[i].
+pub fn swiglu(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(gate.len(), up.len());
+    debug_assert_eq!(gate.len(), out.len());
+    for i in 0..gate.len() {
+        let g = gate[i];
+        let silu = g / (1.0 + (-g).exp());
+        out[i] = silu * up[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu_tanh(0.0), 0.0);
+        // gelu(x) -> x for large positive x, -> 0 for large negative x
+        assert!((gelu_tanh(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_tanh(-10.0).abs() < 1e-4);
+        // odd-ish symmetry: gelu(x) + gelu(-x) == x
+        let x = 1.3f32;
+        assert!((gelu_tanh(x) + gelu_tanh(-x) - x).abs() < 1e-6);
+    }
+
+    #[test]
+    fn swiglu_known_values() {
+        let mut out = vec![0.0; 2];
+        swiglu(&[0.0, 2.0], &[5.0, 3.0], &mut out);
+        assert_eq!(out[0], 0.0); // silu(0) = 0
+        let silu2 = 2.0 / (1.0 + (-2.0f32).exp());
+        assert!((out[1] - silu2 * 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,70 @@
+//! Dense matrix kernels. `matvec_acc` is the decode hot path (one token
+//! against `[d_in, d_out]` row-major weights) and keeps the reference
+//! engine's zero-skip so the two paths produce bit-identical accumulations;
+//! `matmul` is the prefill-shaped variant (row blocks of tokens).
+
+/// y[j] += sum_i x[i] * w[i, j]  (w: [d_in, d_out] row-major).
+///
+/// Skipping exact zeros matches `ref_engine::matvec_acc` float-op for
+/// float-op — important because parity tests compare logits at tight
+/// tolerance, and a different accumulation order would drift.
+pub fn matvec_acc(x: &[f32], w: &[f32], d_in: usize, d_out: usize, y: &mut [f32]) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(y.len(), d_out);
+    for i in 0..d_in {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+/// out[t, j] = sum_i a[t, i] * w[i, j]  (a: [rows, d_in], w: [d_in, d_out]).
+///
+/// Accumulates row-of-w at a time (same inner order as `matvec_acc` per
+/// output row), so a one-row `matmul` equals a `matvec_acc` over zeroed
+/// output exactly.
+pub fn matmul(a: &[f32], w: &[f32], rows: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), rows * d_out);
+    out.fill(0.0);
+    for t in 0..rows {
+        let row_in = &a[t * d_in..(t + 1) * d_in];
+        matvec_acc(row_in, w, d_in, d_out, &mut out[t * d_out..(t + 1) * d_out]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known_values() {
+        // w = [[1, 2], [3, 4], [5, 6]] (3 in, 2 out), x = [1, 0, 2]
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = vec![1.0, 0.0, 2.0];
+        let mut y = vec![0.0; 2];
+        matvec_acc(&x, &w, 3, 2, &mut y);
+        assert_eq!(y, vec![11.0, 14.0]);
+    }
+
+    #[test]
+    fn matmul_matches_per_row_matvec() {
+        let (rows, d_in, d_out) = (3, 4, 5);
+        let a: Vec<f32> = (0..rows * d_in).map(|i| (i as f32 * 0.3).sin()).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut out = vec![0.0; rows * d_out];
+        matmul(&a, &w, rows, d_in, d_out, &mut out);
+        for t in 0..rows {
+            let mut y = vec![0.0; d_out];
+            matvec_acc(&a[t * d_in..(t + 1) * d_in], &w, d_in, d_out, &mut y);
+            assert_eq!(&out[t * d_out..(t + 1) * d_out], &y[..]);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Native CPU compute kernels: the artifact-free backend of the engine.
+//!
+//! These are the InfiniLM-shaped primitives (gemm, rms_norm, rotary, fused
+//! softmax, activations) plus the subsystem's reason to exist: a paged
+//! attention kernel that walks `PagedKvCache` block tables directly and
+//! dequantizes each page on the fly from its layer's precision pair
+//! (`paged_attention`). Nothing here stages pages into a dense buffer — the
+//! KIVI layout makes that possible, because per-channel key scales are
+//! page-aligned by construction, so `(code * scale + zero)` folds straight
+//! into the K·Q and P·V accumulation loops.
+//!
+//! Numerics deliberately mirror `model::ref_engine` operation for operation
+//! (same zero-skip matvec, same split-half RoPE, same softmax order), so the
+//! native engine is comparable to the reference engine at tight tolerance —
+//! that parity is what `tests/native_backend.rs` pins down.
+
+pub mod activation;
+pub mod gemm;
+pub mod paged_attention;
+pub mod quantize;
+pub mod rms_norm;
+pub mod rotary;
+pub mod softmax;
+
+pub use activation::{gelu_tanh, gelu_tanh_inplace, swiglu};
+pub use gemm::{matmul, matvec_acc};
+pub use paged_attention::attend_one;
+pub use quantize::{kivi_commit_outputs, token_step_outputs};
+pub use rms_norm::rms_norm;
+pub use rotary::{apply_rope, apply_rope_heads};
+pub use softmax::{causal_softmax_rows, softmax};

@@ -1,0 +1,182 @@
+//! Block-table-direct, dequant-on-read attention: the kernel the native
+//! backend runs instead of the XLA arm's gather-to-dense staging copy.
+//!
+//! For one query token it walks the slot's `KvView` page by page —
+//! physically scattered pages on the paged arm, one contiguous region on
+//! the dense arm — and folds dequantization straight into the K·Q and P·V
+//! accumulation loops: `dot += q[d] * (code * scale + zero)`. No dense
+//! staging buffer exists on this path; the only scratch is one score row
+//! and one unpacked-code row. KIVI's asymmetric layout is what makes the
+//! fold cheap: per-channel key (scale, zero) vectors are page-aligned (one
+//! `[Dh]` pair per page, hoisted out of the row loop), and per-token value
+//! scales are scalar per row.
+//!
+//! Token order is chronological: committed pages first, then the kivi fp
+//! residual ring — exactly the sequence the reference engine attends over,
+//! so probabilities match it bitwise given identical stored codes.
+
+use anyhow::Result;
+
+use crate::config::Mode;
+use crate::kvcache::KvView;
+use crate::quant::unpack_row;
+
+use super::softmax::softmax;
+
+/// Attention for one query token over everything the view holds (committed
+/// + residual). `q` is `[hq * dh]` post-RoPE; `out` receives `[hq * dh]`.
+/// GQA: query head `hh` reads KV head `hh / (hq / view.h)`.
+pub fn attend_one(q: &[f32], hq: usize, view: &KvView<'_>, out: &mut [f32]) -> Result<()> {
+    let (h, dh, p) = (view.h, view.dh, view.page);
+    debug_assert_eq!(q.len(), hq * dh);
+    debug_assert_eq!(out.len(), hq * dh);
+    anyhow::ensure!(hq % h == 0, "query heads must be a multiple of kv heads");
+    let gqa = hq / h;
+    let s_len = view.seq_len();
+    anyhow::ensure!(s_len > 0, "attention over an empty cache");
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0f32; s_len];
+    let mut codes = vec![0u8; dh];
+    for hh in 0..hq {
+        let kv = hh / gqa;
+        let qh = &q[hh * dh..(hh + 1) * dh];
+
+        // K·Q over committed pages, dequant folded into the dot
+        match view.spec.mode {
+            Mode::Fp => {
+                for j in 0..view.cache_len {
+                    let kj = view.k_fp_row(j / p, kv, j % p);
+                    let mut dot = 0f32;
+                    for d in 0..dh {
+                        dot += qh[d] * kj[d];
+                    }
+                    scores[j] = dot * scale;
+                }
+            }
+            Mode::Token => {
+                for j in 0..view.cache_len {
+                    let (pi, row) = (j / p, j % p);
+                    unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, &mut codes);
+                    let (ks, kz) = view.k_tok_scale(pi, kv, row);
+                    let mut dot = 0f32;
+                    for d in 0..dh {
+                        dot += qh[d] * (codes[d] as f32 * ks + kz);
+                    }
+                    scores[j] = dot * scale;
+                }
+            }
+            Mode::Kivi => {
+                // per-channel key scales are page-aligned: hoist the [Dh]
+                // scale/zero vectors once per page, outside the row loop
+                for pi in 0..view.n_pages() {
+                    let rows = view.page_rows(pi);
+                    let (ks, kz) = view.k_page_scale(pi, kv);
+                    for row in 0..rows {
+                        unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, &mut codes);
+                        let mut dot = 0f32;
+                        for d in 0..dh {
+                            dot += qh[d] * (codes[d] as f32 * ks[d] + kz[d]);
+                        }
+                        scores[pi * p + row] = dot * scale;
+                    }
+                }
+            }
+        }
+        // kivi fp residual tokens (chronologically after every committed one)
+        for i in 0..view.res_len {
+            let kj = view.res_k_row(kv, i);
+            let mut dot = 0f32;
+            for d in 0..dh {
+                dot += qh[d] * kj[d];
+            }
+            scores[view.cache_len + i] = dot * scale;
+        }
+
+        softmax(&mut scores);
+
+        // P·V, dequant folded the same way
+        let o = &mut out[hh * dh..(hh + 1) * dh];
+        o.fill(0.0);
+        match view.spec.mode {
+            Mode::Fp => {
+                for j in 0..view.cache_len {
+                    let pj = scores[j];
+                    let vj = view.v_fp_row(j / p, kv, j % p);
+                    for d in 0..dh {
+                        o[d] += pj * vj[d];
+                    }
+                }
+            }
+            Mode::Token | Mode::Kivi => {
+                for j in 0..view.cache_len {
+                    let (pi, row) = (j / p, j % p);
+                    let pj = scores[j];
+                    unpack_row(view.v_code_row(pi, kv, row), view.spec.pair.v_bits, &mut codes);
+                    let (vs, vz) = view.v_tok_scale(pi, kv, row);
+                    for d in 0..dh {
+                        o[d] += pj * (codes[d] as f32 * vs + vz);
+                    }
+                }
+            }
+        }
+        for i in 0..view.res_len {
+            let pj = scores[view.cache_len + i];
+            let vj = view.res_v_row(kv, i);
+            for d in 0..dh {
+                o[d] += pj * vj[d];
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LayerSpec, Mode, PrecisionPair};
+    use crate::kvcache::{KvView, PageAddr};
+
+    /// Fp-mode dense view over hand-built buffers: with identical V rows the
+    /// attention output must be exactly V regardless of the scores.
+    #[test]
+    fn uniform_values_pass_through() {
+        let (h, dh, s_max, page) = (1usize, 4usize, 8usize, 4usize);
+        let len = 5usize;
+        let mut k_fp = vec![0f32; h * s_max * dh];
+        let mut v_fp = vec![0f32; h * s_max * dh];
+        for j in 0..len {
+            for d in 0..dh {
+                k_fp[j * dh + d] = (j as f32 + 1.0) * 0.1 * (d as f32 - 1.5);
+                v_fp[j * dh + d] = 3.0 + d as f32; // identical across tokens
+            }
+        }
+        let view = KvView {
+            spec: LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP },
+            h,
+            dh,
+            kp: 0,
+            vp: 0,
+            page,
+            cache_len: len,
+            res_len: 0,
+            addr: PageAddr::Dense { slot: 0, s_max },
+            k_codes: &[],
+            k_scale: &[],
+            k_zero: &[],
+            v_codes: &[],
+            v_scale: &[],
+            v_zero: &[],
+            k_fp: &k_fp,
+            v_fp: &v_fp,
+            k_res: &[],
+            v_res: &[],
+            res_cap: 0,
+        };
+        let q = vec![0.3f32; dh];
+        let mut out = vec![0f32; dh];
+        attend_one(&q, 1, &view, &mut out).unwrap();
+        for d in 0..dh {
+            assert!((out[d] - (3.0 + d as f32)).abs() < 1e-5, "d={d}: {}", out[d]);
+        }
+    }
+}

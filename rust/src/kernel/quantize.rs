@@ -1,0 +1,143 @@
+//! Native quantize-at-commit: packages freshly computed K/V rows into the
+//! exact tensor shapes the cache append paths expect from the PJRT quant
+//! executables, using the same `quant::asym` round-to-nearest the reference
+//! engine fake-quants with — so natively written pages and artifact-written
+//! pages are interchangeable.
+
+use anyhow::Result;
+
+use crate::config::PrecisionPair;
+use crate::quant::{packed_width, quantize_per_channel, quantize_per_token};
+use crate::tensor::Tensor;
+
+/// Quantize one decode token's K/V (`[h * dh]` each, post-RoPE keys) into
+/// the 6-tensor `append_token_outputs` layout:
+/// (k_codes [1,h,1,kp], k_scale [1,h,1], k_zero, v_codes [1,h,1,vp],
+/// v_scale, v_zero) — one per-token (scale, zero) per head.
+pub fn token_step_outputs(
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    dh: usize,
+    pair: PrecisionPair,
+) -> Result<Vec<Tensor>> {
+    debug_assert_eq!(k.len(), h * dh);
+    debug_assert_eq!(v.len(), h * dh);
+    let kp = packed_width(dh, pair.k_bits)?;
+    let vp = packed_width(dh, pair.v_bits)?;
+    let mut kc = vec![0u8; h * kp];
+    let mut ks = vec![0f32; h];
+    let mut kz = vec![0f32; h];
+    let mut vc = vec![0u8; h * vp];
+    let mut vs = vec![0f32; h];
+    let mut vz = vec![0f32; h];
+    for hh in 0..h {
+        let kq = quantize_per_token(&k[hh * dh..(hh + 1) * dh], 1, dh, pair.k_bits)?;
+        kc[hh * kp..(hh + 1) * kp].copy_from_slice(&kq.codes);
+        ks[hh] = kq.scale[0];
+        kz[hh] = kq.zero[0];
+        let vq = quantize_per_token(&v[hh * dh..(hh + 1) * dh], 1, dh, pair.v_bits)?;
+        vc[hh * vp..(hh + 1) * vp].copy_from_slice(&vq.codes);
+        vs[hh] = vq.scale[0];
+        vz[hh] = vq.zero[0];
+    }
+    Ok(vec![
+        Tensor::u8(&[1, h, 1, kp], kc),
+        Tensor::f32(&[1, h, 1], ks),
+        Tensor::f32(&[1, h, 1], kz),
+        Tensor::u8(&[1, h, 1, vp], vc),
+        Tensor::f32(&[1, h, 1], vs),
+        Tensor::f32(&[1, h, 1], vz),
+    ])
+}
+
+/// Quantize a full kivi residual group (`residual_chunk` output, `[1,h,g,dh]`
+/// each) into `commit_kivi_chunk`'s expected tensors:
+/// keys per-channel over the group — (codes [1,h,g,kp], scale [1,h,dh],
+/// zero [1,h,dh]) — and values per-token — (codes [1,h,g,vp], scale [1,h,g],
+/// zero [1,h,g]).
+pub fn kivi_commit_outputs(
+    kchunk: &Tensor,
+    vchunk: &Tensor,
+    h: usize,
+    g: usize,
+    dh: usize,
+    pair: PrecisionPair,
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let kf = kchunk.as_f32()?;
+    let vf = vchunk.as_f32()?;
+    debug_assert_eq!(kf.len(), h * g * dh);
+    let kp = packed_width(dh, pair.k_bits)?;
+    let vp = packed_width(dh, pair.v_bits)?;
+    let mut kc = vec![0u8; h * g * kp];
+    let mut ks = vec![0f32; h * dh];
+    let mut kz = vec![0f32; h * dh];
+    let mut vc = vec![0u8; h * g * vp];
+    let mut vs = vec![0f32; h * g];
+    let mut vz = vec![0f32; h * g];
+    for hh in 0..h {
+        let kq = quantize_per_channel(&kf[hh * g * dh..(hh + 1) * g * dh], g, dh, pair.k_bits)?;
+        kc[hh * g * kp..(hh + 1) * g * kp].copy_from_slice(&kq.codes);
+        ks[hh * dh..(hh + 1) * dh].copy_from_slice(&kq.scale);
+        kz[hh * dh..(hh + 1) * dh].copy_from_slice(&kq.zero);
+        let vq = quantize_per_token(&vf[hh * g * dh..(hh + 1) * g * dh], g, dh, pair.v_bits)?;
+        vc[hh * g * vp..(hh + 1) * g * vp].copy_from_slice(&vq.codes);
+        vs[hh * g..(hh + 1) * g].copy_from_slice(&vq.scale);
+        vz[hh * g..(hh + 1) * g].copy_from_slice(&vq.zero);
+    }
+    Ok((
+        vec![
+            Tensor::u8(&[1, h, g, kp], kc),
+            Tensor::f32(&[1, h, dh], ks),
+            Tensor::f32(&[1, h, dh], kz),
+        ],
+        vec![
+            Tensor::u8(&[1, h, g, vp], vc),
+            Tensor::f32(&[1, h, g], vs),
+            Tensor::f32(&[1, h, g], vz),
+        ],
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::unpack_row;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn token_outputs_roundtrip_matches_fake_quant() {
+        let (h, dh) = (2, 16);
+        let mut r = Rng::seed(9);
+        let k: Vec<f32> = (0..h * dh).map(|_| r.normal() as f32).collect();
+        let v: Vec<f32> = (0..h * dh).map(|_| r.normal() as f32).collect();
+        let outs = token_step_outputs(&k, &v, h, dh, PrecisionPair::new(4, 8)).unwrap();
+        assert_eq!(outs[0].shape, vec![1, h, 1, 8]);
+        // dequantizing the codes reproduces the fake-quant values
+        let mut row = vec![0u8; dh];
+        for hh in 0..h {
+            let kp = outs[0].shape[3];
+            unpack_row(&outs[0].as_u8().unwrap()[hh * kp..(hh + 1) * kp], 4, &mut row);
+            let q = quantize_per_token(&k[hh * dh..(hh + 1) * dh], 1, dh, 4).unwrap();
+            let want = q.dequantize();
+            let s = outs[1].as_f32().unwrap()[hh];
+            let z = outs[2].as_f32().unwrap()[hh];
+            for d in 0..dh {
+                assert_eq!(row[d] as f32 * s + z, want[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn kivi_outputs_have_page_aligned_channel_scales() {
+        let (h, g, dh) = (2, 8, 16);
+        let mut r = Rng::seed(11);
+        let k = Tensor::f32(&[1, h, g, dh], (0..h * g * dh).map(|_| r.normal() as f32).collect());
+        let v = Tensor::f32(&[1, h, g, dh], (0..h * g * dh).map(|_| r.normal() as f32).collect());
+        let (ko, vo) = kivi_commit_outputs(&k, &v, h, g, dh, PrecisionPair::new(4, 2)).unwrap();
+        assert_eq!(ko[1].shape, vec![1, h, dh], "one scale vector per page");
+        assert_eq!(vo[1].shape, vec![1, h, g], "per-token value scales");
+        assert_eq!(ko[0].shape, vec![1, h, g, 8]);
+        assert_eq!(vo[0].shape, vec![1, h, g, 4]);
+    }
+}

@@ -1,0 +1,39 @@
+//! RMSNorm, matching `model.py::rms_norm` and the reference engine: mean of
+//! squares (not variance), epsilon inside the sqrt.
+
+/// out[i] = x[i] * g[i] / sqrt(mean(x^2) + eps)
+pub fn rms_norm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+    let d = x.len();
+    debug_assert_eq!(g.len(), d);
+    debug_assert_eq!(out.len(), d);
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * r * g[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_gain_normalizes_rms_to_one() {
+        let x = vec![3.0, -3.0, 3.0, -3.0];
+        let g = vec![1.0; 4];
+        let mut out = vec![0.0; 4];
+        rms_norm(&x, &g, 0.0, &mut out);
+        let rms = (out.iter().map(|v| v * v).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-6, "rms {rms}");
+        assert!((out[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gain_scales_channels() {
+        let x = vec![1.0, 1.0];
+        let g = vec![2.0, 0.5];
+        let mut out = vec![0.0; 2];
+        rms_norm(&x, &g, 0.0, &mut out);
+        assert!((out[0] / out[1] - 4.0).abs() < 1e-6);
+    }
+}

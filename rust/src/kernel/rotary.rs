@@ -1,0 +1,50 @@
+//! Split-half rotary position embedding, matching `model.py::apply_rope`
+//! and the reference engine: channel i pairs with i + dh/2, frequency
+//! theta^(-i / (dh/2)).
+
+/// Rotate one head's `[head_dim]` vector in place for absolute position `pos`.
+pub fn apply_rope(x: &mut [f32], pos: usize, head_dim: usize, theta: f64) {
+    debug_assert_eq!(x.len(), head_dim);
+    let half = head_dim / 2;
+    for i in 0..half {
+        let freq = (theta as f32).powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (s, c) = ang.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * c - b * s;
+        x[i + half] = a * s + b * c;
+    }
+}
+
+/// Rotate `n_heads` packed `[n_heads * head_dim]` vectors in place.
+pub fn apply_rope_heads(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, theta: f64) {
+    debug_assert_eq!(x.len(), n_heads * head_dim);
+    for h in 0..n_heads {
+        apply_rope(&mut x[h * head_dim..(h + 1) * head_dim], pos, head_dim, theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let orig = x.clone();
+        apply_rope(&mut x, 0, 8, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rotation_preserves_pair_norms() {
+        let mut x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.9).sin()).collect();
+        let orig = x.clone();
+        apply_rope(&mut x, 17, 8, 10000.0);
+        for i in 0..4 {
+            let before = orig[i] * orig[i] + orig[i + 4] * orig[i + 4];
+            let after = x[i] * x[i] + x[i + 4] * x[i + 4];
+            assert!((before - after).abs() < 1e-5, "pair {i}: {before} vs {after}");
+        }
+    }
+}

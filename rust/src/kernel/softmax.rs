@@ -1,0 +1,64 @@
+//! Softmax kernels. `softmax` is the decode form (one query row, every
+//! cached token visible); `causal_softmax_rows` is the prefill form — mask
+//! and normalization fused in one pass over each row, no materialized mask.
+
+/// In-place numerically-stable softmax over one score row.
+///
+/// Matches the reference engine's order exactly: subtract the running max,
+/// exponentiate, then divide by the accumulated denominator — so attention
+/// probabilities agree bitwise with `ref_engine`'s `exp(x - max) / denom`.
+pub fn softmax(scores: &mut [f32]) {
+    let mut maxs = f32::NEG_INFINITY;
+    for &s in scores.iter() {
+        maxs = maxs.max(s);
+    }
+    let mut denom = 0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - maxs).exp();
+        denom += *s;
+    }
+    for s in scores.iter_mut() {
+        *s /= denom;
+    }
+}
+
+/// Fused causal softmax over `[rows, cols]` scores where query row `t` may
+/// attend to key columns `0..=offset + t` (offset = tokens already cached
+/// before this block). Masked positions come out exactly 0.0 and never enter
+/// the max/denominator.
+pub fn causal_softmax_rows(scores: &mut [f32], rows: usize, cols: usize, offset: usize) {
+    debug_assert_eq!(scores.len(), rows * cols);
+    for t in 0..rows {
+        let visible = (offset + t + 1).min(cols);
+        let row = &mut scores[t * cols..(t + 1) * cols];
+        softmax(&mut row[..visible]);
+        for s in row[visible..].iter_mut() {
+            *s = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one_and_orders() {
+        let mut s = vec![1.0, 3.0, 2.0];
+        softmax(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[1] > s[2] && s[2] > s[0]);
+    }
+
+    #[test]
+    fn causal_rows_mask_the_future() {
+        // 2 query rows over 4 columns, 1 token already cached
+        let mut s = vec![0.5; 8];
+        causal_softmax_rows(&mut s, 2, 4, 1);
+        // row 0 sees cols 0..=1, row 1 sees cols 0..=2
+        assert_eq!(&s[2..4], &[0.0, 0.0]);
+        assert_eq!(s[7], 0.0);
+        assert!((s[0] + s[1] - 1.0).abs() < 1e-6);
+        assert!((s[4] + s[5] + s[6] - 1.0).abs() < 1e-6);
+    }
+}

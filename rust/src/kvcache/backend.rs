@@ -15,9 +15,11 @@
 //! engine admits purely by free slots and never preempts.
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::Literal;
 
 use super::swap::{SwapHandle, SwapPolicy, SwapStats};
+use super::view::KvView;
 use crate::tensor::Tensor;
 
 /// Pool sizing for the paged arm. Precedence: `total_blocks`, then
@@ -83,10 +85,24 @@ pub trait CacheBackend {
     fn cache_len(&self, layer: usize, slot: usize) -> i32;
     /// Valid fp residual tokens for one layer's slot (kivi only).
     fn res_len(&self, layer: usize, slot: usize) -> i32;
-    /// Cache tensors for a full-batch layer step, in artifact argument order.
+    /// Cache tensors for a full-batch layer step, in artifact argument order
+    /// (XLA backend only — this is the gather-to-dense staging copy the
+    /// native backend's block-direct kernel eliminates).
+    #[cfg(feature = "xla")]
     fn layer_literals(&self, layer: usize) -> Result<Vec<Literal>>;
     /// Cache tensors for one slot (B=1 prefill executables).
+    #[cfg(feature = "xla")]
     fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<Literal>>;
+    /// Zero-copy page/scale view of one (layer, slot) for the native
+    /// dequant-on-read attention kernel — no staging buffer is built.
+    fn kv_view(&self, layer: usize, slot: usize) -> Result<KvView<'_>>;
+    /// Bytes a gather-to-dense staging copy of `n_slots` slots moves for
+    /// this layer (0 for the dense arm: its resident buffers already ARE
+    /// the artifact layout). Feeds the `gather_bytes` serving metric and
+    /// `table10_kernel`'s staged-vs-direct comparison.
+    fn staged_bytes(&self, _layer: usize, _n_slots: usize) -> usize {
+        0
+    }
     fn append_token_outputs(
         &mut self,
         layer: usize,

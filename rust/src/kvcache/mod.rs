@@ -19,6 +19,7 @@ pub mod backend;
 pub mod block;
 pub mod paged;
 pub mod swap;
+pub mod view;
 
 use anyhow::{bail, Result};
 
@@ -33,6 +34,7 @@ pub use swap::{
     HostArenaFull, HostSwapArena, SwapHandle, SwapLost, SwapPage, SwapPayload, SwapPolicy,
     SwapStats,
 };
+pub use view::{KvView, PageAddr};
 
 /// The tensors of one layer in dense swap serialization order (every
 /// allocated buffer; unset modes contribute nothing). One macro generates
@@ -466,6 +468,7 @@ impl CacheBackend for KvCache {
         self.layers[layer].res_len[slot]
     }
 
+    #[cfg(feature = "xla")]
     fn layer_literals(&self, layer: usize) -> Result<Vec<xla::Literal>> {
         self.layers[layer]
             .artifact_inputs()
@@ -474,12 +477,80 @@ impl CacheBackend for KvCache {
             .collect()
     }
 
+    #[cfg(feature = "xla")]
     fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<xla::Literal>> {
         self.layers[layer]
             .slot_inputs(slot)
             .iter()
             .map(|t| t.to_literal())
             .collect()
+    }
+
+    /// Dense view: the resident `[B, H, S_max, ·]` buffers with the slot
+    /// baked into the addressing; page granularity is the quant group so
+    /// kivi per-channel scales present one vector per page, same as the
+    /// paged arm.
+    fn kv_view(&self, layer: usize, slot: usize) -> Result<view::KvView<'_>> {
+        let lc = &self.layers[layer];
+        let (h, dh) = (self.n_kv_heads, self.head_dim);
+        let page = self.group.max(1);
+        let empty_f: &[f32] = &[];
+        let empty_u: &[u8] = &[];
+        let (kp, vp) = match lc.spec.mode {
+            Mode::Fp => (0, 0),
+            _ => (
+                packed_width(dh, lc.spec.pair.k_bits)?,
+                packed_width(dh, lc.spec.pair.v_bits)?,
+            ),
+        };
+        let rn = h * self.residual * dh;
+        let (k_res, v_res) = if lc.spec.mode == Mode::Kivi {
+            let kr = lc.k_res.as_ref().unwrap().as_f32()?;
+            let vr = lc.v_res.as_ref().unwrap().as_f32()?;
+            (&kr[slot * rn..(slot + 1) * rn], &vr[slot * rn..(slot + 1) * rn])
+        } else {
+            (empty_f, empty_f)
+        };
+        let (k_fp, v_fp) = match lc.spec.mode {
+            Mode::Fp => (
+                lc.k_fp.as_ref().unwrap().as_f32()?,
+                lc.v_fp.as_ref().unwrap().as_f32()?,
+            ),
+            _ => (empty_f, empty_f),
+        };
+        let (k_codes, k_scale, k_zero, v_codes, v_scale, v_zero) = match lc.spec.mode {
+            Mode::Fp => (empty_u, empty_f, empty_f, empty_u, empty_f, empty_f),
+            _ => (
+                lc.k_codes.as_ref().unwrap().as_u8()?,
+                lc.k_scale.as_ref().unwrap().as_f32()?,
+                lc.k_zero.as_ref().unwrap().as_f32()?,
+                lc.v_codes.as_ref().unwrap().as_u8()?,
+                lc.v_scale.as_ref().unwrap().as_f32()?,
+                lc.v_zero.as_ref().unwrap().as_f32()?,
+            ),
+        };
+        Ok(view::KvView {
+            spec: lc.spec,
+            h,
+            dh,
+            kp,
+            vp,
+            page,
+            cache_len: lc.cache_len[slot] as usize,
+            res_len: lc.res_len[slot] as usize,
+            addr: view::PageAddr::Dense { slot, s_max: self.s_max },
+            k_codes,
+            k_scale,
+            k_zero,
+            v_codes,
+            v_scale,
+            v_zero,
+            k_fp,
+            v_fp,
+            k_res,
+            v_res,
+            res_cap: self.residual,
+        })
     }
 
     fn append_token_outputs(

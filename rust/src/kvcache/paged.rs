@@ -20,6 +20,7 @@
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::Literal;
 
 use crate::config::{LayerSpec, Mode, ModelConfig};
@@ -28,6 +29,7 @@ use crate::tensor::Tensor;
 
 use super::backend::{CacheBackend, MemStats, OutOfPages, PagedOptions};
 use super::block::{BlockId, BlockPool};
+use super::view::{KvView, PageAddr};
 use super::swap::{
     self, HostArenaFull, HostSwapArena, SwapHandle, SwapLost, SwapPage, SwapPayload, SwapStats,
 };
@@ -692,12 +694,74 @@ impl CacheBackend for PagedKvCache {
         self.layers[layer].res_len[slot]
     }
 
+    #[cfg(feature = "xla")]
     fn layer_literals(&self, layer: usize) -> Result<Vec<Literal>> {
         self.gather_batch(layer)?.iter().map(|t| t.to_literal()).collect()
     }
 
+    #[cfg(feature = "xla")]
     fn slot_literals(&self, layer: usize, slot: usize) -> Result<Vec<Literal>> {
         self.gather_slot(layer, slot)?.iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Block-table-direct view: the whole per-layer arenas plus this slot's
+    /// block table — the native attention kernel reads pages in place, so
+    /// no gather-to-dense staging copy happens on this path.
+    fn kv_view(&self, layer: usize, slot: usize) -> Result<KvView<'_>> {
+        let lc = &self.layers[layer];
+        let rn = self.h * self.residual * self.dh;
+        let empty_f: &[f32] = &[];
+        let (k_res, v_res) = if lc.spec.mode == Mode::Kivi {
+            (
+                &lc.k_res[slot * rn..(slot + 1) * rn],
+                &lc.v_res[slot * rn..(slot + 1) * rn],
+            )
+        } else {
+            (empty_f, empty_f)
+        };
+        Ok(KvView {
+            spec: lc.spec,
+            h: self.h,
+            dh: self.dh,
+            kp: lc.kp,
+            vp: lc.vp,
+            page: self.page,
+            cache_len: lc.cache_len[slot] as usize,
+            res_len: lc.res_len[slot] as usize,
+            addr: PageAddr::Paged { table: &self.tables[slot] },
+            k_codes: &lc.k_codes,
+            k_scale: &lc.k_scale,
+            k_zero: &lc.k_zero,
+            v_codes: &lc.v_codes,
+            v_scale: &lc.v_scale,
+            v_zero: &lc.v_zero,
+            k_fp: &lc.k_fp,
+            v_fp: &lc.v_fp,
+            k_res,
+            v_res,
+            res_cap: self.residual,
+        })
+    }
+
+    /// Bytes one gather-to-dense staging copy of `n_slots` slots moves for
+    /// this layer — exactly the buffers `gather_layer` allocates (dense
+    /// artifact shapes, valid or not: the staging cost is O(s_max), which
+    /// is the point the block-direct kernel makes).
+    fn staged_bytes(&self, layer: usize, n_slots: usize) -> usize {
+        let lc = &self.layers[layer];
+        let (h, s, dh, r) = (self.h, self.s_max, self.dh, self.residual);
+        let b = n_slots;
+        match lc.spec.mode {
+            Mode::Fp => 2 * b * h * s * dh * 4,
+            Mode::Token => b * h * s * (lc.kp + lc.vp) + 4 * b * h * s * 4,
+            Mode::Kivi => {
+                let ng = s / self.page;
+                b * h * s * (lc.kp + lc.vp)
+                    + 2 * b * h * ng * dh * 4
+                    + 2 * b * h * s * 4
+                    + 2 * b * h * r * dh * 4
+            }
+        }
     }
 
     fn append_token_outputs(

@@ -1,0 +1,207 @@
+//! Read-only page/scale views over one layer's KV state for one slot — the
+//! API the native attention kernel consumes *instead of* `gather_layer`.
+//!
+//! A `KvView` names where every committed token's codes/scales/fp rows live
+//! without copying anything: the paged arm exposes its block table plus the
+//! whole per-layer arenas (token block `i` lives in physical page
+//! `table[i]`), the dense arm exposes its `[B, H, S_max, ·]` buffers with
+//! the slot baked into the addressing. Both arms present the same
+//! page-of-`group`-tokens geometry, so per-channel kivi key scales are
+//! always exactly one `[Dh]` vector per page and the kernel never needs to
+//! know which arm it is reading.
+//!
+//! `dequant_k_into` / `dequant_v_into` apply the exact
+//! `code as f32 * scale + zero` expression `QuantChunk::dequantize_into`
+//! uses, which is what makes the view bit-exact against a
+//! `gather_layer`-then-dequantize round trip (pinned in
+//! `tests/native_backend.rs`).
+
+use crate::config::{LayerSpec, Mode};
+use crate::quant::unpack_row;
+
+use super::block::BlockId;
+
+/// How token blocks map to physical storage.
+pub enum PageAddr<'a> {
+    /// Paged arm: token block `i` of the slot lives in arena page `table[i]`.
+    Paged { table: &'a [BlockId] },
+    /// Dense arm: one contiguous `[H, S_max, ·]` region per slot; token
+    /// block `i` starts at row `i * page` of the slot's region.
+    Dense { slot: usize, s_max: usize },
+}
+
+/// Zero-copy view of one (layer, slot)'s committed + residual KV state.
+/// Unused arenas for the layer's mode are empty slices.
+pub struct KvView<'a> {
+    pub spec: LayerSpec,
+    pub h: usize,
+    pub dh: usize,
+    /// Packed code widths (0 for fp mode).
+    pub kp: usize,
+    pub vp: usize,
+    /// Tokens per page (= the quantization group on both arms).
+    pub page: usize,
+    /// Committed (quantized or fp-stored) tokens.
+    pub cache_len: usize,
+    /// Valid fp residual tokens (kivi only).
+    pub res_len: usize,
+    pub addr: PageAddr<'a>,
+    pub k_codes: &'a [u8],
+    pub k_scale: &'a [f32],
+    pub k_zero: &'a [f32],
+    pub v_codes: &'a [u8],
+    pub v_scale: &'a [f32],
+    pub v_zero: &'a [f32],
+    pub k_fp: &'a [f32],
+    pub v_fp: &'a [f32],
+    /// The slot's kivi fp residual ring regions, `[H, res_cap, Dh]`.
+    pub k_res: &'a [f32],
+    pub v_res: &'a [f32],
+    pub res_cap: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Pages holding committed tokens (the last may be partial).
+    pub fn n_pages(&self) -> usize {
+        (self.cache_len + self.page - 1) / self.page
+    }
+
+    /// Committed rows in page `pi`.
+    pub fn page_rows(&self, pi: usize) -> usize {
+        (self.cache_len - pi * self.page).min(self.page)
+    }
+
+    /// Total tokens attention sees (committed + residual).
+    pub fn seq_len(&self) -> usize {
+        self.cache_len + self.res_len
+    }
+
+    #[inline]
+    fn row_off(&self, pi: usize, hh: usize, row: usize, width: usize) -> usize {
+        match &self.addr {
+            PageAddr::Paged { table } => {
+                ((table[pi] as usize * self.h + hh) * self.page + row) * width
+            }
+            PageAddr::Dense { slot, s_max } => {
+                ((slot * self.h + hh) * s_max + pi * self.page + row) * width
+            }
+        }
+    }
+
+    #[inline]
+    pub fn k_code_row(&self, pi: usize, hh: usize, row: usize) -> &'a [u8] {
+        let o = self.row_off(pi, hh, row, self.kp);
+        &self.k_codes[o..o + self.kp]
+    }
+
+    #[inline]
+    pub fn v_code_row(&self, pi: usize, hh: usize, row: usize) -> &'a [u8] {
+        let o = self.row_off(pi, hh, row, self.vp);
+        &self.v_codes[o..o + self.vp]
+    }
+
+    #[inline]
+    pub fn k_fp_row(&self, pi: usize, hh: usize, row: usize) -> &'a [f32] {
+        let o = self.row_off(pi, hh, row, self.dh);
+        &self.k_fp[o..o + self.dh]
+    }
+
+    #[inline]
+    pub fn v_fp_row(&self, pi: usize, hh: usize, row: usize) -> &'a [f32] {
+        let o = self.row_off(pi, hh, row, self.dh);
+        &self.v_fp[o..o + self.dh]
+    }
+
+    /// Kivi per-channel key (scale, zero) vectors for one page ([Dh] each).
+    /// Page-aligned by construction: the paged arm stores exactly one vector
+    /// per physical page, the dense arm one per group `pi` of the slot.
+    #[inline]
+    pub fn k_page_scale(&self, pi: usize, hh: usize) -> (&'a [f32], &'a [f32]) {
+        let o = match &self.addr {
+            PageAddr::Paged { table } => (table[pi] as usize * self.h + hh) * self.dh,
+            PageAddr::Dense { slot, s_max } => {
+                let ng = s_max / self.page;
+                ((slot * self.h + hh) * ng + pi) * self.dh
+            }
+        };
+        (&self.k_scale[o..o + self.dh], &self.k_zero[o..o + self.dh])
+    }
+
+    /// Per-token key (scale, zero) — token mode.
+    #[inline]
+    pub fn k_tok_scale(&self, pi: usize, hh: usize, row: usize) -> (f32, f32) {
+        let o = self.row_off(pi, hh, row, 1);
+        (self.k_scale[o], self.k_zero[o])
+    }
+
+    /// Per-token value (scale, zero) — token and kivi modes.
+    #[inline]
+    pub fn v_tok_scale(&self, pi: usize, hh: usize, row: usize) -> (f32, f32) {
+        let o = self.row_off(pi, hh, row, 1);
+        (self.v_scale[o], self.v_zero[o])
+    }
+
+    /// Residual-ring fp rows (kivi only), token `i` of head `hh`.
+    #[inline]
+    pub fn res_k_row(&self, hh: usize, i: usize) -> &'a [f32] {
+        let o = (hh * self.res_cap + i) * self.dh;
+        &self.k_res[o..o + self.dh]
+    }
+
+    #[inline]
+    pub fn res_v_row(&self, hh: usize, i: usize) -> &'a [f32] {
+        let o = (hh * self.res_cap + i) * self.dh;
+        &self.v_res[o..o + self.dh]
+    }
+
+    /// Dequantize head `hh`'s committed keys into `out` (`[cache_len, dh]`),
+    /// applying exactly `code as f32 * scale + zero` per element — the
+    /// bit-exactness oracle against `gather_layer`'s dense output.
+    pub fn dequant_k_into(&self, hh: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cache_len * self.dh);
+        let dh = self.dh;
+        let mut row_codes = vec![0u8; dh];
+        for j in 0..self.cache_len {
+            let (pi, row) = (j / self.page, j % self.page);
+            let o = &mut out[j * dh..(j + 1) * dh];
+            match self.spec.mode {
+                Mode::Fp => o.copy_from_slice(self.k_fp_row(pi, hh, row)),
+                Mode::Token => {
+                    unpack_row(self.k_code_row(pi, hh, row), self.spec.pair.k_bits, &mut row_codes);
+                    let (s, z) = self.k_tok_scale(pi, hh, row);
+                    for d in 0..dh {
+                        o[d] = row_codes[d] as f32 * s + z;
+                    }
+                }
+                Mode::Kivi => {
+                    unpack_row(self.k_code_row(pi, hh, row), self.spec.pair.k_bits, &mut row_codes);
+                    let (ks, kz) = self.k_page_scale(pi, hh);
+                    for d in 0..dh {
+                        o[d] = row_codes[d] as f32 * ks[d] + kz[d];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantize head `hh`'s committed values into `out` (`[cache_len, dh]`).
+    pub fn dequant_v_into(&self, hh: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cache_len * self.dh);
+        let dh = self.dh;
+        let mut row_codes = vec![0u8; dh];
+        for j in 0..self.cache_len {
+            let (pi, row) = (j / self.page, j % self.page);
+            let o = &mut out[j * dh..(j + 1) * dh];
+            match self.spec.mode {
+                Mode::Fp => o.copy_from_slice(self.v_fp_row(pi, hh, row)),
+                Mode::Token | Mode::Kivi => {
+                    unpack_row(self.v_code_row(pi, hh, row), self.spec.pair.v_bits, &mut row_codes);
+                    let (s, z) = self.v_tok_scale(pi, hh, row);
+                    for d in 0..dh {
+                        o[d] = row_codes[d] as f32 * s + z;
+                    }
+                }
+            }
+        }
+    }
+}

@@ -12,9 +12,11 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod kernel;
 pub mod kvcache;
 pub mod model;
 pub mod quant;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tensor;
 pub mod tuner;
@@ -23,6 +25,7 @@ pub mod util;
 pub use cli::cli_main;
 
 /// Bench support: measure decode throughput for one precision map (Table 8).
+#[cfg(feature = "xla")]
 pub fn measure_throughput(
     rt: &std::sync::Arc<runtime::Runtime>,
     model: &str,

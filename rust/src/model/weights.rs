@@ -1,5 +1,6 @@
 //! Weight store: loads `weights-<model>.bin` (flat little-endian f32) using
-//! the tensor index from the manifest.
+//! the tensor index from the manifest, or generates a deterministic
+//! synthetic checkpoint for artifact-free tests and benches.
 
 use std::collections::BTreeMap;
 
@@ -7,6 +8,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{Manifest, ModelConfig};
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 pub const LAYER_WEIGHT_NAMES: [&str; 8] = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"];
 
@@ -40,6 +42,42 @@ impl Weights {
             );
         }
         Ok(Weights { model_name: model_name.to_string(), tensors })
+    }
+
+    /// Deterministic synthetic weights for `cfg` — the artifact-free path:
+    /// lets the native engine, its parity tests and the kernel benches run
+    /// on machines with neither AOT artifacts nor a weights file. Matmul
+    /// weights are ~N(0, 1/d_in) so activations stay O(1); norm gains are 1.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut r = Rng::seed(seed);
+        let (d, hq, hkv, dh, ff) = (
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            cfg.d_ff,
+        );
+        let mut mat = |d_in: usize, d_out: usize| -> Tensor {
+            let s = 1.0 / (d_in as f64).sqrt();
+            Tensor::f32(
+                &[d_in, d_out],
+                (0..d_in * d_out).map(|_| (r.normal() * s) as f32).collect(),
+            )
+        };
+        let mut tensors = BTreeMap::new();
+        tensors.insert("embed".to_string(), mat(cfg.vocab, d));
+        for l in 0..cfg.n_layers {
+            tensors.insert(format!("layer{l}.ln1"), Tensor::f32(&[d], vec![1.0; d]));
+            tensors.insert(format!("layer{l}.wq"), mat(d, hq * dh));
+            tensors.insert(format!("layer{l}.wk"), mat(d, hkv * dh));
+            tensors.insert(format!("layer{l}.wv"), mat(d, hkv * dh));
+            tensors.insert(format!("layer{l}.wo"), mat(hq * dh, d));
+            tensors.insert(format!("layer{l}.ln2"), Tensor::f32(&[d], vec![1.0; d]));
+            tensors.insert(format!("layer{l}.w1"), mat(d, ff));
+            tensors.insert(format!("layer{l}.w2"), mat(ff, d));
+        }
+        tensors.insert("ln_f".to_string(), Tensor::f32(&[d], vec![1.0; d]));
+        Weights { model_name: format!("synthetic-{seed}"), tensors }
     }
 
     pub fn get(&self, name: &str) -> Result<&Tensor> {

@@ -2,6 +2,7 @@
 //! KV-cache manager, the quantization substrate, and PJRT literals.
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use xla::{ElementType, Literal};
 
 #[derive(Debug, Clone, PartialEq)]
@@ -109,6 +110,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal (dtype-preserving).
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<Literal> {
         let ty = match &self.data {
             Data::F32(_) => ElementType::F32,
@@ -124,6 +126,7 @@ impl Tensor {
     }
 
     /// Read a literal back into a host tensor.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -144,10 +147,12 @@ pub fn strides_of(shape: &[usize]) -> Vec<usize> {
     st
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }

@@ -15,14 +15,17 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse `argv[1..]`; `switch_names` lists valueless flags.
+    /// Parse `argv[1..]`; `switch_names` lists valueless flags. An empty
+    /// argv or a flags-only argv yields an empty `subcommand` — the caller
+    /// decides how to fail (the CLI prints usage and exits nonzero);
+    /// nothing here can panic (regression: the old peek-then-`unwrap`
+    /// pattern was one refactor away from panicking on a missing
+    /// subcommand).
     pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with("--") {
-                out.subcommand = it.next().unwrap().clone();
-            }
+        if let Some(first) = it.next_if(|a| !a.starts_with("--")) {
+            out.subcommand = first.clone();
         }
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
@@ -111,6 +114,18 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&v(&["x", "--flag"]), &[]).is_err());
+    }
+
+    #[test]
+    fn missing_subcommand_does_not_panic() {
+        // regression: empty argv and flags-only argv must parse cleanly with
+        // an empty subcommand (cli_main then prints usage and exits nonzero)
+        let a = Args::parse(&[], &[]).unwrap();
+        assert!(a.subcommand.is_empty());
+        let a = Args::parse(&v(&["--paged", "--model", "tiny"]), &["paged"]).unwrap();
+        assert!(a.subcommand.is_empty(), "a flag is not a subcommand");
+        assert!(a.switch("paged"));
+        assert_eq!(a.str("model", ""), "tiny");
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use kvtuner::config::{LayerSpec, Manifest, Mode, PrecisionPair};
 use kvtuner::coordinator::{AccuracyClass, Router, WorkerSpec};
-use kvtuner::engine::Engine;
+use kvtuner::engine::{BackendKind, Engine};
 use kvtuner::kvcache::{CacheBackend, PagedOptions, SwapPolicy};
 use kvtuner::model::Weights;
 use kvtuner::runtime::Runtime;
@@ -214,6 +214,7 @@ fn router_serves_mixed_classes_end_to_end() {
             s_max: 256,
             prefill_chunk: 32,
             paged: None,
+            backend: BackendKind::Xla,
         },
         WorkerSpec {
             name: "efficient".into(),
@@ -224,6 +225,7 @@ fn router_serves_mixed_classes_end_to_end() {
             s_max: 256,
             prefill_chunk: 32,
             paged: None,
+            backend: BackendKind::Xla,
         },
     ];
     let router = Router::start(dir, workers).expect("router start");
@@ -266,6 +268,7 @@ fn scheduler_handles_more_requests_than_slots() {
         s_max: 256,
         prefill_chunk: 32,
         paged: None,
+        backend: BackendKind::Xla,
     }];
     let router = Router::start(dir, workers).unwrap();
     // 7 requests through 2 slots: forces queueing + slot reuse
@@ -297,6 +300,7 @@ fn prompt_longer_than_slot_is_clamped_not_fatal() {
         s_max: 256,
         prefill_chunk: 32,
         paged: None,
+        backend: BackendKind::Xla,
     }];
     let router = Router::start(dir, workers).unwrap();
     let prompt: Vec<i32> = (0..400).map(|j| (j % cfg.vocab) as i32).collect(); // > s_max
@@ -371,6 +375,7 @@ fn paged_router_oversubscribes_slots_beyond_pool() {
         // ~1.5 sequences of prompt 40 + 24 new tokens (64 tokens = 2 pages
         // of 32) -> 3 blocks; admission headroom forces contention
         paged: Some(PagedOptions { total_blocks: Some(3), ..PagedOptions::default() }),
+        backend: BackendKind::Xla,
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..5u64)
@@ -403,6 +408,7 @@ fn paged_router_reuses_shared_prompt_prefixes() {
         s_max: 256,
         prefill_chunk: 32,
         paged: Some(PagedOptions::default()),
+        backend: BackendKind::Xla,
     }];
     let router = Router::start(dir, workers).unwrap();
     // identical 64-token system prompt + distinct 8-token tails
@@ -495,6 +501,7 @@ fn swap_enabled_router_drains_oversubscribed_pool() {
             swap_policy: SwapPolicy::Always,
             ..PagedOptions::default()
         }),
+        backend: BackendKind::Xla,
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..3u64)

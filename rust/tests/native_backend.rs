@@ -1,0 +1,310 @@
+//! Cross-backend parity for the native kernel subsystem. Runs with zero
+//! artifacts and without the `xla` feature (hosted CI exercises exactly
+//! this file with `--no-default-features`):
+//!
+//! * property-style sweep over every shipped precision pair × storage mode:
+//!   native-engine logits (paged arm, block-table-direct attention) match
+//!   the pure-Rust reference engine at tight tolerance — including a kivi
+//!   residual-ring page-boundary prompt length;
+//! * native dense arm vs native paged arm is bit-for-bit identical;
+//! * prefix-page reuse on the native paged arm is bit-exact;
+//! * dequant-on-read through `KvView` is bit-exact against dequantizing
+//!   `gather_layer`'s dense staged output, and `staged_bytes` reports
+//!   exactly what that gather materializes (the `gather_bytes` metric);
+//! * the native path's staging counter is structurally zero.
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use kvtuner::engine::{EngineCore, NativeEngine};
+use kvtuner::kernel;
+use kvtuner::kvcache::{CacheBackend, KvView, PageAddr, PagedKvCache, PagedOptions};
+use kvtuner::model::{RefEngine, Weights};
+use kvtuner::quant::packed_width;
+use kvtuner::tensor::Tensor;
+use kvtuner::util::rng::Rng;
+
+const S_MAX: usize = 64;
+/// Crosses a page boundary (group = 8) and leaves a 5-token residual tail.
+const PROMPT_LEN: usize = 13;
+const MAX_NEW: usize = 12;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "native-test".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 4,
+        n_kv_heads: 2, // GQA factor 2 exercised
+        head_dim: 8,
+        d_ff: 64,
+        vocab: 48,
+        rope_theta: 10000.0,
+        group: 8,
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+fn prompt(cfg: &ModelConfig, seed: usize) -> Vec<i32> {
+    (0..PROMPT_LEN).map(|j| ((j * 7 + seed * 11 + 1) % cfg.vocab) as i32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+#[test]
+fn native_paged_matches_ref_engine_across_all_pairs() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 7);
+    let p = prompt(&cfg, 0);
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in PAIRS {
+            let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+            let mut reff = RefEngine::new(&cfg, &w, specs.clone(), S_MAX).unwrap();
+            let ref_out = reff.generate(&p, MAX_NEW).unwrap();
+            let mut nat = NativeEngine::new(
+                &cfg,
+                w.clone(),
+                specs,
+                1,
+                S_MAX,
+                16,
+                Some(PagedOptions::default()),
+            )
+            .unwrap();
+            let nat_out = nat.generate(0, &p, MAX_NEW).unwrap();
+            assert_eq!(
+                ref_out,
+                nat_out,
+                "token stream diverged: {mode:?} {}",
+                pair.label()
+            );
+            let d = max_abs_diff(&reff.last_logits, nat.logits(0));
+            assert!(d <= 1e-3, "logits diverged by {d}: {mode:?} {}", pair.label());
+        }
+    }
+    // the fp reference arm, for completeness
+    let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
+    let mut reff = RefEngine::new(&cfg, &w, specs.clone(), S_MAX).unwrap();
+    let ref_out = reff.generate(&p, MAX_NEW).unwrap();
+    let mut nat =
+        NativeEngine::new(&cfg, w.clone(), specs, 1, S_MAX, 16, Some(PagedOptions::default()))
+            .unwrap();
+    let nat_out = nat.generate(0, &p, MAX_NEW).unwrap();
+    assert_eq!(ref_out, nat_out);
+    assert!(max_abs_diff(&reff.last_logits, nat.logits(0)) <= 1e-3);
+}
+
+#[test]
+fn native_dense_and_paged_are_bit_identical() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 21);
+    let p = prompt(&cfg, 3);
+    for (mode, pair) in [
+        (Mode::Token, PrecisionPair::new(4, 4)),
+        (Mode::Kivi, PrecisionPair::new(8, 4)),
+        (Mode::Kivi, PrecisionPair::new(4, 2)),
+    ] {
+        let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+        let mut dense =
+            NativeEngine::new(&cfg, w.clone(), specs.clone(), 1, S_MAX, 16, None).unwrap();
+        let dense_out = dense.generate(0, &p, MAX_NEW).unwrap();
+        let mut paged =
+            NativeEngine::new(&cfg, w.clone(), specs, 1, S_MAX, 16, Some(PagedOptions::default()))
+                .unwrap();
+        let paged_out = paged.generate(0, &p, MAX_NEW).unwrap();
+        assert_eq!(dense_out, paged_out, "{mode:?} {}", pair.label());
+        // same codes, same scales, same fold -> identical floats
+        let d = max_abs_diff(dense.logits(0), paged.logits(0));
+        assert!(d <= 1e-6, "dense/paged drifted by {d}: {mode:?} {}", pair.label());
+    }
+}
+
+#[test]
+fn prefix_reuse_on_native_paged_arm_is_bit_exact() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 5);
+    let p = prompt(&cfg, 9);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let mut nat =
+        NativeEngine::new(&cfg, w, specs, 2, S_MAX, 16, Some(PagedOptions::default())).unwrap();
+    let first = nat.prefill(0, &p).unwrap();
+    let logits0 = nat.logits(0).to_vec();
+    nat.cache.register_prefix(0, &p);
+    // slot 1: same prompt, served partly from the shared page chain
+    let reused = nat.cache.prefill_reuse(1, &p);
+    assert!(reused > 0, "one full page must be reusable");
+    assert!(reused < p.len(), "at least one suffix token is always prefilled");
+    let first2 = nat.prefill(1, &p[reused..]).unwrap();
+    assert_eq!(first, first2, "prefix-served prefill changed the next token");
+    assert!(max_abs_diff(&logits0, nat.logits(1)) <= 1e-6);
+}
+
+/// Fill one slot of a paged cache through the real scatter paths with
+/// natively quantized content (same routine the native engine runs).
+fn fill_paged(
+    cache: &mut PagedKvCache,
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    slot: usize,
+    n_tokens: usize,
+    seed: u64,
+) {
+    let (h, dh, g) = (cfg.n_kv_heads, cfg.head_dim, cfg.group);
+    let mut r = Rng::seed(seed);
+    for _t in 0..n_tokens {
+        for (l, sp) in specs.iter().enumerate() {
+            let k: Vec<f32> = (0..h * dh).map(|_| r.normal() as f32).collect();
+            let v: Vec<f32> = (0..h * dh).map(|_| r.normal() as f32).collect();
+            match sp.mode {
+                Mode::Token => {
+                    let outs = kernel::token_step_outputs(&k, &v, h, dh, sp.pair).unwrap();
+                    cache.append_token_outputs(l, slot, &outs, &[1]).unwrap();
+                }
+                Mode::Kivi => {
+                    let kt = Tensor::f32(&[1, h, 1, dh], k);
+                    let vt = Tensor::f32(&[1, h, 1, dh], v);
+                    let commit = cache.append_kivi_residual(l, slot, &kt, &vt, &[1]).unwrap();
+                    if commit[0] {
+                        let (kc, vc) = cache.residual_chunk(l, slot).unwrap();
+                        let (ko, vo) =
+                            kernel::kivi_commit_outputs(&kc, &vc, h, g, dh, sp.pair).unwrap();
+                        cache.commit_kivi_chunk(l, slot, &ko, &vo).unwrap();
+                    }
+                }
+                Mode::Fp => {
+                    let kt = Tensor::f32(&[1, h, 1, dh], k);
+                    let vt = Tensor::f32(&[1, h, 1, dh], v);
+                    cache.append_fp(l, slot, &kt, &vt, &[1]).unwrap();
+                }
+            }
+        }
+        cache.advance_pos(slot, 1);
+    }
+}
+
+/// Build a `KvView` over `gather_slot`'s staged dense tensors — the layouts
+/// the XLA arm feeds its artifacts — so the exact same dequant walk can run
+/// on both representations.
+fn view_over_gathered<'a>(
+    cfg: &ModelConfig,
+    spec: LayerSpec,
+    tensors: &'a [Tensor],
+    cache_len: usize,
+    res_len: usize,
+    s_max: usize,
+) -> KvView<'a> {
+    let (h, dh, g) = (cfg.n_kv_heads, cfg.head_dim, cfg.group);
+    let empty_f: &[f32] = &[];
+    match spec.mode {
+        Mode::Fp => KvView {
+            spec,
+            h,
+            dh,
+            kp: 0,
+            vp: 0,
+            page: g,
+            cache_len,
+            res_len,
+            addr: PageAddr::Dense { slot: 0, s_max },
+            k_codes: &[],
+            k_scale: empty_f,
+            k_zero: empty_f,
+            v_codes: &[],
+            v_scale: empty_f,
+            v_zero: empty_f,
+            k_fp: tensors[0].as_f32().unwrap(),
+            v_fp: tensors[1].as_f32().unwrap(),
+            k_res: empty_f,
+            v_res: empty_f,
+            res_cap: cfg.residual,
+        },
+        Mode::Token | Mode::Kivi => KvView {
+            spec,
+            h,
+            dh,
+            kp: packed_width(dh, spec.pair.k_bits).unwrap(),
+            vp: packed_width(dh, spec.pair.v_bits).unwrap(),
+            page: g,
+            cache_len,
+            res_len,
+            addr: PageAddr::Dense { slot: 0, s_max },
+            k_codes: tensors[0].as_u8().unwrap(),
+            k_scale: tensors[1].as_f32().unwrap(),
+            k_zero: tensors[2].as_f32().unwrap(),
+            v_codes: tensors[3].as_u8().unwrap(),
+            v_scale: tensors[4].as_f32().unwrap(),
+            v_zero: tensors[5].as_f32().unwrap(),
+            k_fp: empty_f,
+            v_fp: empty_f,
+            k_res: if spec.mode == Mode::Kivi {
+                tensors[6].as_f32().unwrap()
+            } else {
+                empty_f
+            },
+            v_res: if spec.mode == Mode::Kivi {
+                tensors[7].as_f32().unwrap()
+            } else {
+                empty_f
+            },
+            res_cap: cfg.residual,
+        },
+    }
+}
+
+#[test]
+fn view_dequant_is_bit_exact_against_gather_output() {
+    let cfg = tiny_cfg();
+    let specs = vec![
+        LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 4) },
+        LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(4, 2) },
+    ];
+    let mut cache =
+        PagedKvCache::new(&cfg, &specs, 1, S_MAX, &PagedOptions::default()).unwrap();
+    fill_paged(&mut cache, &cfg, &specs, 0, PROMPT_LEN, 31);
+
+    for (l, sp) in specs.iter().enumerate() {
+        let view = cache.kv_view(l, 0).unwrap();
+        let cache_len = view.cache_len;
+        let res_len = view.res_len;
+        let tensors = cache.gather_slot(l, 0).unwrap();
+        // the satellite metric must report exactly what the gather staged
+        let staged: usize = tensors.iter().map(|t| t.size_bytes()).sum();
+        assert_eq!(
+            cache.staged_bytes(l, 1),
+            staged,
+            "staged_bytes accounting out of sync with gather_layer (layer {l})"
+        );
+        let gview = view_over_gathered(&cfg, *sp, &tensors, cache_len, res_len, S_MAX);
+        let dh = cfg.head_dim;
+        for hh in 0..cfg.n_kv_heads {
+            let mut from_pages_k = vec![0f32; cache_len * dh];
+            let mut from_gather_k = vec![0f32; cache_len * dh];
+            view.dequant_k_into(hh, &mut from_pages_k);
+            gview.dequant_k_into(hh, &mut from_gather_k);
+            assert_eq!(from_pages_k, from_gather_k, "K bits diverged (layer {l} head {hh})");
+            let mut from_pages_v = vec![0f32; cache_len * dh];
+            let mut from_gather_v = vec![0f32; cache_len * dh];
+            view.dequant_v_into(hh, &mut from_pages_v);
+            gview.dequant_v_into(hh, &mut from_gather_v);
+            assert_eq!(from_pages_v, from_gather_v, "V bits diverged (layer {l} head {hh})");
+        }
+    }
+}
+
+#[test]
+fn native_backend_never_stages() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 13);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
+    let mut nat =
+        NativeEngine::new(&cfg, w, specs, 1, S_MAX, 16, Some(PagedOptions::default())).unwrap();
+    let p = prompt(&cfg, 1);
+    nat.generate(0, &p, MAX_NEW).unwrap();
+    assert_eq!(
+        EngineCore::gather_bytes(&nat),
+        0,
+        "the block-direct path must move zero staging bytes"
+    );
+}
