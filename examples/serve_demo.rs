@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             prefill_chunk: 32,
             paged: None,
             backend: BackendKind::Xla,
+            threads: 1,
         },
         WorkerSpec {
             name: "tuned-balanced".into(),
@@ -55,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             prefill_chunk: 32,
             paged: None,
             backend: BackendKind::Xla,
+            threads: 1,
         },
     ];
 

@@ -227,7 +227,7 @@ fn main() -> anyhow::Result<()> {
     let w = Weights::synthetic(&cfg, 3);
     let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), nl);
     let mut eng =
-        NativeEngine::new(&cfg, w, specs, 1, 128, 32, Some(PagedOptions::default()))?;
+        NativeEngine::new(&cfg, w, specs, 1, 128, 32, 1, Some(PagedOptions::default()))?;
     let prompt: Vec<i32> = (0..48).map(|j| (j * 5 % cfg.vocab) as i32).collect();
     eng.generate(0, &prompt, 16)?;
     assert_eq!(

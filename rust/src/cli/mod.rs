@@ -46,6 +46,12 @@ COMMON FLAGS
                     needs AOT artifacts + the XLA extension) or native
                     (in-process kernels, block-table-direct attention, zero
                     artifacts — only manifest.json + the weights file)
+  --threads N       serve/throughput, native backend: kernel thread-pool
+                    width per engine worker (default: available
+                    parallelism, or $KVTUNER_THREADS; serve divides the
+                    default across its three workers). Results are
+                    bit-identical for every N; N=1 is the scalar engine.
+                    Rejects 0. The xla backend ignores it.
   --paged           serve/throughput: paged KV cache (block pool, prefix
                     sharing, preemption) instead of dense slot buffers
   --pool-blocks N   paged pool size in pages (page = quant group)
@@ -93,6 +99,22 @@ pub(crate) fn backend_kind(args: &Args) -> Result<crate::engine::BackendKind> {
     match args.opt_str("backend") {
         Some(s) => crate::engine::BackendKind::parse(s),
         None => Ok(crate::engine::BackendKind::default()),
+    }
+}
+
+/// Shared: `--threads N` -> kernel-pool width for native-backend workers.
+/// Defaults to the machine's available parallelism (`KVTUNER_THREADS`
+/// overrides); 0 is rejected rather than silently meaning "auto".
+pub(crate) fn thread_count(args: &Args) -> Result<usize> {
+    match args.opt_str("threads") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {v:?}"))?;
+            anyhow::ensure!(n >= 1, "--threads must be >= 1 (use 1 for the scalar engine)");
+            Ok(n)
+        }
+        None => Ok(crate::kernel::default_threads()),
     }
 }
 
@@ -175,5 +197,25 @@ pub(crate) fn parse_modes(s: &str) -> Result<Vec<crate::config::Mode>> {
     match s {
         "both" => Ok(vec![crate::config::Mode::Token, crate::config::Mode::Kivi]),
         m => Ok(vec![crate::config::Mode::parse(m)?]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Args {
+        let v: Vec<String> = xs.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v, &[]).unwrap()
+    }
+
+    #[test]
+    fn threads_flag_parses_and_rejects_zero() {
+        assert_eq!(thread_count(&argv(&["serve", "--threads", "4"])).unwrap(), 4);
+        assert_eq!(thread_count(&argv(&["serve", "--threads", "1"])).unwrap(), 1);
+        assert!(thread_count(&argv(&["serve", "--threads", "0"])).is_err());
+        assert!(thread_count(&argv(&["serve", "--threads", "lots"])).is_err());
+        // default: machine parallelism (>= 1 by construction)
+        assert!(thread_count(&argv(&["serve"])).unwrap() >= 1);
     }
 }

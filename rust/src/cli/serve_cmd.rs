@@ -23,6 +23,14 @@ pub fn run(args: &Args) -> Result<()> {
     let max_new = args.usize("max-new", 16)?;
     let paged = super::paged_options(args)?;
     let backend = super::backend_kind(args)?;
+    // each router worker sizes its own kernel pool from this; an explicit
+    // --threads applies per worker, while the default splits the machine
+    // across the three concurrent workers so their pools do not
+    // oversubscribe the host
+    let threads = match args.opt_str("threads") {
+        Some(_) => super::thread_count(args)?,
+        None => (crate::kernel::default_threads() / 3).max(1),
+    };
 
     // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
     // given, else K8V4
@@ -37,6 +45,7 @@ pub fn run(args: &Args) -> Result<()> {
             prefill_chunk: 32,
             paged: paged.clone(),
             backend,
+            threads,
         },
         WorkerSpec {
             name: "k4v2-efficient".into(),
@@ -48,6 +57,7 @@ pub fn run(args: &Args) -> Result<()> {
             prefill_chunk: 32,
             paged: paged.clone(),
             backend,
+            threads,
         },
     ];
     let balanced_specs = match args.opt_str("config") {
@@ -64,10 +74,12 @@ pub fn run(args: &Args) -> Result<()> {
         prefill_chunk: 32,
         paged: paged.clone(),
         backend,
+        threads,
     });
 
     eprintln!(
-        "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={}, backend={})",
+        "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={}, backend={}, \
+         threads={threads})",
         workers.len(),
         super::cache_desc(&paged),
         backend.as_str(),

@@ -93,7 +93,8 @@ pub fn measure(
 }
 
 /// Measure the same grid point on the native backend: honest prefill
-/// (token-by-token, so kivi groups really commit) and block-direct decode.
+/// (group-blocked, kivi groups commit at the scalar path's boundaries) and
+/// block-direct decode, over a `threads`-wide kernel pool.
 #[allow(clippy::too_many_arguments)]
 pub fn measure_native(
     cfg: &ModelConfig,
@@ -104,9 +105,10 @@ pub fn measure_native(
     input_len: usize,
     steps: usize,
     real_fill: bool,
+    threads: usize,
     paged: Option<PagedOptions>,
 ) -> Result<ThroughputRow> {
-    let mut eng = NativeEngine::new(cfg, weights.clone(), specs, batch, s_max, 32, paged)?;
+    let mut eng = NativeEngine::new(cfg, weights.clone(), specs, batch, s_max, 32, threads, paged)?;
     if real_fill {
         for slot in 0..batch {
             let prompt: Vec<i32> =
@@ -238,8 +240,10 @@ fn run_native(args: &Args) -> Result<()> {
     let s_max = args.usize("smax", 256)?;
     let steps = args.usize("steps", 40)?;
     let real_fill = args.switch("real-fill");
+    let threads = super::thread_count(args)?;
     let paged = super::paged_options(args)?;
     let cache_arm = super::cache_desc(&paged);
+    eprintln!("[throughput] native backend, {threads} kernel threads");
     run_grid(args, &cfg, batch, steps, &cache_arm, BackendKind::Native, |specs, il| {
         measure_native(
             &cfg,
@@ -250,6 +254,7 @@ fn run_native(args: &Args) -> Result<()> {
             il,
             steps,
             real_fill,
+            threads,
             paged.clone(),
         )
     })

@@ -12,7 +12,14 @@ pub struct Metrics {
     pub decode_steps: AtomicU64,
     pub prefill_chunks: AtomicU64,
     pub decode_nanos: AtomicU64,
+    /// Wall time of the most recent decode step (gauge, nanoseconds) —
+    /// stored by the scheduler each tick alongside `gather_bytes`, so a
+    /// snapshot shows current per-step latency, not just the lifetime mean.
+    pub last_decode_nanos: AtomicU64,
     pub prefill_nanos: AtomicU64,
+    /// Prompt tokens actually prefilled (prefix-reused tokens excluded);
+    /// with `prefill_nanos` this yields prefill tokens/sec.
+    pub prefill_tokens: AtomicU64,
     pub busy_slots_sum: AtomicU64,
     /// Paged serving: requests evicted back to the resume queue.
     pub preemptions: AtomicU64,
@@ -53,7 +60,15 @@ pub struct Snapshot {
     pub tokens_generated: u64,
     pub decode_steps: u64,
     pub decode_secs: f64,
+    /// Mean decode wall time per step (ms).
+    pub decode_ms_per_step: f64,
+    /// Wall time of the most recent decode step (ms).
+    pub last_decode_ms: f64,
     pub prefill_secs: f64,
+    pub prefill_tokens: u64,
+    /// Prefill throughput over tokens actually computed (reused prefix
+    /// tokens excluded).
+    pub prefill_tokens_per_sec: f64,
     pub tokens_per_sec_decode: f64,
     pub mean_batch_occupancy: f64,
     pub ttft_p50: f64,
@@ -85,13 +100,15 @@ impl Metrics {
     pub fn record_decode(&self, d: Duration, busy: usize, tokens: usize) {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.decode_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.last_decode_nanos.store(d.as_nanos() as u64, Ordering::Relaxed);
         self.busy_slots_sum.fetch_add(busy as u64, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
-    pub fn record_prefill(&self, d: Duration) {
+    pub fn record_prefill(&self, d: Duration, tokens: usize) {
         self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
         self.prefill_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
     pub fn record_preemption(&self) {
@@ -138,6 +155,8 @@ impl Metrics {
         let decode_secs = self.decode_nanos.load(Ordering::Relaxed) as f64 / 1e9;
         let steps = self.decode_steps.load(Ordering::Relaxed);
         let tokens = self.tokens_generated.load(Ordering::Relaxed);
+        let prefill_secs = self.prefill_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        let prefill_tokens = self.prefill_tokens.load(Ordering::Relaxed);
         let mut l = self.latencies.lock().unwrap();
         l.ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         l.total.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -146,7 +165,15 @@ impl Metrics {
             tokens_generated: tokens,
             decode_steps: steps,
             decode_secs,
-            prefill_secs: self.prefill_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            decode_ms_per_step: if steps > 0 { decode_secs * 1e3 / steps as f64 } else { 0.0 },
+            last_decode_ms: self.last_decode_nanos.load(Ordering::Relaxed) as f64 / 1e6,
+            prefill_secs,
+            prefill_tokens,
+            prefill_tokens_per_sec: if prefill_secs > 0.0 {
+                prefill_tokens as f64 / prefill_secs
+            } else {
+                0.0
+            },
             tokens_per_sec_decode: if decode_secs > 0.0 { tokens as f64 / decode_secs } else { 0.0 },
             mean_batch_occupancy: if steps > 0 {
                 self.busy_slots_sum.load(Ordering::Relaxed) as f64 / steps as f64
@@ -176,10 +203,13 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
+            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
+            self.decode_ms_per_step,
+            self.last_decode_ms,
+            self.prefill_tokens_per_sec,
             self.mean_batch_occupancy,
             self.ttft_p50 * 1e3,
             self.ttft_p95 * 1e3,
@@ -214,12 +244,36 @@ mod tests {
         assert!((s.mean_batch_occupancy - 1.5).abs() < 1e-9);
         assert!((s.tokens_per_sec_decode - 150.0).abs() < 1.0);
         assert!((s.ttft_p50 - 0.005).abs() < 1e-9);
+        assert!((s.decode_ms_per_step - 10.0).abs() < 1e-6);
+        assert!((s.last_decode_ms - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_step_gauge_tracks_the_latest_tick() {
+        let m = Metrics::default();
+        m.record_decode(Duration::from_millis(30), 1, 1);
+        m.record_decode(Duration::from_millis(10), 1, 1);
+        let s = m.snapshot();
+        assert!((s.last_decode_ms - 10.0).abs() < 1e-6, "gauge = most recent step");
+        assert!((s.decode_ms_per_step - 20.0).abs() < 1e-6, "mean over both steps");
+    }
+
+    #[test]
+    fn prefill_tokens_per_sec() {
+        let m = Metrics::default();
+        m.record_prefill(Duration::from_millis(50), 100);
+        m.record_prefill(Duration::from_millis(50), 100);
+        let s = m.snapshot();
+        assert_eq!(s.prefill_tokens, 200);
+        assert!((s.prefill_tokens_per_sec - 2000.0).abs() < 1.0);
     }
 
     #[test]
     fn empty_snapshot() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.tokens_per_sec_decode, 0.0);
+        assert_eq!(s.prefill_tokens_per_sec, 0.0);
+        assert_eq!(s.decode_ms_per_step, 0.0);
         assert_eq!(s.ttft_p95, 0.0);
     }
 }

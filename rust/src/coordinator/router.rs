@@ -41,6 +41,10 @@ pub struct WorkerSpec {
     /// executables, needs artifacts + the XLA extension) or `Native`
     /// (in-process kernels, zero artifacts).
     pub backend: BackendKind,
+    /// Kernel-pool width for the native backend (each worker sizes its own
+    /// pool; 1 = the scalar engine, bit-identical to any other value). The
+    /// XLA backend ignores it — PJRT manages its own execution.
+    pub threads: usize,
 }
 
 /// Construct the worker's engine per its backend kind. Runs on the worker
@@ -58,6 +62,7 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
                 ws.batch,
                 ws.s_max,
                 ws.prefill_chunk,
+                ws.threads,
                 ws.paged.clone(),
             )?))
         }

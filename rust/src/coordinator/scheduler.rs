@@ -275,7 +275,8 @@ impl Scheduler {
         let reused = self.engine.cache_mut().prefill_reuse(slot, ctx);
         let t0 = Instant::now();
         let first = self.engine.prefill(slot, &ctx[reused..])?;
-        self.metrics.record_prefill(t0.elapsed());
+        // tokens actually computed (reused prefix excluded) -> prefill tok/s
+        self.metrics.record_prefill(t0.elapsed(), ctx.len() - reused);
         self.metrics.record_prefix(reused);
         self.engine.cache_mut().register_prefix(slot, ctx);
         Ok((first, reused))
@@ -556,6 +557,8 @@ impl Scheduler {
         }
         let t0 = Instant::now();
         let next = self.engine.decode_step(&tokens, &active)?;
+        // record_decode also stores the per-step wall-time gauge
+        // (last_decode_nanos), updated here each tick like gather_bytes
         self.metrics.record_decode(t0.elapsed(), busy, busy);
         self.metrics
             .gather_bytes

@@ -1,7 +1,7 @@
 //! Native engine backend: the transformer computed in-process by
 //! `crate::kernel` — no PJRT, no AOT artifacts, no XLA extension.
 //!
-//! Two things distinguish it from the reference engine (which it matches
+//! Three things distinguish it from the reference engine (which it matches
 //! numerically, operation for operation):
 //!
 //! * It runs over the real `CacheBackend` arms. KV state is stored
@@ -10,24 +10,374 @@
 //!   either the dense slot buffers or the paged block pool — so paged
 //!   serving semantics (admission, preemption, prefix sharing, swap) are
 //!   identical across backends.
-//! * Attention never builds a dense staging copy: `kernel::attend_one`
+//! * Attention never builds a dense staging copy: `kernel::attend_one_mt`
 //!   walks the cache's `KvView` — block tables on the paged arm —
 //!   dequantizing each page inside the accumulation loops. The
 //!   `gather_bytes` counter is structurally zero here, which is the whole
 //!   point (see `table10_kernel`).
+//! * Execution is parallel but deterministic: every hot kernel runs over an
+//!   in-tree thread pool partitioned by *outputs* (column ranges, query
+//!   heads, row blocks), so logits are bit-identical for any `threads`
+//!   value and `--threads 1` reproduces the scalar engine exactly
+//!   (`tests/native_backend.rs` pins this, `table11_native_mt` measures
+//!   it).
 //!
-//! Prefill is token-by-token, which on kivi layers commits each full group
-//! before later tokens attend — the same prefill-stage error-accumulation
-//! semantics the paper calibrates with (App. C) and the reference engine
-//! implements.
+//! Prefill runs in KIVI-group-sized row blocks (`prefill_block`): one fused
+//! QKV `matmul` + `attend_block` causal pass per group, with each kivi
+//! group committing at exactly the boundary the token-by-token path commits
+//! — identical numerics, ~group× fewer weight-matrix passes. The
+//! token-by-token path survives as `prefill_tokenwise`, the parity oracle.
+//! Decode steps allocate nothing: logits and all layer scratch live in the
+//! engine (plus thread-local kernel scratch), refilled in place each step.
 
 use anyhow::Result;
 
 use crate::config::{LayerSpec, Mode, ModelConfig};
-use crate::kernel;
+use crate::kernel::{self, ThreadPool};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
 use crate::tensor::Tensor;
+
+/// Engine-resident scratch: sized once at construction so the decode loop
+/// and the block-prefill loop run allocation-free (cache-append `Tensor`
+/// staging aside, which is part of the `CacheBackend` API surface).
+struct Scratch {
+    // decode / tokenwise-prefill (one token)
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    mlp: Vec<f32>,
+    /// Final-norm buffer for the lm head (separate from `h` so the head can
+    /// read `x` while writing it).
+    head_h: Vec<f32>,
+    // block prefill (cfg.group rows)
+    xs: Vec<f32>,
+    hs: Vec<f32>,
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    attns: Vec<f32>,
+    projs: Vec<f32>,
+    mlps: Vec<f32>,
+    /// Head-major `[h, g, dh]` staging for the cache-append tensor layouts.
+    kt: Vec<f32>,
+    vt: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &ModelConfig) -> Scratch {
+        let (d, hq, hkv, dh, ff, g) = (
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            cfg.d_ff,
+            cfg.group,
+        );
+        Scratch {
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            q: vec![0.0; hq * dh],
+            k: vec![0.0; hkv * dh],
+            v: vec![0.0; hkv * dh],
+            attn: vec![0.0; hq * dh],
+            proj: vec![0.0; d],
+            mlp: vec![0.0; ff],
+            head_h: vec![0.0; d],
+            xs: vec![0.0; g * d],
+            hs: vec![0.0; g * d],
+            qs: vec![0.0; g * hq * dh],
+            ks: vec![0.0; g * hkv * dh],
+            vs: vec![0.0; g * hkv * dh],
+            attns: vec![0.0; g * hq * dh],
+            projs: vec![0.0; g * d],
+            mlps: vec![0.0; g * ff],
+            kt: vec![0.0; hkv * g * dh],
+            vt: vec![0.0; hkv * g * dh],
+        }
+    }
+}
+
+/// Run one token through every layer for `slot`: project, rope, commit K/V
+/// quantized-at-storage, then attend block-table-direct. Leaves the final
+/// hidden state in `sc.x`; the caller advances the slot's position.
+#[allow(clippy::too_many_arguments)]
+fn forward_token(
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    weights: &Weights,
+    cache: &mut dyn CacheBackend,
+    pool: &ThreadPool,
+    sc: &mut Scratch,
+    slot: usize,
+    token: i32,
+) -> Result<()> {
+    let (d, hq, hkv, dh, ff) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff);
+    let eps = cfg.rms_eps as f32;
+    let theta = cfg.rope_theta;
+    let g = cfg.group;
+    let pos = cache.pos(slot) as usize;
+    anyhow::ensure!(pos < cache.s_max(), "cache capacity {} exceeded", cache.s_max());
+    anyhow::ensure!((token as usize) < cfg.vocab, "token id {token} out of range");
+
+    {
+        let emb = weights.embed()?.as_f32()?;
+        sc.x.copy_from_slice(&emb[(token as usize) * d..(token as usize + 1) * d]);
+    }
+
+    for l in 0..cfg.n_layers {
+        let spec = specs[l];
+        let lw = weights.layer(l)?;
+        let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+            lw[0].as_f32()?,
+            lw[1].as_f32()?,
+            lw[2].as_f32()?,
+            lw[3].as_f32()?,
+            lw[4].as_f32()?,
+            lw[5].as_f32()?,
+            lw[6].as_f32()?,
+            lw[7].as_f32()?,
+        );
+        kernel::rms_norm(&sc.x, ln1, eps, &mut sc.h);
+        sc.q.fill(0.0);
+        sc.k.fill(0.0);
+        sc.v.fill(0.0);
+        kernel::matvec_acc_mt(pool, &sc.h, wq, d, hq * dh, &mut sc.q);
+        kernel::matvec_acc_mt(pool, &sc.h, wk, d, hkv * dh, &mut sc.k);
+        kernel::matvec_acc_mt(pool, &sc.h, wv, d, hkv * dh, &mut sc.v);
+        kernel::apply_rope_heads(&mut sc.q, hq, dh, pos, theta);
+        kernel::apply_rope_heads(&mut sc.k, hkv, dh, pos, theta);
+
+        // commit the new token to the cache, quantized per the layer spec
+        match spec.mode {
+            Mode::Fp => {
+                let kt = Tensor::f32(&[1, hkv, 1, dh], sc.k.clone());
+                let vt = Tensor::f32(&[1, hkv, 1, dh], sc.v.clone());
+                cache.append_fp(l, slot, &kt, &vt, &[1])?;
+            }
+            Mode::Token => {
+                let outs = kernel::token_step_outputs(&sc.k, &sc.v, hkv, dh, spec.pair)?;
+                cache.append_token_outputs(l, slot, &outs, &[1])?;
+            }
+            Mode::Kivi => {
+                let kt = Tensor::f32(&[1, hkv, 1, dh], sc.k.clone());
+                let vt = Tensor::f32(&[1, hkv, 1, dh], sc.v.clone());
+                let commit = cache.append_kivi_residual(l, slot, &kt, &vt, &[1])?;
+                if commit[0] {
+                    let (kchunk, vchunk) = cache.residual_chunk(l, slot)?;
+                    let (k_outs, v_outs) =
+                        kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, g, dh, spec.pair)?;
+                    cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
+                }
+            }
+        }
+
+        // dequant-on-read attention over committed pages + residual —
+        // no dense staging buffer on this path
+        {
+            let view = cache.kv_view(l, slot)?;
+            kernel::attend_one_mt(pool, &sc.q, hq, &view, &mut sc.attn)?;
+        }
+
+        sc.proj.fill(0.0);
+        kernel::matvec_acc_mt(pool, &sc.attn, wo, hq * dh, d, &mut sc.proj);
+        for i in 0..d {
+            sc.x[i] += sc.proj[i];
+        }
+
+        kernel::rms_norm(&sc.x, ln2, eps, &mut sc.h);
+        sc.mlp.fill(0.0);
+        kernel::matvec_acc_mt(pool, &sc.h, w1, d, ff, &mut sc.mlp);
+        kernel::gelu_tanh_inplace(&mut sc.mlp);
+        sc.proj.fill(0.0);
+        kernel::matvec_acc_mt(pool, &sc.mlp, w2, ff, d, &mut sc.proj);
+        for i in 0..d {
+            sc.x[i] += sc.proj[i];
+        }
+    }
+    Ok(())
+}
+
+/// Run one group-aligned block of `cfg.group` prompt tokens through every
+/// layer: fused per-layer QKV `matmul`, blockwise commit, and one
+/// `attend_block` causal pass — the same float ops as `cfg.group` calls of
+/// `forward_token`, in the same order per output element, with each weight
+/// matrix read once per block instead of once per token.
+///
+/// Kivi layers append the whole block to the fp residual ring, attend rows
+/// `0..g-1` over old pages + the in-block fp causal tail, then commit the
+/// group and attend the final row post-commit — exactly the scalar path's
+/// interleaved append/commit/attend sequence. Leaves the block's final
+/// hidden row in `sc.x`.
+#[allow(clippy::too_many_arguments)]
+fn prefill_block(
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    weights: &Weights,
+    cache: &mut dyn CacheBackend,
+    pool: &ThreadPool,
+    sc: &mut Scratch,
+    slot: usize,
+    tokens: &[i32],
+) -> Result<()> {
+    let (d, hq, hkv, dh, ff) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff);
+    let eps = cfg.rms_eps as f32;
+    let theta = cfg.rope_theta;
+    let g = tokens.len();
+    debug_assert_eq!(g, cfg.group);
+    let pos = cache.pos(slot) as usize;
+    debug_assert_eq!(pos % cfg.group, 0, "block prefill needs a group-aligned position");
+    anyhow::ensure!(pos + g <= cache.s_max(), "cache capacity {} exceeded", cache.s_max());
+    let stride_q = hq * dh;
+    let stride_kv = hkv * dh;
+
+    {
+        let emb = weights.embed()?.as_f32()?;
+        for (t, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!((tok as usize) < cfg.vocab, "token id {tok} out of range");
+            sc.xs[t * d..(t + 1) * d]
+                .copy_from_slice(&emb[(tok as usize) * d..(tok as usize + 1) * d]);
+        }
+    }
+
+    for l in 0..cfg.n_layers {
+        let spec = specs[l];
+        let lw = weights.layer(l)?;
+        let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+            lw[0].as_f32()?,
+            lw[1].as_f32()?,
+            lw[2].as_f32()?,
+            lw[3].as_f32()?,
+            lw[4].as_f32()?,
+            lw[5].as_f32()?,
+            lw[6].as_f32()?,
+            lw[7].as_f32()?,
+        );
+        kernel::rms_norm_rows(pool, &sc.xs, ln1, eps, g, d, &mut sc.hs);
+        kernel::matmul_mt(pool, &sc.hs, wq, g, d, hq * dh, &mut sc.qs);
+        kernel::matmul_mt(pool, &sc.hs, wk, g, d, hkv * dh, &mut sc.ks);
+        kernel::matmul_mt(pool, &sc.hs, wv, g, d, hkv * dh, &mut sc.vs);
+        for t in 0..g {
+            kernel::apply_rope_heads(
+                &mut sc.qs[t * stride_q..(t + 1) * stride_q],
+                hq,
+                dh,
+                pos + t,
+                theta,
+            );
+            kernel::apply_rope_heads(
+                &mut sc.ks[t * stride_kv..(t + 1) * stride_kv],
+                hkv,
+                dh,
+                pos + t,
+                theta,
+            );
+        }
+        // head-major [h, g, dh] staging for the cache-append layouts
+        for t in 0..g {
+            for hh in 0..hkv {
+                sc.kt[(hh * g + t) * dh..(hh * g + t + 1) * dh]
+                    .copy_from_slice(&sc.ks[(t * hkv + hh) * dh..(t * hkv + hh + 1) * dh]);
+                sc.vt[(hh * g + t) * dh..(hh * g + t + 1) * dh]
+                    .copy_from_slice(&sc.vs[(t * hkv + hh) * dh..(t * hkv + hh + 1) * dh]);
+            }
+        }
+        match spec.mode {
+            Mode::Fp => {
+                let kt = Tensor::f32(&[1, hkv, g, dh], sc.kt.clone());
+                let vt = Tensor::f32(&[1, hkv, g, dh], sc.vt.clone());
+                cache.append_fp(l, slot, &kt, &vt, &[g])?;
+                let view = cache.kv_view(l, slot)?;
+                kernel::attend_block(pool, &sc.qs, g, hq, &view, pos, &mut sc.attns)?;
+            }
+            Mode::Token => {
+                // per-token quantization is row-independent: blockwise
+                // commit writes the exact bytes g single-token appends would
+                let outs = kernel::token_block_outputs(&sc.kt, &sc.vt, hkv, g, dh, spec.pair)?;
+                cache.append_token_outputs(l, slot, &outs, &[g])?;
+                let view = cache.kv_view(l, slot)?;
+                kernel::attend_block(pool, &sc.qs, g, hq, &view, pos, &mut sc.attns)?;
+            }
+            Mode::Kivi => {
+                let kt = Tensor::f32(&[1, hkv, g, dh], sc.kt.clone());
+                let vt = Tensor::f32(&[1, hkv, g, dh], sc.vt.clone());
+                let commit = cache.append_kivi_residual(l, slot, &kt, &vt, &[g])?;
+                {
+                    // rows 0..g-1 attend pre-commit: old pages plus the
+                    // in-block fp causal tail — the views the scalar path's
+                    // interleaved append/attend produced, bit for bit
+                    let view = cache.kv_view(l, slot)?;
+                    kernel::attend_block(
+                        pool,
+                        &sc.qs[..(g - 1) * stride_q],
+                        g - 1,
+                        hq,
+                        &view,
+                        pos,
+                        &mut sc.attns[..(g - 1) * stride_q],
+                    )?;
+                }
+                // the group-filling token commits before it attends — the
+                // same boundary the scalar path commits at
+                debug_assert!(commit[0], "a group-aligned block must fill the group");
+                let (kchunk, vchunk) = cache.residual_chunk(l, slot)?;
+                let (k_outs, v_outs) =
+                    kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, cfg.group, dh, spec.pair)?;
+                cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
+                let view = cache.kv_view(l, slot)?;
+                kernel::attend_one_mt(
+                    pool,
+                    &sc.qs[(g - 1) * stride_q..],
+                    hq,
+                    &view,
+                    &mut sc.attns[(g - 1) * stride_q..],
+                )?;
+            }
+        }
+        kernel::matmul_mt(pool, &sc.attns, wo, g, hq * dh, d, &mut sc.projs);
+        for i in 0..g * d {
+            sc.xs[i] += sc.projs[i];
+        }
+        kernel::rms_norm_rows(pool, &sc.xs, ln2, eps, g, d, &mut sc.hs);
+        kernel::matmul_mt(pool, &sc.hs, w1, g, d, ff, &mut sc.mlps);
+        kernel::gelu_tanh_inplace(&mut sc.mlps);
+        kernel::matmul_mt(pool, &sc.mlps, w2, g, ff, d, &mut sc.projs);
+        for i in 0..g * d {
+            sc.xs[i] += sc.projs[i];
+        }
+    }
+    // expose the block's final hidden row for the lm head
+    sc.x.copy_from_slice(&sc.xs[(g - 1) * d..g * d]);
+    Ok(())
+}
+
+/// Final norm + tied-embedding head, written into the engine-resident
+/// `logits` buffer (no per-step allocation): threaded row-split gemm over
+/// the vocab, then a sequential first-max-wins argmax — the original
+/// hand-rolled loop's comparison order exactly.
+fn lm_head(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    pool: &ThreadPool,
+    x: &[f32],
+    h: &mut [f32],
+    logits: &mut [f32],
+) -> Result<i32> {
+    kernel::rms_norm(x, weights.ln_f()?.as_f32()?, cfg.rms_eps as f32, h);
+    let emb = weights.embed()?.as_f32()?;
+    kernel::matvec_rows_mt(pool, emb, h, cfg.vocab, cfg.d_model, logits);
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (t, &v) in logits.iter().enumerate() {
+        if v > best.1 {
+            best = (t, v);
+        }
+    }
+    Ok(best.0 as i32)
+}
 
 pub struct NativeEngine {
     pub cfg: ModelConfig,
@@ -37,17 +387,23 @@ pub struct NativeEngine {
     pub cache: Box<dyn CacheBackend>,
     pub batch: usize,
     pub s_max: usize,
-    /// Kept for the scheduler's preemption cost model; native prefill is
-    /// token-by-token, so this does not change numerics.
+    /// Kept for the scheduler's preemption cost model; native prefill
+    /// blocking is group-sized, so this does not change numerics.
     pub prefill_chunk: usize,
-    /// Logits of the last step per slot (for perplexity / eval paths).
+    pool: ThreadPool,
+    scratch: Scratch,
+    /// Logits of the last step per slot (for perplexity / eval paths);
+    /// allocated once, refilled in place every step.
     pub last_logits: Vec<Vec<f32>>,
 }
 
 impl NativeEngine {
     /// Build a native engine. `paged: None` = dense reference arm,
     /// `Some(opts)` = paged block pool (admission/preemption/prefix sharing
-    /// exactly as under the XLA backend).
+    /// exactly as under the XLA backend). `threads` sizes the kernel pool
+    /// (1 = scalar, bit-identical to any other value by the
+    /// output-partitioning contract).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &ModelConfig,
         weights: Weights,
@@ -55,10 +411,12 @@ impl NativeEngine {
         batch: usize,
         s_max: usize,
         prefill_chunk: usize,
+        threads: usize,
         paged: Option<PagedOptions>,
     ) -> Result<NativeEngine> {
         anyhow::ensure!(specs.len() == cfg.n_layers, "one spec per layer");
         anyhow::ensure!(batch > 0, "batch must be > 0");
+        anyhow::ensure!(threads >= 1, "threads must be >= 1");
         weights.validate(cfg)?;
         let cache: Box<dyn CacheBackend> = match paged {
             None => Box::new(KvCache::new(cfg, &specs, batch, s_max)?),
@@ -72,137 +430,15 @@ impl NativeEngine {
             batch,
             s_max,
             prefill_chunk,
-            last_logits: vec![Vec::new(); batch],
+            pool: ThreadPool::new(threads),
+            scratch: Scratch::new(cfg),
+            last_logits: vec![vec![0f32; cfg.vocab]; batch],
         })
     }
 
-    /// Run one token through every layer for `slot`: project, rope, commit
-    /// K/V quantized-at-storage, then attend block-table-direct. Returns the
-    /// final hidden state; the caller advances the slot's position.
-    fn forward_token(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
-        let (d, hq, hkv, dh, ff) = (
-            self.cfg.d_model,
-            self.cfg.n_heads,
-            self.cfg.n_kv_heads,
-            self.cfg.head_dim,
-            self.cfg.d_ff,
-        );
-        let eps = self.cfg.rms_eps as f32;
-        let theta = self.cfg.rope_theta;
-        let g = self.cfg.group;
-        let n_layers = self.cfg.n_layers;
-        let pos = self.cache.pos(slot) as usize;
-        anyhow::ensure!(pos < self.s_max, "cache capacity {} exceeded", self.s_max);
-        anyhow::ensure!((token as usize) < self.cfg.vocab, "token id {token} out of range");
-
-        let mut x = {
-            let emb = self.weights.embed()?.as_f32()?;
-            emb[(token as usize) * d..(token as usize + 1) * d].to_vec()
-        };
-
-        let mut h = vec![0f32; d];
-        let mut q = vec![0f32; hq * dh];
-        let mut k = vec![0f32; hkv * dh];
-        let mut v = vec![0f32; hkv * dh];
-        let mut attn_out = vec![0f32; hq * dh];
-        let mut proj = vec![0f32; d];
-        let mut mlp_h = vec![0f32; ff];
-
-        for l in 0..n_layers {
-            let spec = self.specs[l];
-            let lw = self.weights.layer(l)?;
-            let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
-                lw[0].as_f32()?,
-                lw[1].as_f32()?,
-                lw[2].as_f32()?,
-                lw[3].as_f32()?,
-                lw[4].as_f32()?,
-                lw[5].as_f32()?,
-                lw[6].as_f32()?,
-                lw[7].as_f32()?,
-            );
-            kernel::rms_norm(&x, ln1, eps, &mut h);
-            q.fill(0.0);
-            k.fill(0.0);
-            v.fill(0.0);
-            kernel::matvec_acc(&h, wq, d, hq * dh, &mut q);
-            kernel::matvec_acc(&h, wk, d, hkv * dh, &mut k);
-            kernel::matvec_acc(&h, wv, d, hkv * dh, &mut v);
-            kernel::apply_rope_heads(&mut q, hq, dh, pos, theta);
-            kernel::apply_rope_heads(&mut k, hkv, dh, pos, theta);
-
-            // commit the new token to the cache, quantized per the layer spec
-            match spec.mode {
-                Mode::Fp => {
-                    let kt = Tensor::f32(&[1, hkv, 1, dh], k.clone());
-                    let vt = Tensor::f32(&[1, hkv, 1, dh], v.clone());
-                    self.cache.append_fp(l, slot, &kt, &vt, &[1])?;
-                }
-                Mode::Token => {
-                    let outs = kernel::token_step_outputs(&k, &v, hkv, dh, spec.pair)?;
-                    self.cache.append_token_outputs(l, slot, &outs, &[1])?;
-                }
-                Mode::Kivi => {
-                    let kt = Tensor::f32(&[1, hkv, 1, dh], k.clone());
-                    let vt = Tensor::f32(&[1, hkv, 1, dh], v.clone());
-                    let commit = self.cache.append_kivi_residual(l, slot, &kt, &vt, &[1])?;
-                    if commit[0] {
-                        let (kchunk, vchunk) = self.cache.residual_chunk(l, slot)?;
-                        let (k_outs, v_outs) =
-                            kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, g, dh, spec.pair)?;
-                        self.cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
-                    }
-                }
-            }
-
-            // dequant-on-read attention over committed pages + residual —
-            // no dense staging buffer on this path
-            {
-                let view = self.cache.kv_view(l, slot)?;
-                kernel::attend_one(&q, hq, &view, &mut attn_out)?;
-            }
-
-            proj.fill(0.0);
-            kernel::matvec_acc(&attn_out, wo, hq * dh, d, &mut proj);
-            for i in 0..d {
-                x[i] += proj[i];
-            }
-
-            kernel::rms_norm(&x, ln2, eps, &mut h);
-            mlp_h.fill(0.0);
-            kernel::matvec_acc(&h, w1, d, ff, &mut mlp_h);
-            kernel::gelu_tanh_inplace(&mut mlp_h);
-            proj.fill(0.0);
-            kernel::matvec_acc(&mlp_h, w2, ff, d, &mut proj);
-            for i in 0..d {
-                x[i] += proj[i];
-            }
-        }
-        Ok(x)
-    }
-
-    /// Final norm + tied-embedding head: (argmax token, full logits).
-    fn lm_head(&self, x: &[f32]) -> Result<(i32, Vec<f32>)> {
-        let d = self.cfg.d_model;
-        let eps = self.cfg.rms_eps as f32;
-        let mut h = vec![0f32; d];
-        kernel::rms_norm(x, self.weights.ln_f()?.as_f32()?, eps, &mut h);
-        let emb = self.weights.embed()?.as_f32()?;
-        let vocab = self.cfg.vocab;
-        let mut logits = vec![0f32; vocab];
-        let mut best = (0usize, f32::NEG_INFINITY);
-        for t in 0..vocab {
-            let row = &emb[t * d..(t + 1) * d];
-            let mut dot = 0f32;
-            for i in 0..d {
-                dot += h[i] * row[i];
-            }
-            logits[t] = dot;
-            if dot > best.1 {
-                best = (t, dot);
-            }
-        }
-        Ok((best.0 as i32, logits))
+    /// Kernel pool width (1 = the scalar engine).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// One decode step over the whole batch (slots are independent, so the
@@ -215,32 +451,99 @@ impl NativeEngine {
             if !active[b] {
                 continue;
             }
-            let x = self.forward_token(b, tokens[b])?;
-            let (next, logits) = self.lm_head(&x)?;
-            self.last_logits[b] = logits;
+            forward_token(
+                &self.cfg,
+                &self.specs,
+                &self.weights,
+                self.cache.as_mut(),
+                &self.pool,
+                &mut self.scratch,
+                b,
+                tokens[b],
+            )?;
+            let Scratch { x, head_h, .. } = &mut self.scratch;
+            out[b] =
+                lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[b])?;
             self.cache.advance_pos(b, 1);
-            out[b] = next;
         }
         Ok(out)
     }
 
-    /// Prefill a slot token by token (kivi groups commit as they fill, so
-    /// later prompt tokens attend over already-quantized earlier ones).
-    /// Returns the first generated token.
+    /// Prefill a slot in KIVI-group-sized row blocks (kivi groups commit at
+    /// the same boundaries as the token-by-token path, so later prompt
+    /// tokens attend over already-quantized earlier ones — identical
+    /// numerics, ~group× fewer weight passes). Positions that are not
+    /// group-aligned, and tails shorter than a group, fall back to
+    /// token-by-token. Returns the first generated token.
     pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
             (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
             "prompt overflows cache"
         );
-        let mut last_x = Vec::new();
+        let g = self.cfg.group;
+        // the block path parks a whole group in the fp residual ring before
+        // committing, so it needs ring capacity >= group
+        let block_ok = g >= 1 && self.cfg.residual >= g;
+        let mut i = 0usize;
+        while i < prompt.len() {
+            let pos = self.cache.pos(slot) as usize;
+            if block_ok && pos % g == 0 && prompt.len() - i >= g {
+                prefill_block(
+                    &self.cfg,
+                    &self.specs,
+                    &self.weights,
+                    self.cache.as_mut(),
+                    &self.pool,
+                    &mut self.scratch,
+                    slot,
+                    &prompt[i..i + g],
+                )?;
+                self.cache.advance_pos(slot, g);
+                i += g;
+            } else {
+                forward_token(
+                    &self.cfg,
+                    &self.specs,
+                    &self.weights,
+                    self.cache.as_mut(),
+                    &self.pool,
+                    &mut self.scratch,
+                    slot,
+                    prompt[i],
+                )?;
+                self.cache.advance_pos(slot, 1);
+                i += 1;
+            }
+        }
+        let Scratch { x, head_h, .. } = &mut self.scratch;
+        lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+    }
+
+    /// Token-by-token prefill — the original scalar path, kept as the
+    /// parity oracle for `prefill` (the two are asserted bit-identical in
+    /// `tests/native_backend.rs` and `table11_native_mt`).
+    pub fn prefill_tokenwise(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
+            "prompt overflows cache"
+        );
         for &t in prompt {
-            last_x = self.forward_token(slot, t)?;
+            forward_token(
+                &self.cfg,
+                &self.specs,
+                &self.weights,
+                self.cache.as_mut(),
+                &self.pool,
+                &mut self.scratch,
+                slot,
+                t,
+            )?;
             self.cache.advance_pos(slot, 1);
         }
-        let (next, logits) = self.lm_head(&last_x)?;
-        self.last_logits[slot] = logits;
-        Ok(next)
+        let Scratch { x, head_h, .. } = &mut self.scratch;
+        lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
     }
 
     /// Greedy generation for one slot (prefill + decode).

@@ -1,7 +1,17 @@
 //! Dense matrix kernels. `matvec_acc` is the decode hot path (one token
 //! against `[d_in, d_out]` row-major weights) and keeps the reference
 //! engine's zero-skip so the two paths produce bit-identical accumulations;
-//! `matmul` is the prefill-shaped variant (row blocks of tokens).
+//! `matmul` is the prefill-shaped variant (row blocks of tokens, one weight
+//! pass for the whole block); `matvec_rows` is the lm-head shape (row-major
+//! `[rows, d]` matrix times a vector, one dot per output row).
+//!
+//! Every `_mt` variant partitions over *outputs* — column ranges for
+//! `matvec_acc`/`matmul`, row ranges for `matvec_rows` — so each output
+//! element keeps the exact scalar accumulation order and results are
+//! bit-identical for any thread count (the determinism contract pinned by
+//! `tests/native_backend.rs`).
+
+use super::pool::{partition, SharedMut, ThreadPool};
 
 /// y[j] += sum_i x[i] * w[i, j]  (w: [d_in, d_out] row-major).
 ///
@@ -12,37 +22,173 @@ pub fn matvec_acc(x: &[f32], w: &[f32], d_in: usize, d_out: usize, y: &mut [f32]
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(x.len(), d_in);
     debug_assert_eq!(y.len(), d_out);
-    for i in 0..d_in {
-        let xi = x[i];
+    matvec_acc_cols(x, w, d_out, 0, d_out, y);
+}
+
+/// The column-range body of `matvec_acc`: accumulate columns `[j0, j1)` into
+/// `y` (length `j1 - j0`). Per output column the i-loop is identical to the
+/// full-width kernel, which is what makes column splits bit-exact.
+fn matvec_acc_cols(x: &[f32], w: &[f32], d_out: usize, j0: usize, j1: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), j1 - j0);
+    for (i, &xi) in x.iter().enumerate() {
         if xi == 0.0 {
             continue;
         }
-        let row = &w[i * d_out..(i + 1) * d_out];
-        for j in 0..d_out {
-            y[j] += xi * row[j];
+        let row = &w[i * d_out + j0..i * d_out + j1];
+        for (yj, &wj) in y.iter_mut().zip(row) {
+            *yj += xi * wj;
         }
     }
 }
 
+/// Threaded `matvec_acc`: columns are split into one contiguous range per
+/// pool thread; every `y[j]` still accumulates in ascending-`i` order with
+/// the same zero-skip, so the result is bit-identical to the scalar kernel.
+pub fn matvec_acc_mt(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: &[f32],
+    d_in: usize,
+    d_out: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(y.len(), d_out);
+    if pool.threads() == 1 || d_out < 2 {
+        return matvec_acc(x, w, d_in, d_out, y);
+    }
+    let ranges = partition(d_out, pool.threads());
+    let out = SharedMut::new(y);
+    pool.run(ranges.len(), &|ci: usize| {
+        let r = ranges[ci].clone();
+        let yc = unsafe { out.slice(r.start, r.len()) };
+        matvec_acc_cols(x, w, d_out, r.start, r.end, yc);
+    });
+}
+
 /// out[t, j] = sum_i a[t, i] * w[i, j]  (a: [rows, d_in], w: [d_in, d_out]).
 ///
-/// Accumulates row-of-w at a time (same inner order as `matvec_acc` per
-/// output row), so a one-row `matmul` equals a `matvec_acc` over zeroed
-/// output exactly.
+/// The i-loop is outermost so each weight row is read once for the whole
+/// row block (the point of block prefill: ~rows× fewer weight passes than
+/// per-token `matvec_acc`). Per output element the accumulation is still
+/// ascending-`i` with the same zero-skip, so a one-row `matmul` equals a
+/// `matvec_acc` over zeroed output exactly.
 pub fn matmul(a: &[f32], w: &[f32], rows: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), rows * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(out.len(), rows * d_out);
     out.fill(0.0);
-    for t in 0..rows {
-        let row_in = &a[t * d_in..(t + 1) * d_in];
-        matvec_acc(row_in, w, d_in, d_out, &mut out[t * d_out..(t + 1) * d_out]);
+    let shared = SharedMut::new(out);
+    matmul_cols(a, w, rows, d_in, d_out, 0, d_out, &shared);
+}
+
+/// The column-range body of `matmul`: accumulate columns `[j0, j1)` of every
+/// row into `out` (a `[rows, d_out]` buffer behind `SharedMut` — sequential
+/// callers pass the full range, pool tasks pass disjoint ranges). One body
+/// for both paths is what keeps the scalar/threaded bit-identity structural
+/// rather than copy-paste-maintained.
+#[allow(clippy::too_many_arguments)]
+fn matmul_cols(
+    a: &[f32],
+    w: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    j0: usize,
+    j1: usize,
+    out: &SharedMut<'_, f32>,
+) {
+    for i in 0..d_in {
+        let wrow = &w[i * d_out + j0..i * d_out + j1];
+        for t in 0..rows {
+            let ai = a[t * d_in + i];
+            if ai == 0.0 {
+                continue;
+            }
+            let o = unsafe { out.slice(t * d_out + j0, j1 - j0) };
+            for (oj, &wj) in o.iter_mut().zip(wrow) {
+                *oj += ai * wj;
+            }
+        }
     }
+}
+
+/// Threaded `matmul`: column-range split (each task streams its column
+/// stripe of `w` once across all rows). Bit-identical to `matmul` for any
+/// thread count.
+pub fn matmul_mt(
+    pool: &ThreadPool,
+    a: &[f32],
+    w: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), rows * d_out);
+    if pool.threads() == 1 || d_out < 2 {
+        return matmul(a, w, rows, d_in, d_out, out);
+    }
+    out.fill(0.0);
+    let ranges = partition(d_out, pool.threads());
+    let shared = SharedMut::new(out);
+    pool.run(ranges.len(), &|ci: usize| {
+        let r = ranges[ci].clone();
+        matmul_cols(a, w, rows, d_in, d_out, r.start, r.end, &shared);
+    });
+}
+
+/// y[r] = dot(m[r, :], x) for row-major `m: [rows, d]` — the tied-embedding
+/// lm-head shape (no zero-skip: matches the engine's original hand-rolled
+/// dot exactly).
+pub fn matvec_rows(m: &[f32], x: &[f32], rows: usize, d: usize, y: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(y.len(), rows);
+    for t in 0..rows {
+        let row = &m[t * d..(t + 1) * d];
+        let mut dot = 0f32;
+        for i in 0..d {
+            dot += x[i] * row[i];
+        }
+        y[t] = dot;
+    }
+}
+
+/// Threaded `matvec_rows`: row-range split; each output is one whole dot, so
+/// any split is trivially bit-exact.
+pub fn matvec_rows_mt(
+    pool: &ThreadPool,
+    m: &[f32],
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(y.len(), rows);
+    if pool.threads() == 1 || rows < 2 {
+        return matvec_rows(m, x, rows, d, y);
+    }
+    let ranges = partition(rows, pool.threads());
+    let shared = SharedMut::new(y);
+    pool.run(ranges.len(), &|ci: usize| {
+        let r = ranges[ci].clone();
+        let yc = unsafe { shared.slice(r.start, r.len()) };
+        matvec_rows(&m[r.start * d..r.end * d], x, r.len(), d, yc);
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
 
     #[test]
     fn matvec_known_values() {
@@ -65,6 +211,52 @@ mod tests {
             let mut y = vec![0.0; d_out];
             matvec_acc(&a[t * d_in..(t + 1) * d_in], &w, d_in, d_out, &mut y);
             assert_eq!(&out[t * d_out..(t + 1) * d_out], &y[..]);
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_are_bit_identical_to_scalar() {
+        let (rows, d_in, d_out) = (7, 19, 33);
+        let a: Vec<f32> = (0..rows * d_in)
+            .map(|i| if i % 11 == 0 { 0.0 } else { (i as f32 * 0.13).sin() })
+            .collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|i| (i as f32 * 0.29).cos()).collect();
+        for threads in [2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            // matvec: column split
+            let mut y0 = vec![0.1f32; d_out];
+            let mut y1 = y0.clone();
+            matvec_acc(&a[..d_in], &w, d_in, d_out, &mut y0);
+            matvec_acc_mt(&pool, &a[..d_in], &w, d_in, d_out, &mut y1);
+            assert_eq!(bits(&y0), bits(&y1), "matvec threads={threads}");
+            // matmul: column split over a row block
+            let mut o0 = vec![0f32; rows * d_out];
+            let mut o1 = o0.clone();
+            matmul(&a, &w, rows, d_in, d_out, &mut o0);
+            matmul_mt(&pool, &a, &w, rows, d_in, d_out, &mut o1);
+            assert_eq!(bits(&o0), bits(&o1), "matmul threads={threads}");
+            // matvec_rows: row split (m: [rows, d_in], x: [d_in])
+            let mut r0 = vec![0f32; rows];
+            let mut r1 = r0.clone();
+            matvec_rows(&a, &w[..d_in], rows, d_in, &mut r0);
+            matvec_rows_mt(&pool, &a, &w[..d_in], rows, d_in, &mut r1);
+            assert_eq!(bits(&r0), bits(&r1), "matvec_rows threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matvec_rows_matches_hand_dot() {
+        let (rows, d) = (4, 6);
+        let m: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.5).sin()).collect();
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.9).cos()).collect();
+        let mut y = vec![0f32; rows];
+        matvec_rows(&m, &x, rows, d, &mut y);
+        for t in 0..rows {
+            let mut dot = 0f32;
+            for i in 0..d {
+                dot += x[i] * m[t * d + i];
+            }
+            assert_eq!(y[t].to_bits(), dot.to_bits());
         }
     }
 }

@@ -9,6 +9,16 @@
 //! page-aligned by construction, so `(code * scale + zero)` folds straight
 //! into the K·Q and P·V accumulation loops.
 //!
+//! Execution is parallel but **deterministic**: `pool` provides a small
+//! in-tree scoped thread pool (rayon is not in the offline crate set), and
+//! every threaded kernel partitions over *outputs* — column ranges for
+//! `matvec_acc_mt`/`matmul_mt`, row ranges for `matvec_rows_mt`, query
+//! heads for `attend_one_mt`/`attend_block` — so each output element keeps
+//! its exact scalar accumulation order and results are bit-identical for
+//! any thread count. `prefill::attend_block` is the block-prefill causal
+//! kernel (one fused pass per KIVI group instead of one attention call per
+//! token).
+//!
 //! Numerics deliberately mirror `model::ref_engine` operation for operation
 //! (same zero-skip matvec, same split-half RoPE, same softmax order), so the
 //! native engine is comparable to the reference engine at tight tolerance —
@@ -17,15 +27,19 @@
 pub mod activation;
 pub mod gemm;
 pub mod paged_attention;
+pub mod pool;
+pub mod prefill;
 pub mod quantize;
 pub mod rms_norm;
 pub mod rotary;
 pub mod softmax;
 
 pub use activation::{gelu_tanh, gelu_tanh_inplace, swiglu};
-pub use gemm::{matmul, matvec_acc};
-pub use paged_attention::attend_one;
-pub use quantize::{kivi_commit_outputs, token_step_outputs};
-pub use rms_norm::rms_norm;
+pub use gemm::{matmul, matmul_mt, matvec_acc, matvec_acc_mt, matvec_rows, matvec_rows_mt};
+pub use paged_attention::{attend_one, attend_one_mt};
+pub use pool::{default_threads, ThreadPool};
+pub use prefill::attend_block;
+pub use quantize::{kivi_commit_outputs, token_block_outputs, token_step_outputs};
+pub use rms_norm::{rms_norm, rms_norm_rows};
 pub use rotary::{apply_rope, apply_rope_heads};
 pub use softmax::{causal_softmax_rows, softmax};

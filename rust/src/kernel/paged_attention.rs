@@ -6,14 +6,24 @@
 //! the dense arm — and folds dequantization straight into the K·Q and P·V
 //! accumulation loops: `dot += q[d] * (code * scale + zero)`. No dense
 //! staging buffer exists on this path; the only scratch is one score row
-//! and one unpacked-code row. KIVI's asymmetric layout is what makes the
-//! fold cheap: per-channel key (scale, zero) vectors are page-aligned (one
-//! `[Dh]` pair per page, hoisted out of the row loop), and per-token value
-//! scales are scalar per row.
+//! and one unpacked-code row (thread-local, so decode steps allocate
+//! nothing once each pool thread has warmed up). KIVI's asymmetric layout
+//! is what makes the fold cheap: per-channel key (scale, zero) vectors are
+//! page-aligned (one `[Dh]` pair per page, hoisted out of the row loop),
+//! and per-token value scales are scalar per row.
 //!
 //! Token order is chronological: committed pages first, then the kivi fp
 //! residual ring — exactly the sequence the reference engine attends over,
 //! so probabilities match it bitwise given identical stored codes.
+//!
+//! `attend_one_mt` partitions over *query heads* (each head's output is one
+//! disjoint `[Dh]` stripe and each head's math is fully independent), so
+//! results are bit-identical for any thread count; the per-head body is
+//! shared with `attend_one` and with the block-prefill kernel
+//! (`kernel::prefill`), which is what makes the parity provable rather than
+//! coincidental.
+
+use std::cell::RefCell;
 
 use anyhow::Result;
 
@@ -21,13 +31,181 @@ use crate::config::Mode;
 use crate::kvcache::KvView;
 use crate::quant::unpack_row;
 
+use super::pool::{SharedMut, ThreadPool};
 use super::softmax::softmax;
+
+thread_local! {
+    /// Per-thread attention scratch: (score buffer, unpacked-code row).
+    /// Shared with the block-prefill kernel via `with_scratch`, so each pool
+    /// thread carries exactly one scratch pair.
+    static SCRATCH: RefCell<(Vec<f32>, Vec<u8>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Run `f` with this thread's attention scratch, grown to at least
+/// (`scores_len`, `codes_len`). Used by the decode and block-prefill
+/// kernels alike.
+pub(crate) fn with_scratch<R>(
+    scores_len: usize,
+    codes_len: usize,
+    f: impl FnOnce(&mut [f32], &mut [u8]) -> R,
+) -> R {
+    SCRATCH.with(|c| {
+        let mut borrow = c.borrow_mut();
+        let (scores, codes) = &mut *borrow;
+        if scores.len() < scores_len {
+            scores.resize(scores_len, 0.0);
+        }
+        if codes.len() < codes_len {
+            codes.resize(codes_len, 0);
+        }
+        f(&mut scores[..scores_len], &mut codes[..codes_len])
+    })
+}
+
+/// K·Q scores for one query head over the chronological first `n_comm`
+/// committed tokens and first `n_res` residual tokens of the view, scaled
+/// by `scale`. Writes `scores[0..n_comm + n_res]`; the per-column fold and
+/// iteration order are exactly the decode kernel's, so any caller slicing a
+/// causal prefix gets bit-identical prefixes of the same score row.
+pub(crate) fn head_scores(
+    view: &KvView<'_>,
+    qh: &[f32],
+    kv: usize,
+    n_comm: usize,
+    n_res: usize,
+    scale: f32,
+    codes: &mut [u8],
+    scores: &mut [f32],
+) {
+    let (dh, p) = (view.dh, view.page);
+    debug_assert_eq!(qh.len(), dh);
+    debug_assert!(scores.len() >= n_comm + n_res);
+    match view.spec.mode {
+        Mode::Fp => {
+            for (j, s) in scores.iter_mut().enumerate().take(n_comm) {
+                let kj = view.k_fp_row(j / p, kv, j % p);
+                let mut dot = 0f32;
+                for d in 0..dh {
+                    dot += qh[d] * kj[d];
+                }
+                *s = dot * scale;
+            }
+        }
+        Mode::Token => {
+            for (j, s) in scores.iter_mut().enumerate().take(n_comm) {
+                let (pi, row) = (j / p, j % p);
+                unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, codes);
+                let (ks, kz) = view.k_tok_scale(pi, kv, row);
+                let mut dot = 0f32;
+                for d in 0..dh {
+                    dot += qh[d] * (codes[d] as f32 * ks + kz);
+                }
+                *s = dot * scale;
+            }
+        }
+        Mode::Kivi => {
+            // per-channel key scales are page-aligned: hoist the [Dh]
+            // scale/zero vectors once per page, outside the row loop
+            let np = (n_comm + p - 1) / p;
+            for pi in 0..np {
+                let rows = (n_comm - pi * p).min(p);
+                let (ks, kz) = view.k_page_scale(pi, kv);
+                for row in 0..rows {
+                    unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, codes);
+                    let mut dot = 0f32;
+                    for d in 0..dh {
+                        dot += qh[d] * (codes[d] as f32 * ks[d] + kz[d]);
+                    }
+                    scores[pi * p + row] = dot * scale;
+                }
+            }
+        }
+    }
+    // kivi fp residual tokens (chronologically after every committed one)
+    for i in 0..n_res {
+        let kj = view.res_k_row(kv, i);
+        let mut dot = 0f32;
+        for d in 0..dh {
+            dot += qh[d] * kj[d];
+        }
+        scores[n_comm + i] = dot * scale;
+    }
+}
+
+/// P·V for one query head over the same chronological token range, dequant
+/// folded the same way. `o` (length `[Dh]`) is zeroed then accumulated in
+/// column order — committed first, then residual — matching the decode
+/// kernel exactly.
+pub(crate) fn head_pv(
+    view: &KvView<'_>,
+    kv: usize,
+    n_comm: usize,
+    n_res: usize,
+    scores: &[f32],
+    codes: &mut [u8],
+    o: &mut [f32],
+) {
+    let (dh, p) = (view.dh, view.page);
+    debug_assert!(scores.len() >= n_comm + n_res);
+    o.fill(0.0);
+    match view.spec.mode {
+        Mode::Fp => {
+            for (j, &pj) in scores.iter().enumerate().take(n_comm) {
+                let vj = view.v_fp_row(j / p, kv, j % p);
+                for d in 0..dh {
+                    o[d] += pj * vj[d];
+                }
+            }
+        }
+        Mode::Token | Mode::Kivi => {
+            for (j, &pj) in scores.iter().enumerate().take(n_comm) {
+                let (pi, row) = (j / p, j % p);
+                unpack_row(view.v_code_row(pi, kv, row), view.spec.pair.v_bits, codes);
+                let (vs, vz) = view.v_tok_scale(pi, kv, row);
+                for d in 0..dh {
+                    o[d] += pj * (codes[d] as f32 * vs + vz);
+                }
+            }
+        }
+    }
+    for i in 0..n_res {
+        let pj = scores[n_comm + i];
+        let vj = view.res_v_row(kv, i);
+        for d in 0..dh {
+            o[d] += pj * vj[d];
+        }
+    }
+}
+
+/// Full scores → softmax → P·V for one query head (`n = n_comm + n_res`
+/// visible tokens). The single shared body behind the scalar, threaded and
+/// block-prefill entry points.
+pub(crate) fn attend_head(
+    view: &KvView<'_>,
+    q: &[f32],
+    hh: usize,
+    gqa: usize,
+    n_comm: usize,
+    n_res: usize,
+    scale: f32,
+    codes: &mut [u8],
+    scores: &mut [f32],
+    o: &mut [f32],
+) {
+    let dh = view.dh;
+    let kv = hh / gqa;
+    let qh = &q[hh * dh..(hh + 1) * dh];
+    let n = n_comm + n_res;
+    head_scores(view, qh, kv, n_comm, n_res, scale, codes, &mut scores[..n]);
+    softmax(&mut scores[..n]);
+    head_pv(view, kv, n_comm, n_res, &scores[..n], codes, o);
+}
 
 /// Attention for one query token over everything the view holds (committed
 /// + residual). `q` is `[hq * dh]` post-RoPE; `out` receives `[hq * dh]`.
 /// GQA: query head `hh` reads KV head `hh / (hq / view.h)`.
 pub fn attend_one(q: &[f32], hq: usize, view: &KvView<'_>, out: &mut [f32]) -> Result<()> {
-    let (h, dh, p) = (view.h, view.dh, view.page);
+    let (h, dh) = (view.h, view.dh);
     debug_assert_eq!(q.len(), hq * dh);
     debug_assert_eq!(out.len(), hq * dh);
     anyhow::ensure!(hq % h == 0, "query heads must be a multiple of kv heads");
@@ -35,106 +213,114 @@ pub fn attend_one(q: &[f32], hq: usize, view: &KvView<'_>, out: &mut [f32]) -> R
     let s_len = view.seq_len();
     anyhow::ensure!(s_len > 0, "attention over an empty cache");
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut scores = vec![0f32; s_len];
-    let mut codes = vec![0u8; dh];
-    for hh in 0..hq {
-        let kv = hh / gqa;
-        let qh = &q[hh * dh..(hh + 1) * dh];
-
-        // K·Q over committed pages, dequant folded into the dot
-        match view.spec.mode {
-            Mode::Fp => {
-                for j in 0..view.cache_len {
-                    let kj = view.k_fp_row(j / p, kv, j % p);
-                    let mut dot = 0f32;
-                    for d in 0..dh {
-                        dot += qh[d] * kj[d];
-                    }
-                    scores[j] = dot * scale;
-                }
-            }
-            Mode::Token => {
-                for j in 0..view.cache_len {
-                    let (pi, row) = (j / p, j % p);
-                    unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, &mut codes);
-                    let (ks, kz) = view.k_tok_scale(pi, kv, row);
-                    let mut dot = 0f32;
-                    for d in 0..dh {
-                        dot += qh[d] * (codes[d] as f32 * ks + kz);
-                    }
-                    scores[j] = dot * scale;
-                }
-            }
-            Mode::Kivi => {
-                // per-channel key scales are page-aligned: hoist the [Dh]
-                // scale/zero vectors once per page, outside the row loop
-                for pi in 0..view.n_pages() {
-                    let rows = view.page_rows(pi);
-                    let (ks, kz) = view.k_page_scale(pi, kv);
-                    for row in 0..rows {
-                        unpack_row(view.k_code_row(pi, kv, row), view.spec.pair.k_bits, &mut codes);
-                        let mut dot = 0f32;
-                        for d in 0..dh {
-                            dot += qh[d] * (codes[d] as f32 * ks[d] + kz[d]);
-                        }
-                        scores[pi * p + row] = dot * scale;
-                    }
-                }
-            }
+    // same thread-local scratch as the threaded path, so the scalar engine
+    // (`--threads 1`) also allocates nothing per decode step after warmup
+    with_scratch(s_len, dh, |scores, codes| {
+        for hh in 0..hq {
+            attend_head(
+                view,
+                q,
+                hh,
+                gqa,
+                view.cache_len,
+                view.res_len,
+                scale,
+                codes,
+                scores,
+                &mut out[hh * dh..(hh + 1) * dh],
+            );
         }
-        // kivi fp residual tokens (chronologically after every committed one)
-        for i in 0..view.res_len {
-            let kj = view.res_k_row(kv, i);
-            let mut dot = 0f32;
-            for d in 0..dh {
-                dot += qh[d] * kj[d];
-            }
-            scores[view.cache_len + i] = dot * scale;
-        }
-
-        softmax(&mut scores);
-
-        // P·V, dequant folded the same way
-        let o = &mut out[hh * dh..(hh + 1) * dh];
-        o.fill(0.0);
-        match view.spec.mode {
-            Mode::Fp => {
-                for j in 0..view.cache_len {
-                    let pj = scores[j];
-                    let vj = view.v_fp_row(j / p, kv, j % p);
-                    for d in 0..dh {
-                        o[d] += pj * vj[d];
-                    }
-                }
-            }
-            Mode::Token | Mode::Kivi => {
-                for j in 0..view.cache_len {
-                    let (pi, row) = (j / p, j % p);
-                    let pj = scores[j];
-                    unpack_row(view.v_code_row(pi, kv, row), view.spec.pair.v_bits, &mut codes);
-                    let (vs, vz) = view.v_tok_scale(pi, kv, row);
-                    for d in 0..dh {
-                        o[d] += pj * (codes[d] as f32 * vs + vz);
-                    }
-                }
-            }
-        }
-        for i in 0..view.res_len {
-            let pj = scores[view.cache_len + i];
-            let vj = view.res_v_row(kv, i);
-            for d in 0..dh {
-                o[d] += pj * vj[d];
-            }
-        }
-    }
+    });
     Ok(())
+}
+
+/// Threaded `attend_one`: query heads are split across the pool (each head
+/// writes its own disjoint `[Dh]` output stripe and runs the exact per-head
+/// body of the scalar kernel), so the result is bit-identical for any
+/// thread count.
+pub fn attend_one_mt(
+    pool: &ThreadPool,
+    q: &[f32],
+    hq: usize,
+    view: &KvView<'_>,
+    out: &mut [f32],
+) -> Result<()> {
+    if pool.threads() == 1 || hq == 1 {
+        return attend_one(q, hq, view, out);
+    }
+    let (h, dh) = (view.h, view.dh);
+    debug_assert_eq!(q.len(), hq * dh);
+    debug_assert_eq!(out.len(), hq * dh);
+    anyhow::ensure!(hq % h == 0, "query heads must be a multiple of kv heads");
+    let gqa = hq / h;
+    let s_len = view.seq_len();
+    anyhow::ensure!(s_len > 0, "attention over an empty cache");
+    let scale = 1.0 / (dh as f32).sqrt();
+    let shared = SharedMut::new(out);
+    pool.run(hq, &|hh: usize| {
+        with_scratch(s_len, dh, |scores, codes| {
+            let o = unsafe { shared.slice(hh * dh, dh) };
+            attend_head(
+                view,
+                q,
+                hh,
+                gqa,
+                view.cache_len,
+                view.res_len,
+                scale,
+                codes,
+                scores,
+                o,
+            );
+        });
+    });
+    Ok(())
+}
+
+/// Hand-built fp-mode dense view over raw buffers — the shared fixture for
+/// the attention kernels' bitwise-parity tests (here and in
+/// `kernel::prefill`).
+#[cfg(test)]
+pub(crate) fn test_fp_view<'a>(
+    k_fp: &'a [f32],
+    v_fp: &'a [f32],
+    h: usize,
+    dh: usize,
+    s_max: usize,
+    page: usize,
+    len: usize,
+) -> KvView<'a> {
+    use crate::config::{LayerSpec, PrecisionPair};
+    use crate::kvcache::PageAddr;
+    KvView {
+        spec: LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP },
+        h,
+        dh,
+        kp: 0,
+        vp: 0,
+        page,
+        cache_len: len,
+        res_len: 0,
+        addr: PageAddr::Dense { slot: 0, s_max },
+        k_codes: &[],
+        k_scale: &[],
+        k_zero: &[],
+        v_codes: &[],
+        v_scale: &[],
+        v_zero: &[],
+        k_fp,
+        v_fp,
+        k_res: &[],
+        v_res: &[],
+        res_cap: 0,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{LayerSpec, Mode, PrecisionPair};
-    use crate::kvcache::{KvView, PageAddr};
+
+    use super::test_fp_view as fp_view;
 
     /// Fp-mode dense view over hand-built buffers: with identical V rows the
     /// attention output must be exactly V regardless of the scores.
@@ -150,33 +336,43 @@ mod tests {
                 v_fp[j * dh + d] = 3.0 + d as f32; // identical across tokens
             }
         }
-        let view = KvView {
-            spec: LayerSpec { mode: Mode::Fp, pair: PrecisionPair::FP },
-            h,
-            dh,
-            kp: 0,
-            vp: 0,
-            page,
-            cache_len: len,
-            res_len: 0,
-            addr: PageAddr::Dense { slot: 0, s_max },
-            k_codes: &[],
-            k_scale: &[],
-            k_zero: &[],
-            v_codes: &[],
-            v_scale: &[],
-            v_zero: &[],
-            k_fp: &k_fp,
-            v_fp: &v_fp,
-            k_res: &[],
-            v_res: &[],
-            res_cap: 0,
-        };
+        let view = fp_view(&k_fp, &v_fp, h, dh, s_max, page, len);
         let q = vec![0.3f32; dh];
         let mut out = vec![0f32; dh];
         attend_one(&q, 1, &view, &mut out).unwrap();
         for d in 0..dh {
             assert!((out[d] - (3.0 + d as f32)).abs() < 1e-5, "d={d}: {}", out[d]);
+        }
+    }
+
+    /// Per-query-head splits must be bit-identical to the scalar kernel for
+    /// any pool width (GQA factor 2 exercised).
+    #[test]
+    fn threaded_attention_is_bit_identical() {
+        let (h, hq, dh, s_max, page) = (2usize, 4usize, 8usize, 16usize, 4usize);
+        let len = 11usize;
+        let mut k_fp = vec![0f32; h * s_max * dh];
+        let mut v_fp = vec![0f32; h * s_max * dh];
+        for hh in 0..h {
+            for j in 0..len {
+                for d in 0..dh {
+                    let o = (hh * s_max + j) * dh + d;
+                    k_fp[o] = ((o * 7 % 23) as f32 - 11.0) * 0.09;
+                    v_fp[o] = ((o * 5 % 19) as f32 - 9.0) * 0.11;
+                }
+            }
+        }
+        let view = fp_view(&k_fp, &v_fp, h, dh, s_max, page, len);
+        let q: Vec<f32> = (0..hq * dh).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut scalar = vec![0f32; hq * dh];
+        attend_one(&q, hq, &view, &mut scalar).unwrap();
+        for threads in [2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut mt = vec![0f32; hq * dh];
+            attend_one_mt(&pool, &q, hq, &view, &mut mt).unwrap();
+            let a: Vec<u32> = scalar.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = mt.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "threads={threads}");
         }
     }
 }

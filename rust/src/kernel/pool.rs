@@ -1,0 +1,361 @@
+//! In-tree scoped thread pool for the native kernels (rayon is not in the
+//! offline crate set).
+//!
+//! The pool exists to parallelize kernels **deterministically**: callers
+//! partition work over *outputs* (column ranges of a gemm, query heads of an
+//! attention step, row blocks of a prefill), so every output element keeps
+//! its exact scalar accumulation order and results are bit-identical for any
+//! thread count. The pool itself guarantees only that each task index in
+//! `0..n` runs exactly once; which thread runs it is irrelevant by
+//! construction.
+//!
+//! Dispatch is latency-tuned for kernel-sized jobs (tens of microseconds):
+//! workers spin briefly on an epoch counter before falling back to a
+//! condvar, so back-to-back kernel launches inside one decode step do not
+//! pay a futex round trip each. A pool with `threads == 1` spawns no worker
+//! threads and runs every job inline — `--threads 1` is exactly the scalar
+//! engine.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Spin iterations before a waiter parks on the condvar. Large enough to
+/// bridge the gap between consecutive kernel launches in a decode step,
+/// small enough that an idle pool sleeps within a few microseconds.
+const SPIN_ITERS: usize = 1 << 14;
+
+/// Default worker count: `KVTUNER_THREADS` when set to a positive integer
+/// (the CI thread matrix uses this), else the machine's available
+/// parallelism. An unusable value is reported on stderr rather than
+/// silently ignored — mirroring `--threads`' validation stance (0 is not
+/// "auto").
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("KVTUNER_THREADS") {
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            _ => eprintln!(
+                "ignoring invalid KVTUNER_THREADS={v:?} (expected an integer >= 1); \
+                 falling back to available parallelism"
+            ),
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `n` items into at most `parts` contiguous, near-equal ranges.
+/// Deterministic in `n` and `parts`; never returns an empty range.
+pub fn partition(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let (base, rem) = (n / parts, n % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Shared mutable view of a slice for tasks that write provably disjoint
+/// ranges (the output-partitioning contract). Each range must be handed to
+/// exactly one concurrent task.
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(s: &'a mut [T]) -> SharedMut<'a, T> {
+        SharedMut { ptr: s.as_mut_ptr(), len: s.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// Concurrent callers must request disjoint `[start, start + len)`
+    /// ranges; the pool's one-task-per-index guarantee plus a disjoint
+    /// partition of the output makes that hold structurally.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[derive(Clone)]
+struct Job {
+    /// Lifetime-erased task closure; `run` does not return until every
+    /// worker has left the job, which is what makes the erasure sound.
+    f: &'static (dyn Fn(usize) + Sync),
+    next: Arc<AtomicUsize>,
+    total: usize,
+}
+
+struct Shared {
+    /// Bumped once per published job; each worker runs each epoch once.
+    epoch: AtomicU64,
+    /// Workers still inside the current epoch's job.
+    active: AtomicUsize,
+    /// A task closure panicked; re-raised on the submitting thread.
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+    job: Mutex<Option<Job>>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes `run` submissions: the pool's epoch/active protocol
+    /// handles one job at a time, and `run` takes `&self` (the pool is
+    /// shared with every kernel call), so concurrent submitters from safe
+    /// code must queue here rather than clobber each other's job state.
+    submit: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` total execution lanes (the submitting
+    /// thread participates, so `threads - 1` workers are spawned; `1` spawns
+    /// none and runs everything inline).
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads >= 1, "thread pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            job: Mutex::new(None),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("kvtuner-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning pool worker");
+            handles.push(h);
+        }
+        ThreadPool { shared, handles, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..total`, each exactly once, distributed
+    /// over the pool (the calling thread participates). Returns after every
+    /// task has finished. Concurrent `run` calls from different threads
+    /// serialize on an internal lock; `f` must not call back into `run` on
+    /// the same pool (that would deadlock on the submission lock).
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if self.handles.is_empty() || total == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        let _submission = self.shared.submit.lock().unwrap();
+        let next = Arc::new(AtomicUsize::new(0));
+        // Sound because `drain` below does not return (even on unwind)
+        // until every worker has decremented `active` — no worker touches
+        // `f` after that.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let mut job = self.shared.job.lock().unwrap();
+            debug_assert!(self.shared.active.load(Ordering::Acquire) == 0);
+            *job = Some(Job { f: f_static, next: next.clone(), total });
+            self.shared.panicked.store(false, Ordering::Relaxed);
+            self.shared.active.store(self.handles.len(), Ordering::Release);
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.work_cv.notify_all();
+        }
+        // waits for the workers even if f(i) panics on this thread
+        let drain = DrainGuard(&self.shared);
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= total {
+                break;
+            }
+            f(i);
+        }
+        drop(drain);
+        if self.shared.panicked.load(Ordering::Acquire) {
+            panic!("a thread-pool task panicked");
+        }
+    }
+}
+
+/// Blocks until `active == 0` when dropped (spin first, then condvar).
+struct DrainGuard<'a>(&'a Shared);
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        let sh = self.0;
+        for _ in 0..SPIN_ITERS {
+            if sh.active.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        let mut guard = sh.job.lock().unwrap();
+        while sh.active.load(Ordering::Acquire) != 0 {
+            guard = sh.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _guard = self.shared.job.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Wait until the epoch moves past `seen` (spin, then sleep). `None` on
+/// shutdown.
+fn wait_for_epoch(sh: &Shared, seen: u64) -> Option<u64> {
+    for _ in 0..SPIN_ITERS {
+        if sh.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        let e = sh.epoch.load(Ordering::Acquire);
+        if e != seen {
+            return Some(e);
+        }
+        std::hint::spin_loop();
+    }
+    let mut guard = sh.job.lock().unwrap();
+    loop {
+        if sh.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        let e = sh.epoch.load(Ordering::Acquire);
+        if e != seen {
+            return Some(e);
+        }
+        guard = sh.work_cv.wait(guard).unwrap();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let Some(e) = wait_for_epoch(sh, seen) else { return };
+        seen = e;
+        let job = sh.job.lock().unwrap().clone().expect("epoch bumped without a job");
+        let ok = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            (job.f)(i);
+        }));
+        if ok.is_err() {
+            sh.panicked.store(true, Ordering::Release);
+        }
+        if sh.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = sh.job.lock().unwrap();
+            sh.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        for threads in [1, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let n = 197;
+            let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} (threads={threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(17, &|i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * (16 * 17 / 2));
+    }
+
+    #[test]
+    fn disjoint_output_partitioning_writes_everything() {
+        let pool = ThreadPool::new(4);
+        let n = 103;
+        let mut out = vec![0u64; n];
+        let ranges = partition(n, pool.threads());
+        let shared = SharedMut::new(&mut out);
+        pool.run(ranges.len(), &|ci| {
+            let r = ranges[ci].clone();
+            let chunk = unsafe { shared.slice(r.start, r.len()) };
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (r.start + k) as u64 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_complete() {
+        for (n, parts) in [(0, 4), (1, 4), (7, 3), (8, 3), (64, 64), (5, 9)] {
+            let rs = partition(n, parts);
+            assert!(rs.len() <= parts.max(1));
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next, "n={n} parts={parts}");
+                assert!(r.end > r.start, "no empty ranges");
+                next = r.end;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        // a !Sync-unfriendly check: inline execution sees updates in order
+        let cell = AtomicUsize::new(0);
+        pool.run(4, &|i| {
+            assert_eq!(cell.load(Ordering::Relaxed), i);
+            cell.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(cell.load(Ordering::Relaxed), 4);
+    }
+}

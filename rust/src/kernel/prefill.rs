@@ -1,0 +1,150 @@
+//! Block-prefill attention: causal attention for a whole KIVI-group-sized
+//! block of fresh prompt tokens in one kernel, instead of one `attend_one`
+//! per token.
+//!
+//! Row `t` of the block attends the chronological first `base + t + 1`
+//! tokens of the view — committed pages first, then the fp residual ring —
+//! which is exactly what the token-by-token path sees at that token's step:
+//!
+//! * token / fp layers: all block tokens are already committed when the
+//!   kernel runs (their quantization is row-independent), and row `t`'s
+//!   causal prefix stops inside the committed region;
+//! * kivi layers: the engine appends the whole block to the fp residual
+//!   ring first and commits the group *after* this kernel, so rows
+//!   `0..g-1` see the old committed pages plus an in-block fp causal tail
+//!   of rows `0..=t` — bit-for-bit what the scalar path's interleaved
+//!   append/attend produced. (The group-filling row itself attends
+//!   post-commit via `attend_one_mt`, because the scalar path commits the
+//!   group before that token attends.)
+//!
+//! Scores run through `causal_softmax_rows` — mask and normalization fused,
+//! masked columns never enter the max/denominator — and the per-column K·Q
+//! and P·V folds are the shared `paged_attention` head bodies, so the block
+//! path is bit-identical to the scalar path by construction. Work is
+//! partitioned over query heads (disjoint `[Dh]` output stripes), keeping
+//! the thread-count-invariance contract.
+
+use anyhow::Result;
+
+use crate::kvcache::KvView;
+
+use super::paged_attention::{head_pv, head_scores, with_scratch};
+use super::pool::{SharedMut, ThreadPool};
+use super::softmax::causal_softmax_rows;
+
+/// Causal attention for `rows` fresh query tokens over a slot's view.
+///
+/// `q_rows` / `out` are `[rows, hq * dh]` row-major; `base` is the number of
+/// tokens that existed before the block (row `t` sees the first
+/// `base + t + 1` view tokens). Requires `base + rows <= view.seq_len()`.
+pub fn attend_block(
+    pool: &ThreadPool,
+    q_rows: &[f32],
+    rows: usize,
+    hq: usize,
+    view: &KvView<'_>,
+    base: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    if rows == 0 {
+        return Ok(());
+    }
+    let (h, dh) = (view.h, view.dh);
+    debug_assert_eq!(q_rows.len(), rows * hq * dh);
+    debug_assert_eq!(out.len(), rows * hq * dh);
+    anyhow::ensure!(hq % h == 0, "query heads must be a multiple of kv heads");
+    let cols = base + rows;
+    anyhow::ensure!(cols <= view.seq_len(), "block overruns the kv view");
+    let gqa = hq / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let stride = hq * dh;
+    let shared = SharedMut::new(out);
+    pool.run(hq, &|hh: usize| {
+        // [rows, cols] score matrix + code row from the shared per-thread
+        // attention scratch (one pair per pool thread, decode and prefill)
+        with_scratch(rows * cols, dh, |scores, codes| {
+            let kv = hh / gqa;
+            // K·Q for every visible (row, column): committed pages first,
+            // then the fp residual tail — the decode kernel's fold exactly
+            for t in 0..rows {
+                let visible = base + t + 1;
+                let n_comm = visible.min(view.cache_len);
+                let n_res = visible - n_comm;
+                let qh = &q_rows[t * stride + hh * dh..t * stride + (hh + 1) * dh];
+                head_scores(
+                    view,
+                    qh,
+                    kv,
+                    n_comm,
+                    n_res,
+                    scale,
+                    codes,
+                    &mut scores[t * cols..t * cols + visible],
+                );
+            }
+            causal_softmax_rows(scores, rows, cols, base);
+            for t in 0..rows {
+                let visible = base + t + 1;
+                let n_comm = visible.min(view.cache_len);
+                let n_res = visible - n_comm;
+                let o = unsafe { shared.slice(t * stride + hh * dh, dh) };
+                head_pv(
+                    view,
+                    kv,
+                    n_comm,
+                    n_res,
+                    &scores[t * cols..t * cols + visible],
+                    codes,
+                    o,
+                );
+            }
+        });
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::attend_one;
+    use crate::kernel::paged_attention::test_fp_view as fp_view;
+
+    /// Row `t` of the block must equal a scalar `attend_one` over a view
+    /// truncated to `base + t + 1` tokens — bitwise, at any pool width.
+    #[test]
+    fn block_rows_match_per_token_attention_bitwise() {
+        let (h, hq, dh, s_max, page) = (2usize, 4usize, 8usize, 16usize, 4usize);
+        let (base, rows) = (3usize, 5usize);
+        let total = base + rows;
+        let mut k_fp = vec![0f32; h * s_max * dh];
+        let mut v_fp = vec![0f32; h * s_max * dh];
+        for hh in 0..h {
+            for j in 0..total {
+                for d in 0..dh {
+                    let o = (hh * s_max + j) * dh + d;
+                    k_fp[o] = ((o * 13 % 31) as f32 - 15.0) * 0.07;
+                    v_fp[o] = ((o * 11 % 29) as f32 - 14.0) * 0.05;
+                }
+            }
+        }
+        let q_rows: Vec<f32> = (0..rows * hq * dh).map(|i| (i as f32 * 0.23).sin()).collect();
+        for threads in [1, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let full = fp_view(&k_fp, &v_fp, h, dh, s_max, page, total);
+            let mut block_out = vec![0f32; rows * hq * dh];
+            attend_block(&pool, &q_rows, rows, hq, &full, base, &mut block_out).unwrap();
+            for t in 0..rows {
+                let causal = fp_view(&k_fp, &v_fp, h, dh, s_max, page, base + t + 1);
+                let mut row_out = vec![0f32; hq * dh];
+                attend_one(&q_rows[t * hq * dh..(t + 1) * hq * dh], hq, &causal, &mut row_out)
+                    .unwrap();
+                let a: Vec<u32> = row_out.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = block_out[t * hq * dh..(t + 1) * hq * dh]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                assert_eq!(a, b, "row {t} threads={threads}");
+            }
+        }
+    }
+}

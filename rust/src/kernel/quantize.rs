@@ -51,6 +51,51 @@ pub fn token_step_outputs(
     ])
 }
 
+/// Quantize a whole block of `g` prefill tokens' K/V (head-major
+/// `[h, g, dh]`, post-RoPE keys) into one `append_token_outputs` call:
+/// (k_codes [1,h,g,kp], k_scale [1,h,g], k_zero, v_codes [1,h,g,vp],
+/// v_scale, v_zero). Per-token quantization is row-independent, so each
+/// row's codes and scales are bit-identical to `token_step_outputs` on that
+/// row — the block prefill path writes exactly the cache the token-by-token
+/// path would.
+pub fn token_block_outputs(
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    g: usize,
+    dh: usize,
+    pair: PrecisionPair,
+) -> Result<Vec<Tensor>> {
+    debug_assert_eq!(k.len(), h * g * dh);
+    debug_assert_eq!(v.len(), h * g * dh);
+    let kp = packed_width(dh, pair.k_bits)?;
+    let vp = packed_width(dh, pair.v_bits)?;
+    let mut kc = vec![0u8; h * g * kp];
+    let mut ks = vec![0f32; h * g];
+    let mut kz = vec![0f32; h * g];
+    let mut vc = vec![0u8; h * g * vp];
+    let mut vs = vec![0f32; h * g];
+    let mut vz = vec![0f32; h * g];
+    for hh in 0..h {
+        let kq = quantize_per_token(&k[hh * g * dh..(hh + 1) * g * dh], g, dh, pair.k_bits)?;
+        kc[hh * g * kp..(hh + 1) * g * kp].copy_from_slice(&kq.codes);
+        ks[hh * g..(hh + 1) * g].copy_from_slice(&kq.scale);
+        kz[hh * g..(hh + 1) * g].copy_from_slice(&kq.zero);
+        let vq = quantize_per_token(&v[hh * g * dh..(hh + 1) * g * dh], g, dh, pair.v_bits)?;
+        vc[hh * g * vp..(hh + 1) * g * vp].copy_from_slice(&vq.codes);
+        vs[hh * g..(hh + 1) * g].copy_from_slice(&vq.scale);
+        vz[hh * g..(hh + 1) * g].copy_from_slice(&vq.zero);
+    }
+    Ok(vec![
+        Tensor::u8(&[1, h, g, kp], kc),
+        Tensor::f32(&[1, h, g], ks),
+        Tensor::f32(&[1, h, g], kz),
+        Tensor::u8(&[1, h, g, vp], vc),
+        Tensor::f32(&[1, h, g], vs),
+        Tensor::f32(&[1, h, g], vz),
+    ])
+}
+
 /// Quantize a full kivi residual group (`residual_chunk` output, `[1,h,g,dh]`
 /// each) into `commit_kivi_chunk`'s expected tensors:
 /// keys per-channel over the group — (codes [1,h,g,kp], scale [1,h,dh],
@@ -124,6 +169,48 @@ mod tests {
             let z = outs[2].as_f32().unwrap()[hh];
             for d in 0..dh {
                 assert_eq!(row[d] as f32 * s + z, want[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn block_outputs_match_per_token_outputs_bitwise() {
+        let (h, g, dh) = (2, 4, 16);
+        let mut r = Rng::seed(23);
+        // head-major block [h, g, dh], the layout the block prefill commits
+        let k: Vec<f32> = (0..h * g * dh).map(|_| r.normal() as f32).collect();
+        let v: Vec<f32> = (0..h * g * dh).map(|_| r.normal() as f32).collect();
+        let pair = PrecisionPair::new(4, 2);
+        let blk = token_block_outputs(&k, &v, h, g, dh, pair).unwrap();
+        let (kp, vp) = (blk[0].shape[3], blk[3].shape[3]);
+        for t in 0..g {
+            let mut kt = vec![0f32; h * dh];
+            let mut vt = vec![0f32; h * dh];
+            for hh in 0..h {
+                kt[hh * dh..(hh + 1) * dh]
+                    .copy_from_slice(&k[(hh * g + t) * dh..(hh * g + t + 1) * dh]);
+                vt[hh * dh..(hh + 1) * dh]
+                    .copy_from_slice(&v[(hh * g + t) * dh..(hh * g + t + 1) * dh]);
+            }
+            let one = token_step_outputs(&kt, &vt, h, dh, pair).unwrap();
+            for hh in 0..h {
+                assert_eq!(
+                    &blk[0].as_u8().unwrap()[(hh * g + t) * kp..(hh * g + t + 1) * kp],
+                    &one[0].as_u8().unwrap()[hh * kp..(hh + 1) * kp],
+                    "k codes (t={t} h={hh})"
+                );
+                assert_eq!(
+                    &blk[3].as_u8().unwrap()[(hh * g + t) * vp..(hh * g + t + 1) * vp],
+                    &one[3].as_u8().unwrap()[hh * vp..(hh + 1) * vp],
+                    "v codes (t={t} h={hh})"
+                );
+                for (bi, oi) in [(1, 1), (2, 2), (4, 4), (5, 5)] {
+                    assert_eq!(
+                        blk[bi].as_f32().unwrap()[hh * g + t].to_bits(),
+                        one[oi].as_f32().unwrap()[hh].to_bits(),
+                        "scale/zero tensor {bi} (t={t} h={hh})"
+                    );
+                }
             }
         }
     }

@@ -1,6 +1,8 @@
 //! RMSNorm, matching `model.py::rms_norm` and the reference engine: mean of
 //! squares (not variance), epsilon inside the sqrt.
 
+use super::pool::{partition, SharedMut, ThreadPool};
+
 /// out[i] = x[i] * g[i] / sqrt(mean(x^2) + eps)
 pub fn rms_norm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
     let d = x.len();
@@ -13,9 +15,52 @@ pub fn rms_norm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
+/// Row-blocked RMSNorm over `[rows, d]`, partitioned across the pool. Each
+/// row is the scalar `rms_norm`, so outputs are bit-identical at any width.
+pub fn rms_norm_rows(
+    pool: &ThreadPool,
+    x: &[f32],
+    g: &[f32],
+    eps: f32,
+    rows: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(out.len(), rows * d);
+    let ranges = partition(rows, pool.threads());
+    let shared = SharedMut::new(out);
+    pool.run(ranges.len(), &|ci: usize| {
+        for t in ranges[ci].clone() {
+            let o = unsafe { shared.slice(t * d, d) };
+            rms_norm(&x[t * d..(t + 1) * d], g, eps, o);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rows_match_scalar_bitwise() {
+        let (rows, d) = (5, 12);
+        let x: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.31).sin()).collect();
+        let g: Vec<f32> = (0..d).map(|i| 1.0 + (i as f32) * 0.01).collect();
+        for threads in [1, 3] {
+            let pool = ThreadPool::new(threads);
+            let mut blocked = vec![0f32; rows * d];
+            rms_norm_rows(&pool, &x, &g, 1e-5, rows, d, &mut blocked);
+            for t in 0..rows {
+                let mut row = vec![0f32; d];
+                rms_norm(&x[t * d..(t + 1) * d], &g, 1e-5, &mut row);
+                let a: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> =
+                    blocked[t * d..(t + 1) * d].iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "row {t} threads={threads}");
+            }
+        }
+    }
 
     #[test]
     fn unit_gain_normalizes_rms_to_one() {

@@ -215,6 +215,7 @@ fn router_serves_mixed_classes_end_to_end() {
             prefill_chunk: 32,
             paged: None,
             backend: BackendKind::Xla,
+            threads: 1,
         },
         WorkerSpec {
             name: "efficient".into(),
@@ -226,6 +227,7 @@ fn router_serves_mixed_classes_end_to_end() {
             prefill_chunk: 32,
             paged: None,
             backend: BackendKind::Xla,
+            threads: 1,
         },
     ];
     let router = Router::start(dir, workers).expect("router start");
@@ -269,6 +271,7 @@ fn scheduler_handles_more_requests_than_slots() {
         prefill_chunk: 32,
         paged: None,
         backend: BackendKind::Xla,
+        threads: 1,
     }];
     let router = Router::start(dir, workers).unwrap();
     // 7 requests through 2 slots: forces queueing + slot reuse
@@ -301,6 +304,7 @@ fn prompt_longer_than_slot_is_clamped_not_fatal() {
         prefill_chunk: 32,
         paged: None,
         backend: BackendKind::Xla,
+        threads: 1,
     }];
     let router = Router::start(dir, workers).unwrap();
     let prompt: Vec<i32> = (0..400).map(|j| (j % cfg.vocab) as i32).collect(); // > s_max
@@ -376,6 +380,7 @@ fn paged_router_oversubscribes_slots_beyond_pool() {
         // of 32) -> 3 blocks; admission headroom forces contention
         paged: Some(PagedOptions { total_blocks: Some(3), ..PagedOptions::default() }),
         backend: BackendKind::Xla,
+        threads: 1,
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..5u64)
@@ -409,6 +414,7 @@ fn paged_router_reuses_shared_prompt_prefixes() {
         prefill_chunk: 32,
         paged: Some(PagedOptions::default()),
         backend: BackendKind::Xla,
+        threads: 1,
     }];
     let router = Router::start(dir, workers).unwrap();
     // identical 64-token system prompt + distinct 8-token tails
@@ -502,6 +508,7 @@ fn swap_enabled_router_drains_oversubscribed_pool() {
             ..PagedOptions::default()
         }),
         backend: BackendKind::Xla,
+        threads: 1,
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..3u64)

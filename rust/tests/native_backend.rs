@@ -1,11 +1,18 @@
 //! Cross-backend parity for the native kernel subsystem. Runs with zero
 //! artifacts and without the `xla` feature (hosted CI exercises exactly
-//! this file with `--no-default-features`):
+//! this file with `--no-default-features`, across a thread matrix via
+//! `KVTUNER_THREADS`):
 //!
 //! * property-style sweep over every shipped precision pair × storage mode:
 //!   native-engine logits (paged arm, block-table-direct attention) match
 //!   the pure-Rust reference engine at tight tolerance — including a kivi
 //!   residual-ring page-boundary prompt length;
+//! * thread-count invariance: logits are *bit-identical* across pool sizes
+//!   {1, 2, 8} for all nine precision pairs × token/kivi modes — the
+//!   determinism-by-output-partitioning contract;
+//! * block prefill vs token-by-token prefill is bit-exact (same pairs ×
+//!   modes, including the kivi residual-ring page-boundary prompt and an
+//!   exact multiple-of-group prompt);
 //! * native dense arm vs native paged arm is bit-for-bit identical;
 //! * prefix-page reuse on the native paged arm is bit-exact;
 //! * dequant-on-read through `KvView` is bit-exact against dequantizing
@@ -70,6 +77,7 @@ fn native_paged_matches_ref_engine_across_all_pairs() {
                 1,
                 S_MAX,
                 16,
+                kernel::default_threads(),
                 Some(PagedOptions::default()),
             )
             .unwrap();
@@ -88,9 +96,17 @@ fn native_paged_matches_ref_engine_across_all_pairs() {
     let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, cfg.n_layers);
     let mut reff = RefEngine::new(&cfg, &w, specs.clone(), S_MAX).unwrap();
     let ref_out = reff.generate(&p, MAX_NEW).unwrap();
-    let mut nat =
-        NativeEngine::new(&cfg, w.clone(), specs, 1, S_MAX, 16, Some(PagedOptions::default()))
-            .unwrap();
+    let mut nat = NativeEngine::new(
+        &cfg,
+        w.clone(),
+        specs,
+        1,
+        S_MAX,
+        16,
+        kernel::default_threads(),
+        Some(PagedOptions::default()),
+    )
+    .unwrap();
     let nat_out = nat.generate(0, &p, MAX_NEW).unwrap();
     assert_eq!(ref_out, nat_out);
     assert!(max_abs_diff(&reff.last_logits, nat.logits(0)) <= 1e-3);
@@ -108,11 +124,19 @@ fn native_dense_and_paged_are_bit_identical() {
     ] {
         let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
         let mut dense =
-            NativeEngine::new(&cfg, w.clone(), specs.clone(), 1, S_MAX, 16, None).unwrap();
+            NativeEngine::new(&cfg, w.clone(), specs.clone(), 1, S_MAX, 16, 2, None).unwrap();
         let dense_out = dense.generate(0, &p, MAX_NEW).unwrap();
-        let mut paged =
-            NativeEngine::new(&cfg, w.clone(), specs, 1, S_MAX, 16, Some(PagedOptions::default()))
-                .unwrap();
+        let mut paged = NativeEngine::new(
+            &cfg,
+            w.clone(),
+            specs,
+            1,
+            S_MAX,
+            16,
+            2,
+            Some(PagedOptions::default()),
+        )
+        .unwrap();
         let paged_out = paged.generate(0, &p, MAX_NEW).unwrap();
         assert_eq!(dense_out, paged_out, "{mode:?} {}", pair.label());
         // same codes, same scales, same fold -> identical floats
@@ -128,7 +152,7 @@ fn prefix_reuse_on_native_paged_arm_is_bit_exact() {
     let p = prompt(&cfg, 9);
     let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
     let mut nat =
-        NativeEngine::new(&cfg, w, specs, 2, S_MAX, 16, Some(PagedOptions::default())).unwrap();
+        NativeEngine::new(&cfg, w, specs, 2, S_MAX, 16, 2, Some(PagedOptions::default())).unwrap();
     let first = nat.prefill(0, &p).unwrap();
     let logits0 = nat.logits(0).to_vec();
     nat.cache.register_prefix(0, &p);
@@ -299,7 +323,7 @@ fn native_backend_never_stages() {
     let w = Weights::synthetic(&cfg, 13);
     let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
     let mut nat =
-        NativeEngine::new(&cfg, w, specs, 1, S_MAX, 16, Some(PagedOptions::default())).unwrap();
+        NativeEngine::new(&cfg, w, specs, 1, S_MAX, 16, 2, Some(PagedOptions::default())).unwrap();
     let p = prompt(&cfg, 1);
     nat.generate(0, &p, MAX_NEW).unwrap();
     assert_eq!(
@@ -307,4 +331,121 @@ fn native_backend_never_stages() {
         0,
         "the block-direct path must move zero staging bytes"
     );
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Determinism-by-output-partitioning: generation (block prefill + decode)
+/// must produce bit-identical logits for every pool size, across all nine
+/// precision pairs × token/kivi modes (plus fp).
+#[test]
+fn logits_bit_identical_across_pool_sizes() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 17);
+    let p = prompt(&cfg, 4);
+    let mut cases: Vec<(Mode, PrecisionPair)> = Vec::new();
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in PAIRS {
+            cases.push((mode, pair));
+        }
+    }
+    cases.push((Mode::Fp, PrecisionPair::FP));
+    for (mode, pair) in cases {
+        let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+        let run = |threads: usize| -> (Vec<i32>, Vec<u32>) {
+            let mut nat = NativeEngine::new(
+                &cfg,
+                w.clone(),
+                specs.clone(),
+                1,
+                S_MAX,
+                16,
+                threads,
+                Some(PagedOptions::default()),
+            )
+            .unwrap();
+            let out = nat.generate(0, &p, MAX_NEW).unwrap();
+            (out, bits(nat.logits(0)))
+        };
+        let (tok1, log1) = run(1);
+        for threads in [2, 8] {
+            let (tok_n, log_n) = run(threads);
+            assert_eq!(tok1, tok_n, "token stream: {mode:?} {} x{threads}", pair.label());
+            assert_eq!(log1, log_n, "logit bits: {mode:?} {} x{threads}", pair.label());
+        }
+    }
+}
+
+/// Group-blocked prefill must be bit-exact against the token-by-token
+/// oracle — first token, logits, and the decode steps that follow (whose
+/// attention reads the cache both paths wrote). Covers the kivi
+/// residual-ring page-boundary prompt (13 = 8 + 5-token fp tail) and an
+/// exact multiple-of-group prompt (16 = two full pages).
+#[test]
+fn block_prefill_matches_tokenwise_bit_exact() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 29);
+    let mut cases: Vec<(Mode, PrecisionPair)> = Vec::new();
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in PAIRS {
+            cases.push((mode, pair));
+        }
+    }
+    cases.push((Mode::Fp, PrecisionPair::FP));
+    for (mode, pair) in cases {
+        for plen in [PROMPT_LEN, 2 * cfg.group] {
+            let p: Vec<i32> = (0..plen).map(|j| ((j * 5 + 2) % cfg.vocab) as i32).collect();
+            let specs = LayerSpec::uniform(mode, pair, cfg.n_layers);
+            let build = || {
+                NativeEngine::new(
+                    &cfg,
+                    w.clone(),
+                    specs.clone(),
+                    1,
+                    S_MAX,
+                    16,
+                    2,
+                    Some(PagedOptions::default()),
+                )
+                .unwrap()
+            };
+            let mut tokenwise = build();
+            let mut blocked = build();
+            let first_t = tokenwise.prefill_tokenwise(0, &p).unwrap();
+            let first_b = blocked.prefill(0, &p).unwrap();
+            assert_eq!(first_t, first_b, "first token: {mode:?} {} len={plen}", pair.label());
+            assert_eq!(
+                bits(tokenwise.logits(0)),
+                bits(blocked.logits(0)),
+                "prefill logit bits: {mode:?} {} len={plen}",
+                pair.label()
+            );
+            // decode over the caches each path wrote: identical pages ->
+            // identical attention -> identical streams, bit for bit
+            let (mut tok_t, mut tok_b) = (first_t, first_b);
+            for step in 0..6 {
+                let next_t = tokenwise.decode_step(&[tok_t], &[true]).unwrap()[0];
+                let next_b = blocked.decode_step(&[tok_b], &[true]).unwrap()[0];
+                assert_eq!(
+                    bits(tokenwise.logits(0)),
+                    bits(blocked.logits(0)),
+                    "decode step {step} logit bits: {mode:?} {} len={plen}",
+                    pair.label()
+                );
+                assert_eq!(next_t, next_b, "decode step {step}");
+                tok_t = next_t;
+                tok_b = next_b;
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_threads_is_rejected() {
+    let cfg = tiny_cfg();
+    let w = Weights::synthetic(&cfg, 3);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 4), cfg.n_layers);
+    assert!(NativeEngine::new(&cfg, w, specs, 1, S_MAX, 16, 0, None).is_err());
 }
