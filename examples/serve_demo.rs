@@ -42,9 +42,8 @@ fn main() -> anyhow::Result<()> {
             batch,
             s_max: 256,
             prefill_chunk: 32,
-            paged: None,
             backend: BackendKind::Xla,
-            threads: 1,
+            ..WorkerSpec::default()
         },
         WorkerSpec {
             name: "tuned-balanced".into(),
@@ -54,9 +53,8 @@ fn main() -> anyhow::Result<()> {
             batch,
             s_max: 256,
             prefill_chunk: 32,
-            paged: None,
             backend: BackendKind::Xla,
-            threads: 1,
+            ..WorkerSpec::default()
         },
     ];
 
@@ -94,9 +92,9 @@ fn main() -> anyhow::Result<()> {
     t.print();
 
     let mut tm = Table::new("serve_demo — per-engine metrics", &["engine", "eq bits", "summary"]);
-    for (name, snap) in router.shutdown()? {
-        let bits = if name.starts_with("kv8") { 8.0 } else { 4.5 };
-        tm.row(vec![name, format!("{bits:.2}"), snap.to_string()]);
+    for r in router.shutdown()? {
+        let bits = if r.name.starts_with("kv8") { 8.0 } else { 4.5 };
+        tm.row(vec![r.name, format!("{bits:.2}"), r.snapshot.to_string()]);
     }
     tm.print();
     println!(

@@ -206,6 +206,36 @@ fn main() -> anyhow::Result<()> {
             );
         }
 
+        // --- profiled arm: instrumentation must not change a single bit ---
+        // (The floors above double as the profiler-disabled overhead guard:
+        // every unprofiled arm runs the instrumented engine with the
+        // profiler off, so the disabled path's cost is bounded by the same
+        // ×1-scalar-baseline floors that predate the instrumentation.)
+        {
+            let mut e = engine(&cfg, &w, specs, 2);
+            e.set_profiling(true);
+            e.prefill(0, &prompt).unwrap();
+            let mut tok = first;
+            let mut stream = Vec::with_capacity(DECODE_STEPS);
+            for _ in 0..DECODE_STEPS {
+                tok = e.decode_step(&[tok], &[true]).unwrap()[0];
+                stream.push(tok);
+            }
+            let want = chain.as_ref().unwrap();
+            assert_eq!(want.0, stream, "{label}: profiling changed the decode stream");
+            assert_eq!(
+                want.1,
+                bits(e.logits(0)),
+                "{label}: profiling changed the final logits"
+            );
+            let p = e.profile().expect("profiling was enabled");
+            assert!(p.total_nanos() > 0, "{label}: profiled run recorded no phase time");
+            assert!(
+                p.layers[0].kv_live_peak > 0,
+                "{label}: profiled run recorded no live KV bytes"
+            );
+        }
+
         t.row(vec![
             label.clone(),
             format!("{tokenwise_tps:.0}"),
@@ -220,9 +250,11 @@ fn main() -> anyhow::Result<()> {
         eprintln!("[table11_native_mt] {label} done");
     }
     t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
     println!(
-        "\nall arms bit-identical: block prefill == token-by-token prefill and every pool \
-         width produces the same logits (outputs are partitioned, never accumulation order)."
+        "\nall arms bit-identical: block prefill == token-by-token prefill, every pool \
+         width produces the same logits (outputs are partitioned, never accumulation \
+         order), and the per-layer profiler changes neither stream nor logits."
     );
     Ok(())
 }

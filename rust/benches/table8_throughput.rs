@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("[table8] {label} done");
     }
     t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
     println!(
         "\nmeasured CPU tok/s is compute-dominated post-optimization (fixed dispatch +\n\
          unpack work); the HBM-projected column — tokens/s when each step reads the live\n\

@@ -457,6 +457,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
     println!(
         "\nswap arm: preemption victims are chosen by pages_held x remaining_tokens and \
          evicted to a host arena in packed quantized form; prefix-indexed pages re-link \

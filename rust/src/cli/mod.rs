@@ -39,6 +39,7 @@ SUBCOMMANDS
               --model tiny --layer 0 --tokens
   serve       run the multi-engine router on synthetic load
               --model tiny --requests 16 --batch 2
+              --synthetic (native backend: synthetic weights, no artifacts)
 
 COMMON FLAGS
   --artifacts DIR   artifact directory (default artifacts/tiny or $KVTUNER_ARTIFACTS)
@@ -62,10 +63,23 @@ COMMON FLAGS
                     bit-exact instead of re-prefilled (needs --paged)
   --swap-policy P   off | always | auto (default auto when --swap-mib is
                     set): per-victim choice between swap-out and recompute
+
+OBSERVABILITY (serve / throughput)
+  --trace-out F     write the request-lifecycle trace at exit: Chrome
+                    trace-event JSON (load in Perfetto / chrome://tracing;
+                    one track per worker slot), or JSONL when F ends in
+                    .jsonl
+  --metrics-out F   write machine-readable metrics JSON at exit (per-engine
+                    snapshot with ttft/total/tpot/step histograms and
+                    percentiles, plus the per-layer profile when enabled)
+  --profile-serve   serve: enable the per-layer/per-phase engine profiler
+                    (also: KVTUNER_PROFILE=1); prints a per-layer table at
+                    shutdown. Off = zero overhead.
 ";
 
 pub fn cli_main() -> Result<()> {
-    let args = Args::from_env(&["no-prune", "tokens", "real-fill", "paged", "help"])?;
+    let args =
+        Args::from_env(&["no-prune", "tokens", "real-fill", "paged", "profile-serve", "synthetic", "help"])?;
     if args.switch("help") {
         print!("{USAGE}");
         return Ok(());

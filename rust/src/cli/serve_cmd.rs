@@ -2,27 +2,49 @@
 //! report per-engine serving metrics. Demonstrates the deployment story:
 //! multiple precision configs of one model served side by side, routed by
 //! requested accuracy class.
+//!
+//! Observability flags: `--trace-out` captures the request lifecycle
+//! (admit / prefill / decode / preempt / swap / resume / complete) as a
+//! Chrome trace; `--metrics-out` writes per-engine snapshot JSON with
+//! latency histograms; `--profile-serve` (or `KVTUNER_PROFILE=1`) turns on
+//! the engines' per-layer/per-phase profiler.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{LayerSpec, Mode, PrecisionPair};
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use crate::coordinator::{AccuracyClass, Router, WorkerSpec};
+use crate::engine::BackendKind;
+use crate::obs::Tracer;
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
+use crate::util::json::{arr, obj, s, Json};
 use crate::util::rng::Rng;
 
 pub fn run(args: &Args) -> Result<()> {
     let dir = super::artifact_dir(args);
-    let manifest = crate::config::Manifest::load(&dir)?;
-    let cfg = manifest.config.clone();
-    let model = args.str("model", &cfg.name);
-    let batch = args.usize("batch", *manifest.decode_batches().last().unwrap_or(&1))?;
+    let backend = super::backend_kind(args)?;
+    let synthetic = args.switch("synthetic");
+    let (cfg, model, default_batch) = if synthetic {
+        anyhow::ensure!(
+            backend == BackendKind::Native,
+            "--synthetic needs the native backend (the XLA backend serves only AOT artifacts)"
+        );
+        (ModelConfig::synthetic("sim-serve"), "synthetic".to_string(), 2)
+    } else {
+        let manifest = crate::config::Manifest::load(&dir)?;
+        let cfg = manifest.config.clone();
+        let model = args.str("model", &cfg.name);
+        let db = *manifest.decode_batches().last().unwrap_or(&1);
+        (cfg, model, db)
+    };
+    let batch = args.usize("batch", default_batch)?;
     let s_max = args.usize("smax", 256)?;
     let n_requests = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 16)?;
     let paged = super::paged_options(args)?;
-    let backend = super::backend_kind(args)?;
     // each router worker sizes its own kernel pool from this; an explicit
     // --threads applies per worker, while the default splits the machine
     // across the three concurrent workers so their pools do not
@@ -31,33 +53,39 @@ pub fn run(args: &Args) -> Result<()> {
         Some(_) => super::thread_count(args)?,
         None => (crate::kernel::default_threads() / 3).max(1),
     };
+    let trace_out = args.opt_str("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
+    let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::with_default_capacity()));
+    let profile = args.switch("profile-serve")
+        || std::env::var("KVTUNER_PROFILE").map(|v| v == "1").unwrap_or(false);
 
     // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
     // given, else K8V4
+    let common = WorkerSpec {
+        model: model.clone(),
+        batch,
+        s_max,
+        prefill_chunk: 32,
+        paged: paged.clone(),
+        backend,
+        threads,
+        trace: tracer.clone(),
+        profile,
+        synthetic: synthetic.then(|| cfg.clone()),
+        ..WorkerSpec::default()
+    };
     let mut workers = vec![
         WorkerSpec {
             name: "kv8-high".into(),
-            model: model.clone(),
             specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), cfg.n_layers),
             class: AccuracyClass::High,
-            batch,
-            s_max,
-            prefill_chunk: 32,
-            paged: paged.clone(),
-            backend,
-            threads,
+            ..common.clone()
         },
         WorkerSpec {
             name: "k4v2-efficient".into(),
-            model: model.clone(),
             specs: LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers),
             class: AccuracyClass::Efficient,
-            batch,
-            s_max,
-            prefill_chunk: 32,
-            paged: paged.clone(),
-            backend,
-            threads,
+            ..common.clone()
         },
     ];
     let balanced_specs = match args.opt_str("config") {
@@ -66,23 +94,19 @@ pub fn run(args: &Args) -> Result<()> {
     };
     workers.push(WorkerSpec {
         name: "tuned-balanced".into(),
-        model: model.clone(),
         specs: balanced_specs,
         class: AccuracyClass::Balanced,
-        batch,
-        s_max,
-        prefill_chunk: 32,
-        paged: paged.clone(),
-        backend,
-        threads,
+        ..common
     });
 
     eprintln!(
         "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={}, backend={}, \
-         threads={threads})",
+         threads={threads}{}{})",
         workers.len(),
         super::cache_desc(&paged),
         backend.as_str(),
+        if synthetic { ", synthetic weights" } else { "" },
+        if profile { ", profiling" } else { "" },
     );
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;
@@ -116,10 +140,41 @@ pub fn run(args: &Args) -> Result<()> {
     }
     t.print();
 
+    let reports = router.shutdown()?;
     let mut tm = Table::new("serve — per-engine metrics", &["engine", "summary"]);
-    for (name, snap) in router.shutdown()? {
-        tm.row(vec![name, snap.to_string()]);
+    for r in &reports {
+        tm.row(vec![r.name.clone(), r.snapshot.to_string()]);
     }
     tm.print();
+    for r in &reports {
+        if let Some(p) = &r.profile {
+            p.table(&format!("serve — per-layer profile ({})", r.name)).print();
+        }
+    }
+
+    if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
+        tracer.write(path)?;
+        eprintln!(
+            "[serve] wrote {} trace events to {} ({} dropped)",
+            tracer.events().len(),
+            path.display(),
+            tracer.dropped(),
+        );
+    }
+    if let Some(path) = &metrics_out {
+        let engines: Vec<Json> = reports
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(r.name.clone())),
+                    ("snapshot", r.snapshot.to_json()),
+                    ("profile", r.profile.as_ref().map_or(Json::Null, |p| p.to_json())),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![("engines", arr(engines))]);
+        std::fs::write(path, doc.to_string_pretty())?;
+        eprintln!("[serve] wrote metrics JSON to {}", path.display());
+    }
     Ok(())
 }

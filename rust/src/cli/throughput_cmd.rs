@@ -9,6 +9,7 @@
 //!   only `manifest.json` + the weights file, no HLO artifacts and no XLA
 //!   extension, so the grid runs anywhere (including hosted CI).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -17,9 +18,11 @@ use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use crate::engine::{BackendKind, NativeEngine};
 use crate::kvcache::{CacheBackend, PagedOptions};
 use crate::model::Weights;
+use crate::obs::{EventKind, TraceSink, Tracer};
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
+use crate::util::json::obj;
 
 pub struct ThroughputRow {
     pub equiv_bits: f64,
@@ -192,14 +195,30 @@ fn run_grid(
             h
         },
     );
+    // --trace-out: one DecodeStep span per grid cell (setting = track,
+    // arg = input len) so a Perfetto view shows where grid time went
+    let trace_out = args.opt_str("trace-out").map(std::path::PathBuf::from);
+    let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::with_default_capacity()));
     let mut baseline: Vec<f64> = Vec::new();
+    let mut cell: u64 = 0;
     for (i, (label, specs)) in settings.iter().enumerate() {
         let mut row = vec![label.clone()];
         let mut bits = 0.0;
         let mut mib = 0.0;
         let mut tps_list = Vec::new();
         for &il in &input_lens {
+            let t_cell = Instant::now();
             let r = measure_fn(specs, il)?;
+            if let Some(tr) = &tracer {
+                TraceSink { tracer: tr.clone(), worker: 0 }.span(
+                    EventKind::DecodeStep,
+                    cell,
+                    i as u32,
+                    t_cell,
+                    il as u64,
+                );
+            }
+            cell += 1;
             bits = r.equiv_bits;
             mib = r.kv_mib;
             tps_list.push(r.toks_per_sec);
@@ -223,6 +242,15 @@ fn run_grid(
         eprintln!("[throughput] {label} done");
     }
     t.print();
+    if let (Some(path), Some(tr)) = (&trace_out, &tracer) {
+        tr.write(path)?;
+        eprintln!("[throughput] wrote {} trace events to {}", tr.events().len(), path.display());
+    }
+    if let Some(path) = args.opt_str("metrics-out") {
+        let doc = obj(vec![("table", t.to_json())]);
+        std::fs::write(path, doc.to_string_pretty())?;
+        eprintln!("[throughput] wrote metrics JSON to {path}");
+    }
     Ok(())
 }
 

@@ -134,6 +134,26 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// A small self-contained config for synthetic-weight runs (`serve
+    /// --synthetic`, CI smoke tests): no artifact dir, manifest, or weights
+    /// file required — pair with `Weights::synthetic`.
+    pub fn synthetic(name: &str) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            n_layers: 4,
+            d_model: 64,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            d_ff: 128,
+            vocab: 256,
+            rope_theta: 10000.0,
+            group: 32,
+            residual: 32,
+            rms_eps: 1e-5,
+        }
+    }
+
     fn from_json(j: &Json) -> Result<ModelConfig> {
         Ok(ModelConfig {
             name: j.get("name")?.as_str()?.to_string(),

@@ -1,9 +1,19 @@
 //! Serving metrics: throughput, TTFT/TPOT latencies, engine utilization.
-//! Lock-light: counters are atomics; latency samples batch under one mutex.
+//!
+//! Entirely lock-free: counters are atomics and latency samples go into
+//! bounded log-bucket histograms ([`crate::obs::LogHistogram`] — 64 atomic
+//! buckets each), so recording never blocks, memory is constant regardless
+//! of request count, and `snapshot()` only loads atomics — it neither sorts
+//! nor mutates anything. (The previous design pushed every completion into
+//! a `Vec<f64>` under a mutex and re-sorted it per snapshot: O(n log n)
+//! per call, unbounded growth, and a poisoning hazard if any worker
+//! panicked while holding the lock.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::obs::{HistSnapshot, LogHistogram};
+use crate::util::json::{num, obj, Json};
 
 #[derive(Default)]
 pub struct Metrics {
@@ -45,13 +55,15 @@ pub struct Metrics {
     /// block-direct backend reports a structural 0 — this counter is
     /// exactly the traffic it eliminates (`table10_kernel` quantifies it).
     pub gather_bytes: AtomicU64,
-    latencies: Mutex<LatencySamples>,
-}
-
-#[derive(Default)]
-struct LatencySamples {
-    ttft: Vec<f64>,
-    total: Vec<f64>,
+    /// Time to first token, per completed request.
+    ttft: LogHistogram,
+    /// End-to-end latency, per completed request.
+    total: LogHistogram,
+    /// Per-request mean time-per-output-token, `(total - ttft) / (n - 1)`;
+    /// one sample per completed request with 2+ tokens.
+    tpot: LogHistogram,
+    /// Decode-step wall time, one sample per batched step.
+    step: LogHistogram,
 }
 
 #[derive(Debug, Clone)]
@@ -73,8 +85,16 @@ pub struct Snapshot {
     pub mean_batch_occupancy: f64,
     pub ttft_p50: f64,
     pub ttft_p95: f64,
+    pub ttft_p99: f64,
     pub total_p50: f64,
     pub total_p95: f64,
+    pub total_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    pub step_p50: f64,
+    pub step_p95: f64,
+    pub step_p99: f64,
     pub preemptions: u64,
     pub prefix_hits: u64,
     pub prefix_tokens_reused: u64,
@@ -86,14 +106,11 @@ pub struct Snapshot {
     pub swap_fallbacks: u64,
     pub reprefill_tokens: u64,
     pub gather_bytes: u64,
-}
-
-fn pct(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx]
+    /// Full bucket dumps backing the percentile fields above.
+    pub ttft_hist: HistSnapshot,
+    pub total_hist: HistSnapshot,
+    pub tpot_hist: HistSnapshot,
+    pub step_hist: HistSnapshot,
 }
 
 impl Metrics {
@@ -103,6 +120,7 @@ impl Metrics {
         self.last_decode_nanos.store(d.as_nanos() as u64, Ordering::Relaxed);
         self.busy_slots_sum.fetch_add(busy as u64, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.step.record(d);
     }
 
     pub fn record_prefill(&self, d: Duration, tokens: usize) {
@@ -144,11 +162,16 @@ impl Metrics {
         self.reprefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
-    pub fn record_completion(&self, ttft: Duration, total: Duration) {
+    /// One completed request: TTFT, end-to-end latency, and — when the
+    /// request produced 2+ tokens — its mean inter-token latency (TPOT).
+    pub fn record_completion(&self, ttft: Duration, total: Duration, tokens: usize) {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        l.ttft.push(ttft.as_secs_f64());
-        l.total.push(total.as_secs_f64());
+        self.ttft.record(ttft);
+        self.total.record(total);
+        if tokens > 1 {
+            let decode = total.saturating_sub(ttft);
+            self.tpot.record_nanos(decode.as_nanos() as u64 / (tokens as u64 - 1));
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -157,9 +180,10 @@ impl Metrics {
         let tokens = self.tokens_generated.load(Ordering::Relaxed);
         let prefill_secs = self.prefill_nanos.load(Ordering::Relaxed) as f64 / 1e9;
         let prefill_tokens = self.prefill_tokens.load(Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        l.ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        l.total.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ttft = self.ttft.snapshot();
+        let total = self.total.snapshot();
+        let tpot = self.tpot.snapshot();
+        let step = self.step.snapshot();
         Snapshot {
             requests_completed: self.requests_completed.load(Ordering::Relaxed),
             tokens_generated: tokens,
@@ -180,10 +204,18 @@ impl Metrics {
             } else {
                 0.0
             },
-            ttft_p50: pct(&l.ttft, 0.5),
-            ttft_p95: pct(&l.ttft, 0.95),
-            total_p50: pct(&l.total, 0.5),
-            total_p95: pct(&l.total, 0.95),
+            ttft_p50: ttft.percentile(0.50),
+            ttft_p95: ttft.percentile(0.95),
+            ttft_p99: ttft.percentile(0.99),
+            total_p50: total.percentile(0.50),
+            total_p95: total.percentile(0.95),
+            total_p99: total.percentile(0.99),
+            tpot_p50: tpot.percentile(0.50),
+            tpot_p95: tpot.percentile(0.95),
+            tpot_p99: tpot.percentile(0.99),
+            step_p50: step.percentile(0.50),
+            step_p95: step.percentile(0.95),
+            step_p99: step.percentile(0.99),
             preemptions: self.preemptions.load(Ordering::Relaxed),
             prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
             prefix_tokens_reused: self.prefix_tokens_reused.load(Ordering::Relaxed),
@@ -195,7 +227,59 @@ impl Metrics {
             swap_fallbacks: self.swap_fallbacks.load(Ordering::Relaxed),
             reprefill_tokens: self.reprefill_tokens.load(Ordering::Relaxed),
             gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
+            ttft_hist: ttft,
+            total_hist: total,
+            tpot_hist: tpot,
+            step_hist: step,
         }
+    }
+}
+
+impl Snapshot {
+    /// Full machine-readable snapshot: every scalar plus the four latency
+    /// histograms' bucket dumps. Benches emit this as a `BENCH_JSON` line;
+    /// serve writes it to `--metrics-out`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests_completed", num(self.requests_completed as f64)),
+            ("tokens_generated", num(self.tokens_generated as f64)),
+            ("decode_steps", num(self.decode_steps as f64)),
+            ("decode_secs", num(self.decode_secs)),
+            ("decode_ms_per_step", num(self.decode_ms_per_step)),
+            ("last_decode_ms", num(self.last_decode_ms)),
+            ("prefill_secs", num(self.prefill_secs)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
+            ("prefill_tokens_per_sec", num(self.prefill_tokens_per_sec)),
+            ("tokens_per_sec_decode", num(self.tokens_per_sec_decode)),
+            ("mean_batch_occupancy", num(self.mean_batch_occupancy)),
+            ("ttft_p50_s", num(self.ttft_p50)),
+            ("ttft_p95_s", num(self.ttft_p95)),
+            ("ttft_p99_s", num(self.ttft_p99)),
+            ("total_p50_s", num(self.total_p50)),
+            ("total_p95_s", num(self.total_p95)),
+            ("total_p99_s", num(self.total_p99)),
+            ("tpot_p50_s", num(self.tpot_p50)),
+            ("tpot_p95_s", num(self.tpot_p95)),
+            ("tpot_p99_s", num(self.tpot_p99)),
+            ("step_p50_s", num(self.step_p50)),
+            ("step_p95_s", num(self.step_p95)),
+            ("step_p99_s", num(self.step_p99)),
+            ("preemptions", num(self.preemptions as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefix_tokens_reused", num(self.prefix_tokens_reused as f64)),
+            ("swap_outs", num(self.swap_outs as f64)),
+            ("swap_ins", num(self.swap_ins as f64)),
+            ("swap_bytes_out", num(self.swap_bytes_out as f64)),
+            ("swap_bytes_in", num(self.swap_bytes_in as f64)),
+            ("swap_stalls", num(self.swap_stalls as f64)),
+            ("swap_fallbacks", num(self.swap_fallbacks as f64)),
+            ("reprefill_tokens", num(self.reprefill_tokens as f64)),
+            ("gather_bytes", num(self.gather_bytes as f64)),
+            ("ttft_hist", self.ttft_hist.to_json()),
+            ("total_hist", self.total_hist.to_json()),
+            ("tpot_hist", self.tpot_hist.to_json()),
+            ("step_hist", self.step_hist.to_json()),
+        ])
     }
 }
 
@@ -203,7 +287,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95={:.1}/{:.1}ms total p50/p95={:.1}/{:.1}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
+            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95/p99={:.1}/{:.1}/{:.1}ms total p50/p95/p99={:.1}/{:.1}/{:.1}ms tpot p50/p95/p99={:.2}/{:.2}/{:.2}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -213,8 +297,13 @@ impl std::fmt::Display for Snapshot {
             self.mean_batch_occupancy,
             self.ttft_p50 * 1e3,
             self.ttft_p95 * 1e3,
+            self.ttft_p99 * 1e3,
             self.total_p50 * 1e3,
             self.total_p95 * 1e3,
+            self.total_p99 * 1e3,
+            self.tpot_p50 * 1e3,
+            self.tpot_p95 * 1e3,
+            self.tpot_p99 * 1e3,
             self.preemptions,
             self.prefix_tokens_reused,
             self.prefix_hits,
@@ -232,20 +321,55 @@ impl std::fmt::Display for Snapshot {
 mod tests {
     use super::*;
 
+    /// One histogram bucket's ratio — the tolerance a bucketed percentile
+    /// may deviate from an exact sample by.
+    fn tol() -> f64 {
+        10f64.powf(9.0 / 64.0)
+    }
+
+    fn close(bucketed: f64, exact: f64) -> bool {
+        bucketed > 0.0 && bucketed / exact < tol() && exact / bucketed < tol()
+    }
+
     #[test]
     fn snapshot_math() {
         let m = Metrics::default();
         m.record_decode(Duration::from_millis(10), 2, 2);
         m.record_decode(Duration::from_millis(10), 1, 1);
-        m.record_completion(Duration::from_millis(5), Duration::from_millis(50));
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(50), 1);
         let s = m.snapshot();
         assert_eq!(s.tokens_generated, 3);
         assert_eq!(s.decode_steps, 2);
         assert!((s.mean_batch_occupancy - 1.5).abs() < 1e-9);
         assert!((s.tokens_per_sec_decode - 150.0).abs() < 1.0);
-        assert!((s.ttft_p50 - 0.005).abs() < 1e-9);
+        assert!(close(s.ttft_p50, 0.005), "ttft p50 {} vs 5ms", s.ttft_p50);
+        assert!(close(s.total_p99, 0.050), "total p99 {} vs 50ms", s.total_p99);
+        assert!(close(s.step_p50, 0.010), "step p50 {} vs 10ms", s.step_p50);
         assert!((s.decode_ms_per_step - 10.0).abs() < 1e-6);
         assert!((s.last_decode_ms - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snapshot_does_not_mutate() {
+        let m = Metrics::default();
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(50), 4);
+        let a = m.snapshot();
+        let b = m.snapshot();
+        assert_eq!(a.ttft_hist, b.ttft_hist, "snapshots of unchanged metrics are identical");
+        assert_eq!(a.ttft_p50, b.ttft_p50);
+    }
+
+    #[test]
+    fn tpot_is_decode_time_over_tokens_minus_one() {
+        let m = Metrics::default();
+        // 10ms TTFT + 100ms of decode producing 10 more tokens: TPOT = 10ms
+        m.record_completion(Duration::from_millis(10), Duration::from_millis(110), 11);
+        let s = m.snapshot();
+        assert!(close(s.tpot_p50, 0.010), "tpot p50 {} vs 10ms", s.tpot_p50);
+        assert_eq!(s.tpot_hist.total, 1);
+        // a 1-token request has no inter-token gap and must not sample TPOT
+        m.record_completion(Duration::from_millis(10), Duration::from_millis(10), 1);
+        assert_eq!(m.snapshot().tpot_hist.total, 1);
     }
 
     #[test]
@@ -275,5 +399,19 @@ mod tests {
         assert_eq!(s.prefill_tokens_per_sec, 0.0);
         assert_eq!(s.decode_ms_per_step, 0.0);
         assert_eq!(s.ttft_p95, 0.0);
+        assert_eq!(s.tpot_p99, 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_parses() {
+        let m = Metrics::default();
+        m.record_decode(Duration::from_millis(10), 1, 1);
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(50), 5);
+        let j = m.snapshot().to_json();
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("requests_completed").unwrap().as_usize().unwrap(), 1);
+        assert!(re.get("ttft_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(re.get("tpot_p50_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(re.get("step_hist").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
     }
 }

@@ -10,7 +10,7 @@ pub mod scheduler;
 pub use batcher::{Batcher, BatcherOptions};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{AccuracyClass, Request, Response, Submission};
-pub use router::{Router, WorkerSpec};
+pub use router::{EngineReport, Router, WorkerSpec};
 pub use scheduler::{
     choose_preempt_action, victim_score, PreemptAction, Scheduler, SchedulerOptions,
 };

@@ -6,22 +6,24 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::LayerSpec;
+use crate::config::{LayerSpec, ModelConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 #[cfg(feature = "xla")]
 use crate::engine::Engine;
 use crate::engine::{BackendKind, EngineCore, NativeEngine};
 use crate::kvcache::PagedOptions;
+use crate::obs::{ProfileSnapshot, TraceSink, Tracer};
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
+use super::metrics::Snapshot;
 use super::request::{AccuracyClass, Request, Submission};
 
 /// Spec for one engine worker.
@@ -45,18 +47,54 @@ pub struct WorkerSpec {
     /// pool; 1 = the scalar engine, bit-identical to any other value). The
     /// XLA backend ignores it — PJRT manages its own execution.
     pub threads: usize,
+    /// Shared lifecycle tracer (`--trace-out`). Each worker's scheduler
+    /// emits through a `TraceSink` carrying the worker's index as the Chrome
+    /// trace `pid`. `None` = no tracing, no overhead.
+    pub trace: Option<Arc<Tracer>>,
+    /// Enable the engine's per-layer/per-phase profiler (`--profile-serve`).
+    pub profile: bool,
+    /// `Some(cfg)` = build the engine on synthetic weights for `cfg`
+    /// instead of loading a model from the artifact dir (native backend
+    /// only — smoke tests and CI runs that have no artifacts).
+    pub synthetic: Option<ModelConfig>,
+}
+
+impl Default for WorkerSpec {
+    fn default() -> WorkerSpec {
+        WorkerSpec {
+            name: String::new(),
+            model: String::new(),
+            specs: Vec::new(),
+            class: AccuracyClass::Balanced,
+            batch: 1,
+            s_max: 64,
+            prefill_chunk: 16,
+            paged: None,
+            backend: BackendKind::default(),
+            threads: 1,
+            trace: None,
+            profile: false,
+            synthetic: None,
+        }
+    }
 }
 
 /// Construct the worker's engine per its backend kind. Runs on the worker
 /// thread (PJRT objects never cross threads; the native engine does not
 /// care).
 fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn EngineCore>> {
-    match ws.backend {
+    let mut engine: Box<dyn EngineCore> = match ws.backend {
         BackendKind::Native => {
-            let manifest = crate::config::Manifest::load(dir)?;
-            let weights = crate::model::Weights::load(&manifest, &ws.model)?;
-            Ok(Box::new(NativeEngine::new(
-                &manifest.config,
+            let (cfg, weights) = match &ws.synthetic {
+                Some(cfg) => (cfg.clone(), crate::model::Weights::synthetic(cfg, 7)),
+                None => {
+                    let manifest = crate::config::Manifest::load(dir)?;
+                    let weights = crate::model::Weights::load(&manifest, &ws.model)?;
+                    (manifest.config, weights)
+                }
+            };
+            Box::new(NativeEngine::new(
+                &cfg,
                 weights,
                 ws.specs.clone(),
                 ws.batch,
@@ -64,10 +102,16 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
                 ws.prefill_chunk,
                 ws.threads,
                 ws.paged.clone(),
-            )?))
+            )?)
         }
         #[cfg(feature = "xla")]
         BackendKind::Xla => {
+            anyhow::ensure!(
+                ws.synthetic.is_none(),
+                "worker {}: synthetic weights need the native backend (the \
+                 XLA backend serves only AOT artifacts)",
+                ws.name
+            );
             let rt = Arc::new(Runtime::load(dir)?);
             let eng = match ws.paged.clone() {
                 None => Engine::new(
@@ -88,7 +132,7 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
                     opts,
                 )?,
             };
-            Ok(Box::new(eng))
+            Box::new(eng)
         }
         #[cfg(not(feature = "xla"))]
         BackendKind::Xla => bail!(
@@ -96,7 +140,11 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
              `xla` feature); use the native backend",
             ws.name
         ),
+    };
+    if ws.profile {
+        engine.set_profiling(true);
     }
+    Ok(engine)
 }
 
 pub struct WorkerHandle {
@@ -104,7 +152,20 @@ pub struct WorkerHandle {
     pub tx: Sender<Request>,
     pub inflight: Arc<AtomicUsize>,
     pub metrics: Arc<Metrics>,
+    /// The engine's final per-layer profile, captured by the worker thread
+    /// right before it exits (`None` until shutdown, or when profiling was
+    /// off).
+    pub profile: Arc<Mutex<Option<ProfileSnapshot>>>,
     pub join: JoinHandle<Result<()>>,
+}
+
+/// Everything one worker reports at shutdown: its serving metrics snapshot
+/// plus (when `--profile-serve` was on) the engine's per-layer profile.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub name: String,
+    pub snapshot: Snapshot,
+    pub profile: Option<ProfileSnapshot>,
 }
 
 pub struct Router {
@@ -119,15 +180,17 @@ impl Router {
     pub fn start(artifact_dir: std::path::PathBuf, specs: Vec<WorkerSpec>) -> Result<Router> {
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::new();
-        for wspec in specs {
+        for (wi, wspec) in specs.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Request>();
             let inflight = Arc::new(AtomicUsize::new(0));
             let metrics = Arc::new(Metrics::default());
+            let profile: Arc<Mutex<Option<ProfileSnapshot>>> = Arc::new(Mutex::new(None));
             let dir = artifact_dir.clone();
             let ws = wspec.clone();
             let sd = shutdown.clone();
             let inf = inflight.clone();
             let met = metrics.clone();
+            let prof = profile.clone();
             // engine readiness signal so start() fails fast on bad configs
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let join = std::thread::Builder::new()
@@ -149,17 +212,25 @@ impl Router {
                             .as_ref()
                             .map(|p| p.swap_policy)
                             .unwrap_or_default(),
+                        trace: ws
+                            .trace
+                            .as_ref()
+                            .map(|t| TraceSink { tracer: t.clone(), worker: wi as u32 }),
                         ..SchedulerOptions::default()
                     };
                     let mut sched = Scheduler::new(engine, &ws.name, opts, met);
-                    sched.run(rx, sd, inf)
+                    let out = sched.run(rx, sd, inf);
+                    // capture the engine's profile before it is dropped so
+                    // shutdown() can report it
+                    *prof.lock().unwrap_or_else(|e| e.into_inner()) = sched.engine.profile();
+                    out
                 })
                 .context("spawning engine worker")?;
             ready_rx
                 .recv()
                 .context("worker died before ready")?
                 .with_context(|| format!("starting worker {}", wspec.name))?;
-            workers.push(WorkerHandle { spec: wspec, tx, inflight, metrics, join });
+            workers.push(WorkerHandle { spec: wspec, tx, inflight, metrics, profile, join });
         }
         Ok(Router { workers, shutdown, next_id: AtomicU64::new(1) })
     }
@@ -202,15 +273,18 @@ impl Router {
         Ok(Submission { id, rx })
     }
 
-    /// Graceful shutdown: signal, then join all workers.
-    pub fn shutdown(self) -> Result<Vec<(String, super::metrics::Snapshot)>> {
+    /// Graceful shutdown: signal, then join all workers. Each worker's final
+    /// metrics snapshot (and profile, when enabled) comes back in a
+    /// `EngineReport`.
+    pub fn shutdown(self) -> Result<Vec<EngineReport>> {
         self.shutdown.store(true, Ordering::Relaxed);
         let mut out = Vec::new();
         for w in self.workers {
             drop(w.tx);
-            let snap = w.metrics.snapshot();
             w.join.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
-            out.push((w.spec.name, snap));
+            let snapshot = w.metrics.snapshot();
+            let profile = w.profile.lock().unwrap_or_else(|e| e.into_inner()).take();
+            out.push(EngineReport { name: w.spec.name, snapshot, profile });
         }
         Ok(out)
     }

@@ -35,6 +35,7 @@ use anyhow::Result;
 
 use crate::engine::EngineCore;
 use crate::kvcache::{CacheBackend, OutOfPages, SwapHandle, SwapPolicy};
+use crate::obs::{EventKind, TraceSink};
 
 use super::batcher::{Batcher, BatcherOptions};
 use super::metrics::Metrics;
@@ -170,6 +171,8 @@ pub struct Scheduler {
     slots: Vec<Option<ActiveSlot>>,
     preempted: ResumeQueue<Preempted>,
     swap_policy: SwapPolicy,
+    /// Lifecycle trace sink; `None` keeps the serving loop emission-free.
+    trace: Option<TraceSink>,
     pub name: String,
 }
 
@@ -179,6 +182,8 @@ pub struct SchedulerOptions {
     /// Preemption eviction policy (recompute vs host swap); only effective
     /// when the engine's cache backend has a swap tier.
     pub swap_policy: SwapPolicy,
+    /// Lifecycle trace sink (worker-tagged handle on the shared ring).
+    pub trace: Option<TraceSink>,
 }
 
 impl Default for SchedulerOptions {
@@ -187,6 +192,7 @@ impl Default for SchedulerOptions {
             batcher: BatcherOptions::default(),
             idle_poll: Duration::from_millis(5),
             swap_policy: SwapPolicy::default(),
+            trace: None,
         }
     }
 }
@@ -206,7 +212,20 @@ impl Scheduler {
             slots: (0..batch).map(|_| None).collect(),
             preempted: ResumeQueue::default(),
             swap_policy: opts.swap_policy,
+            trace: opts.trace,
             name: name.to_string(),
+        }
+    }
+
+    fn trace_instant(&self, kind: EventKind, req: u64, slot: usize, arg: u64) {
+        if let Some(t) = &self.trace {
+            t.instant(kind, req, slot as u32, arg);
+        }
+    }
+
+    fn trace_span(&self, kind: EventKind, req: u64, slot: usize, start: Instant, arg: u64) {
+        if let Some(t) = &self.trace {
+            t.span(kind, req, slot as u32, start, arg);
         }
     }
 
@@ -242,7 +261,8 @@ impl Scheduler {
         let mut toks = a.generated;
         toks.truncate(a.req.max_new_tokens);
         let total = a.started.elapsed();
-        self.metrics.record_completion(a.ttft, total);
+        self.metrics.record_completion(a.ttft, total, toks.len());
+        self.trace_instant(EventKind::Complete, a.req.id, slot, toks.len() as u64);
         let _ = a.req.respond.send(Response {
             id: a.req.id,
             tokens: toks,
@@ -270,13 +290,14 @@ impl Scheduler {
     /// backend has them. Returns the first generated token and the number of
     /// prefix tokens served from cache. Prefix metrics are recorded only on
     /// success so an `OutOfPages` retry does not double-count.
-    fn prefill_with_reuse(&mut self, slot: usize, ctx: &[i32]) -> Result<(i32, usize)> {
+    fn prefill_with_reuse(&mut self, slot: usize, req_id: u64, ctx: &[i32]) -> Result<(i32, usize)> {
         self.engine.cache_mut().reset_slot(slot);
         let reused = self.engine.cache_mut().prefill_reuse(slot, ctx);
         let t0 = Instant::now();
         let first = self.engine.prefill(slot, &ctx[reused..])?;
         // tokens actually computed (reused prefix excluded) -> prefill tok/s
         self.metrics.record_prefill(t0.elapsed(), ctx.len() - reused);
+        self.trace_span(EventKind::PrefillChunk, req_id, slot, t0, (ctx.len() - reused) as u64);
         self.metrics.record_prefix(reused);
         self.engine.cache_mut().register_prefix(slot, ctx);
         Ok((first, reused))
@@ -309,6 +330,15 @@ impl Scheduler {
                         match self.engine.cache_mut().swap_in(slot, &sh) {
                             Ok(()) => {
                                 self.metrics.record_swap_in(sh.host_bytes);
+                                self.trace_instant(
+                                    EventKind::SwapIn,
+                                    pe.req.id,
+                                    slot,
+                                    sh.host_bytes as u64,
+                                );
+                                // swapped state restores bit-exact: no
+                                // re-prefill, so the resume's arg is 0
+                                self.trace_instant(EventKind::Resume, pe.req.id, slot, 0);
                                 self.engine.cache_mut().release_swap(sh);
                                 let next = *pe.generated.last().unwrap();
                                 let a = ActiveSlot {
@@ -362,9 +392,15 @@ impl Scheduler {
                     self.preempted.requeue(pe);
                     break;
                 }
-                match self.prefill_with_reuse(slot, &ctx) {
+                match self.prefill_with_reuse(slot, pe.req.id, &ctx) {
                     Ok((_recomputed_first, reused)) => {
                         self.metrics.record_reprefill(ctx.len() - reused);
+                        self.trace_instant(
+                            EventKind::Resume,
+                            pe.req.id,
+                            slot,
+                            (ctx.len() - reused) as u64,
+                        );
                         let next = *pe.generated.last().unwrap();
                         let a = ActiveSlot {
                             req: pe.req,
@@ -411,7 +447,8 @@ impl Scheduler {
             let req = self.batcher.pop().unwrap();
             let started = Instant::now();
             let prompt = self.clamp_prompt(&req.prompt, req.max_new_tokens);
-            match self.prefill_with_reuse(slot, &prompt) {
+            self.trace_instant(EventKind::Admit, req.id, slot, prompt.len() as u64);
+            match self.prefill_with_reuse(slot, req.id, &prompt) {
                 Ok((first, _reused)) => {
                     let ttft = started.elapsed();
                     let a = ActiveSlot {
@@ -490,6 +527,7 @@ impl Scheduler {
                     (victim_score(pages, remaining), a.started)
                 })
                 .unwrap();
+            let pages_held = self.engine.cache().slot_pages(victim);
             let a = self.slots[victim].take().unwrap();
             // what a recompute resume would have to re-prefill
             let cap = self.engine.s_max().saturating_sub(a.req.max_new_tokens + 1);
@@ -514,6 +552,7 @@ impl Scheduler {
                 match self.engine.cache_mut().swap_out(victim) {
                     Ok(h) => {
                         self.metrics.record_swap_out(h.host_bytes);
+                        self.trace_instant(EventKind::SwapOut, a.req.id, victim, h.host_bytes as u64);
                         Some(h)
                     }
                     Err(_) => {
@@ -529,6 +568,12 @@ impl Scheduler {
                 self.engine.cache_mut().reset_slot(victim);
             }
             self.metrics.record_preemption();
+            self.trace_instant(
+                EventKind::Preempt { swap: swap.is_some() },
+                a.req.id,
+                victim,
+                pages_held as u64,
+            );
             self.preempted.enqueue(Preempted {
                 req: a.req,
                 generated: a.generated,
@@ -563,6 +608,17 @@ impl Scheduler {
         self.metrics
             .gather_bytes
             .store(self.engine.gather_bytes(), Ordering::Relaxed);
+        if self.trace.is_some() {
+            // one span per active slot so each slot's track shows its share
+            // of the batched step
+            for i in 0..batch {
+                if active[i] {
+                    if let Some(a) = &self.slots[i] {
+                        self.trace_span(EventKind::DecodeStep, a.req.id, i, t0, 1);
+                    }
+                }
+            }
+        }
 
         for i in 0..batch {
             let done = if let Some(a) = &mut self.slots[i] {

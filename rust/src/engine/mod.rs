@@ -85,6 +85,15 @@ pub trait EngineCore {
         0
     }
 
+    /// Toggle the per-layer/per-phase profiler (`--profile-serve`). The
+    /// default engine keeps it off — and pays nothing for it.
+    fn set_profiling(&mut self, _on: bool) {}
+
+    /// Accumulated per-layer profile; `None` unless profiling was enabled.
+    fn profile(&self) -> Option<crate::obs::ProfileSnapshot> {
+        None
+    }
+
     fn kv_bytes(&self) -> usize {
         self.cache().kv_bytes()
     }

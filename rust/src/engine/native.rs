@@ -36,6 +36,7 @@ use crate::config::{LayerSpec, Mode, ModelConfig};
 use crate::kernel::{self, ThreadPool};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
+use crate::obs::{Phase, ProfileSnapshot, Profiler};
 use crate::tensor::Tensor;
 
 /// Engine-resident scratch: sized once at construction so the decode loop
@@ -112,6 +113,7 @@ fn forward_token(
     weights: &Weights,
     cache: &mut dyn CacheBackend,
     pool: &ThreadPool,
+    prof: &Profiler,
     sc: &mut Scratch,
     slot: usize,
     token: i32,
@@ -142,6 +144,7 @@ fn forward_token(
             lw[6].as_f32()?,
             lw[7].as_f32()?,
         );
+        let t_qkv = prof.start();
         kernel::rms_norm(&sc.x, ln1, eps, &mut sc.h);
         sc.q.fill(0.0);
         sc.k.fill(0.0);
@@ -151,8 +154,10 @@ fn forward_token(
         kernel::matvec_acc_mt(pool, &sc.h, wv, d, hkv * dh, &mut sc.v);
         kernel::apply_rope_heads(&mut sc.q, hq, dh, pos, theta);
         kernel::apply_rope_heads(&mut sc.k, hkv, dh, pos, theta);
+        prof.stop(l, Phase::Qkv, t_qkv);
 
         // commit the new token to the cache, quantized per the layer spec
+        let t_quant = prof.start();
         match spec.mode {
             Mode::Fp => {
                 let kt = Tensor::f32(&[1, hkv, 1, dh], sc.k.clone());
@@ -175,9 +180,11 @@ fn forward_token(
                 }
             }
         }
+        prof.stop(l, Phase::QuantCommit, t_quant);
 
         // dequant-on-read attention over committed pages + residual —
         // no dense staging buffer on this path
+        let t_att = prof.start();
         {
             let view = cache.kv_view(l, slot)?;
             kernel::attend_one_mt(pool, &sc.q, hq, &view, &mut sc.attn)?;
@@ -188,7 +195,9 @@ fn forward_token(
         for i in 0..d {
             sc.x[i] += sc.proj[i];
         }
+        prof.stop(l, Phase::Attend, t_att);
 
+        let t_mlp = prof.start();
         kernel::rms_norm(&sc.x, ln2, eps, &mut sc.h);
         sc.mlp.fill(0.0);
         kernel::matvec_acc_mt(pool, &sc.h, w1, d, ff, &mut sc.mlp);
@@ -198,6 +207,7 @@ fn forward_token(
         for i in 0..d {
             sc.x[i] += sc.proj[i];
         }
+        prof.stop(l, Phase::Mlp, t_mlp);
     }
     Ok(())
 }
@@ -220,6 +230,7 @@ fn prefill_block(
     weights: &Weights,
     cache: &mut dyn CacheBackend,
     pool: &ThreadPool,
+    prof: &Profiler,
     sc: &mut Scratch,
     slot: usize,
     tokens: &[i32],
@@ -257,6 +268,7 @@ fn prefill_block(
             lw[6].as_f32()?,
             lw[7].as_f32()?,
         );
+        let t_qkv = prof.start();
         kernel::rms_norm_rows(pool, &sc.xs, ln1, eps, g, d, &mut sc.hs);
         kernel::matmul_mt(pool, &sc.hs, wq, g, d, hq * dh, &mut sc.qs);
         kernel::matmul_mt(pool, &sc.hs, wk, g, d, hkv * dh, &mut sc.ks);
@@ -286,26 +298,38 @@ fn prefill_block(
                     .copy_from_slice(&sc.vs[(t * hkv + hh) * dh..(t * hkv + hh + 1) * dh]);
             }
         }
+        prof.stop(l, Phase::Qkv, t_qkv);
         match spec.mode {
             Mode::Fp => {
+                let t_quant = prof.start();
                 let kt = Tensor::f32(&[1, hkv, g, dh], sc.kt.clone());
                 let vt = Tensor::f32(&[1, hkv, g, dh], sc.vt.clone());
                 cache.append_fp(l, slot, &kt, &vt, &[g])?;
+                prof.stop(l, Phase::QuantCommit, t_quant);
+                let t_att = prof.start();
                 let view = cache.kv_view(l, slot)?;
                 kernel::attend_block(pool, &sc.qs, g, hq, &view, pos, &mut sc.attns)?;
+                prof.stop(l, Phase::Attend, t_att);
             }
             Mode::Token => {
                 // per-token quantization is row-independent: blockwise
                 // commit writes the exact bytes g single-token appends would
+                let t_quant = prof.start();
                 let outs = kernel::token_block_outputs(&sc.kt, &sc.vt, hkv, g, dh, spec.pair)?;
                 cache.append_token_outputs(l, slot, &outs, &[g])?;
+                prof.stop(l, Phase::QuantCommit, t_quant);
+                let t_att = prof.start();
                 let view = cache.kv_view(l, slot)?;
                 kernel::attend_block(pool, &sc.qs, g, hq, &view, pos, &mut sc.attns)?;
+                prof.stop(l, Phase::Attend, t_att);
             }
             Mode::Kivi => {
+                let t_quant = prof.start();
                 let kt = Tensor::f32(&[1, hkv, g, dh], sc.kt.clone());
                 let vt = Tensor::f32(&[1, hkv, g, dh], sc.vt.clone());
                 let commit = cache.append_kivi_residual(l, slot, &kt, &vt, &[g])?;
+                prof.stop(l, Phase::QuantCommit, t_quant);
+                let t_att = prof.start();
                 {
                     // rows 0..g-1 attend pre-commit: old pages plus the
                     // in-block fp causal tail — the views the scalar path's
@@ -321,13 +345,17 @@ fn prefill_block(
                         &mut sc.attns[..(g - 1) * stride_q],
                     )?;
                 }
+                prof.stop(l, Phase::Attend, t_att);
                 // the group-filling token commits before it attends — the
                 // same boundary the scalar path commits at
                 debug_assert!(commit[0], "a group-aligned block must fill the group");
+                let t_quant = prof.start();
                 let (kchunk, vchunk) = cache.residual_chunk(l, slot)?;
                 let (k_outs, v_outs) =
                     kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, cfg.group, dh, spec.pair)?;
                 cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
+                prof.stop(l, Phase::QuantCommit, t_quant);
+                let t_att = prof.start();
                 let view = cache.kv_view(l, slot)?;
                 kernel::attend_one_mt(
                     pool,
@@ -336,12 +364,16 @@ fn prefill_block(
                     &view,
                     &mut sc.attns[(g - 1) * stride_q..],
                 )?;
+                prof.stop(l, Phase::Attend, t_att);
             }
         }
+        let t_att = prof.start();
         kernel::matmul_mt(pool, &sc.attns, wo, g, hq * dh, d, &mut sc.projs);
         for i in 0..g * d {
             sc.xs[i] += sc.projs[i];
         }
+        prof.stop(l, Phase::Attend, t_att);
+        let t_mlp = prof.start();
         kernel::rms_norm_rows(pool, &sc.xs, ln2, eps, g, d, &mut sc.hs);
         kernel::matmul_mt(pool, &sc.hs, w1, g, d, ff, &mut sc.mlps);
         kernel::gelu_tanh_inplace(&mut sc.mlps);
@@ -349,6 +381,7 @@ fn prefill_block(
         for i in 0..g * d {
             sc.xs[i] += sc.projs[i];
         }
+        prof.stop(l, Phase::Mlp, t_mlp);
     }
     // expose the block's final hidden row for the lm head
     sc.x.copy_from_slice(&sc.xs[(g - 1) * d..g * d]);
@@ -392,6 +425,9 @@ pub struct NativeEngine {
     pub prefill_chunk: usize,
     pool: ThreadPool,
     scratch: Scratch,
+    /// Per-layer/per-phase timers; disabled by default (zero clock reads on
+    /// the hot path) and swapped in whole via `set_profiling`.
+    profiler: Profiler,
     /// Logits of the last step per slot (for perplexity / eval paths);
     /// allocated once, refilled in place every step.
     pub last_logits: Vec<Vec<f32>>,
@@ -432,6 +468,7 @@ impl NativeEngine {
             prefill_chunk,
             pool: ThreadPool::new(threads),
             scratch: Scratch::new(cfg),
+            profiler: Profiler::disabled(),
             last_logits: vec![vec![0f32; cfg.vocab]; batch],
         })
     }
@@ -457,14 +494,31 @@ impl NativeEngine {
                 &self.weights,
                 self.cache.as_mut(),
                 &self.pool,
+                &self.profiler,
                 &mut self.scratch,
                 b,
                 tokens[b],
             )?;
-            let Scratch { x, head_h, .. } = &mut self.scratch;
-            out[b] =
-                lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[b])?;
+            let t_head = self.profiler.start();
+            {
+                let Scratch { x, head_h, .. } = &mut self.scratch;
+                out[b] = lm_head(
+                    &self.cfg,
+                    &self.weights,
+                    &self.pool,
+                    x,
+                    head_h,
+                    &mut self.last_logits[b],
+                )?;
+            }
+            self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
             self.cache.advance_pos(b, 1);
+        }
+        if self.profiler.enabled() {
+            // per-layer live KV bytes after the step (peaks kept)
+            for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
+                self.profiler.note_kv_live(l, *bytes as u64);
+            }
         }
         Ok(out)
     }
@@ -495,6 +549,7 @@ impl NativeEngine {
                     &self.weights,
                     self.cache.as_mut(),
                     &self.pool,
+                    &self.profiler,
                     &mut self.scratch,
                     slot,
                     &prompt[i..i + g],
@@ -508,6 +563,7 @@ impl NativeEngine {
                     &self.weights,
                     self.cache.as_mut(),
                     &self.pool,
+                    &self.profiler,
                     &mut self.scratch,
                     slot,
                     prompt[i],
@@ -516,8 +572,13 @@ impl NativeEngine {
                 i += 1;
             }
         }
-        let Scratch { x, head_h, .. } = &mut self.scratch;
-        lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+        let t_head = self.profiler.start();
+        let out = {
+            let Scratch { x, head_h, .. } = &mut self.scratch;
+            lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+        };
+        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
+        out
     }
 
     /// Token-by-token prefill — the original scalar path, kept as the
@@ -536,14 +597,20 @@ impl NativeEngine {
                 &self.weights,
                 self.cache.as_mut(),
                 &self.pool,
+                &self.profiler,
                 &mut self.scratch,
                 slot,
                 t,
             )?;
             self.cache.advance_pos(slot, 1);
         }
-        let Scratch { x, head_h, .. } = &mut self.scratch;
-        lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+        let t_head = self.profiler.start();
+        let out = {
+            let Scratch { x, head_h, .. } = &mut self.scratch;
+            lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+        };
+        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
+        out
     }
 
     /// Greedy generation for one slot (prefill + decode).
@@ -613,5 +680,22 @@ impl super::EngineCore for NativeEngine {
 
     fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {
         NativeEngine::generate(self, slot, prompt, max_new)
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.profiler = if on {
+            Profiler::new(
+                self.specs
+                    .iter()
+                    .map(|s| format!("{} K{}V{}", s.mode.as_str(), s.pair.k_bits, s.pair.v_bits))
+                    .collect(),
+            )
+        } else {
+            Profiler::disabled()
+        };
+    }
+
+    fn profile(&self) -> Option<ProfileSnapshot> {
+        self.profiler.snapshot()
     }
 }

@@ -19,6 +19,7 @@ use xla::Literal;
 use crate::config::{LayerSpec, Manifest, Mode, ModelConfig};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
+use crate::obs::{Phase, ProfileSnapshot, Profiler};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -48,6 +49,11 @@ pub struct Engine {
     /// Cumulative bytes moved by gather-to-dense staging copies (paged arm
     /// only; the dense arm's buffers already are the artifact layout).
     pub gather_bytes: AtomicU64,
+    /// Per-layer phase timings; disabled (and cost-free) unless
+    /// `set_profiling(true)`. The XLA backend can't see inside a layer-step
+    /// executable, so layer time lands in `Phase::Exec`; host-side cache
+    /// routing and kivi quantize executables land in `Phase::QuantCommit`.
+    profiler: Profiler,
 }
 
 impl Engine {
@@ -166,6 +172,7 @@ impl Engine {
             lmhead_prefill,
             exec_count: AtomicU64::new(0),
             gather_bytes: AtomicU64::new(0),
+            profiler: Profiler::disabled(),
         })
     }
 
@@ -230,10 +237,13 @@ impl Engine {
         for c in &cache_lits {
             inputs.push(c);
         }
+        let t_exec = self.profiler.start();
         let mut outs = self.exec_lits(artifact, inputs)?;
+        self.profiler.stop(l, Phase::Exec, t_exec);
 
         // route the new-token outputs into the cache per mode (only those
         // tensors cross back to the host; x stays a Literal — §Perf L3-1)
+        let t_quant = self.profiler.start();
         let host: Vec<Tensor> =
             outs[1..].iter().map(Tensor::from_literal).collect::<Result<_>>()?;
         match spec.mode {
@@ -248,6 +258,7 @@ impl Engine {
                 }
             }
         }
+        self.profiler.stop(l, Phase::QuantCommit, t_quant);
         Ok(outs.remove(0))
     }
 
@@ -286,7 +297,9 @@ impl Engine {
         // lm head over [B, D] ([B,1,D] reshaped in place, no copy semantics)
         let x_lit = x.reshape(&[self.batch as i64, self.cfg.d_model as i64])?;
         let lm = self.lmhead_decode.clone();
+        let t_head = self.profiler.start();
         let outs = self.exec(&lm, vec![&x_lit, &self.ln_f_lit, &self.embed_lit])?;
+        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
         let logits = outs[0].as_f32()?;
         for b in 0..self.batch {
             self.last_logits[b] = logits[b * self.cfg.vocab..(b + 1) * self.cfg.vocab].to_vec();
@@ -294,6 +307,11 @@ impl Engine {
         for b in 0..self.batch {
             if active[b] {
                 self.cache.advance_pos(b, 1);
+            }
+        }
+        if self.profiler.enabled() {
+            for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
+                self.profiler.note_kv_live(l, *bytes as u64);
             }
         }
         Ok(outs[1].as_i32()?.to_vec())
@@ -334,7 +352,9 @@ impl Engine {
         let xb = Tensor::f32(&[1, self.cfg.d_model], last_hidden.unwrap());
         let x_lit = xb.to_literal()?;
         let lm = self.lmhead_prefill.clone();
+        let t_head = self.profiler.start();
         let outs = self.exec(&lm, vec![&x_lit, &self.ln_f_lit, &self.embed_lit])?;
+        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
         self.last_logits[slot] = outs[0].as_f32()?.to_vec();
         Ok(outs[1].as_i32()?[0])
     }
@@ -407,6 +427,23 @@ impl super::EngineCore for Engine {
 
     fn gather_bytes(&self) -> u64 {
         self.gather_bytes.load(Ordering::Relaxed)
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.profiler = if on {
+            Profiler::new(
+                self.specs
+                    .iter()
+                    .map(|s| format!("{} K{}V{}", s.mode.as_str(), s.pair.k_bits, s.pair.v_bits))
+                    .collect(),
+            )
+        } else {
+            Profiler::disabled()
+        };
+    }
+
+    fn profile(&self) -> Option<ProfileSnapshot> {
+        self.profiler.snapshot()
     }
 
     fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {

@@ -23,6 +23,14 @@
 //! (same zero-skip matvec, same split-half RoPE, same softmax order), so the
 //! native engine is comparable to the reference engine at tight tolerance —
 //! that parity is what `tests/native_backend.rs` pins down.
+//!
+//! Observability: the kernels themselves carry no instrumentation — the
+//! native engine brackets them from the outside with `crate::obs::Profiler`
+//! phases (`qkv` around the projections + RoPE, `quant_commit` around the
+//! quantize/commit kernels, `attend` around `attend_one_mt`/`attend_block`
+//! + the output projection, `mlp` around the FFN). That keeps the hot loops
+//! free of clock reads and preserves the bit-exactness guarantees above
+//! whether profiling is on or off.
 
 pub mod activation;
 pub mod gemm;

@@ -146,6 +146,14 @@ pub trait CacheBackend {
     fn synthetic_fill(&mut self, slot: usize, input_len: usize) -> Result<()>;
     fn mem_stats(&self) -> MemStats;
 
+    /// Live KV bytes per layer (the per-layer split of
+    /// `mem_stats().bytes_live`): what in-flight sequences actually hold in
+    /// each layer right now, so the profiler can show where the precision
+    /// map puts the memory. Empty = backend doesn't break live bytes down.
+    fn layer_kv_live(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
     // ---- paged admission / preemption / prefix hooks (dense no-ops) ----
 
     fn is_paged(&self) -> bool {

@@ -663,6 +663,29 @@ impl CacheBackend for KvCache {
         }
     }
 
+    fn layer_kv_live(&self) -> Vec<usize> {
+        // per-layer split of mem_stats().bytes_live: committed rows scale
+        // with cache_len over the full [batch, s_max] reservation, residual
+        // rows with res_len over the [batch, residual] window
+        self.layers
+            .iter()
+            .map(|lc| {
+                let res: usize = [&lc.k_res, &lc.v_res]
+                    .iter()
+                    .filter_map(|o| o.as_ref().map(|t| t.size_bytes()))
+                    .sum();
+                let main = lc.kv_bytes() - res;
+                let toks: usize = lc.cache_len.iter().map(|&c| c as usize).sum();
+                let mut live = main as f64 * toks as f64 / (self.batch * self.s_max) as f64;
+                if res > 0 {
+                    let rrows: usize = lc.res_len.iter().map(|&c| c as usize).sum();
+                    live += res as f64 * rrows as f64 / (self.batch * self.residual) as f64;
+                }
+                live as usize
+            })
+            .collect()
+    }
+
     // ---- host swap tier (dense reference arm) ----
     //
     // The dense arm never preempts (its capacity is pre-reserved), but it

@@ -1004,6 +1004,22 @@ impl CacheBackend for PagedKvCache {
         }
     }
 
+    fn layer_kv_live(&self) -> Vec<usize> {
+        // per-layer token-weighted live bytes (the token side of mem_stats:
+        // committed tokens at each layer's per-token page cost, plus fp32
+        // residual rows) — the per-precision-pair memory split the profiler
+        // reports
+        self.layers
+            .iter()
+            .map(|l| {
+                let per_tok = l.block_bytes / self.page;
+                let toks: usize = l.cache_len.iter().map(|&c| c as usize).sum();
+                let rrows: usize = l.res_len.iter().map(|&c| c as usize).sum();
+                toks * per_tok + rrows * self.h * self.dh * 4 * 2
+            })
+            .collect()
+    }
+
     fn is_paged(&self) -> bool {
         true
     }

@@ -15,6 +15,7 @@ pub mod engine;
 pub mod kernel;
 pub mod kvcache;
 pub mod model;
+pub mod obs;
 pub mod quant;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -1,0 +1,256 @@
+//! Bounded log-bucket latency histogram (HDR-style, fixed bucket count).
+//!
+//! 64 geometric buckets span 1µs to 1000s (nine decades, ratio
+//! `R = 10^(9/64) ≈ 1.38` per bucket), each an atomic counter: recording is
+//! two relaxed atomic adds, memory is constant regardless of sample count,
+//! and a snapshot copies the counters without sorting or mutating anything.
+//! A percentile is reported as the geometric midpoint of its bucket, so the
+//! worst-case relative error is `sqrt(R) - 1 ≈ 17.6%` — bounded by
+//! construction, and the tolerance the oracle tests check against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::{arr, num, obj, Json};
+
+/// Number of buckets; fixed so the struct is allocation-free.
+pub const BUCKETS: usize = 64;
+/// Lower bound of bucket 0 in nanoseconds (1µs). Samples below it land in
+/// bucket 0 (reported as ~1µs — serving-path latencies never sit there).
+const MIN_NANOS: f64 = 1e3;
+/// Decades covered: 1µs .. 1e3 * 10^9 ns = 1000s. Larger samples saturate
+/// into the last bucket.
+const DECADES: f64 = 9.0;
+
+/// log10 bucket width: each bucket covers a `10^(DECADES/BUCKETS)` ratio.
+fn bucket_width_log10() -> f64 {
+    DECADES / BUCKETS as f64
+}
+
+/// Bucket index for a sample (saturating at both ends).
+pub fn bucket_index(nanos: u64) -> usize {
+    let n = nanos as f64;
+    if n <= MIN_NANOS {
+        return 0;
+    }
+    let i = ((n / MIN_NANOS).log10() / bucket_width_log10()) as usize;
+    i.min(BUCKETS - 1)
+}
+
+/// `[lo, hi)` bounds of one bucket in nanoseconds.
+pub fn bucket_bounds(i: usize) -> (f64, f64) {
+    let w = bucket_width_log10();
+    (
+        MIN_NANOS * 10f64.powf(i as f64 * w),
+        MIN_NANOS * 10f64.powf((i + 1) as f64 * w),
+    )
+}
+
+/// Representative value of a bucket: the geometric midpoint of its bounds.
+fn bucket_value(i: usize) -> f64 {
+    let (lo, hi) = bucket_bounds(i);
+    (lo * hi).sqrt()
+}
+
+/// All-atomic histogram; `&self` recording from any thread.
+#[derive(Debug)]
+pub struct LogHistogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn record(&self, d: Duration) {
+        self.record_nanos(d.as_nanos() as u64);
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.record_nanos((secs.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        self.counts[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            total: self.total.load(Ordering::Relaxed),
+            sum_nanos: self.sum_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable copy of the counters; all reads (percentiles, mean, JSON) run
+/// off this, so the live histogram is never locked or mutated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub total: u64,
+    pub sum_nanos: u64,
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Percentile in seconds (0.0 for an empty histogram). `p` in [0, 1];
+    /// the returned value is the geometric midpoint of the bucket holding
+    /// the rank-`ceil(p * total)` sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(i) / 1e9;
+            }
+        }
+        bucket_value(BUCKETS - 1) / 1e9
+    }
+
+    /// Exact mean in seconds (the sum is tracked outside the buckets).
+    pub fn mean_secs(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_nanos as f64 / self.total as f64 / 1e9
+        }
+    }
+
+    /// Machine-readable dump: quantiles plus the non-empty buckets as
+    /// `[index, count]` pairs (the full shape stays diffable without 64
+    /// mostly-zero entries).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| arr(vec![num(i as f64), num(c as f64)]))
+            .collect();
+        obj(vec![
+            ("count", num(self.total as f64)),
+            ("mean_s", num(self.mean_secs())),
+            ("p50_s", num(self.percentile(0.50))),
+            ("p95_s", num(self.percentile(0.95))),
+            ("p99_s", num(self.percentile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One bucket's ratio: the tolerance a bucketed percentile is allowed
+    /// to deviate from a sorted-reference oracle by (midpoint reporting
+    /// guarantees sqrt of this; a rank landing one sample over a boundary
+    /// costs at most the full ratio).
+    fn bucket_ratio() -> f64 {
+        10f64.powf(DECADES / BUCKETS as f64)
+    }
+
+    #[test]
+    fn bucket_boundaries_saturate_and_stay_monotonic() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(999), 0);
+        assert_eq!(bucket_index(1_000), 0);
+        // a sample just past a bucket's upper bound lands in the next bucket
+        let (_, hi0) = bucket_bounds(0);
+        assert_eq!(bucket_index(hi0 as u64 + 1), 1);
+        // the top of the range saturates instead of indexing out of bounds
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_index(2_000_000_000_000), BUCKETS - 1); // 2000 s
+        let mut prev = 0usize;
+        for e in 0..12 {
+            let i = bucket_index(10u64.pow(e));
+            assert!(i >= prev, "bucket index must be monotone in the sample");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn bounds_tile_the_range() {
+        for i in 0..BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(i);
+            let (lo_next, _) = bucket_bounds(i + 1);
+            assert!((hi - lo_next).abs() / hi < 1e-12, "buckets must tile without gaps");
+        }
+        let (lo, _) = bucket_bounds(0);
+        assert_eq!(lo, MIN_NANOS);
+        let (_, hi) = bucket_bounds(BUCKETS - 1);
+        assert!((hi / 1e12 - 1.0).abs() < 1e-9, "range top is 1000 s");
+    }
+
+    #[test]
+    fn percentiles_match_sorted_oracle_within_bucket_tolerance() {
+        let h = LogHistogram::default();
+        let mut samples: Vec<f64> = Vec::new();
+        // deterministic multiplicative scramble over ~4 decades (µs..10ms)
+        let mut x = 1u64;
+        for _ in 0..2000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let nanos = 1_000 + x % 10_000_000;
+            h.record_nanos(nanos);
+            samples.push(nanos as f64 / 1e9);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = h.snapshot();
+        let tol = bucket_ratio();
+        for &p in &[0.5, 0.9, 0.95, 0.99] {
+            let oracle = samples[(((samples.len() as f64) * p).ceil() as usize - 1).min(samples.len() - 1)];
+            let got = s.percentile(p);
+            let ratio = got / oracle;
+            assert!(
+                ratio < tol && ratio > 1.0 / tol,
+                "p{p}: histogram {got:.6}s vs oracle {oracle:.6}s (ratio {ratio:.3}, tol {tol:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample() {
+        let h = LogHistogram::default();
+        assert_eq!(h.snapshot().percentile(0.99), 0.0);
+        assert_eq!(h.snapshot().mean_secs(), 0.0);
+        h.record(Duration::from_millis(5));
+        let s = h.snapshot();
+        let tol = bucket_ratio().sqrt() * 1.0001;
+        for &p in &[0.0, 0.5, 1.0] {
+            let v = s.percentile(p);
+            assert!(v / 0.005 < tol && 0.005 / v < tol, "single sample p{p} = {v}");
+        }
+        assert!((s.mean_secs() - 0.005).abs() < 1e-9, "mean is exact, not bucketed");
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let h = LogHistogram::default();
+        for ms in [1u64, 2, 4, 8, 1000] {
+            h.record(Duration::from_millis(ms));
+        }
+        let j = h.snapshot().to_json();
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("count").unwrap().as_usize().unwrap(), 5);
+        assert!(re.get("p99_s").unwrap().as_f64().unwrap() > 0.5);
+    }
+}

@@ -1,0 +1,28 @@
+//! Serving-path observability: the measurement substrate the scheduler,
+//! engines and CLI feed, and that the throughput/latency roadmap items are
+//! judged against.
+//!
+//! Three pieces, all lock-light and artifact-free:
+//!
+//! * [`hist::LogHistogram`] — bounded HDR-style latency histograms: 64
+//!   geometric buckets spanning 1µs..1000s with atomic counts, so recording
+//!   is a couple of relaxed atomic adds and a snapshot never sorts or
+//!   mutates anything (the previous metrics path pushed every sample into a
+//!   `Vec` forever and re-sorted it under a mutex per snapshot).
+//! * [`trace`] — request lifecycle tracing: a fixed-capacity ring of typed
+//!   events (admit, prefill chunk, decode step, preempt, swap out/in,
+//!   resume, complete) stamped with request id / worker / slot / monotonic
+//!   nanos, exportable as Chrome trace-event JSON (one track per slot,
+//!   loadable in Perfetto) or JSONL.
+//! * [`profile::Profiler`] — zero-cost-when-disabled per-layer phase timers
+//!   (qkv, quantize-commit, attend, mlp, lm head, whole-layer exec on the
+//!   XLA arm) plus per-layer live-KV-byte peaks broken down by precision
+//!   pair, fed by the engines and dumped as a per-layer table / JSON.
+
+pub mod hist;
+pub mod profile;
+pub mod trace;
+
+pub use hist::{HistSnapshot, LogHistogram};
+pub use profile::{LayerProfile, Phase, ProfileSnapshot, Profiler};
+pub use trace::{EventKind, TraceEvent, TraceSink, Tracer};

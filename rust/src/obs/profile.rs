@@ -1,0 +1,338 @@
+//! Zero-cost-when-disabled per-layer / per-kernel profiling.
+//!
+//! The engines hold a [`Profiler`] and bracket each phase of the forward
+//! pass with `start()` / `stop()`. Disabled (the default), `start()` returns
+//! `None` without reading a clock and `stop()` of a `None` is a branch on an
+//! immutable bool — nothing is timed, nothing is written, and the
+//! bit-exactness suites run unchanged. Enabled (`--profile-serve` or
+//! `KVTUNER_PROFILE=1`), each phase costs two `Instant` reads and two
+//! relaxed atomic adds into a flat `(layers + 1) × phases` table; the extra
+//! row holds the model-level lm_head projection, which no layer owns.
+//!
+//! Alongside timings, the engines feed per-layer *live KV bytes* (what the
+//! cache actually holds right now, not its capacity) so the per-layer table
+//! shows where the precision map puts the memory — the signal the runtime
+//! precision-adaptation roadmap item needs. Peaks are kept with `fetch_max`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::bench::{fmt_secs, Table};
+use crate::util::json::{num, obj, s, Json};
+
+/// Phases of one forward step. Native instruments the first five; the XLA
+/// arm cannot see inside a compiled layer so it reports the whole-layer
+/// [`Phase::Exec`] plus the commit/lm_head phases it runs host-side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// RMS norm + q/k/v projections + RoPE.
+    Qkv,
+    /// Quantize-and-commit of the new KV row/block into the cache.
+    QuantCommit,
+    /// Attention over the cache + output projection + residual.
+    Attend,
+    /// Second norm + FFN + residual.
+    Mlp,
+    /// Final norm + vocab projection (model-level row).
+    LmHead,
+    /// Whole-layer device execution (XLA arm only).
+    Exec,
+}
+
+pub const N_PHASES: usize = 6;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Qkv,
+        Phase::QuantCommit,
+        Phase::Attend,
+        Phase::Mlp,
+        Phase::LmHead,
+        Phase::Exec,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Qkv => "qkv",
+            Phase::QuantCommit => "quant_commit",
+            Phase::Attend => "attend",
+            Phase::Mlp => "mlp",
+            Phase::LmHead => "lm_head",
+            Phase::Exec => "exec",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Qkv => 0,
+            Phase::QuantCommit => 1,
+            Phase::Attend => 2,
+            Phase::Mlp => 3,
+            Phase::LmHead => 4,
+            Phase::Exec => 5,
+        }
+    }
+}
+
+/// Flat atomic accumulator table; `&self` recording from the engine's
+/// worker threads (output-partitioned threading never splits a phase across
+/// layers, so per-cell relaxed adds are exact).
+#[derive(Debug, Default)]
+pub struct Profiler {
+    enabled: bool,
+    /// One label per layer (precision-pair string), plus a final "lm_head"
+    /// row for the model-level projection.
+    labels: Vec<String>,
+    nanos: Vec<AtomicU64>,
+    counts: Vec<AtomicU64>,
+    kv_live_peak: Vec<AtomicU64>,
+}
+
+impl Profiler {
+    /// The default state: no rows, no clock reads, `snapshot()` is `None`.
+    pub fn disabled() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Enabled profiler with one row per layer label plus the lm_head row.
+    pub fn new(layer_labels: Vec<String>) -> Profiler {
+        let mut labels = layer_labels;
+        labels.push("lm_head".to_string());
+        let cells = labels.len() * N_PHASES;
+        Profiler {
+            enabled: true,
+            nanos: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+            counts: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+            kv_live_peak: (0..labels.len()).map(|_| AtomicU64::new(0)).collect(),
+            labels,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Row index of the model-level lm_head row (pass as `layer` with
+    /// [`Phase::LmHead`]).
+    pub fn lm_head_row(&self) -> usize {
+        self.labels.len().saturating_sub(1)
+    }
+
+    /// Begin timing a phase; `None` when disabled, so the hot path pays one
+    /// predictable branch and no clock read.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a phase opened by [`Profiler::start`]. A `None` token (the
+    /// disabled path) is a no-op.
+    #[inline]
+    pub fn stop(&self, layer: usize, phase: Phase, t0: Option<Instant>) {
+        let Some(t0) = t0 else { return };
+        let cell = layer * N_PHASES + phase.idx();
+        if cell < self.nanos.len() {
+            self.nanos[cell].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.counts[cell].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a layer's current live KV bytes; the snapshot keeps the peak.
+    #[inline]
+    pub fn note_kv_live(&self, layer: usize, bytes: u64) {
+        if self.enabled {
+            if let Some(c) = self.kv_live_peak.get(layer) {
+                c.fetch_max(bytes, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Option<ProfileSnapshot> {
+        if !self.enabled {
+            return None;
+        }
+        let layers = self
+            .labels
+            .iter()
+            .enumerate()
+            .map(|(row, label)| LayerProfile {
+                label: label.clone(),
+                nanos: std::array::from_fn(|p| {
+                    self.nanos[row * N_PHASES + p].load(Ordering::Relaxed)
+                }),
+                counts: std::array::from_fn(|p| {
+                    self.counts[row * N_PHASES + p].load(Ordering::Relaxed)
+                }),
+                kv_live_peak: self.kv_live_peak[row].load(Ordering::Relaxed),
+            })
+            .collect();
+        Some(ProfileSnapshot { layers })
+    }
+}
+
+/// One row of the per-layer profile: accumulated nanos and call counts per
+/// phase plus the peak live KV bytes observed for that layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerProfile {
+    pub label: String,
+    pub nanos: [u64; N_PHASES],
+    pub counts: [u64; N_PHASES],
+    pub kv_live_peak: u64,
+}
+
+impl LayerProfile {
+    pub fn nanos_of(&self, p: Phase) -> u64 {
+        self.nanos[p.idx()]
+    }
+
+    pub fn calls_of(&self, p: Phase) -> u64 {
+        self.counts[p.idx()]
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProfileSnapshot {
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ProfileSnapshot {
+    /// Total nanos across all rows and phases.
+    pub fn total_nanos(&self) -> u64 {
+        self.layers.iter().map(|l| l.nanos.iter().sum::<u64>()).sum()
+    }
+
+    /// Per-layer table: one row per layer (label = precision pair), one
+    /// column per phase, plus the peak live KV bytes.
+    pub fn table(&self, title: &str) -> Table {
+        let mut header = vec!["layer".to_string(), "spec".to_string()];
+        header.extend(Phase::ALL.iter().map(|p| p.as_str().to_string()));
+        header.push("kv live peak".to_string());
+        let mut t = Table::with_headers(title, header);
+        for (i, l) in self.layers.iter().enumerate() {
+            let mut cells = vec![
+                if i + 1 == self.layers.len() { "-".to_string() } else { i.to_string() },
+                l.label.clone(),
+            ];
+            cells.extend(Phase::ALL.iter().map(|p| {
+                let n = l.nanos_of(*p);
+                if n == 0 {
+                    "-".to_string()
+                } else {
+                    fmt_secs(n as f64 / 1e9)
+                }
+            }));
+            cells.push(if l.kv_live_peak == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.1}KiB", l.kv_live_peak as f64 / 1024.0)
+            });
+            t.row(cells);
+        }
+        t
+    }
+
+    /// Machine-readable dump: per layer, the non-empty phases as
+    /// `{nanos, calls}` plus the live-KV peak.
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let phases: Vec<(&str, Json)> = Phase::ALL
+                    .iter()
+                    .filter(|p| l.calls_of(**p) > 0)
+                    .map(|p| {
+                        (
+                            p.as_str(),
+                            obj(vec![
+                                ("nanos", num(l.nanos_of(*p) as f64)),
+                                ("calls", num(l.calls_of(*p) as f64)),
+                            ]),
+                        )
+                    })
+                    .collect();
+                obj(vec![
+                    ("label", s(l.label.as_str())),
+                    ("kv_live_peak_bytes", num(l.kv_live_peak as f64)),
+                    ("phases", obj(phases)),
+                ])
+            })
+            .collect();
+        obj(vec![("layers", Json::Arr(layers))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_inert() {
+        let p = Profiler::disabled();
+        assert!(!p.enabled());
+        assert!(p.start().is_none());
+        p.stop(0, Phase::Qkv, None);
+        p.note_kv_live(0, 1 << 20);
+        assert!(p.snapshot().is_none());
+    }
+
+    #[test]
+    fn accumulates_per_layer_and_phase() {
+        let p = Profiler::new(vec!["kivi K8V4".into(), "kivi K4V2".into()]);
+        let t0 = p.start();
+        assert!(t0.is_some());
+        p.stop(0, Phase::Qkv, t0);
+        p.stop(1, Phase::Attend, p.start());
+        p.stop(1, Phase::Attend, p.start());
+        p.stop(p.lm_head_row(), Phase::LmHead, p.start());
+        let snap = p.snapshot().unwrap();
+        assert_eq!(snap.layers.len(), 3, "two layers plus the lm_head row");
+        assert_eq!(snap.layers[0].calls_of(Phase::Qkv), 1);
+        assert_eq!(snap.layers[1].calls_of(Phase::Attend), 2);
+        assert_eq!(snap.layers[2].label, "lm_head");
+        assert_eq!(snap.layers[2].calls_of(Phase::LmHead), 1);
+        assert_eq!(snap.layers[0].calls_of(Phase::Mlp), 0);
+    }
+
+    #[test]
+    fn kv_live_keeps_the_peak() {
+        let p = Profiler::new(vec!["l0".into()]);
+        p.note_kv_live(0, 100);
+        p.note_kv_live(0, 300);
+        p.note_kv_live(0, 200);
+        assert_eq!(p.snapshot().unwrap().layers[0].kv_live_peak, 300);
+    }
+
+    #[test]
+    fn out_of_range_rows_are_ignored() {
+        let p = Profiler::new(vec!["l0".into()]);
+        p.stop(99, Phase::Qkv, p.start());
+        p.note_kv_live(99, 7);
+        let snap = p.snapshot().unwrap();
+        assert_eq!(snap.total_nanos(), 0);
+        assert!(snap.layers.iter().all(|l| l.kv_live_peak == 0));
+    }
+
+    #[test]
+    fn table_and_json_shapes() {
+        let p = Profiler::new(vec!["kivi K8V4".into()]);
+        p.stop(0, Phase::Qkv, p.start());
+        p.note_kv_live(0, 2048);
+        let snap = p.snapshot().unwrap();
+        let t = snap.table("profile");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.header.len(), 2 + N_PHASES + 1);
+        let j = Json::parse(&snap.to_json().to_string_pretty()).unwrap();
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert!(layers[0].get("phases").unwrap().get("qkv").is_ok());
+        assert_eq!(
+            layers[0].get("kv_live_peak_bytes").unwrap().as_usize().unwrap(),
+            2048
+        );
+    }
+}

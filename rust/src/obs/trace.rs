@@ -1,0 +1,326 @@
+//! Request lifecycle tracing: a fixed-capacity ring buffer of typed events
+//! stamped with request id / worker / slot / monotonic nanoseconds.
+//!
+//! The scheduler emits events at points where it already holds `Instant`s,
+//! so tracing adds one short mutex-protected ring write per event (the
+//! scheduler thread is effectively the only writer per worker; the lock is
+//! poison-tolerant so one panicking worker cannot cascade). The ring is
+//! bounded: under sustained load the oldest events are overwritten and
+//! `dropped()` reports how many.
+//!
+//! Export formats:
+//! * Chrome trace-event JSON (`.json`) — loadable in Perfetto /
+//!   `chrome://tracing`; one process per worker, one track (tid) per slot,
+//!   spans (`ph: "X"`) for prefill chunks and decode steps, instants
+//!   (`ph: "i"`) for admissions, preemptions, swaps, resumes, completions.
+//! * JSONL (`.jsonl`) — one compact event object per line for ad-hoc
+//!   scripting.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Typed lifecycle event kinds. `arg` in [`TraceEvent`] is kind-specific:
+/// tokens for admit/prefill/decode/complete, bytes for swap out/in, pages
+/// held for preempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Fresh request admitted into a slot (arg = prompt tokens).
+    Admit,
+    /// One prefill call for a slot (span; arg = tokens computed).
+    PrefillChunk,
+    /// One batched decode step, emitted per active slot (span; arg = 1).
+    DecodeStep,
+    /// Request evicted under page pressure (arg = pages held).
+    Preempt { swap: bool },
+    /// KV state moved to the host tier (arg = bytes).
+    SwapOut,
+    /// KV state restored from the host tier (arg = bytes).
+    SwapIn,
+    /// Preempted request re-entered a slot (arg = re-prefilled tokens; 0
+    /// for a swapped resume, which restores state without re-prefill).
+    Resume,
+    /// Request finished and responded (arg = tokens delivered).
+    Complete,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::DecodeStep => "decode_step",
+            EventKind::Preempt { swap: true } => "preempt_swap",
+            EventKind::Preempt { swap: false } => "preempt_recompute",
+            EventKind::SwapOut => "swap_out",
+            EventKind::SwapIn => "swap_in",
+            EventKind::Resume => "resume",
+            EventKind::Complete => "complete",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub req: u64,
+    pub worker: u32,
+    pub slot: u32,
+    /// Nanoseconds since the tracer's epoch.
+    pub t_nanos: u64,
+    /// Span duration (0 = instant event).
+    pub dur_nanos: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub arg: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<TraceEvent>,
+    /// Next write position once the buffer has reached capacity.
+    next: usize,
+    /// Lifetime event count (>= buf.len(); the excess was overwritten).
+    total: u64,
+}
+
+/// Shared event sink: one per serve run, shared by every worker.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            cap: capacity.max(1),
+            ring: Mutex::new(Ring::default()),
+        }
+    }
+
+    /// Default capacity: 64Ki events (~3.5 MiB resident).
+    pub fn with_default_capacity() -> Tracer {
+        Tracer::new(1 << 16)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Nanoseconds since this tracer's epoch for an `Instant` the caller
+    /// already holds (0 for instants that predate the epoch).
+    pub fn nanos_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).map(|d| d.as_nanos() as u64).unwrap_or(0)
+    }
+
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub fn emit(&self, ev: TraceEvent) {
+        let mut r = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if r.buf.len() < self.cap {
+            r.buf.push(ev);
+        } else {
+            let i = r.next;
+            r.buf[i] = ev;
+            r.next = (i + 1) % self.cap;
+        }
+        r.total += 1;
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let r = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::with_capacity(r.buf.len());
+        out.extend_from_slice(&r.buf[r.next..]);
+        out.extend_from_slice(&r.buf[..r.next]);
+        out
+    }
+
+    /// Events overwritten by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        let r = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        r.total - r.buf.len() as u64
+    }
+
+    /// Chrome trace-event JSON (the "JSON object format"): load in Perfetto
+    /// or `chrome://tracing`. pid = worker, tid = slot, ts/dur in µs.
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events()
+            .iter()
+            .map(|ev| {
+                let mut pairs = vec![
+                    ("name", s(ev.kind.as_str())),
+                    ("cat", s("kvtuner")),
+                    ("ph", s(if ev.dur_nanos > 0 { "X" } else { "i" })),
+                    ("ts", num(ev.t_nanos as f64 / 1e3)),
+                    ("pid", num(ev.worker as f64)),
+                    ("tid", num(ev.slot as f64)),
+                    (
+                        "args",
+                        obj(vec![("req", num(ev.req as f64)), ("arg", num(ev.arg as f64))]),
+                    ),
+                ];
+                if ev.dur_nanos > 0 {
+                    pairs.push(("dur", num(ev.dur_nanos as f64 / 1e3)));
+                } else {
+                    // instant scope: thread-local marker on the slot's track
+                    pairs.push(("s", s("t")));
+                }
+                obj(pairs)
+            })
+            .collect();
+        obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", s("ms")),
+        ])
+    }
+
+    /// JSONL export: one compact event object per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            let j = obj(vec![
+                ("kind", s(ev.kind.as_str())),
+                ("req", num(ev.req as f64)),
+                ("worker", num(ev.worker as f64)),
+                ("slot", num(ev.slot as f64)),
+                ("t_ns", num(ev.t_nanos as f64)),
+                ("dur_ns", num(ev.dur_nanos as f64)),
+                ("arg", num(ev.arg as f64)),
+            ]);
+            out.push_str(&j.to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`: `.jsonl` selects JSONL, anything else Chrome JSON.
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        let body = if path.extension().is_some_and(|e| e == "jsonl") {
+            self.to_jsonl()
+        } else {
+            self.to_chrome_json().to_string_pretty()
+        };
+        std::fs::write(path, body)?;
+        Ok(())
+    }
+}
+
+/// One worker's handle on the shared tracer: carries the worker id so the
+/// scheduler emits with the right Chrome `pid` without knowing about the
+/// router.
+#[derive(Debug, Clone)]
+pub struct TraceSink {
+    pub tracer: Arc<Tracer>,
+    pub worker: u32,
+}
+
+impl TraceSink {
+    pub fn instant(&self, kind: EventKind, req: u64, slot: u32, arg: u64) {
+        self.tracer.emit(TraceEvent {
+            kind,
+            req,
+            worker: self.worker,
+            slot,
+            t_nanos: self.tracer.now_nanos(),
+            dur_nanos: 0,
+            arg,
+        });
+    }
+
+    /// Span from an `Instant` the caller already holds to now.
+    pub fn span(&self, kind: EventKind, req: u64, slot: u32, start: Instant, arg: u64) {
+        self.tracer.emit(TraceEvent {
+            kind,
+            req,
+            worker: self.worker,
+            slot,
+            t_nanos: self.tracer.nanos_of(start),
+            dur_nanos: start.elapsed().as_nanos() as u64,
+            arg,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::DecodeStep,
+            req: i,
+            worker: 0,
+            slot: 0,
+            t_nanos: i * 100,
+            dur_nanos: 10,
+            arg: 1,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest() {
+        let t = Tracer::new(8);
+        for i in 0..20 {
+            t.emit(ev(i));
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 8);
+        assert_eq!(t.dropped(), 12);
+        let reqs: Vec<u64> = evs.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, (12..20).collect::<Vec<_>>(), "oldest-first, newest retained");
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything_in_order() {
+        let t = Tracer::new(8);
+        for i in 0..5 {
+            t.emit(ev(i));
+        }
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.events().iter().map(|e| e.req).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let t = Tracer::new(16);
+        t.emit(ev(1));
+        let sink = TraceSink { tracer: Arc::new(Tracer::new(16)), worker: 3 };
+        sink.instant(EventKind::Admit, 7, 2, 42);
+        let j = sink.tracer.to_chrome_json();
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        let evs = re.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("name").unwrap().as_str().unwrap(), "admit");
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(evs[0].get("pid").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(evs[0].get("tid").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            evs[0].get("args").unwrap().get("req").unwrap().as_usize().unwrap(),
+            7
+        );
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let t = Tracer::new(16);
+        for i in 0..3 {
+            t.emit(ev(i));
+        }
+        let body = t.to_jsonl();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in lines {
+            let j = Json::parse(l).unwrap();
+            assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "decode_step");
+        }
+    }
+}

@@ -3,6 +3,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::{arr, obj, s, Json};
+
 /// Time `f` for `iters` iterations after `warmup` runs; report stats.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     for _ in 0..warmup {
@@ -89,6 +91,25 @@ impl Table {
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells);
+    }
+
+    /// Machine-diffable form: `{"title", "header", "rows"}` with every cell
+    /// as the string the table printed (benches emit this as a single
+    /// `BENCH_JSON` line alongside the human table).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(self.title.as_str())),
+            ("header", arr(self.header.iter().map(|h| s(h.as_str())))),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| arr(r.iter().map(|c| s(c.as_str()))))
+                        .collect(),
+                ),
+            ),
+        ])
     }
 
     pub fn print(&self) {

@@ -107,6 +107,13 @@ impl Json {
         out
     }
 
+    /// Single-line serialization (JSONL records, BENCH_JSON lines).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),

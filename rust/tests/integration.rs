@@ -216,6 +216,7 @@ fn router_serves_mixed_classes_end_to_end() {
             paged: None,
             backend: BackendKind::Xla,
             threads: 1,
+            ..WorkerSpec::default()
         },
         WorkerSpec {
             name: "efficient".into(),
@@ -228,6 +229,7 @@ fn router_serves_mixed_classes_end_to_end() {
             paged: None,
             backend: BackendKind::Xla,
             threads: 1,
+            ..WorkerSpec::default()
         },
     ];
     let router = Router::start(dir, workers).expect("router start");
@@ -248,11 +250,11 @@ fn router_serves_mixed_classes_end_to_end() {
         assert_eq!(r.engine, expect, "routed to wrong engine");
         assert!(r.ttft <= r.total);
     }
-    let snaps = router.shutdown().unwrap();
-    let total: u64 = snaps.iter().map(|(_, s)| s.requests_completed).sum();
+    let reports = router.shutdown().unwrap();
+    let total: u64 = reports.iter().map(|r| r.snapshot.requests_completed).sum();
     assert_eq!(total, 6);
-    for (_, s) in &snaps {
-        assert!(s.tokens_per_sec_decode > 0.0);
+    for r in &reports {
+        assert!(r.snapshot.tokens_per_sec_decode > 0.0);
     }
 }
 
@@ -272,6 +274,7 @@ fn scheduler_handles_more_requests_than_slots() {
         paged: None,
         backend: BackendKind::Xla,
         threads: 1,
+        ..WorkerSpec::default()
     }];
     let router = Router::start(dir, workers).unwrap();
     // 7 requests through 2 slots: forces queueing + slot reuse
@@ -305,6 +308,7 @@ fn prompt_longer_than_slot_is_clamped_not_fatal() {
         paged: None,
         backend: BackendKind::Xla,
         threads: 1,
+        ..WorkerSpec::default()
     }];
     let router = Router::start(dir, workers).unwrap();
     let prompt: Vec<i32> = (0..400).map(|j| (j % cfg.vocab) as i32).collect(); // > s_max
@@ -381,6 +385,7 @@ fn paged_router_oversubscribes_slots_beyond_pool() {
         paged: Some(PagedOptions { total_blocks: Some(3), ..PagedOptions::default() }),
         backend: BackendKind::Xla,
         threads: 1,
+        ..WorkerSpec::default()
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..5u64)
@@ -395,8 +400,8 @@ fn paged_router_oversubscribes_slots_beyond_pool() {
         assert!(r.error.is_none(), "{:?}", r.error);
         assert_eq!(r.tokens.len(), 24);
     }
-    let snaps = router.shutdown().unwrap();
-    assert_eq!(snaps[0].1.requests_completed, 5);
+    let reports = router.shutdown().unwrap();
+    assert_eq!(reports[0].snapshot.requests_completed, 5);
 }
 
 #[test]
@@ -415,6 +420,7 @@ fn paged_router_reuses_shared_prompt_prefixes() {
         paged: Some(PagedOptions::default()),
         backend: BackendKind::Xla,
         threads: 1,
+        ..WorkerSpec::default()
     }];
     let router = Router::start(dir, workers).unwrap();
     // identical 64-token system prompt + distinct 8-token tails
@@ -431,8 +437,8 @@ fn paged_router_reuses_shared_prompt_prefixes() {
         assert!(r.error.is_none(), "{:?}", r.error);
         assert_eq!(r.tokens.len(), 8);
     }
-    let snaps = router.shutdown().unwrap();
-    let s = &snaps[0].1;
+    let reports = router.shutdown().unwrap();
+    let s = &reports[0].snapshot;
     assert!(s.prefix_hits >= 1, "no prefix reuse recorded: {s}");
     assert!(s.prefix_tokens_reused >= 64, "reused too little: {s}");
 }
@@ -509,6 +515,7 @@ fn swap_enabled_router_drains_oversubscribed_pool() {
         }),
         backend: BackendKind::Xla,
         threads: 1,
+        ..WorkerSpec::default()
     }];
     let router = Router::start(dir, workers).unwrap();
     let subs: Vec<_> = (0..3u64)
@@ -523,8 +530,8 @@ fn swap_enabled_router_drains_oversubscribed_pool() {
         assert!(r.error.is_none(), "{:?}", r.error);
         assert_eq!(r.tokens.len(), max_new);
     }
-    let snaps = router.shutdown().unwrap();
-    let s = &snaps[0].1;
+    let reports = router.shutdown().unwrap();
+    let s = &reports[0].snapshot;
     assert_eq!(s.requests_completed, 3);
     assert!(s.preemptions >= 1, "pool must be oversubscribed: {s}");
     assert!(s.swap_outs >= 1, "always-policy must swap victims out: {s}");

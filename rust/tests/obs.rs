@@ -1,0 +1,225 @@
+//! Serving-path observability, end to end at the scheduler level (pure
+//! host, no artifacts): drive a real `Scheduler` over a native paged engine
+//! sized so page pressure forces preemption, and assert the lifecycle
+//! trace tells the true story — admit → prefill → decode → preempt(swap) →
+//! swap-out → swap-in → resume → complete, in order, for every request —
+//! plus that the Chrome export of that real trace is well-formed and the
+//! latency histograms saw the traffic.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
+use kvtuner::engine::NativeEngine;
+use kvtuner::kvcache::{PagedOptions, SwapPolicy};
+use kvtuner::obs::{EventKind, TraceEvent, TraceSink, Tracer};
+use kvtuner::util::json::Json;
+
+// Sized so the lifecycle is deterministic: a 7-token prompt is below one
+// full page, so `register_prefix` publishes nothing and every victim page
+// is host-copied at swap-out — the swap-in can never hit the recycled-link
+// fallback, it just waits for free pages. Each request peaks at
+// 7 + (MAX_NEW - 1) = 24 tokens = 3 pages; the 4-page pool runs one request
+// comfortably (3 + 1 admission headroom) but not two (6 pages at peak), so
+// exactly when both cross the 16->17 token page boundary the scheduler must
+// swap one out, finish the other, then swap the victim back in.
+const PROMPT_LEN: usize = 7;
+const MAX_NEW: usize = 18;
+const TOTAL_BLOCKS: usize = 4;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "obs-test".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 64,
+        vocab: 128,
+        rope_theta: 10000.0,
+        group: 8, // page size: small so pressure builds fast
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+/// Event kinds for one request, in emission order.
+fn kinds_for(evs: &[TraceEvent], req: u64) -> Vec<EventKind> {
+    evs.iter().filter(|e| e.req == req).map(|e| e.kind).collect()
+}
+
+fn index_of(kinds: &[EventKind], k: EventKind) -> Option<usize> {
+    kinds.iter().position(|&x| x == k)
+}
+
+/// Two requests against a pool that holds only one: the scheduler must
+/// preempt, and with `SwapPolicy::Always` + a host arena the eviction is a
+/// swap-out whose state later swaps back in bit-exact. The trace ring is
+/// the witness for the whole lifecycle.
+#[test]
+fn scheduler_trace_records_preempt_swap_resume_lifecycle() {
+    let c = cfg();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), c.n_layers);
+    let w = kvtuner::model::Weights::synthetic(&c, 5);
+    let engine = NativeEngine::new(
+        &c,
+        w,
+        specs,
+        2, // batch: both requests in flight so they contend
+        64,
+        8,
+        1,
+        Some(PagedOptions {
+            total_blocks: Some(TOTAL_BLOCKS),
+            swap_mib: Some(4.0),
+            swap_policy: SwapPolicy::Always,
+            ..PagedOptions::default()
+        }),
+    )
+    .unwrap();
+
+    let tracer = Arc::new(Tracer::with_default_capacity());
+    let metrics = Arc::new(Metrics::default());
+    let mut sched = Scheduler::new(
+        Box::new(engine),
+        "obs-worker",
+        SchedulerOptions {
+            swap_policy: SwapPolicy::Always,
+            trace: Some(TraceSink { tracer: tracer.clone(), worker: 0 }),
+            ..SchedulerOptions::default()
+        },
+        metrics.clone(),
+    );
+
+    // pre-load both requests, then run with shutdown already set: the loop
+    // drains everything (including preempted work) and returns
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut responses = Vec::new();
+    for id in 0..2u64 {
+        let (rtx, rrx) = mpsc::channel();
+        // distinct prompts so the contention is pure page pressure
+        let prompt: Vec<i32> =
+            (0..PROMPT_LEN).map(|j| ((j * 7 + 13 * id as usize) % c.vocab) as i32).collect();
+        tx.send(Request {
+            id,
+            prompt,
+            max_new_tokens: MAX_NEW,
+            class: AccuracyClass::Balanced,
+            arrival: Instant::now(),
+            respond: rtx,
+        })
+        .unwrap();
+        responses.push(rrx);
+    }
+    drop(tx);
+    sched
+        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .unwrap();
+
+    // both requests complete fully despite the pool holding only one
+    for (id, rrx) in responses.into_iter().enumerate() {
+        let r = rrx.recv().expect("scheduler dropped a response channel");
+        assert_eq!(r.id, id as u64);
+        assert!(r.error.is_none(), "request {id} degraded: {:?}", r.error);
+        assert_eq!(r.tokens.len(), MAX_NEW, "request {id} was truncated");
+    }
+
+    let evs = tracer.events();
+    assert_eq!(tracer.dropped(), 0, "this workload must fit the default ring");
+
+    // every request's story starts with admit and ends with complete
+    for id in 0..2u64 {
+        let kinds = kinds_for(&evs, id);
+        assert_eq!(kinds.first(), Some(&EventKind::Admit), "req {id}: {kinds:?}");
+        assert_eq!(kinds.last(), Some(&EventKind::Complete), "req {id}: {kinds:?}");
+        assert_eq!(
+            kinds.iter().filter(|&&k| k == EventKind::Complete).count(),
+            1,
+            "req {id} completed more than once: {kinds:?}"
+        );
+        let prefill = index_of(&kinds, EventKind::PrefillChunk);
+        let decode = index_of(&kinds, EventKind::DecodeStep);
+        assert!(prefill.is_some() && decode.is_some(), "req {id}: {kinds:?}");
+        assert!(prefill < decode, "req {id}: prefill must precede decode: {kinds:?}");
+    }
+
+    // page pressure forced a swap-out eviction, and the victim's events
+    // appear in causal order: swap-out / preempt marker → swap-in → resume
+    // → complete (the scheduler emits SwapOut just before Preempt)
+    let victim = (0..2u64)
+        .find(|&id| kinds_for(&evs, id).contains(&EventKind::Preempt { swap: true }))
+        .expect("a 4-page pool under two 3-page requests must preempt by swap");
+    let kinds = kinds_for(&evs, victim);
+    let preempt = index_of(&kinds, EventKind::Preempt { swap: true }).unwrap();
+    let swap_out = index_of(&kinds, EventKind::SwapOut).expect("swap eviction emits SwapOut");
+    let swap_in = index_of(&kinds, EventKind::SwapIn)
+        .expect("host-copied pages cannot be lost: the victim must swap back in");
+    let resume = index_of(&kinds, EventKind::Resume).expect("victim must resume");
+    let complete = index_of(&kinds, EventKind::Complete).unwrap();
+    assert!(swap_out < swap_in, "req {victim}: {kinds:?}");
+    assert!(preempt < swap_in, "req {victim}: {kinds:?}");
+    assert!(swap_in < resume, "req {victim}: {kinds:?}");
+    assert!(resume < complete, "req {victim}: {kinds:?}");
+    // a swapped resume restores state bit-exact: no re-prefilled tokens
+    let resume_ev = evs
+        .iter()
+        .filter(|e| e.req == victim)
+        .find(|e| e.kind == EventKind::Resume)
+        .unwrap();
+    assert_eq!(resume_ev.arg, 0, "swapped resume must not re-prefill");
+    // the swap round trip moved the same bytes out and back
+    let bytes_of = |k: EventKind| {
+        evs.iter().filter(|e| e.req == victim).find(|e| e.kind == k).unwrap().arg
+    };
+    assert!(bytes_of(EventKind::SwapOut) > 0);
+    assert_eq!(bytes_of(EventKind::SwapOut), bytes_of(EventKind::SwapIn));
+
+    // decode steps are spans (they carry duration); admits are instants
+    assert!(
+        evs.iter().any(|e| e.kind == EventKind::DecodeStep && e.dur_nanos > 0),
+        "decode steps must be spans with wall time"
+    );
+    assert!(
+        evs.iter().filter(|e| e.kind == EventKind::Admit).all(|e| e.dur_nanos == 0),
+        "admits are instant events"
+    );
+
+    // the Chrome export of this real trace round-trips through the parser
+    // and keeps the slot-per-track shape
+    let j = tracer.to_chrome_json();
+    let re = Json::parse(&j.to_string_pretty()).unwrap();
+    let trace_events = re.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(trace_events.len(), evs.len());
+    let decode_spans = trace_events
+        .iter()
+        .filter(|e| {
+            e.get("name").unwrap().as_str().unwrap() == "decode_step"
+                && e.get("ph").unwrap().as_str().unwrap() == "X"
+        })
+        .count();
+    assert!(decode_spans > 0, "chrome export must contain decode-step spans");
+    for e in trace_events {
+        assert_eq!(e.get("pid").unwrap().as_usize().unwrap(), 0, "single worker = pid 0");
+        assert!(e.get("tid").unwrap().as_usize().unwrap() < 2, "tid is the slot index");
+    }
+
+    // the bounded histograms saw the traffic the trace describes
+    let s = metrics.snapshot();
+    assert_eq!(s.requests_completed, 2);
+    assert_eq!(
+        s.tokens_generated as usize,
+        2 * MAX_NEW - 2,
+        "decode tokens (prefill's first token excluded)"
+    );
+    assert!(s.preemptions >= 1, "shortfall must have preempted");
+    assert!(s.swap_outs >= 1 && s.swap_ins >= 1);
+    assert_eq!(s.swap_fallbacks, 0, "host-copied pages never fall back to recompute");
+    assert_eq!(s.swap_bytes_out, s.swap_bytes_in);
+    assert!(s.ttft_p50 > 0.0 && s.ttft_p99 >= s.ttft_p50);
+    assert!(s.total_p50 > 0.0 && s.total_p99 >= s.total_p50);
+    assert!(s.tpot_p50 > 0.0, "18-token requests must record TPOT");
+    assert!(s.step_p50 > 0.0, "decode steps must record wall time");
+}
