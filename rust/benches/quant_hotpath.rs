@@ -10,33 +10,58 @@ use kvtuner::engine::Engine;
 use kvtuner::kvcache::CacheBackend;
 use kvtuner::quant::{quantize_per_channel, quantize_per_token};
 use kvtuner::runtime::Runtime;
-use kvtuner::util::bench::bench;
+use kvtuner::util::bench::{bench, BenchStats};
+use kvtuner::util::json::{arr, num, obj, s};
 use kvtuner::util::rng::Rng;
 
+/// One machine-readable line for the collected stats (the table benches emit
+/// `Table::to_json`; this bench has no table, so it serializes the stats).
+fn emit(stats: &[BenchStats]) {
+    let doc = obj(vec![
+        ("title", s("quant_hotpath")),
+        (
+            "stats",
+            arr(stats.iter().map(|b| {
+                obj(vec![
+                    ("name", s(b.name.as_str())),
+                    ("mean", num(b.mean)),
+                    ("p50", num(b.p50)),
+                    ("p95", num(b.p95)),
+                    ("min", num(b.min)),
+                    ("iters", num(b.iters as f64)),
+                ])
+            })),
+        ),
+    ]);
+    println!("BENCH_JSON {}", doc.to_string_compact());
+}
+
 fn main() -> anyhow::Result<()> {
+    let mut stats = Vec::new();
     // ---- Rust-native quant substrate (profiler hot path) ----
     let (t, dh) = (512usize, 64usize);
     let mut rng = Rng::seed(3);
     let x: Vec<f32> = (0..t * dh).map(|_| rng.normal() as f32).collect();
     for bits in [2u8, 4, 8] {
-        bench(&format!("quantize_per_token {t}x{dh} @{bits}bit"), 3, 30, || {
+        stats.push(bench(&format!("quantize_per_token {t}x{dh} @{bits}bit"), 3, 30, || {
             let q = quantize_per_token(&x, t, dh, bits).unwrap();
             std::hint::black_box(&q.codes);
-        });
-        bench(&format!("quantize_per_channel {t}x{dh} @{bits}bit"), 3, 30, || {
+        }));
+        stats.push(bench(&format!("quantize_per_channel {t}x{dh} @{bits}bit"), 3, 30, || {
             let q = quantize_per_channel(&x, t, dh, bits).unwrap();
             std::hint::black_box(&q.codes);
-        });
+        }));
     }
     let q = quantize_per_token(&x, t, dh, 4).unwrap();
-    bench(&format!("dequantize {t}x{dh} @4bit"), 3, 30, || {
+    stats.push(bench(&format!("dequantize {t}x{dh} @4bit"), 3, 30, || {
         std::hint::black_box(q.dequantize());
-    });
+    }));
 
     // ---- PJRT engine step latency per precision pair ----
     let dir = kvtuner::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP PJRT benches: artifacts missing");
+        emit(&stats);
         return Ok(());
     }
     let rt = Arc::new(Runtime::load(&dir)?);
@@ -57,18 +82,19 @@ fn main() -> anyhow::Result<()> {
         let tokens = vec![1i32; batch];
         let active = vec![true; batch];
         eng.decode_step(&tokens, &active)?;
-        bench(&format!("decode_step b{batch} s256 fill128 [{label}]"), 2, 20, || {
+        stats.push(bench(&format!("decode_step b{batch} s256 fill128 [{label}]"), 2, 20, || {
             eng.decode_step(&tokens, &active).unwrap();
-        });
+        }));
     }
 
     // ---- prefill path ----
     let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), cfg.n_layers);
     let mut eng = Engine::new(rt.clone(), &cfg.name, specs, batch, 256, 32)?;
     let prompt: Vec<i32> = (0..96).map(|i| (i % cfg.vocab) as i32).collect();
-    bench("prefill 96 tokens (kivi K4V2, chunked 32)", 1, 10, || {
+    stats.push(bench("prefill 96 tokens (kivi K4V2, chunked 32)", 1, 10, || {
         eng.cache.reset_slot(0);
         eng.prefill(0, &prompt).unwrap();
-    });
+    }));
+    emit(&stats);
     Ok(())
 }

@@ -222,6 +222,7 @@ fn main() -> anyhow::Result<()> {
         eprintln!("[table10_kernel] {label} done");
     }
     t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
 
     // end-to-end: a native engine decode loop never stages
     let w = Weights::synthetic(&cfg, 3);

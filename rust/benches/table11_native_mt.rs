@@ -28,6 +28,7 @@ use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use kvtuner::engine::{EngineCore, NativeEngine};
 use kvtuner::kvcache::PagedOptions;
 use kvtuner::model::Weights;
+use kvtuner::obs::ProbeConfig;
 use kvtuner::util::bench::Table;
 
 const S_MAX: usize = 256;
@@ -107,6 +108,7 @@ fn main() -> anyhow::Result<()> {
             "×2".into(),
             "×4".into(),
             "decode speedup".into(),
+            "probe ovh ×2".into(),
         ],
     );
 
@@ -207,9 +209,9 @@ fn main() -> anyhow::Result<()> {
         }
 
         // --- profiled arm: instrumentation must not change a single bit ---
-        // (The floors above double as the profiler-disabled overhead guard:
-        // every unprofiled arm runs the instrumented engine with the
-        // profiler off, so the disabled path's cost is bounded by the same
+        // (The floors above double as the profiler- and probe-disabled
+        // overhead guard: every unprofiled arm runs the instrumented engine
+        // with both off, so the disabled paths' cost is bounded by the same
         // ×1-scalar-baseline floors that predate the instrumentation.)
         {
             let mut e = engine(&cfg, &w, specs, 2);
@@ -236,6 +238,35 @@ fn main() -> anyhow::Result<()> {
             );
         }
 
+        // --- probe arm: fp-shadow sampling is read-only, and its decode
+        // overhead vs the matching ×2 baseline goes into the BENCH_JSON line
+        let probe_ovh_pct = {
+            let tps = best_of(REPS, || {
+                let mut e = engine(&cfg, &w, specs, 2);
+                e.set_probe(ProbeConfig { every: 1, ..ProbeConfig::default() });
+                e.prefill(0, &prompt).unwrap();
+                let mut tok = first;
+                let mut stream = Vec::with_capacity(DECODE_STEPS);
+                let t3 = Instant::now();
+                for _ in 0..DECODE_STEPS {
+                    tok = e.decode_step(&[tok], &[true]).unwrap()[0];
+                    stream.push(tok);
+                }
+                let tps = DECODE_STEPS as f64 / t3.elapsed().as_secs_f64();
+                let want = chain.as_ref().unwrap();
+                assert_eq!(want.0, stream, "{label}: the probe changed the decode stream");
+                assert_eq!(
+                    want.1,
+                    bits(e.logits(0)),
+                    "{label}: the probe changed the final logits"
+                );
+                let snap = EngineCore::sensitivity(&e).expect("probe was armed");
+                assert!(snap.samples() > 0, "{label}: armed probe sampled nothing");
+                tps
+            });
+            (decode_tps[1] / tps - 1.0) * 100.0
+        };
+
         t.row(vec![
             label.clone(),
             format!("{tokenwise_tps:.0}"),
@@ -246,6 +277,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", decode_tps[1]),
             format!("{:.1}", decode_tps[2]),
             format!("{decode_speedup:.2}x"),
+            format!("{probe_ovh_pct:.1}%"),
         ]);
         eprintln!("[table11_native_mt] {label} done");
     }
@@ -254,7 +286,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nall arms bit-identical: block prefill == token-by-token prefill, every pool \
          width produces the same logits (outputs are partitioned, never accumulation \
-         order), and the per-layer profiler changes neither stream nor logits."
+         order), and neither the per-layer profiler nor the sensitivity probe changes \
+         stream or logits."
     );
     Ok(())
 }

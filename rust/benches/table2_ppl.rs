@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             eprintln!("[table2] {model} / {} done", mode.as_str());
         }
         t.print();
+        println!("BENCH_JSON {}", t.to_json().to_string_compact());
     }
     println!(
         "\npaper shape check: KV8 ≈ K8V4 ≈ FP; K4V8/K2V4 blow up before K8V4/K4V2 \

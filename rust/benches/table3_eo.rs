@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         }
         t.row(row);
         t.print();
+        println!("BENCH_JSON {}", t.to_json().to_string_compact());
     }
 
     // Fig 3 — layer-wise e_a per key precision (value at 8-bit)
@@ -57,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         tf.row(row);
     }
     tf.print();
+    println!("BENCH_JSON {}", tf.to_json().to_string_compact());
 
     // paper shape checks (report the measured direction honestly)
     let k4v2 = prof.model_avg(Mode::Token, PrecisionPair::new(4, 2)).e_o;

@@ -279,6 +279,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
     println!(
         "\npaged arm: same kv_bytes budget, {PAGED_SLOTS} scheduler slots over a page pool \
          (dense reserves {DENSE_SLOTS}x s_max up front). Oversubscription is reconciled by \

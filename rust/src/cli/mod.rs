@@ -75,6 +75,21 @@ OBSERVABILITY (serve / throughput)
   --profile-serve   serve: enable the per-layer/per-phase engine profiler
                     (also: KVTUNER_PROFILE=1); prints a per-layer table at
                     shutdown. Off = zero overhead.
+  --probe-every N   serve: arm the online sensitivity probe — keep an fp
+                    shadow of every Nth committed KV group and accumulate
+                    the offline profiler's error metrics per layer; when the
+                    served config carries a calibration envelope (tune
+                    records one), alert on drift past it. 0/absent = no
+                    probe, zero overhead.
+  --sensitivity-out F
+                    serve: write the per-engine sensitivity tables (mean
+                    e_k/e_v/e_a/e_o per layer x mode x precision pair, plus
+                    drift-alert counts) as JSON at exit
+  --metrics-interval SECS
+                    serve: stream one JSONL line per interval while serving
+                    (metrics snapshot + live sensitivity per engine) — next
+                    to --metrics-out as <file>.jsonl, else as METRICS_JSON
+                    stdout lines
 ";
 
 pub fn cli_main() -> Result<()> {

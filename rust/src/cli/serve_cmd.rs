@@ -7,8 +7,13 @@
 //! (admit / prefill / decode / preempt / swap / resume / complete) as a
 //! Chrome trace; `--metrics-out` writes per-engine snapshot JSON with
 //! latency histograms; `--profile-serve` (or `KVTUNER_PROFILE=1`) turns on
-//! the engines' per-layer/per-phase profiler.
+//! the engines' per-layer/per-phase profiler; `--probe-every N` arms the
+//! online sensitivity probe (fp shadow of every Nth committed KV group,
+//! drift-checked against a tuned config's calibration envelope);
+//! `--sensitivity-out` writes the per-engine sensitivity tables at exit;
+//! `--metrics-interval SECS` streams mid-run snapshot + sensitivity JSONL.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -16,7 +21,7 @@ use anyhow::Result;
 use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use crate::coordinator::{AccuracyClass, Router, WorkerSpec};
 use crate::engine::BackendKind;
-use crate::obs::Tracer;
+use crate::obs::{ProbeConfig, Tracer};
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -55,9 +60,24 @@ pub fn run(args: &Args) -> Result<()> {
     };
     let trace_out = args.opt_str("trace-out").map(std::path::PathBuf::from);
     let metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
+    let sensitivity_out = args.opt_str("sensitivity-out").map(std::path::PathBuf::from);
     let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::with_default_capacity()));
     let profile = args.switch("profile-serve")
         || std::env::var("KVTUNER_PROFILE").map(|v| v == "1").unwrap_or(false);
+    let probe_every = args.usize("probe-every", 0)?;
+    let metrics_interval = args.f64("metrics-interval", 0.0)?;
+
+    // load the tuned config once: its specs back the balanced worker and its
+    // calibration envelope (when recorded) backs the probe's drift detector
+    let tuned = match args.opt_str("config") {
+        Some(p) => Some(TunedConfig::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    let probe = (probe_every > 0).then(|| ProbeConfig {
+        every: probe_every,
+        envelope: tuned.as_ref().and_then(|t| t.envelope.clone()),
+        ..ProbeConfig::default()
+    });
 
     // engine fleet: high = KV8, efficient = K4V2; balanced = tuned config if
     // given, else K8V4
@@ -71,6 +91,7 @@ pub fn run(args: &Args) -> Result<()> {
         threads,
         trace: tracer.clone(),
         profile,
+        probe,
         synthetic: synthetic.then(|| cfg.clone()),
         ..WorkerSpec::default()
     };
@@ -88,8 +109,8 @@ pub fn run(args: &Args) -> Result<()> {
             ..common.clone()
         },
     ];
-    let balanced_specs = match args.opt_str("config") {
-        Some(p) => TunedConfig::load(std::path::Path::new(p))?.specs,
+    let balanced_specs = match &tuned {
+        Some(t) => t.specs.clone(),
         None => LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 4), cfg.n_layers),
     };
     workers.push(WorkerSpec {
@@ -111,6 +132,62 @@ pub fn run(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;
     eprintln!("[serve] workers ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // live metrics streaming: a reader thread snapshots every worker's
+    // metrics (and armed probes) each interval and appends one JSONL line —
+    // next to --metrics-out when given, else a METRICS_JSON stdout line
+    let stream_stop = Arc::new(AtomicBool::new(false));
+    let streamer = if metrics_interval > 0.0 {
+        let observers = router.observers();
+        let stop = stream_stop.clone();
+        let jsonl = metrics_out.as_ref().map(|p| p.with_extension("jsonl"));
+        let period = std::time::Duration::from_secs_f64(metrics_interval);
+        Some(std::thread::spawn(move || -> Result<()> {
+            use std::io::Write;
+            let started = std::time::Instant::now();
+            let mut file = match &jsonl {
+                Some(p) => Some(
+                    std::fs::OpenOptions::new().create(true).truncate(true).write(true).open(p)?,
+                ),
+                None => None,
+            };
+            loop {
+                std::thread::sleep(period);
+                let engines: Vec<Json> = observers
+                    .iter()
+                    .map(|(name, metrics, sens)| {
+                        let sens = sens
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .as_ref()
+                            .map_or(Json::Null, |s| s.snapshot().to_json());
+                        obj(vec![
+                            ("name", s(name.clone())),
+                            ("snapshot", metrics.snapshot().to_json()),
+                            ("sensitivity", sens),
+                        ])
+                    })
+                    .collect();
+                let line = obj(vec![
+                    ("t_s", crate::util::json::num(started.elapsed().as_secs_f64())),
+                    ("engines", arr(engines)),
+                ])
+                .to_string_compact();
+                match &mut file {
+                    Some(f) => writeln!(f, "{line}")?,
+                    None => println!("METRICS_JSON {line}"),
+                }
+                // check after emitting: even a run that finishes inside the
+                // first interval streams at least one line
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Ok(())
+        }))
+    } else {
+        None
+    };
 
     // synthetic open-loop load
     let mut rng = Rng::seed(5);
@@ -140,6 +217,12 @@ pub fn run(args: &Args) -> Result<()> {
     }
     t.print();
 
+    // stop the streamer before shutdown so its last line reflects a running
+    // fleet, then drain the workers
+    stream_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = streamer {
+        h.join().map_err(|_| anyhow::anyhow!("metrics streamer panicked"))??;
+    }
     let reports = router.shutdown()?;
     let mut tm = Table::new("serve — per-engine metrics", &["engine", "summary"]);
     for r in &reports {
@@ -149,6 +232,17 @@ pub fn run(args: &Args) -> Result<()> {
     for r in &reports {
         if let Some(p) = &r.profile {
             p.table(&format!("serve — per-layer profile ({})", r.name)).print();
+        }
+    }
+    for r in &reports {
+        if let Some(sens) = &r.sensitivity {
+            if sens.drift_alerts > 0 {
+                eprintln!(
+                    "[serve] {}: {} drift alert(s) — online quantization error \
+                     left the calibrated envelope",
+                    r.name, sens.drift_alerts
+                );
+            }
         }
     }
 
@@ -169,12 +263,27 @@ pub fn run(args: &Args) -> Result<()> {
                     ("name", s(r.name.clone())),
                     ("snapshot", r.snapshot.to_json()),
                     ("profile", r.profile.as_ref().map_or(Json::Null, |p| p.to_json())),
+                    ("sensitivity", r.sensitivity.as_ref().map_or(Json::Null, |v| v.to_json())),
                 ])
             })
             .collect();
         let doc = obj(vec![("engines", arr(engines))]);
         std::fs::write(path, doc.to_string_pretty())?;
         eprintln!("[serve] wrote metrics JSON to {}", path.display());
+    }
+    if let Some(path) = &sensitivity_out {
+        let engines: Vec<Json> = reports
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(r.name.clone())),
+                    ("sensitivity", r.sensitivity.as_ref().map_or(Json::Null, |v| v.to_json())),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![("engines", arr(engines))]);
+        std::fs::write(path, doc.to_string_pretty())?;
+        eprintln!("[serve] wrote sensitivity JSON to {}", path.display());
     }
     Ok(())
 }

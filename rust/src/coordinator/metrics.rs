@@ -55,6 +55,10 @@ pub struct Metrics {
     /// block-direct backend reports a structural 0 — this counter is
     /// exactly the traffic it eliminates (`table10_kernel` quantifies it).
     pub gather_bytes: AtomicU64,
+    /// Online sensitivity probe: cumulative envelope-exceeded drift alerts
+    /// (a layer's sampled quantization error left the offline calibration
+    /// envelope). Stored by the scheduler each tick from the engine's probe.
+    pub drift_alerts: AtomicU64,
     /// Time to first token, per completed request.
     ttft: LogHistogram,
     /// End-to-end latency, per completed request.
@@ -106,6 +110,7 @@ pub struct Snapshot {
     pub swap_fallbacks: u64,
     pub reprefill_tokens: u64,
     pub gather_bytes: u64,
+    pub drift_alerts: u64,
     /// Full bucket dumps backing the percentile fields above.
     pub ttft_hist: HistSnapshot,
     pub total_hist: HistSnapshot,
@@ -227,6 +232,7 @@ impl Metrics {
             swap_fallbacks: self.swap_fallbacks.load(Ordering::Relaxed),
             reprefill_tokens: self.reprefill_tokens.load(Ordering::Relaxed),
             gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
+            drift_alerts: self.drift_alerts.load(Ordering::Relaxed),
             ttft_hist: ttft,
             total_hist: total,
             tpot_hist: tpot,
@@ -275,6 +281,7 @@ impl Snapshot {
             ("swap_fallbacks", num(self.swap_fallbacks as f64)),
             ("reprefill_tokens", num(self.reprefill_tokens as f64)),
             ("gather_bytes", num(self.gather_bytes as f64)),
+            ("drift_alerts", num(self.drift_alerts as f64)),
             ("ttft_hist", self.ttft_hist.to_json()),
             ("total_hist", self.total_hist.to_json()),
             ("tpot_hist", self.tpot_hist.to_json()),
@@ -287,7 +294,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95/p99={:.1}/{:.1}/{:.1}ms total p50/p95/p99={:.1}/{:.1}/{:.1}ms tpot p50/p95/p99={:.2}/{:.2}/{:.2}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB",
+            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95/p99={:.1}/{:.1}/{:.1}ms total p50/p95/p99={:.1}/{:.1}/{:.1}ms tpot p50/p95/p99={:.2}/{:.2}/{:.2}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB drift={}",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -313,6 +320,7 @@ impl std::fmt::Display for Snapshot {
             self.swap_bytes_in / 1024,
             self.reprefill_tokens,
             self.gather_bytes / 1024,
+            self.drift_alerts,
         )
     }
 }

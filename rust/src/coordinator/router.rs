@@ -19,7 +19,9 @@ use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use crate::engine::Engine;
 use crate::engine::{BackendKind, EngineCore, NativeEngine};
 use crate::kvcache::PagedOptions;
-use crate::obs::{ProfileSnapshot, TraceSink, Tracer};
+use crate::obs::{
+    ProbeConfig, ProfileSnapshot, SensitivityShared, SensitivitySnapshot, TraceSink, Tracer,
+};
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
@@ -53,6 +55,10 @@ pub struct WorkerSpec {
     pub trace: Option<Arc<Tracer>>,
     /// Enable the engine's per-layer/per-phase profiler (`--profile-serve`).
     pub profile: bool,
+    /// `Some(cfg)` = arm the engine's online sensitivity probe
+    /// (`--probe-every`); the worker publishes the probe's live accumulator
+    /// for mid-run streaming. `None` = no probe, no overhead.
+    pub probe: Option<ProbeConfig>,
     /// `Some(cfg)` = build the engine on synthetic weights for `cfg`
     /// instead of loading a model from the artifact dir (native backend
     /// only — smoke tests and CI runs that have no artifacts).
@@ -74,6 +80,7 @@ impl Default for WorkerSpec {
             threads: 1,
             trace: None,
             profile: false,
+            probe: None,
             synthetic: None,
         }
     }
@@ -144,6 +151,9 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
     if ws.profile {
         engine.set_profiling(true);
     }
+    if let Some(p) = &ws.probe {
+        engine.set_probe(p.clone());
+    }
     Ok(engine)
 }
 
@@ -156,6 +166,11 @@ pub struct WorkerHandle {
     /// right before it exits (`None` until shutdown, or when profiling was
     /// off).
     pub profile: Arc<Mutex<Option<ProfileSnapshot>>>,
+    /// The probe's live accumulator table, published by the worker thread
+    /// right after the engine builds (`None` until then, or when no probe is
+    /// armed). Streaming readers snapshot it mid-run without stopping the
+    /// serving loop.
+    pub sensitivity: Arc<Mutex<Option<Arc<SensitivityShared>>>>,
     pub join: JoinHandle<Result<()>>,
 }
 
@@ -166,6 +181,9 @@ pub struct EngineReport {
     pub name: String,
     pub snapshot: Snapshot,
     pub profile: Option<ProfileSnapshot>,
+    /// Final sensitivity snapshot (`--probe-every`); `None` when no probe
+    /// was armed.
+    pub sensitivity: Option<SensitivitySnapshot>,
 }
 
 pub struct Router {
@@ -185,12 +203,15 @@ impl Router {
             let inflight = Arc::new(AtomicUsize::new(0));
             let metrics = Arc::new(Metrics::default());
             let profile: Arc<Mutex<Option<ProfileSnapshot>>> = Arc::new(Mutex::new(None));
+            let sensitivity: Arc<Mutex<Option<Arc<SensitivityShared>>>> =
+                Arc::new(Mutex::new(None));
             let dir = artifact_dir.clone();
             let ws = wspec.clone();
             let sd = shutdown.clone();
             let inf = inflight.clone();
             let met = metrics.clone();
             let prof = profile.clone();
+            let sens = sensitivity.clone();
             // engine readiness signal so start() fails fast on bad configs
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let join = std::thread::Builder::new()
@@ -204,6 +225,10 @@ impl Router {
                         }
                     };
                     let _ = ready_tx.send(Ok(()));
+                    // publish the probe's accumulator so streaming readers
+                    // can snapshot it while the serving loop runs
+                    *sens.lock().unwrap_or_else(|e| e.into_inner()) =
+                        engine.sensitivity_shared();
                     // the swap policy rides inside the paged options so
                     // WorkerSpec stays one struct per engine arm
                     let opts = SchedulerOptions {
@@ -230,7 +255,15 @@ impl Router {
                 .recv()
                 .context("worker died before ready")?
                 .with_context(|| format!("starting worker {}", wspec.name))?;
-            workers.push(WorkerHandle { spec: wspec, tx, inflight, metrics, profile, join });
+            workers.push(WorkerHandle {
+                spec: wspec,
+                tx,
+                inflight,
+                metrics,
+                profile,
+                sensitivity,
+                join,
+            });
         }
         Ok(Router { workers, shutdown, next_id: AtomicU64::new(1) })
     }
@@ -273,9 +306,21 @@ impl Router {
         Ok(Submission { id, rx })
     }
 
+    /// Per-worker observables for mid-run streaming readers: name, metrics,
+    /// and the probe's live accumulator slot. All are snapshot-safe from any
+    /// thread while the workers serve.
+    pub fn observers(
+        &self,
+    ) -> Vec<(String, Arc<Metrics>, Arc<Mutex<Option<Arc<SensitivityShared>>>>)> {
+        self.workers
+            .iter()
+            .map(|w| (w.spec.name.clone(), w.metrics.clone(), w.sensitivity.clone()))
+            .collect()
+    }
+
     /// Graceful shutdown: signal, then join all workers. Each worker's final
-    /// metrics snapshot (and profile, when enabled) comes back in a
-    /// `EngineReport`.
+    /// metrics snapshot (and profile + sensitivity, when enabled) comes back
+    /// in an `EngineReport`.
     pub fn shutdown(self) -> Result<Vec<EngineReport>> {
         self.shutdown.store(true, Ordering::Relaxed);
         let mut out = Vec::new();
@@ -284,7 +329,13 @@ impl Router {
             w.join.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
             let snapshot = w.metrics.snapshot();
             let profile = w.profile.lock().unwrap_or_else(|e| e.into_inner()).take();
-            out.push(EngineReport { name: w.spec.name, snapshot, profile });
+            let sensitivity = w
+                .sensitivity
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .as_ref()
+                .map(|s| s.snapshot());
+            out.push(EngineReport { name: w.spec.name, snapshot, profile, sensitivity });
         }
         Ok(out)
     }

@@ -173,6 +173,9 @@ pub struct Scheduler {
     swap_policy: SwapPolicy,
     /// Lifecycle trace sink; `None` keeps the serving loop emission-free.
     trace: Option<TraceSink>,
+    /// Drift alerts already traced, so each new envelope violation emits
+    /// exactly one `EventKind::Drift` instant.
+    drift_seen: u64,
     pub name: String,
 }
 
@@ -213,6 +216,7 @@ impl Scheduler {
             preempted: ResumeQueue::default(),
             swap_policy: opts.swap_policy,
             trace: opts.trace,
+            drift_seen: 0,
             name: name.to_string(),
         }
     }
@@ -340,6 +344,9 @@ impl Scheduler {
                                 // re-prefill, so the resume's arg is 0
                                 self.trace_instant(EventKind::Resume, pe.req.id, slot, 0);
                                 self.engine.cache_mut().release_swap(sh);
+                                // swapped-in bytes are live again: sample so
+                                // the peak reflects them before the next step
+                                self.engine.sample_kv_live();
                                 let next = *pe.generated.last().unwrap();
                                 let a = ActiveSlot {
                                     req: pe.req,
@@ -529,6 +536,9 @@ impl Scheduler {
                 .unwrap();
             let pages_held = self.engine.cache().slot_pages(victim);
             let a = self.slots[victim].take().unwrap();
+            // capture the victim's live-KV peak before eviction removes its
+            // bytes from `layer_kv_live` (the step path only samples after)
+            self.engine.sample_kv_live();
             // what a recompute resume would have to re-prefill
             let cap = self.engine.s_max().saturating_sub(a.req.max_new_tokens + 1);
             let recompute_tokens = a.req.prompt.len().min(cap) + a.generated.len() - 1;
@@ -608,6 +618,12 @@ impl Scheduler {
         self.metrics
             .gather_bytes
             .store(self.engine.gather_bytes(), Ordering::Relaxed);
+        let drift = self.engine.drift_alerts();
+        self.metrics.drift_alerts.store(drift, Ordering::Relaxed);
+        if drift > self.drift_seen {
+            self.trace_instant(EventKind::Drift, 0, 0, drift);
+            self.drift_seen = drift;
+        }
         if self.trace.is_some() {
             // one span per active slot so each slot's track shows its share
             // of the batched step

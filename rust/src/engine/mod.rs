@@ -94,6 +94,31 @@ pub trait EngineCore {
         None
     }
 
+    /// Arm the online sensitivity probe (`--probe-every`). The default
+    /// engine has no probe — and pays nothing for one.
+    fn set_probe(&mut self, _cfg: crate::obs::ProbeConfig) {}
+
+    /// Accumulated online sensitivity; `None` unless a probe is armed.
+    fn sensitivity(&self) -> Option<crate::obs::SensitivitySnapshot> {
+        None
+    }
+
+    /// The probe's live accumulator table, for mid-run streaming readers.
+    fn sensitivity_shared(&self) -> Option<std::sync::Arc<crate::obs::SensitivityShared>> {
+        None
+    }
+
+    /// Cumulative envelope-exceeded drift alerts from the probe.
+    fn drift_alerts(&self) -> u64 {
+        0
+    }
+
+    /// Feed the profiler's per-layer live-KV-byte peaks from the cache's
+    /// current occupancy. Engines call this each decode step; the scheduler
+    /// also calls it around swap-out/swap-in so eviction-time peaks are
+    /// captured (a swapped-out slot's bytes vanish from `layer_kv_live`).
+    fn sample_kv_live(&self) {}
+
     fn kv_bytes(&self) -> usize {
         self.cache().kv_bytes()
     }

@@ -36,7 +36,7 @@ use crate::config::{LayerSpec, Mode, ModelConfig};
 use crate::kernel::{self, ThreadPool};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
-use crate::obs::{Phase, ProfileSnapshot, Profiler};
+use crate::obs::{Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
 use crate::tensor::Tensor;
 
 /// Engine-resident scratch: sized once at construction so the decode loop
@@ -114,6 +114,7 @@ fn forward_token(
     cache: &mut dyn CacheBackend,
     pool: &ThreadPool,
     prof: &Profiler,
+    probe: &mut SensitivityProbe,
     sc: &mut Scratch,
     slot: usize,
     token: i32,
@@ -155,6 +156,9 @@ fn forward_token(
         kernel::apply_rope_heads(&mut sc.q, hq, dh, pos, theta);
         kernel::apply_rope_heads(&mut sc.k, hkv, dh, pos, theta);
         prof.stop(l, Phase::Qkv, t_qkv);
+        // fp shadow of the row before quantize-at-commit (no-op when the
+        // probe is disabled; read-only w.r.t. the forward pass when enabled)
+        probe.record_row(l, slot, pos, &sc.q, &sc.k, &sc.v);
 
         // commit the new token to the cache, quantized per the layer spec
         let t_quant = prof.start();
@@ -231,6 +235,7 @@ fn prefill_block(
     cache: &mut dyn CacheBackend,
     pool: &ThreadPool,
     prof: &Profiler,
+    probe: &mut SensitivityProbe,
     sc: &mut Scratch,
     slot: usize,
     tokens: &[i32],
@@ -299,6 +304,9 @@ fn prefill_block(
             }
         }
         prof.stop(l, Phase::Qkv, t_qkv);
+        // fp shadow of the whole group pre-commit: `qs`/`kt`/`vt` are
+        // already in the offline capture layouts
+        probe.record_block(l, pos, &sc.qs, &sc.kt, &sc.vt);
         match spec.mode {
             Mode::Fp => {
                 let t_quant = prof.start();
@@ -428,6 +436,9 @@ pub struct NativeEngine {
     /// Per-layer/per-phase timers; disabled by default (zero clock reads on
     /// the hot path) and swapped in whole via `set_profiling`.
     profiler: Profiler,
+    /// Online sensitivity probe; disabled by default (every hook returns
+    /// immediately) and swapped in whole via `set_probe`.
+    probe: SensitivityProbe,
     /// Logits of the last step per slot (for perplexity / eval paths);
     /// allocated once, refilled in place every step.
     pub last_logits: Vec<Vec<f32>>,
@@ -469,6 +480,7 @@ impl NativeEngine {
             pool: ThreadPool::new(threads),
             scratch: Scratch::new(cfg),
             profiler: Profiler::disabled(),
+            probe: SensitivityProbe::disabled(),
             last_logits: vec![vec![0f32; cfg.vocab]; batch],
         })
     }
@@ -495,6 +507,7 @@ impl NativeEngine {
                 self.cache.as_mut(),
                 &self.pool,
                 &self.profiler,
+                &mut self.probe,
                 &mut self.scratch,
                 b,
                 tokens[b],
@@ -514,13 +527,21 @@ impl NativeEngine {
             self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
             self.cache.advance_pos(b, 1);
         }
+        self.sample_kv_live();
+        Ok(out)
+    }
+
+    /// Feed the profiler's per-layer live-KV-byte peaks from the cache's
+    /// current occupancy. Runs after every decode step; the scheduler also
+    /// calls it around swap transitions, because a swap-out removes the
+    /// victim's bytes from `layer_kv_live` before the next step samples.
+    pub fn sample_kv_live(&self) {
         if self.profiler.enabled() {
-            // per-layer live KV bytes after the step (peaks kept)
+            // per-layer live KV bytes (peaks kept)
             for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
                 self.profiler.note_kv_live(l, *bytes as u64);
             }
         }
-        Ok(out)
     }
 
     /// Prefill a slot in KIVI-group-sized row blocks (kivi groups commit at
@@ -536,6 +557,11 @@ impl NativeEngine {
             "prompt overflows cache"
         );
         let g = self.cfg.group;
+        // a fresh occupant's rows must not splice onto the previous one's
+        // partial probe groups
+        if self.cache.pos(slot) == 0 {
+            self.probe.reset_slot(slot);
+        }
         // the block path parks a whole group in the fp residual ring before
         // committing, so it needs ring capacity >= group
         let block_ok = g >= 1 && self.cfg.residual >= g;
@@ -550,6 +576,7 @@ impl NativeEngine {
                     self.cache.as_mut(),
                     &self.pool,
                     &self.profiler,
+                    &mut self.probe,
                     &mut self.scratch,
                     slot,
                     &prompt[i..i + g],
@@ -564,6 +591,7 @@ impl NativeEngine {
                     self.cache.as_mut(),
                     &self.pool,
                     &self.profiler,
+                    &mut self.probe,
                     &mut self.scratch,
                     slot,
                     prompt[i],
@@ -590,6 +618,9 @@ impl NativeEngine {
             (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
             "prompt overflows cache"
         );
+        if self.cache.pos(slot) == 0 {
+            self.probe.reset_slot(slot);
+        }
         for &t in prompt {
             forward_token(
                 &self.cfg,
@@ -598,6 +629,7 @@ impl NativeEngine {
                 self.cache.as_mut(),
                 &self.pool,
                 &self.profiler,
+                &mut self.probe,
                 &mut self.scratch,
                 slot,
                 t,
@@ -697,5 +729,25 @@ impl super::EngineCore for NativeEngine {
 
     fn profile(&self) -> Option<ProfileSnapshot> {
         self.profiler.snapshot()
+    }
+
+    fn set_probe(&mut self, cfg: ProbeConfig) {
+        self.probe = SensitivityProbe::new(&self.cfg, &self.specs, self.batch, &cfg, false);
+    }
+
+    fn sensitivity(&self) -> Option<crate::obs::SensitivitySnapshot> {
+        self.probe.snapshot()
+    }
+
+    fn sensitivity_shared(&self) -> Option<std::sync::Arc<crate::obs::SensitivityShared>> {
+        self.probe.shared()
+    }
+
+    fn drift_alerts(&self) -> u64 {
+        self.probe.drift_alerts()
+    }
+
+    fn sample_kv_live(&self) {
+        NativeEngine::sample_kv_live(self)
     }
 }

@@ -19,7 +19,7 @@ use xla::Literal;
 use crate::config::{LayerSpec, Manifest, Mode, ModelConfig};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
-use crate::obs::{Phase, ProfileSnapshot, Profiler};
+use crate::obs::{Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -54,6 +54,11 @@ pub struct Engine {
     /// executable, so layer time lands in `Phase::Exec`; host-side cache
     /// routing and kivi quantize executables land in `Phase::QuantCommit`.
     profiler: Profiler,
+    /// Online sensitivity probe; disabled by default. The XLA arm cannot
+    /// see Q inside its compiled executables, so it runs the probe kv-only:
+    /// fp residual chunks are shadowed at kivi commit (`e_k`/`e_v`; the
+    /// attention-divergence columns stay zero).
+    probe: SensitivityProbe,
 }
 
 impl Engine {
@@ -173,6 +178,7 @@ impl Engine {
             exec_count: AtomicU64::new(0),
             gather_bytes: AtomicU64::new(0),
             profiler: Profiler::disabled(),
+            probe: SensitivityProbe::disabled(),
         })
     }
 
@@ -265,6 +271,9 @@ impl Engine {
     fn commit_kivi(&mut self, l: usize, slot: usize) -> Result<()> {
         let spec = self.specs[l];
         let (kchunk, vchunk) = self.cache.residual_chunk(l, slot)?;
+        // fp shadow of the group before the quant executables consume it
+        // (no-op when the probe is disabled)
+        self.probe.record_kv_group(l, slot, kchunk.as_f32()?, vchunk.as_f32()?);
         let g = self.cfg.group;
         let kname = Manifest::quant_name(true, spec.pair.k_bits, 1, g);
         let vname = Manifest::quant_name(false, spec.pair.v_bits, 1, g);
@@ -309,12 +318,19 @@ impl Engine {
                 self.cache.advance_pos(b, 1);
             }
         }
+        self.sample_kv_live();
+        Ok(outs[1].as_i32()?.to_vec())
+    }
+
+    /// Feed the profiler's per-layer live-KV-byte peaks from the cache's
+    /// current occupancy (each decode step; the scheduler also calls it
+    /// around swap transitions so eviction-time peaks are captured).
+    pub fn sample_kv_live(&self) {
         if self.profiler.enabled() {
             for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
                 self.profiler.note_kv_live(l, *bytes as u64);
             }
         }
-        Ok(outs[1].as_i32()?.to_vec())
     }
 
     /// Prefill a slot with a prompt, chunked at `prefill_chunk` (B=1
@@ -444,6 +460,26 @@ impl super::EngineCore for Engine {
 
     fn profile(&self) -> Option<ProfileSnapshot> {
         self.profiler.snapshot()
+    }
+
+    fn set_probe(&mut self, cfg: ProbeConfig) {
+        self.probe = SensitivityProbe::new(&self.cfg, &self.specs, self.batch, &cfg, true);
+    }
+
+    fn sensitivity(&self) -> Option<crate::obs::SensitivitySnapshot> {
+        self.probe.snapshot()
+    }
+
+    fn sensitivity_shared(&self) -> Option<Arc<crate::obs::SensitivityShared>> {
+        self.probe.shared()
+    }
+
+    fn drift_alerts(&self) -> u64 {
+        self.probe.drift_alerts()
+    }
+
+    fn sample_kv_live(&self) {
+        Engine::sample_kv_live(self)
     }
 
     fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {

@@ -18,11 +18,23 @@
 //!   (qkv, quantize-commit, attend, mlp, lm head, whole-layer exec on the
 //!   XLA arm) plus per-layer live-KV-byte peaks broken down by precision
 //!   pair, fed by the engines and dumped as a per-layer table / JSON.
+//! * [`sensitivity::SensitivityProbe`] — a sampled online twin of the
+//!   offline error profiler: fp shadows of committed KIVI groups run the
+//!   same simulated quantize→dequantize [`crate::quant::error`] pipeline,
+//!   accumulated per (layer, mode, pair) in an atomic table
+//!   (`--sensitivity-out`), drift-checked against the offline
+//!   [`sensitivity::Envelope`] and streamable mid-run
+//!   (`--metrics-interval`).
 
 pub mod hist;
 pub mod profile;
+pub mod sensitivity;
 pub mod trace;
 
 pub use hist::{HistSnapshot, LogHistogram};
 pub use profile::{LayerProfile, Phase, ProfileSnapshot, Profiler};
+pub use sensitivity::{
+    Envelope, EnvelopeBound, LayerSensitivity, ProbeConfig, SensitivityProbe, SensitivityShared,
+    SensitivitySnapshot,
+};
 pub use trace::{EventKind, TraceEvent, TraceSink, Tracer};

@@ -1,0 +1,894 @@
+//! Online quantization-error sensitivity probe: the serving-path twin of
+//! the offline profiler (`tuner/profiler.rs`).
+//!
+//! At a configurable sampling interval (`--probe-every N` KIVI groups;
+//! 0 = disabled, and — like the [`crate::obs::Profiler`] — the disabled
+//! probe is zero-cost: every hot-path hook is an `#[inline]` method whose
+//! first instruction returns), the engine hands the probe the fp shadow of
+//! a committed group's Q/K/V *before* quantize-at-commit. The probe then
+//! runs the exact same simulated quantize→dequantize →
+//! [`crate::quant::error::ErrorMetrics`] computation the offline profiler
+//! uses, and accumulates the results per (layer, mode, precision pair) in
+//! an atomic table shared with reader threads ([`SensitivityShared`]).
+//!
+//! Three consumers hang off that table:
+//! * **Snapshots** ([`SensitivitySnapshot`]) — mean per-cell errors,
+//!   exported via `--sensitivity-out` and embedded in the serve metrics
+//!   JSON; with full sampling and one group the numbers are bit-for-bit
+//!   the offline profiler's (the parity test in `tests/sensitivity.rs`).
+//! * **Drift detection** — an offline-calibrated [`Envelope`] (per-layer
+//!   error bounds recorded at tuner search time, carried inside
+//!   `TunedConfig`) is compared against each sampled group's error for the
+//!   layer's *served* spec; exceeding `bound × headroom` bumps an atomic
+//!   drift counter the scheduler turns into a typed trace event and a
+//!   metrics gauge.
+//! * **Live streaming** — the serve CLI polls the shared table on its
+//!   metrics-interval thread, so long runs are observable in flight.
+//!
+//! The probe is strictly read-only with respect to the forward pass:
+//! enabling it never changes a logit bit (asserted by the probed arm of
+//! `table11_native_mt`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use crate::quant::error::{kv_errors, layer_errors, ErrorMetrics, LayerCapture};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Modes with a probe-table row (Fp is never recorded — it has no error).
+const N_MODES: usize = 2;
+
+fn mode_idx(mode: Mode) -> Option<usize> {
+    match mode {
+        Mode::Token => Some(0),
+        Mode::Kivi => Some(1),
+        Mode::Fp => None,
+    }
+}
+
+fn pair_idx(pair: PrecisionPair) -> Option<usize> {
+    PAIRS.iter().position(|p| *p == pair)
+}
+
+/// f64 accumulators in `AtomicU64` bit form. The engine thread is the only
+/// writer (one probe per engine), so relaxed load-modify-store keeps the
+/// sums exact; atomics exist so snapshot readers on other threads (the
+/// metrics streamer) never race the writer.
+fn add_f64(a: &AtomicU64, v: f64) {
+    let cur = f64::from_bits(a.load(Ordering::Relaxed));
+    a.store((cur + v).to_bits(), Ordering::Relaxed);
+}
+
+fn max_f64(a: &AtomicU64, v: f64) {
+    let cur = f64::from_bits(a.load(Ordering::Relaxed));
+    if v > cur {
+        a.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Per-layer calibration bounds recorded by the offline tuner: the maximum
+/// error the calibration prompt set produced at each layer's metric. An
+/// online sample past `bound × headroom` means the live workload sits
+/// outside the distribution the precision map was searched on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnvelopeBound {
+    pub e_k: f64,
+    pub e_v: f64,
+    pub e_a: f64,
+    pub e_o: f64,
+}
+
+/// The full per-layer calibration envelope (one bound per layer, indexed by
+/// layer). Serialized inside `TunedConfig` JSON under `"envelope"`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Envelope {
+    pub layers: Vec<EnvelopeBound>,
+}
+
+impl Envelope {
+    pub fn to_json(&self) -> Json {
+        arr(self.layers.iter().map(|b| {
+            obj(vec![
+                ("e_k", num(b.e_k)),
+                ("e_v", num(b.e_v)),
+                ("e_a", num(b.e_a)),
+                ("e_o", num(b.e_o)),
+            ])
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Envelope> {
+        let layers = j
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(EnvelopeBound {
+                    e_k: b.get("e_k")?.as_f64()?,
+                    e_v: b.get("e_v")?.as_f64()?,
+                    e_a: b.get("e_a")?.as_f64()?,
+                    e_o: b.get("e_o")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Envelope { layers })
+    }
+}
+
+/// Probe configuration, carried through `WorkerSpec` into the engines.
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    /// Sample every Nth KIVI group (decode-step groups and prefill blocks
+    /// alike); 0 disables the probe entirely.
+    pub every: usize,
+    /// Drift fires when a sampled error exceeds `bound × headroom` — the
+    /// slack above the calibrated peak before a workload counts as
+    /// out-of-distribution.
+    pub headroom: f64,
+    /// Offline calibration bounds (`TunedConfig::envelope`); `None` keeps
+    /// the probe measuring without drift detection.
+    pub envelope: Option<Envelope>,
+    /// Mode override: when non-empty, every layer evaluates these modes'
+    /// full pair grid from the fp shadow instead of only its served mode —
+    /// the offline profiler's grid, used by the parity test. Empty (the
+    /// serving default) evaluates each layer's own non-Fp mode only.
+    pub modes: Vec<Mode>,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> ProbeConfig {
+        ProbeConfig { every: 0, headroom: 1.5, envelope: None, modes: Vec::new() }
+    }
+}
+
+/// One (layer, mode, pair) accumulator cell.
+#[derive(Default)]
+struct Cell {
+    sum_e_k: AtomicU64,
+    sum_e_v: AtomicU64,
+    sum_e_a: AtomicU64,
+    max_e_a: AtomicU64,
+    sum_e_o: AtomicU64,
+    count: AtomicU64,
+}
+
+/// The atomic sensitivity table: written by the engine thread, snapshotted
+/// by anyone holding the `Arc` (the metrics streamer, the router at
+/// shutdown).
+pub struct SensitivityShared {
+    specs: Vec<LayerSpec>,
+    /// True for engines that can only shadow K/V, not Q (the XLA arm): the
+    /// attention-divergence columns stay zero there.
+    kv_only: bool,
+    cells: Vec<Cell>,
+    layer_drift: Vec<AtomicU64>,
+    drift_alerts: AtomicU64,
+}
+
+impl SensitivityShared {
+    pub fn new(specs: &[LayerSpec], kv_only: bool) -> SensitivityShared {
+        SensitivityShared {
+            kv_only,
+            cells: (0..specs.len() * N_MODES * PAIRS.len()).map(|_| Cell::default()).collect(),
+            layer_drift: (0..specs.len()).map(|_| AtomicU64::new(0)).collect(),
+            drift_alerts: AtomicU64::new(0),
+            specs: specs.to_vec(),
+        }
+    }
+
+    fn cell(&self, layer: usize, mode: Mode, pair: PrecisionPair) -> Option<&Cell> {
+        let (mi, pi) = (mode_idx(mode)?, pair_idx(pair)?);
+        self.cells.get((layer * N_MODES + mi) * PAIRS.len() + pi)
+    }
+
+    pub fn record(&self, layer: usize, mode: Mode, pair: PrecisionPair, m: &ErrorMetrics) {
+        let Some(c) = self.cell(layer, mode, pair) else { return };
+        add_f64(&c.sum_e_k, m.e_k);
+        add_f64(&c.sum_e_v, m.e_v);
+        add_f64(&c.sum_e_a, m.e_a);
+        max_f64(&c.max_e_a, m.e_a_max);
+        add_f64(&c.sum_e_o, m.e_o);
+        c.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// K/V-only sample (engines without a query shadow).
+    pub fn record_kv(&self, layer: usize, mode: Mode, pair: PrecisionPair, e_k: f64, e_v: f64) {
+        let Some(c) = self.cell(layer, mode, pair) else { return };
+        add_f64(&c.sum_e_k, e_k);
+        add_f64(&c.sum_e_v, e_v);
+        c.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_drift(&self, layer: usize) {
+        if let Some(d) = self.layer_drift.get(layer) {
+            d.fetch_add(1, Ordering::Relaxed);
+        }
+        self.drift_alerts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total envelope violations so far (the scheduler polls this each tick
+    /// and emits a trace event on every increase).
+    pub fn drift_alerts(&self) -> u64 {
+        self.drift_alerts.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> SensitivitySnapshot {
+        let np = PAIRS.len();
+        let layers = self
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(l, sp)| {
+                let mut errors = Vec::new();
+                for (mi, mode) in [Mode::Token, Mode::Kivi].into_iter().enumerate() {
+                    for (pi, pair) in PAIRS.iter().enumerate() {
+                        let c = &self.cells[(l * N_MODES + mi) * np + pi];
+                        let count = c.count.load(Ordering::Relaxed);
+                        if count == 0 {
+                            continue;
+                        }
+                        let n = count as f64;
+                        let m = ErrorMetrics {
+                            e_k: f64::from_bits(c.sum_e_k.load(Ordering::Relaxed)) / n,
+                            e_v: f64::from_bits(c.sum_e_v.load(Ordering::Relaxed)) / n,
+                            e_a: f64::from_bits(c.sum_e_a.load(Ordering::Relaxed)) / n,
+                            e_a_max: f64::from_bits(c.max_e_a.load(Ordering::Relaxed)),
+                            e_o: f64::from_bits(c.sum_e_o.load(Ordering::Relaxed)) / n,
+                        };
+                        errors.push((mode, *pair, count, m));
+                    }
+                }
+                LayerSensitivity {
+                    layer: l,
+                    spec: *sp,
+                    drift_alerts: self.layer_drift[l].load(Ordering::Relaxed),
+                    errors,
+                }
+            })
+            .collect();
+        SensitivitySnapshot {
+            kv_only: self.kv_only,
+            drift_alerts: self.drift_alerts.load(Ordering::Relaxed),
+            layers,
+        }
+    }
+}
+
+/// One layer's accumulated online sensitivity.
+#[derive(Debug, Clone)]
+pub struct LayerSensitivity {
+    pub layer: usize,
+    /// The spec this layer actually serves (drift is only checked on it).
+    pub spec: LayerSpec,
+    pub drift_alerts: u64,
+    /// Mean errors per probed (mode, pair), with the sample count.
+    pub errors: Vec<(Mode, PrecisionPair, u64, ErrorMetrics)>,
+}
+
+/// Point-in-time view of the sensitivity table.
+#[derive(Debug, Clone)]
+pub struct SensitivitySnapshot {
+    pub kv_only: bool,
+    pub drift_alerts: u64,
+    pub layers: Vec<LayerSensitivity>,
+}
+
+impl SensitivitySnapshot {
+    /// Mean metrics for one probed cell, if it ever sampled.
+    pub fn metrics(&self, layer: usize, mode: Mode, pair: PrecisionPair) -> Option<ErrorMetrics> {
+        self.layers
+            .iter()
+            .find(|l| l.layer == layer)?
+            .errors
+            .iter()
+            .find(|(m, p, _, _)| *m == mode && *p == pair)
+            .map(|(_, _, _, e)| *e)
+    }
+
+    /// Total samples across every cell (probed-arm liveness checks).
+    pub fn samples(&self) -> u64 {
+        self.layers.iter().flat_map(|l| l.errors.iter().map(|e| e.2)).sum()
+    }
+
+    /// The `--sensitivity-out` schema: per layer, the served spec, its
+    /// drift count, and one row per probed (mode, pair) with mean errors.
+    pub fn to_json(&self) -> Json {
+        arr_layers(self)
+    }
+}
+
+fn arr_layers(snap: &SensitivitySnapshot) -> Json {
+    obj(vec![
+        ("kv_only", num(if snap.kv_only { 1.0 } else { 0.0 })),
+        ("drift_alerts", num(snap.drift_alerts as f64)),
+        (
+            "layers",
+            arr(snap.layers.iter().map(|l| {
+                obj(vec![
+                    ("layer", num(l.layer as f64)),
+                    ("mode", s(l.spec.mode.as_str())),
+                    ("pair", s(l.spec.pair.label())),
+                    ("drift_alerts", num(l.drift_alerts as f64)),
+                    (
+                        "errors",
+                        arr(l.errors.iter().map(|(m, p, c, e)| {
+                            obj(vec![
+                                ("mode", s(m.as_str())),
+                                ("pair", s(p.label())),
+                                ("count", num(*c as f64)),
+                                ("e_k", num(e.e_k)),
+                                ("e_v", num(e.e_v)),
+                                ("e_a", num(e.e_a)),
+                                ("e_a_max", num(e.e_a_max)),
+                                ("e_o", num(e.e_o)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// One in-flight fp group being assembled row by row (decode / tokenwise
+/// prefill path).
+#[derive(Default)]
+struct Pending {
+    start: usize,
+    rows: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The engine-resident probe. Owns the sampling state; publishes results
+/// into its [`SensitivityShared`] table.
+pub struct SensitivityProbe {
+    every: usize,
+    headroom: f64,
+    envelope: Option<Envelope>,
+    shared: Option<Arc<SensitivityShared>>,
+    /// Modes evaluated per layer (the full-grid override, or the layer's
+    /// own served mode; empty for Fp layers under the default).
+    layer_modes: Vec<Vec<Mode>>,
+    specs: Vec<LayerSpec>,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    group: usize,
+    n_layers: usize,
+    /// (slot, layer)-indexed partial groups for the row-at-a-time path.
+    pending: Vec<Pending>,
+    /// (slot, layer)-indexed KIVI commit counters for the group-at-commit
+    /// path (XLA arm).
+    commit_seq: Vec<u64>,
+}
+
+impl SensitivityProbe {
+    /// The inert probe: every hook returns immediately, no allocation.
+    pub fn disabled() -> SensitivityProbe {
+        SensitivityProbe {
+            every: 0,
+            headroom: 1.0,
+            envelope: None,
+            shared: None,
+            layer_modes: Vec::new(),
+            specs: Vec::new(),
+            n_heads: 0,
+            n_kv_heads: 0,
+            head_dim: 0,
+            group: 1,
+            n_layers: 0,
+            pending: Vec::new(),
+            commit_seq: Vec::new(),
+        }
+    }
+
+    /// `kv_only`: the engine has no query shadow (XLA arm) — only
+    /// `record_kv_group` will feed the table.
+    pub fn new(
+        cfg: &ModelConfig,
+        specs: &[LayerSpec],
+        batch: usize,
+        pc: &ProbeConfig,
+        kv_only: bool,
+    ) -> SensitivityProbe {
+        if pc.every == 0 {
+            return SensitivityProbe::disabled();
+        }
+        let n_layers = specs.len();
+        let layer_modes = specs
+            .iter()
+            .map(|sp| {
+                if !pc.modes.is_empty() {
+                    pc.modes.clone()
+                } else if sp.mode != Mode::Fp {
+                    vec![sp.mode]
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        SensitivityProbe {
+            every: pc.every,
+            headroom: pc.headroom,
+            envelope: pc.envelope.clone(),
+            shared: Some(Arc::new(SensitivityShared::new(specs, kv_only))),
+            layer_modes,
+            specs: specs.to_vec(),
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+            group: cfg.group,
+            n_layers,
+            pending: (0..batch * n_layers).map(|_| Pending::default()).collect(),
+            commit_seq: vec![0; batch * n_layers],
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    pub fn shared(&self) -> Option<Arc<SensitivityShared>> {
+        self.shared.clone()
+    }
+
+    pub fn snapshot(&self) -> Option<SensitivitySnapshot> {
+        self.shared.as_ref().map(|sh| sh.snapshot())
+    }
+
+    pub fn drift_alerts(&self) -> u64 {
+        self.shared.as_ref().map_or(0, |sh| sh.drift_alerts())
+    }
+
+    /// Drop a slot's partial groups (new request entering the slot; its
+    /// rows must not splice onto the previous occupant's).
+    #[inline]
+    pub fn reset_slot(&mut self, slot: usize) {
+        if self.every == 0 {
+            return;
+        }
+        for l in 0..self.n_layers {
+            self.pending[slot * self.n_layers + l].rows = 0;
+        }
+    }
+
+    /// Block-prefill hook: one whole group's fp Q/K/V, already in the
+    /// capture layouts (`qs` [g, Hq·Dh] row-major ≡ [S, Hq, Dh]; `kt`/`vt`
+    /// head-major [Hkv, g, Dh]). `pos` is the group-aligned base position.
+    #[inline]
+    pub fn record_block(&mut self, l: usize, pos: usize, qs: &[f32], kt: &[f32], vt: &[f32]) {
+        if self.every == 0 {
+            return;
+        }
+        if (pos / self.group) % self.every != 0 {
+            return;
+        }
+        let cap = LayerCapture {
+            q: qs.to_vec(),
+            k: kt.to_vec(),
+            v: vt.to_vec(),
+            s: self.group,
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+        };
+        self.eval_capture(l, &cap);
+    }
+
+    /// Row-at-a-time hook (decode steps and tokenwise prefill): one
+    /// position's fp q [Hq·Dh] / k / v [Hkv·Dh], post-RoPE, pre-commit.
+    /// Rows accumulate per (slot, layer) until a full group is assembled;
+    /// a discontinuity (preemption, mid-group entry) drops the partial
+    /// group — only bit-faithful whole groups are ever evaluated.
+    #[inline]
+    pub fn record_row(
+        &mut self,
+        l: usize,
+        slot: usize,
+        pos: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) {
+        if self.every == 0 {
+            return;
+        }
+        let g = self.group;
+        if (pos / g) % self.every != 0 {
+            return;
+        }
+        let cap;
+        {
+            let p = &mut self.pending[slot * self.n_layers + l];
+            if pos % g == 0 {
+                p.start = pos;
+                p.rows = 0;
+                p.q.clear();
+                p.k.clear();
+                p.v.clear();
+            } else if p.rows == 0 || p.start + p.rows != pos {
+                p.rows = 0;
+                return;
+            }
+            p.q.extend_from_slice(q);
+            p.k.extend_from_slice(k);
+            p.v.extend_from_slice(v);
+            p.rows += 1;
+            if p.rows < g {
+                return;
+            }
+            // token-major rows [g, Hkv·Dh] -> head-major capture [Hkv, g, Dh]
+            let (hkv, dh) = (self.n_kv_heads, self.head_dim);
+            let mut kt = vec![0f32; hkv * g * dh];
+            let mut vt = vec![0f32; hkv * g * dh];
+            for r in 0..g {
+                for h in 0..hkv {
+                    let src = (r * hkv + h) * dh;
+                    let dst = (h * g + r) * dh;
+                    kt[dst..dst + dh].copy_from_slice(&p.k[src..src + dh]);
+                    vt[dst..dst + dh].copy_from_slice(&p.v[src..src + dh]);
+                }
+            }
+            cap = LayerCapture {
+                q: std::mem::take(&mut p.q),
+                k: kt,
+                v: vt,
+                s: g,
+                n_heads: self.n_heads,
+                n_kv_heads: self.n_kv_heads,
+                head_dim: self.head_dim,
+            };
+            p.rows = 0;
+        }
+        self.eval_capture(l, &cap);
+    }
+
+    /// KIVI group-commit hook for engines without a query shadow (XLA arm):
+    /// `k`/`v` are the group's fp residual chunk, already head-major
+    /// [Hkv, g, Dh] (the `residual_chunk` layout). Samples by per-(slot,
+    /// layer) commit ordinal; records `e_k`/`e_v` only, over the layer's
+    /// probed modes × all pairs.
+    #[inline]
+    pub fn record_kv_group(&mut self, l: usize, slot: usize, k: &[f32], v: &[f32]) {
+        if self.every == 0 {
+            return;
+        }
+        let idx = slot * self.n_layers + l;
+        let seq = self.commit_seq[idx];
+        self.commit_seq[idx] += 1;
+        if seq % self.every as u64 != 0 {
+            return;
+        }
+        let Some(shared) = &self.shared else { return };
+        let g = self.group;
+        let (hkv, dh) = (self.n_kv_heads, self.head_dim);
+        let spec = self.specs[l];
+        for &mode in &self.layer_modes[l] {
+            for pair in PAIRS {
+                let probe_spec = LayerSpec { mode, pair };
+                if let Ok((e_k, e_v)) = kv_errors(k, v, probe_spec, hkv, g, dh, g) {
+                    shared.record_kv(l, mode, pair, e_k, e_v);
+                    if mode == spec.mode && pair == spec.pair {
+                        if let Some(b) = self.bound(l) {
+                            let h = self.headroom;
+                            if e_k > b.e_k * h || e_v > b.e_v * h {
+                                shared.note_drift(l);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn bound(&self, l: usize) -> Option<EnvelopeBound> {
+        self.envelope.as_ref()?.layers.get(l).copied()
+    }
+
+    /// Run the offline error simulation over this layer's probed modes ×
+    /// all pairs, publish each result, and drift-check the served spec.
+    fn eval_capture(&self, l: usize, cap: &LayerCapture) {
+        let Some(shared) = &self.shared else { return };
+        let spec = self.specs[l];
+        for &mode in &self.layer_modes[l] {
+            for pair in PAIRS {
+                let probe_spec = LayerSpec { mode, pair };
+                let Ok(m) = layer_errors(cap, probe_spec, self.group) else { continue };
+                shared.record(l, mode, pair, &m);
+                if mode == spec.mode && pair == spec.pair {
+                    if let Some(b) = self.bound(l) {
+                        let h = self.headroom;
+                        if m.e_o > b.e_o * h
+                            || m.e_a > b.e_a * h
+                            || m.e_k > b.e_k * h
+                            || m.e_v > b.e_v * h
+                        {
+                            shared.note_drift(l);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::synthetic("probe-test")
+    }
+
+    fn rand_rows(n: usize, r: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    /// One group's worth of fp Q/K/V in the block-hook layouts.
+    fn group_capture(c: &ModelConfig, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let g = c.group;
+        let mut r = Rng::seed(seed);
+        let qs = rand_rows(g * c.n_heads * c.head_dim, &mut r);
+        let kt = rand_rows(c.n_kv_heads * g * c.head_dim, &mut r);
+        let vt = rand_rows(c.n_kv_heads * g * c.head_dim, &mut r);
+        (qs, kt, vt)
+    }
+
+    #[test]
+    fn disabled_probe_is_inert() {
+        let c = cfg();
+        let mut p = SensitivityProbe::disabled();
+        let (qs, kt, vt) = group_capture(&c, 1);
+        p.record_block(0, 0, &qs, &kt, &vt);
+        p.record_row(0, 0, 0, &qs[..c.n_heads * c.head_dim], &kt[..32], &vt[..32]);
+        p.record_kv_group(0, 0, &kt, &vt);
+        p.reset_slot(0);
+        assert!(!p.enabled());
+        assert!(p.snapshot().is_none());
+        assert!(p.shared().is_none());
+        assert_eq!(p.drift_alerts(), 0);
+        // ProbeConfig { every: 0 } builds the same inert probe
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 4), c.n_layers);
+        let p2 = SensitivityProbe::new(&c, &specs, 2, &ProbeConfig::default(), false);
+        assert!(!p2.enabled());
+        assert!(p2.snapshot().is_none());
+    }
+
+    #[test]
+    fn block_sample_matches_offline_layer_errors_bitwise() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 2), c.n_layers);
+        let pc = ProbeConfig { every: 1, ..ProbeConfig::default() };
+        let mut p = SensitivityProbe::new(&c, &specs, 1, &pc, false);
+        let (qs, kt, vt) = group_capture(&c, 2);
+        p.record_block(1, 0, &qs, &kt, &vt);
+        let snap = p.snapshot().unwrap();
+        // the layer's own (mode, pair) grid: all 9 pairs sampled once
+        for pair in PAIRS {
+            let got = snap.metrics(1, Mode::Kivi, pair).unwrap();
+            let cap = LayerCapture {
+                q: qs.clone(),
+                k: kt.clone(),
+                v: vt.clone(),
+                s: c.group,
+                n_heads: c.n_heads,
+                n_kv_heads: c.n_kv_heads,
+                head_dim: c.head_dim,
+            };
+            let want =
+                layer_errors(&cap, LayerSpec { mode: Mode::Kivi, pair }, c.group).unwrap();
+            assert_eq!(got.e_k, want.e_k, "{}", pair.label());
+            assert_eq!(got.e_v, want.e_v, "{}", pair.label());
+            assert_eq!(got.e_a, want.e_a, "{}", pair.label());
+            assert_eq!(got.e_a_max, want.e_a_max, "{}", pair.label());
+            assert_eq!(got.e_o, want.e_o, "{}", pair.label());
+        }
+        // other layers and the unprobed mode stay empty
+        assert!(snap.metrics(0, Mode::Kivi, PAIRS[0]).is_none());
+        assert!(snap.metrics(1, Mode::Token, PAIRS[0]).is_none());
+        assert_eq!(snap.samples(), PAIRS.len() as u64);
+    }
+
+    #[test]
+    fn sampling_interval_skips_groups() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), c.n_layers);
+        let pc = ProbeConfig { every: 2, ..ProbeConfig::default() };
+        let mut p = SensitivityProbe::new(&c, &specs, 1, &pc, false);
+        let (qs, kt, vt) = group_capture(&c, 3);
+        p.record_block(0, 0, &qs, &kt, &vt); // group 0: sampled
+        p.record_block(0, c.group, &qs, &kt, &vt); // group 1: skipped
+        p.record_block(0, 2 * c.group, &qs, &kt, &vt); // group 2: sampled
+        let snap = p.snapshot().unwrap();
+        let row = &snap.layers[0].errors;
+        assert!(row.iter().all(|(_, _, count, _)| *count == 2), "2 of 3 groups sampled");
+    }
+
+    #[test]
+    fn row_path_assembles_full_groups_and_drops_discontinuities() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), c.n_layers);
+        let pc = ProbeConfig { every: 1, ..ProbeConfig::default() };
+        let mut p = SensitivityProbe::new(&c, &specs, 2, &pc, false);
+        let g = c.group;
+        let (hq, hkv, dh) = (c.n_heads, c.n_kv_heads, c.head_dim);
+        let mut r = Rng::seed(4);
+        let rows: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..g)
+            .map(|_| {
+                (
+                    rand_rows(hq * dh, &mut r),
+                    rand_rows(hkv * dh, &mut r),
+                    rand_rows(hkv * dh, &mut r),
+                )
+            })
+            .collect();
+        // full aligned group on slot 0 -> one sample per pair
+        for (i, (q, k, v)) in rows.iter().enumerate() {
+            p.record_row(0, 0, i, q, k, v);
+        }
+        assert_eq!(p.snapshot().unwrap().samples(), PAIRS.len() as u64);
+        // the row path must agree with the block path bit-for-bit: feed the
+        // same rows through record_block on layer 1
+        let mut qs = Vec::new();
+        let mut kt = vec![0f32; hkv * g * dh];
+        let mut vt = vec![0f32; hkv * g * dh];
+        for (i, (q, k, v)) in rows.iter().enumerate() {
+            qs.extend_from_slice(q);
+            for h in 0..hkv {
+                kt[(h * g + i) * dh..(h * g + i + 1) * dh]
+                    .copy_from_slice(&k[h * dh..(h + 1) * dh]);
+                vt[(h * g + i) * dh..(h * g + i + 1) * dh]
+                    .copy_from_slice(&v[h * dh..(h + 1) * dh]);
+            }
+        }
+        p.record_block(1, 0, &qs, &kt, &vt);
+        let snap = p.snapshot().unwrap();
+        for pair in PAIRS {
+            let a = snap.metrics(0, Mode::Token, pair).unwrap();
+            let b = snap.metrics(1, Mode::Token, pair).unwrap();
+            assert_eq!(a.e_o, b.e_o, "row path == block path for {}", pair.label());
+            assert_eq!(a.e_k, b.e_k);
+        }
+        // discontinuity: a partial group interrupted by a slot reset never
+        // completes, and rows resuming mid-group are dropped
+        let mut p2 = SensitivityProbe::new(&c, &specs, 1, &pc, false);
+        for (i, (q, k, v)) in rows.iter().enumerate().take(g / 2) {
+            p2.record_row(0, 0, i, q, k, v);
+        }
+        p2.reset_slot(0);
+        for (i, (q, k, v)) in rows.iter().enumerate().skip(g / 2) {
+            p2.record_row(0, 0, i, q, k, v);
+        }
+        assert_eq!(p2.snapshot().unwrap().samples(), 0, "no bit-faithful whole group");
+    }
+
+    #[test]
+    fn mode_override_evaluates_full_grid() {
+        let c = cfg();
+        // Fp specs would probe nothing by default; the override forces the
+        // offline profiler's grid (the parity-test configuration)
+        let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, c.n_layers);
+        let pc = ProbeConfig {
+            every: 1,
+            modes: vec![Mode::Token, Mode::Kivi],
+            ..ProbeConfig::default()
+        };
+        let mut p = SensitivityProbe::new(&c, &specs, 1, &pc, false);
+        let (qs, kt, vt) = group_capture(&c, 5);
+        p.record_block(0, 0, &qs, &kt, &vt);
+        let snap = p.snapshot().unwrap();
+        assert_eq!(snap.layers[0].errors.len(), 2 * PAIRS.len());
+        assert!(snap.metrics(0, Mode::Token, PAIRS[8]).is_some());
+        assert!(snap.metrics(0, Mode::Kivi, PAIRS[0]).is_some());
+        // default (no override) on Fp specs probes nothing at all
+        let mut p2 = SensitivityProbe::new(
+            &c,
+            &specs,
+            1,
+            &ProbeConfig { every: 1, ..ProbeConfig::default() },
+            false,
+        );
+        p2.record_block(0, 0, &qs, &kt, &vt);
+        assert_eq!(p2.snapshot().unwrap().samples(), 0);
+    }
+
+    #[test]
+    fn drift_fires_only_past_the_envelope() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(2, 2), c.n_layers);
+        let (qs, kt, vt) = group_capture(&c, 6);
+        // generous bounds: no drift
+        let wide = Envelope {
+            layers: vec![EnvelopeBound { e_k: 1e9, e_v: 1e9, e_a: 1e9, e_o: 1e9 }; c.n_layers],
+        };
+        let mut p = SensitivityProbe::new(
+            &c,
+            &specs,
+            1,
+            &ProbeConfig { every: 1, envelope: Some(wide), ..ProbeConfig::default() },
+            false,
+        );
+        p.record_block(0, 0, &qs, &kt, &vt);
+        assert_eq!(p.drift_alerts(), 0);
+        // zero bounds: every sampled group on the served spec violates
+        let tight = Envelope { layers: vec![EnvelopeBound::default(); c.n_layers] };
+        let mut p2 = SensitivityProbe::new(
+            &c,
+            &specs,
+            1,
+            &ProbeConfig { every: 1, envelope: Some(tight), ..ProbeConfig::default() },
+            false,
+        );
+        p2.record_block(0, 0, &qs, &kt, &vt);
+        p2.record_block(2, 0, &qs, &kt, &vt);
+        assert_eq!(p2.drift_alerts(), 2, "one violation per sampled group on the served spec");
+        let snap = p2.snapshot().unwrap();
+        assert_eq!(snap.layers[0].drift_alerts, 1);
+        assert_eq!(snap.layers[1].drift_alerts, 0);
+        assert_eq!(snap.layers[2].drift_alerts, 1);
+        assert_eq!(snap.drift_alerts, 2);
+    }
+
+    #[test]
+    fn kv_group_hook_records_kv_split_only() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 4), c.n_layers);
+        let pc = ProbeConfig { every: 2, ..ProbeConfig::default() };
+        let mut p = SensitivityProbe::new(&c, &specs, 1, &pc, true);
+        let g = c.group;
+        let mut r = Rng::seed(7);
+        let k = rand_rows(g * c.n_kv_heads * c.head_dim, &mut r);
+        let v = rand_rows(g * c.n_kv_heads * c.head_dim, &mut r);
+        p.record_kv_group(0, 0, &k, &v); // commit 0: sampled
+        p.record_kv_group(0, 0, &k, &v); // commit 1: skipped (every=2)
+        p.record_kv_group(0, 0, &k, &v); // commit 2: sampled
+        let snap = p.snapshot().unwrap();
+        assert!(snap.kv_only);
+        let m = snap.metrics(0, Mode::Kivi, PrecisionPair::new(4, 4)).unwrap();
+        assert!(m.e_k > 0.0 && m.e_v > 0.0, "kv errors measured");
+        assert_eq!(m.e_a, 0.0, "no attention shadow on the kv-only path");
+        assert_eq!(m.e_o, 0.0);
+        let (_, _, count, _) = snap.layers[0].errors[0];
+        assert_eq!(count, 2, "commit ordinal sampling: 2 of 3");
+    }
+
+    #[test]
+    fn envelope_json_round_trips() {
+        let env = Envelope {
+            layers: vec![
+                EnvelopeBound { e_k: 0.01, e_v: 0.02, e_a: 0.003, e_o: 0.04 },
+                EnvelopeBound { e_k: 0.05, e_v: 0.06, e_a: 0.007, e_o: 0.08 },
+            ],
+        };
+        let j = env.to_json();
+        let re = Envelope::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(env, re);
+    }
+
+    #[test]
+    fn snapshot_json_schema() {
+        let c = cfg();
+        let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 4), c.n_layers);
+        let pc = ProbeConfig { every: 1, ..ProbeConfig::default() };
+        let mut p = SensitivityProbe::new(&c, &specs, 1, &pc, false);
+        let (qs, kt, vt) = group_capture(&c, 8);
+        p.record_block(0, 0, &qs, &kt, &vt);
+        let j = p.snapshot().unwrap().to_json();
+        let re = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(re.get("drift_alerts").unwrap().as_usize().unwrap(), 0);
+        let layers = re.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), c.n_layers);
+        assert_eq!(layers[0].get("mode").unwrap().as_str().unwrap(), "kivi");
+        assert_eq!(layers[0].get("pair").unwrap().as_str().unwrap(), "K8V4");
+        let errors = layers[0].get("errors").unwrap().as_arr().unwrap();
+        assert_eq!(errors.len(), PAIRS.len());
+        assert!(errors[0].get("e_o").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(errors[0].get("count").unwrap().as_usize().unwrap(), 1);
+    }
+}

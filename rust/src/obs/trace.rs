@@ -45,6 +45,9 @@ pub enum EventKind {
     Resume,
     /// Request finished and responded (arg = tokens delivered).
     Complete,
+    /// Online quantization error exceeded the calibrated envelope (arg =
+    /// cumulative drift-alert count at emission time).
+    Drift,
 }
 
 impl EventKind {
@@ -59,6 +62,7 @@ impl EventKind {
             EventKind::SwapIn => "swap_in",
             EventKind::Resume => "resume",
             EventKind::Complete => "complete",
+            EventKind::Drift => "drift",
         }
     }
 }

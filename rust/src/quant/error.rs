@@ -89,6 +89,27 @@ fn rel_err(a: &[f32], b: &[f32]) -> f64 {
     num / den.max(1e-12)
 }
 
+/// K/V-only error split for callers that hold no query capture (the XLA
+/// serving arm cannot see Q inside its compiled executables): simulate
+/// quantize→dequantize on the fp shadow and return `(e_k, e_v)` — the same
+/// relative-error definition `layer_errors` uses, without the attention
+/// terms. k/v: [Hkv, S, Dh].
+pub fn kv_errors(
+    k: &[f32],
+    v: &[f32],
+    spec: LayerSpec,
+    n_kv_heads: usize,
+    s: usize,
+    head_dim: usize,
+    group: usize,
+) -> Result<(f64, f64)> {
+    let mut k_hat = k.to_vec();
+    let mut v_hat = v.to_vec();
+    fake_quant_cache(&mut k_hat, true, spec, n_kv_heads, s, head_dim, group)?;
+    fake_quant_cache(&mut v_hat, false, spec, n_kv_heads, s, head_dim, group)?;
+    Ok((rel_err(k, &k_hat), rel_err(v, &v_hat)))
+}
+
 /// Causal attention over a single head's K/V; returns (scores, out) so the
 /// caller can diff against the quantized run.
 /// q: [S, Hq, Dh]; the head's kv index is h / (Hq/Hkv).

@@ -35,6 +35,10 @@ pub struct TunedConfig {
     pub equivalent_bits: f64,
     pub accuracy: f64,
     pub label: String,
+    /// Per-layer calibration error bounds (peak over the calibration
+    /// prompts at each layer's served pair) — the online drift detector's
+    /// reference. `None` on configs saved before the envelope existed.
+    pub envelope: Option<crate::obs::Envelope>,
 }
 
 impl TunedConfig {
@@ -55,11 +59,12 @@ impl TunedConfig {
             equivalent_bits: point.bits,
             accuracy: point.accuracy,
             label: format!("KVTuner-C{:.2}", point.bits),
+            envelope: None,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("model", s(self.model.clone())),
             ("mode", s(self.mode.as_str())),
             ("equivalent_bits", num(self.equivalent_bits)),
@@ -69,7 +74,11 @@ impl TunedConfig {
                 "layers",
                 arr(self.specs.iter().map(|sp| s(sp.pair.label()))),
             ),
-        ])
+        ];
+        if let Some(env) = &self.envelope {
+            pairs.push(("envelope", env.to_json()));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<TunedConfig> {
@@ -80,6 +89,10 @@ impl TunedConfig {
             .iter()
             .map(|p| Ok(LayerSpec { mode, pair: PrecisionPair::parse(p.as_str()?)? }))
             .collect::<Result<Vec<_>>>()?;
+        let envelope = match j.opt("envelope") {
+            Some(e) => Some(crate::obs::Envelope::from_json(e)?),
+            None => None,
+        };
         Ok(TunedConfig {
             model: j.get("model")?.as_str()?.to_string(),
             mode,
@@ -87,6 +100,7 @@ impl TunedConfig {
             equivalent_bits: j.get("equivalent_bits")?.as_f64()?,
             accuracy: j.get("accuracy")?.as_f64()?,
             label: j.get("label")?.as_str()?.to_string(),
+            envelope,
         })
     }
 
@@ -211,7 +225,10 @@ pub fn run_pipeline(
     let mut configs = Vec::new();
     for &ceil in &opts.moo.bit_constraints {
         if let Some(p) = select_under_constraint(&front, ceil) {
-            configs.push(TunedConfig::from_point(&weights.model_name, mode, &groups, &p, n_layers));
+            let mut tc =
+                TunedConfig::from_point(&weights.model_name, mode, &groups, &p, n_layers);
+            tc.envelope = Some(prof.envelope_for(&tc.specs));
+            configs.push(tc);
         }
     }
     configs.dedup_by(|a, b| a.equivalent_bits == b.equivalent_bits);

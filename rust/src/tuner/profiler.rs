@@ -10,14 +10,18 @@ use anyhow::Result;
 
 use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
 use crate::model::{RefEngine, Weights};
+use crate::obs::{Envelope, EnvelopeBound};
 use crate::quant::error::{layer_errors, ErrorMetrics, LayerCapture};
 use crate::util::json::{arr, num, obj, s, Json};
 
-/// errors[layer][(mode, pair)] -> metrics averaged over prompts.
+/// errors[layer][(mode, pair)] -> metrics averaged over prompts;
+/// peaks[layer][(mode, pair)] -> component-wise maxima over prompts (the
+/// calibration envelope the online drift detector compares against).
 #[derive(Debug, Clone)]
 pub struct Profile {
     pub n_layers: usize,
     pub errors: Vec<BTreeMap<(Mode, PrecisionPair), ErrorMetrics>>,
+    pub peaks: Vec<BTreeMap<(Mode, PrecisionPair), ErrorMetrics>>,
     pub n_prompts: usize,
 }
 
@@ -81,17 +85,45 @@ pub fn profile(
         })?;
 
     let mut errors = vec![BTreeMap::<(Mode, PrecisionPair), ErrorMetrics>::new(); n_layers];
+    let mut peaks = vec![BTreeMap::<(Mode, PrecisionPair), ErrorMetrics>::new(); n_layers];
     for prompt_tables in &per_prompt {
         for (l, table) in prompt_tables.iter().enumerate() {
             for (k, v) in table {
                 errors[l].entry(*k).or_default().merge(v, w);
+                let p = peaks[l].entry(*k).or_default();
+                p.e_k = p.e_k.max(v.e_k);
+                p.e_v = p.e_v.max(v.e_v);
+                p.e_a = p.e_a.max(v.e_a);
+                p.e_a_max = p.e_a_max.max(v.e_a_max);
+                p.e_o = p.e_o.max(v.e_o);
             }
         }
     }
-    Ok(Profile { n_layers, errors, n_prompts: prompts.len() })
+    Ok(Profile { n_layers, errors, peaks, n_prompts: prompts.len() })
 }
 
 impl Profile {
+    /// The calibration envelope for a served spec vector: each layer's
+    /// peak-over-prompts errors at its *own* (mode, pair). Fp layers (and
+    /// pairs outside the profiled grid) get zero bounds — the online probe
+    /// never drift-checks an Fp layer, so zeros are inert there.
+    pub fn envelope_for(&self, specs: &[LayerSpec]) -> Envelope {
+        let layers = specs
+            .iter()
+            .enumerate()
+            .map(|(l, sp)| {
+                let peak = self
+                    .peaks
+                    .get(l)
+                    .and_then(|m| m.get(&(sp.mode, sp.pair)))
+                    .copied()
+                    .unwrap_or_default();
+                EnvelopeBound { e_k: peak.e_k, e_v: peak.e_v, e_a: peak.e_a, e_o: peak.e_o }
+            })
+            .collect();
+        Envelope { layers }
+    }
+
     /// Model-average metrics for one (mode, pair) — Table 9's rows.
     pub fn model_avg(&self, mode: Mode, pair: PrecisionPair) -> ErrorMetrics {
         let mut out = ErrorMetrics::default();

@@ -158,6 +158,16 @@ fn tuned_config_json_roundtrip() {
         equivalent_bits: LayerSpec::equivalent_bits(&specs),
         accuracy: 0.93,
         label: "KVTuner-C4.50".into(),
+        envelope: Some(kvtuner::obs::Envelope {
+            layers: (0..cfg.n_layers)
+                .map(|l| kvtuner::obs::EnvelopeBound {
+                    e_k: 0.01 * (l + 1) as f64,
+                    e_v: 0.02,
+                    e_a: 0.003,
+                    e_o: 0.004,
+                })
+                .collect(),
+        }),
     };
     let path = std::env::temp_dir().join("kvtuner_test_cfg.json");
     c.save(&path).unwrap();
@@ -165,6 +175,13 @@ fn tuned_config_json_roundtrip() {
     assert_eq!(back.specs, specs);
     assert_eq!(back.label, c.label);
     assert!((back.equivalent_bits - c.equivalent_bits).abs() < 1e-9);
+    // the calibration envelope rides through the JSON round trip, and its
+    // absence (configs saved before it existed) parses as None
+    assert_eq!(back.envelope, c.envelope);
+    let mut legacy = c.clone();
+    legacy.envelope = None;
+    legacy.save(&path).unwrap();
+    assert_eq!(tuner::TunedConfig::load(&path).unwrap().envelope, None);
 }
 
 #[test]

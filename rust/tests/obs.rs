@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
-use kvtuner::engine::NativeEngine;
+use kvtuner::engine::{EngineCore, NativeEngine};
 use kvtuner::kvcache::{PagedOptions, SwapPolicy};
 use kvtuner::obs::{EventKind, TraceEvent, TraceSink, Tracer};
 use kvtuner::util::json::Json;
@@ -222,4 +222,86 @@ fn scheduler_trace_records_preempt_swap_resume_lifecycle() {
     assert!(s.total_p50 > 0.0 && s.total_p99 >= s.total_p50);
     assert!(s.tpot_p50 > 0.0, "18-token requests must record TPOT");
     assert!(s.step_p50 > 0.0, "decode steps must record wall time");
+}
+
+/// Regression for the profiler's per-layer live-KV peak: the highest
+/// occupancy can exist only *between* engine steps. Two 24-token prompts
+/// (3 full pages each of a 7-page pool) are resident together after
+/// prefill — which never samples — and the very first decode tick must
+/// evict one before the batched step runs, so the step path's own
+/// sampling never sees the 48-token moment. Only the scheduler's
+/// swap-site `sample_kv_live` calls (just before eviction, and again
+/// after swap-in) can record it.
+#[test]
+fn kv_live_peak_includes_the_pre_eviction_moment() {
+    let c = cfg();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), c.n_layers);
+    let w = kvtuner::model::Weights::synthetic(&c, 6);
+    let paged = PagedOptions {
+        total_blocks: Some(7),
+        swap_mib: Some(4.0),
+        swap_policy: SwapPolicy::Always,
+        ..PagedOptions::default()
+    };
+    let mk = || {
+        NativeEngine::new(&c, w.clone(), specs.clone(), 3, 64, 8, 1, Some(paged.clone())).unwrap()
+    };
+    // distinct prompts, so no page is shared and eviction must free real
+    // bytes rather than collapse onto a common prefix
+    let pa: Vec<i32> = (0..24).map(|j| ((j * 5 + 1) % c.vocab) as i32).collect();
+    let pb: Vec<i32> = (0..24).map(|j| ((j * 11 + 3) % c.vocab) as i32).collect();
+    let pc: Vec<i32> = (0..9).map(|j| ((j * 3 + 2) % c.vocab) as i32).collect();
+
+    // reference: per-layer live bytes with both prompts resident at once —
+    // exactly the state the scheduled run reaches right before eviction
+    let mut reference = mk();
+    reference.prefill(0, &pa).unwrap();
+    reference.prefill(1, &pb).unwrap();
+    let expected = reference.cache().layer_kv_live();
+    assert!(expected.iter().all(|&b| b > 0), "reference must hold bytes at every layer");
+
+    let mut engine = mk();
+    engine.set_profiling(true);
+    let metrics = Arc::new(Metrics::default());
+    let mut sched = Scheduler::new(
+        Box::new(engine),
+        "obs-worker",
+        SchedulerOptions { swap_policy: SwapPolicy::Always, ..SchedulerOptions::default() },
+        metrics.clone(),
+    );
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut responses = Vec::new();
+    let reqs = vec![(pa, 2usize), (pb, 2), (pc, 1)];
+    for (id, (prompt, max_new)) in reqs.into_iter().enumerate() {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            id: id as u64,
+            prompt,
+            max_new_tokens: max_new,
+            class: AccuracyClass::Balanced,
+            arrival: Instant::now(),
+            respond: rtx,
+        })
+        .unwrap();
+        responses.push(rrx);
+    }
+    drop(tx);
+    sched
+        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .unwrap();
+    for rrx in responses {
+        let r = rrx.recv().expect("scheduler dropped a response channel");
+        assert!(r.error.is_none(), "request {} degraded: {:?}", r.id, r.error);
+    }
+    assert!(metrics.snapshot().preemptions >= 1, "growth past the 7-page pool must preempt");
+
+    let prof = sched.engine.profile().expect("profiling was on");
+    for (l, want) in expected.iter().enumerate() {
+        assert!(
+            prof.layers[l].kv_live_peak >= *want as u64,
+            "layer {l}: live-KV peak {} missed the both-resident moment ({want} bytes) — \
+             the scheduler's swap-site sampling regressed",
+            prof.layers[l].kv_live_peak
+        );
+    }
 }

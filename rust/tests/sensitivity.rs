@@ -1,0 +1,156 @@
+//! Online sensitivity probe, end to end: (1) parity — a fully-sampled
+//! online probe over an error-free (uniform-Fp) engine reproduces the
+//! offline profiler's per-layer `ErrorMetrics` grid bit-for-bit, because
+//! both paths feed the very same tensors through `quant::error`; (2) drift
+//! — calibrate the envelope on one prompt family, serve another, and the
+//! envelope-exceeded alert must surface as a typed trace event, a metrics
+//! counter, and a line in the Chrome export.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
+use kvtuner::engine::{EngineCore, NativeEngine};
+use kvtuner::kvcache::PagedOptions;
+use kvtuner::model::Weights;
+use kvtuner::obs::{EventKind, ProbeConfig, TraceSink, Tracer};
+use kvtuner::tuner::{calib, profiler};
+use kvtuner::util::rng::Rng;
+
+/// The parity contract: with uniform-Fp layer specs the native engine's
+/// forward pass is bit-identical to the reference capture the offline
+/// profiler uses, so a probe that samples every group and evaluates the
+/// same (mode, pair) grid must land on the exact same floats. One prompt
+/// of exactly `cfg.group` tokens keeps both sides at a single sample per
+/// layer — the offline weighted merge and the online sum/count mean are
+/// both exact, so `==` on f64 is the right assertion, not a tolerance.
+#[test]
+fn online_probe_matches_offline_profiler_bit_for_bit() {
+    let c = ModelConfig::synthetic("sens-parity");
+    let w = Weights::synthetic(&c, 7);
+    let prompt: Vec<i32> = (0..c.group).map(|j| ((j * 13 + 5) % c.vocab) as i32).collect();
+    let modes = [Mode::Token, Mode::Kivi];
+
+    let prof = profiler::profile(&c, &w, &[prompt.clone()], &modes).unwrap();
+
+    // Fp specs: the served cache introduces no error, so every layer's
+    // input matches the offline FP capture bitwise. The `modes` override
+    // makes the probe evaluate the full grid even though no layer is
+    // actually quantized.
+    let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, c.n_layers);
+    let paged = Some(PagedOptions::default());
+    let mut e = NativeEngine::new(&c, w, specs, 1, 64, c.group, 1, paged).unwrap();
+    e.set_probe(ProbeConfig { every: 1, modes: modes.to_vec(), ..ProbeConfig::default() });
+    e.prefill(0, &prompt).unwrap();
+
+    let snap = EngineCore::sensitivity(&e).expect("armed probe must expose a snapshot");
+    for l in 0..c.n_layers {
+        for mode in modes {
+            for pair in PAIRS {
+                let cell = format!("L{l} {} {}", mode.as_str(), pair.label());
+                let online = snap.metrics(l, mode, pair).expect("full grid sampled");
+                let offline = prof.errors[l][&(mode, pair)];
+                assert_eq!(online.e_k, offline.e_k, "{cell}: e_k");
+                assert_eq!(online.e_v, offline.e_v, "{cell}: e_v");
+                assert_eq!(online.e_a, offline.e_a, "{cell}: e_a");
+                assert_eq!(online.e_a_max, offline.e_a_max, "{cell}: e_a_max");
+                assert_eq!(online.e_o, offline.e_o, "{cell}: e_o");
+            }
+        }
+    }
+    assert_eq!(
+        snap.samples(),
+        (c.n_layers * modes.len() * PAIRS.len()) as u64,
+        "one 32-token prompt = exactly one sample per grid cell"
+    );
+}
+
+/// Calibrate the envelope on the `Periodic` prompt family, then serve the
+/// `Random` family through a real scheduler: the out-of-distribution
+/// tensors must trip the envelope check, and the alert must be visible in
+/// all three places the issue names — the typed trace event, the metrics
+/// counter, and the Chrome export.
+#[test]
+fn drift_alert_fires_on_out_of_distribution_workload() {
+    let c = ModelConfig::synthetic("sens-drift");
+    let w = Weights::synthetic(&c, 9);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(2, 2), c.n_layers);
+    let mut rng = Rng::seed(11);
+
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|_| calib::gen_prompt(calib::PromptFamily::Periodic, c.vocab, 64, &mut rng))
+        .collect();
+    let prof = profiler::profile(&c, &w, &prompts, &[Mode::Kivi]).unwrap();
+    let env = prof.envelope_for(&specs);
+
+    let paged = Some(PagedOptions::default());
+    let mut engine = NativeEngine::new(&c, w, specs, 2, 128, c.group, 1, paged).unwrap();
+    // Headroom 0.25 makes the test deterministic rather than lenient: for a
+    // fixed bit width the *relative* quantization error varies only a small
+    // factor (~2×) across input distributions, so a served family distinct
+    // from the calibration family always lands above a quarter of the
+    // calibrated per-layer peak — while a matched family at the shipped
+    // default of 1.5× would never alert.
+    engine.set_probe(ProbeConfig {
+        every: 1,
+        headroom: 0.25,
+        envelope: Some(env),
+        modes: Vec::new(),
+    });
+
+    let tracer = Arc::new(Tracer::with_default_capacity());
+    let metrics = Arc::new(Metrics::default());
+    let mut sched = Scheduler::new(
+        Box::new(engine),
+        "sens-worker",
+        SchedulerOptions {
+            trace: Some(TraceSink { tracer: tracer.clone(), worker: 0 }),
+            ..SchedulerOptions::default()
+        },
+        metrics.clone(),
+    );
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut responses = Vec::new();
+    for id in 0..2u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let prompt = calib::gen_prompt(calib::PromptFamily::Random, c.vocab, 64, &mut rng);
+        tx.send(Request {
+            id,
+            prompt,
+            max_new_tokens: 4,
+            class: AccuracyClass::Balanced,
+            arrival: Instant::now(),
+            respond: rtx,
+        })
+        .unwrap();
+        responses.push(rrx);
+    }
+    drop(tx);
+    sched
+        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .unwrap();
+    for (id, rrx) in responses.into_iter().enumerate() {
+        let r = rrx.recv().expect("scheduler dropped a response channel");
+        assert!(r.error.is_none(), "request {id} degraded: {:?}", r.error);
+    }
+
+    let snap = metrics.snapshot();
+    assert!(snap.drift_alerts > 0, "out-of-family workload must leave the envelope");
+    let evs = tracer.events();
+    let drift: Vec<_> = evs.iter().filter(|e| e.kind == EventKind::Drift).collect();
+    assert!(!drift.is_empty(), "drift must surface as a typed trace event");
+    // the instant carries the cumulative count, and re-emits only on growth
+    let last = drift.last().unwrap();
+    assert_eq!(last.arg, snap.drift_alerts, "trace arg is the cumulative alert count");
+    assert!(
+        drift.windows(2).all(|w| w[0].arg < w[1].arg),
+        "each drift instant must report strictly more alerts than the last"
+    );
+    assert!(
+        tracer.to_chrome_json().to_string_pretty().contains("drift"),
+        "the Chrome export must make the drift alert visible"
+    );
+}
