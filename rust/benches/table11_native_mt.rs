@@ -22,6 +22,8 @@
 //!
 //! Run: `cargo bench --bench table11_native_mt`
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
@@ -30,6 +32,35 @@ use kvtuner::kvcache::PagedOptions;
 use kvtuner::model::Weights;
 use kvtuner::obs::ProbeConfig;
 use kvtuner::util::bench::Table;
+
+/// Counting wrapper over the system allocator: total bytes requested, for
+/// the decode-hot-path allocation regression below. Counts every alloc in
+/// the process, so windows are compared byte-for-byte between two runs with
+/// identical per-step work — not asserted to be zero.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
 
 const S_MAX: usize = 256;
 const PROMPT_LEN: usize = 160; // 5 full groups of 32
@@ -281,6 +312,60 @@ fn main() -> anyhow::Result<()> {
         ]);
         eprintln!("[table11_native_mt] {label} done");
     }
+    // --- allocation regression: decode_step_into's per-step allocations
+    // must not scale with the configured batch. A steady-state 16-step
+    // window with one active slot allocates exactly the same bytes whether
+    // the engine was built for batch 1 or batch 32 — any `vec![...; batch]`
+    // (or per-slot buffer) sneaking back onto the hot path breaks the
+    // byte-equality. (The remaining per-step bytes are the quantizer's
+    // commit staging, identical across windows because both runs commit at
+    // the same positions.)
+    {
+        let specs = &settings[0].1;
+        let window = |batch: usize| -> u64 {
+            let mut e = NativeEngine::new(
+                &cfg,
+                w.clone(),
+                specs.clone(),
+                batch,
+                S_MAX,
+                32,
+                1,
+                Some(PagedOptions::default()),
+            )
+            .unwrap();
+            let mut tok = e.prefill(0, &prompt).unwrap();
+            let mut tokens = vec![0i32; batch];
+            let mut active = vec![false; batch];
+            active[0] = true;
+            let mut out = vec![0i32; batch];
+            // warm-up: lazily grown buffers (gather lists, block tables)
+            // reach steady state before the measured window opens
+            for _ in 0..8 {
+                tokens[0] = tok;
+                e.decode_step_into(&tokens, &active, &mut out).unwrap();
+                tok = out[0];
+            }
+            let start = ALLOC_BYTES.load(Ordering::Relaxed);
+            for _ in 0..16 {
+                tokens[0] = tok;
+                e.decode_step_into(&tokens, &active, &mut out).unwrap();
+                tok = out[0];
+            }
+            ALLOC_BYTES.load(Ordering::Relaxed) - start
+        };
+        let (b1, b32) = (window(1), window(32));
+        assert_eq!(
+            b1, b32,
+            "decode_step_into allocations scale with batch ({b1} bytes at batch 1 vs \
+             {b32} at batch 32): a per-batch buffer returned to the decode hot path"
+        );
+        eprintln!(
+            "[table11_native_mt] decode alloc window: {b1} bytes over 16 steps, \
+             batch-size independent"
+        );
+    }
+
     t.print();
     println!("BENCH_JSON {}", t.to_json().to_string_compact());
     println!(

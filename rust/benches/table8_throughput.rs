@@ -1,21 +1,223 @@
-//! Bench: regenerate Table 8 — decode throughput (tokens/s) across KV
-//! precision settings × context lengths, KV8 as baseline, including the
-//! paper's "+X%" column. Run: `cargo bench --bench table8_throughput`
-//! (env: KVTUNER_BATCH, KVTUNER_LENS, KVTUNER_STEPS to widen the grid).
+//! Bench: decode throughput.
+//!
+//! Two arms:
+//!
+//! * **Native continuous-batching curve** (always runs, zero artifacts):
+//!   decode tokens/s over the batched native engine at 1/2/4 active slots,
+//!   against the same four requests stepped one-at-a-time through the
+//!   sequential oracle (`decode_step_sequential`) — the "no continuous
+//!   batching" baseline. The curve must be monotone nondecreasing in batch
+//!   size, every batched stream must be bit-identical to the sequential
+//!   one, and on hosts with ≥4 hardware threads batch-4 must beat the
+//!   sequential ×4 arm by ≥1.5×.
+//! * **Table 8 reproduction** (`xla` feature + artifacts): tokens/s across
+//!   KV precision settings × context lengths, KV8 as baseline, including
+//!   the paper's "+X%" column.
+//!
+//! Run: `cargo bench --bench table8_throughput`
+//! (env: KVTUNER_BATCH, KVTUNER_LENS, KVTUNER_STEPS widen the xla grid;
+//! KVTUNER_NATIVE_STEPS the native one).
 
-use std::sync::Arc;
+use std::time::Instant;
 
-use kvtuner::runtime::Runtime;
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::engine::NativeEngine;
+use kvtuner::kvcache::PagedOptions;
+use kvtuner::model::Weights;
 use kvtuner::util::bench::Table;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+const NATIVE_S_MAX: usize = 128;
+const NATIVE_PROMPT: usize = 64;
+const NATIVE_BATCHES: [usize; 3] = [1, 2, 4];
+/// Best-of per arm, so one scheduling hiccup on a shared runner cannot
+/// invert the curve.
+const REPS: usize = 3;
+
+fn best_of(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    (0..reps).map(|_| f()).fold(f64::MIN, f64::max)
+}
+
+/// Weight streaming dominates each decode step, so folding slots into one
+/// `[nb, d]`-row pass per layer is the measurable win.
+fn sim_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "sim-batch".into(),
+        n_layers: 6,
+        d_model: 128,
+        n_heads: 8,
+        n_kv_heads: 4,
+        head_dim: 16,
+        d_ff: 512,
+        vocab: 8192,
+        rope_theta: 10000.0,
+        group: 32,
+        residual: 32,
+        rms_eps: 1e-5,
+    }
+}
+
+/// The continuous-batching decode curve: aggregate tokens/s at 1/2/4 active
+/// slots through the batched path, vs 4 slots through the sequential
+/// per-slot oracle.
+fn native_batch_curve() -> anyhow::Result<()> {
+    let cfg = sim_cfg();
+    let w = Weights::synthetic(&cfg, 13);
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 8), cfg.n_layers);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = hw.min(4);
+    let steps = env_usize("KVTUNER_NATIVE_STEPS", 32);
+    let max_b = *NATIVE_BATCHES.last().unwrap();
+
+    let mk = || {
+        NativeEngine::new(
+            &cfg,
+            w.clone(),
+            specs.clone(),
+            max_b,
+            NATIVE_S_MAX,
+            32,
+            threads,
+            Some(PagedOptions::default()),
+        )
+        .unwrap()
+    };
+    let prompt_for = |slot: usize| -> Vec<i32> {
+        (0..NATIVE_PROMPT).map(|j| ((j * 31 + 17 * slot + 7) % cfg.vocab) as i32).collect()
+    };
+
+    // sequential oracle arm: the same four requests, each stepped on its own
+    let (seq_tps, seq_streams) = {
+        let mut streams_out: Vec<Vec<i32>> = Vec::new();
+        let tps = best_of(REPS, || {
+            let mut e = mk();
+            e.set_sequential_decode(true);
+            let mut tokens = vec![0i32; max_b];
+            for (b, t) in tokens.iter_mut().enumerate() {
+                *t = e.prefill(b, &prompt_for(b)).unwrap();
+            }
+            let active = vec![true; max_b];
+            let mut streams = vec![Vec::with_capacity(steps); max_b];
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let next = e.decode_step(&tokens, &active).unwrap();
+                for b in 0..max_b {
+                    streams[b].push(next[b]);
+                    tokens[b] = next[b];
+                }
+            }
+            let tps = (max_b * steps) as f64 / t0.elapsed().as_secs_f64();
+            streams_out = streams;
+            tps
+        });
+        (tps, streams_out)
+    };
+
+    let measure_batched = |nb: usize, seq_streams: &[Vec<i32>]| -> f64 {
+        best_of(REPS, || {
+            let mut e = mk();
+            let mut tokens = vec![0i32; max_b];
+            let mut active = vec![false; max_b];
+            for (b, a) in active.iter_mut().enumerate().take(nb) {
+                tokens[b] = e.prefill(b, &prompt_for(b)).unwrap();
+                *a = true;
+            }
+            let mut streams = vec![Vec::with_capacity(steps); nb];
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                let next = e.decode_step(&tokens, &active).unwrap();
+                for (b, s) in streams.iter_mut().enumerate() {
+                    s.push(next[b]);
+                    tokens[b] = next[b];
+                }
+            }
+            let tps = (nb * steps) as f64 / t0.elapsed().as_secs_f64();
+            for (b, s) in streams.iter().enumerate() {
+                assert_eq!(
+                    s, &seq_streams[b],
+                    "batch {nb} slot {b}: batched decode diverged from the sequential oracle"
+                );
+            }
+            tps
+        })
+    };
+    let mut tps: Vec<f64> =
+        NATIVE_BATCHES.iter().map(|&nb| measure_batched(nb, &seq_streams)).collect();
+
+    // folding more slots into each layer pass must never lose aggregate
+    // throughput; one re-measure before declaring failure
+    for i in 1..tps.len() {
+        if tps[i] < tps[i - 1] {
+            tps[i] = tps[i].max(measure_batched(NATIVE_BATCHES[i], &seq_streams));
+        }
+        assert!(
+            tps[i] >= tps[i - 1],
+            "batched decode curve not monotone: {:.1} tok/s at batch {} < {:.1} at batch {}",
+            tps[i],
+            NATIVE_BATCHES[i],
+            tps[i - 1],
+            NATIVE_BATCHES[i - 1]
+        );
+    }
+    let mut batched_vs_seq = tps[tps.len() - 1] / seq_tps;
+    if hw >= 4 {
+        // one re-measure of the batched arm before declaring failure: a
+        // shared-runner stall can depress a whole best-of round
+        if batched_vs_seq < 1.5 {
+            let last = NATIVE_BATCHES.len() - 1;
+            tps[last] = tps[last].max(measure_batched(max_b, &seq_streams));
+            batched_vs_seq = tps[last] / seq_tps;
+        }
+        assert!(
+            batched_vs_seq >= 1.5,
+            "continuous batching must deliver ≥1.5× the sequential ×{max_b} arm on a \
+             ≥4-thread host (got {batched_vs_seq:.2}×)"
+        );
+    } else {
+        eprintln!(
+            "[table8] host has {hw} threads (<4): reporting the batch-4 vs sequential \
+             ratio ({batched_vs_seq:.2}×) without the 1.5× floor"
+        );
+    }
+
+    let mut t = Table::with_headers(
+        &format!(
+            "table8_native — continuous-batching decode curve ({} layers, d={}, vocab={}, \
+             prompt={NATIVE_PROMPT}, {steps} steps, threads={threads}, host threads={hw})",
+            cfg.n_layers, cfg.d_model, cfg.vocab
+        ),
+        vec!["batch".into(), "decode tok/s".into(), "vs batch 1".into()],
+    );
+    for (i, &nb) in NATIVE_BATCHES.iter().enumerate() {
+        t.row(vec![format!("{nb}"), format!("{:.1}", tps[i]), format!("{:.2}x", tps[i] / tps[0])]);
+    }
+    t.row(vec![
+        format!("seq x{max_b}"),
+        format!("{seq_tps:.1}"),
+        format!("{:.2}x", seq_tps / tps[0]),
+    ]);
+    t.print();
+    println!("BENCH_JSON {}", t.to_json().to_string_compact());
+    println!(
+        "\nbatch-{max_b} batched decode vs sequential x{max_b}: {batched_vs_seq:.2}x \
+         (bit-identical streams)"
+    );
+    Ok(())
+}
+
+/// Table 8 proper over the PJRT runtime (needs `make artifacts`).
+#[cfg(feature = "xla")]
+fn xla_table8() -> anyhow::Result<()> {
+    use std::sync::Arc;
+
+    use kvtuner::runtime::Runtime;
+
     let dir = kvtuner::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP table8: artifacts missing (run `make artifacts`)");
+        eprintln!("SKIP table8 xla arm: artifacts missing (run `make artifacts`)");
         return Ok(());
     }
     let rt = Arc::new(Runtime::load(&dir)?);
@@ -51,7 +253,15 @@ fn main() -> anyhow::Result<()> {
         let mut proj = 0.0;
         const HBM_BW: f64 = 1.5e12; // A100-class HBM bandwidth
         for &il in &lens {
-            let r = kvtuner::measure_throughput(&rt, &cfg.name, specs.clone(), batch, s_max, il, steps)?;
+            let r = kvtuner::measure_throughput(
+                &rt,
+                &cfg.name,
+                specs.clone(),
+                batch,
+                s_max,
+                il,
+                steps,
+            )?;
             bits = r.equiv_bits;
             mib = r.kv_mib;
             proj = r.projected_tps(batch, HBM_BW);
@@ -76,5 +286,14 @@ fn main() -> anyhow::Result<()> {
          reproduces Table 8's ordering: lower equivalent bits -> proportionally higher\n\
          throughput, with the tuned mix between its min/max pairs."
     );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    native_batch_curve()?;
+    #[cfg(feature = "xla")]
+    xla_table8()?;
+    #[cfg(not(feature = "xla"))]
+    eprintln!("SKIP table8 xla arm: built without the xla feature");
     Ok(())
 }

@@ -40,6 +40,9 @@ SUBCOMMANDS
   serve       run the multi-engine router on synthetic load
               --model tiny --requests 16 --batch 2
               --synthetic (native backend: synthetic weights, no artifacts)
+              --prefill-chunk N (chunked-prefill interleaving: long prompts
+              advance N tokens per scheduler tick between batched decode
+              steps; default 32, numerics-neutral at any N)
 
 COMMON FLAGS
   --artifacts DIR   artifact directory (default artifacts/tiny or $KVTUNER_ARTIFACTS)

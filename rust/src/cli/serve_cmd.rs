@@ -47,6 +47,9 @@ pub fn run(args: &Args) -> Result<()> {
     };
     let batch = args.usize("batch", default_batch)?;
     let s_max = args.usize("smax", 256)?;
+    // chunk size for interleaved (chunked) prefill: long prompts advance
+    // this many tokens per scheduler tick between batched decode steps
+    let prefill_chunk = args.usize("prefill-chunk", 32)?.max(1);
     let n_requests = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 16)?;
     let paged = super::paged_options(args)?;
@@ -85,7 +88,7 @@ pub fn run(args: &Args) -> Result<()> {
         model: model.clone(),
         batch,
         s_max,
-        prefill_chunk: 32,
+        prefill_chunk,
         paged: paged.clone(),
         backend,
         threads,

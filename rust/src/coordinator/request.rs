@@ -57,6 +57,11 @@ pub struct Response {
     pub total: Duration,
     pub engine: String,
     pub error: Option<String>,
+    /// Final-step logits for the request's slot, captured only when the
+    /// scheduler runs with `capture_logits` (the differential-churn harness
+    /// compares them bit-for-bit across scheduler arms). `None` in normal
+    /// serving — no per-request vocab-sized copy on the hot path.
+    pub final_logits: Option<Vec<f32>>,
 }
 
 /// Client-side handle: submit and wait.

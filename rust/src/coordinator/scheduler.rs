@@ -3,6 +3,17 @@
 //! batched decode steps, and completes requests through their response
 //! channels. This is the serving loop the throughput tables run on.
 //!
+//! Prefill is *chunked*: an admitted prompt advances `prefill_chunk` tokens
+//! per tick (`advance_prefills`) between batched decode steps, so a long
+//! prompt never stalls in-flight decodes — each chunk emits a
+//! `prefill_chunk` trace span, making the interleaving visible in the
+//! Chrome export. Chunk boundaries do not change numerics: the native
+//! engine's prefill decomposes identically wherever it is split
+//! (block-vs-tokenwise parity), so chunked and monolithic prefill leave
+//! bit-identical KV state. `chunked_prefill: false` runs each prefill to
+//! completion in one tick — the oracle arm of the differential-churn
+//! harness (`tests/batched_decode.rs`).
+//!
 //! With a paged engine the loop additionally admits by *block availability*
 //! (not just free slots), reuses cached prompt-prefix pages, and runs a
 //! preemption policy when the next decode step would need more pages than
@@ -47,6 +58,39 @@ struct ActiveSlot {
     next_token: i32,
     started: Instant,
     ttft: Duration,
+}
+
+/// A slot mid-chunked-prefill: its context advances `prefill_chunk` tokens
+/// per tick until the final chunk runs the lm head and the slot goes
+/// `Active`. Holds pages but takes no part in decode steps.
+struct PrefillingSlot {
+    req: Request,
+    /// Full context to prefill: the clamped prompt, plus the already-
+    /// generated tokens (minus the pending decode input) on a recompute
+    /// resume.
+    ctx: Vec<i32>,
+    /// Tokens of `ctx` already in the cache (reused prefix + done chunks).
+    done: usize,
+    /// Prefix tokens served from the shared-prefix index at admission.
+    reused: usize,
+    started: Instant,
+    /// `Some((generated, ttft))` on a recompute resume: the tokens produced
+    /// before preemption (the re-prefill's recomputed first token is
+    /// discarded) and the original time-to-first-token.
+    resume: Option<(Vec<i32>, Duration)>,
+}
+
+/// One engine slot's scheduling state.
+enum Slot {
+    Idle,
+    Prefilling(PrefillingSlot),
+    Active(ActiveSlot),
+}
+
+impl Slot {
+    fn is_idle(&self) -> bool {
+        matches!(self, Slot::Idle)
+    }
 }
 
 /// A preempted request waiting to resume. `swap: Some` means its KV state
@@ -168,9 +212,21 @@ pub struct Scheduler {
     pub engine: Box<dyn EngineCore>,
     pub batcher: Batcher,
     pub metrics: Arc<Metrics>,
-    slots: Vec<Option<ActiveSlot>>,
+    slots: Vec<Slot>,
     preempted: ResumeQueue<Preempted>,
     swap_policy: SwapPolicy,
+    /// Advance prompts `prefill_chunk` tokens per tick between decode steps
+    /// (the continuous-batching default); `false` runs every prefill to
+    /// completion in one tick — the differential harness's oracle arm.
+    chunked_prefill: bool,
+    /// Copy each request's final-step logits into its `Response` (harness
+    /// bit-comparison); off by default — no vocab-sized copy in serving.
+    capture_logits: bool,
+    /// Persistent decode-step buffers (tokens / active mask / next tokens),
+    /// refilled in place so the serving loop allocates nothing per step.
+    step_tokens: Vec<i32>,
+    step_active: Vec<bool>,
+    step_next: Vec<i32>,
     /// Lifecycle trace sink; `None` keeps the serving loop emission-free.
     trace: Option<TraceSink>,
     /// Drift alerts already traced, so each new envelope violation emits
@@ -185,6 +241,11 @@ pub struct SchedulerOptions {
     /// Preemption eviction policy (recompute vs host swap); only effective
     /// when the engine's cache backend has a swap tier.
     pub swap_policy: SwapPolicy,
+    /// Chunked-prefill interleaving (default on); `false` is the
+    /// run-to-completion oracle arm.
+    pub chunked_prefill: bool,
+    /// Attach final-step logits to each `Response` (harness only).
+    pub capture_logits: bool,
     /// Lifecycle trace sink (worker-tagged handle on the shared ring).
     pub trace: Option<TraceSink>,
 }
@@ -195,6 +256,8 @@ impl Default for SchedulerOptions {
             batcher: BatcherOptions::default(),
             idle_poll: Duration::from_millis(5),
             swap_policy: SwapPolicy::default(),
+            chunked_prefill: true,
+            capture_logits: false,
             trace: None,
         }
     }
@@ -212,9 +275,14 @@ impl Scheduler {
             engine,
             batcher: Batcher::new(opts.batcher),
             metrics,
-            slots: (0..batch).map(|_| None).collect(),
+            slots: (0..batch).map(|_| Slot::Idle).collect(),
             preempted: ResumeQueue::default(),
             swap_policy: opts.swap_policy,
+            chunked_prefill: opts.chunked_prefill,
+            capture_logits: opts.capture_logits,
+            step_tokens: vec![0; batch],
+            step_active: vec![false; batch],
+            step_next: vec![0; batch],
             trace: opts.trace,
             drift_seen: 0,
             name: name.to_string(),
@@ -233,8 +301,22 @@ impl Scheduler {
         }
     }
 
+    /// Slots holding a request in any stage (prefilling or decoding).
     fn busy(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.slots.iter().filter(|s| !s.is_idle()).count()
+    }
+
+    /// Nothing queued, preempted, or in a slot — the drive-by-tick loop's
+    /// stop condition.
+    pub fn is_idle(&self) -> bool {
+        self.busy() == 0 && self.batcher.is_empty() && self.preempted.is_empty()
+    }
+
+    /// Enqueue one request (the harness's direct-injection path; the
+    /// serving loop feeds the batcher from its channel instead). Returns
+    /// `false` when the admission queue is full.
+    pub fn submit(&mut self, req: Request) -> bool {
+        self.batcher.push(req)
     }
 
     /// Clamp a prompt to what a slot can hold with generation room.
@@ -255,6 +337,7 @@ impl Scheduler {
             total: started.elapsed(),
             engine: self.name.clone(),
             error: Some(msg),
+            final_logits: None,
         });
     }
 
@@ -267,6 +350,8 @@ impl Scheduler {
         let total = a.started.elapsed();
         self.metrics.record_completion(a.ttft, total, toks.len());
         self.trace_instant(EventKind::Complete, a.req.id, slot, toks.len() as u64);
+        let final_logits =
+            if self.capture_logits { Some(self.engine.logits(slot).to_vec()) } else { None };
         let _ = a.req.respond.send(Response {
             id: a.req.id,
             tokens: toks,
@@ -274,6 +359,7 @@ impl Scheduler {
             total,
             engine: self.name.clone(),
             error,
+            final_logits,
         });
         self.engine.cache_mut().reset_slot(slot);
     }
@@ -290,21 +376,22 @@ impl Scheduler {
         )
     }
 
-    /// Prefill `ctx` into `slot`, reusing shared prefix pages when the
-    /// backend has them. Returns the first generated token and the number of
-    /// prefix tokens served from cache. Prefix metrics are recorded only on
-    /// success so an `OutOfPages` retry does not double-count.
-    fn prefill_with_reuse(&mut self, slot: usize, req_id: u64, ctx: &[i32]) -> Result<(i32, usize)> {
+    /// Install a request into `slot` for chunked prefill: reset, claim any
+    /// shared prefix pages, and let `advance_prefills` drive the chunks.
+    /// Prefix *metrics* are deferred to prefill completion so an
+    /// `OutOfPages` retry does not double-count.
+    fn start_prefill(
+        &mut self,
+        slot: usize,
+        req: Request,
+        ctx: Vec<i32>,
+        started: Instant,
+        resume: Option<(Vec<i32>, Duration)>,
+    ) {
         self.engine.cache_mut().reset_slot(slot);
-        let reused = self.engine.cache_mut().prefill_reuse(slot, ctx);
-        let t0 = Instant::now();
-        let first = self.engine.prefill(slot, &ctx[reused..])?;
-        // tokens actually computed (reused prefix excluded) -> prefill tok/s
-        self.metrics.record_prefill(t0.elapsed(), ctx.len() - reused);
-        self.trace_span(EventKind::PrefillChunk, req_id, slot, t0, (ctx.len() - reused) as u64);
-        self.metrics.record_prefix(reused);
-        self.engine.cache_mut().register_prefix(slot, ctx);
-        Ok((first, reused))
+        let reused = self.engine.cache_mut().prefill_reuse(slot, &ctx);
+        self.slots[slot] =
+            Slot::Prefilling(PrefillingSlot { req, ctx, done: reused, reused, started, resume });
     }
 
     /// Place a resumed/admitted request into its slot (or finish it when no
@@ -313,7 +400,7 @@ impl Scheduler {
         if self.done_after_prefill(&a, slot) {
             self.finish(slot, a, None);
         } else {
-            self.slots[slot] = Some(a);
+            self.slots[slot] = Slot::Active(a);
         }
     }
 
@@ -325,7 +412,7 @@ impl Scheduler {
     fn admit(&mut self) -> Result<()> {
         let mut admitted = 0usize;
         while admitted < self.batcher.opts.max_admit_per_tick {
-            let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let Some(slot) = self.slots.iter().position(|s| s.is_idle()) else { break };
 
             if let Some(mut pe) = self.preempted.next() {
                 if let Some(sh) = pe.swap.take() {
@@ -383,7 +470,9 @@ impl Scheduler {
                 }
 
                 // recompute resume: context = clamped prompt + all generated
-                // but the last token (which becomes the next decode input)
+                // but the last token (which becomes the next decode input);
+                // re-prefilling it restores the exact pre-preemption state,
+                // chunked like any fresh prompt
                 let mut ctx = self.clamp_prompt(&pe.req.prompt, pe.req.max_new_tokens);
                 ctx.extend_from_slice(&pe.generated[..pe.generated.len() - 1]);
                 if !self.engine.cache().can_admit(ctx.len(), pe.req.max_new_tokens) {
@@ -399,35 +488,7 @@ impl Scheduler {
                     self.preempted.requeue(pe);
                     break;
                 }
-                match self.prefill_with_reuse(slot, pe.req.id, &ctx) {
-                    Ok((_recomputed_first, reused)) => {
-                        self.metrics.record_reprefill(ctx.len() - reused);
-                        self.trace_instant(
-                            EventKind::Resume,
-                            pe.req.id,
-                            slot,
-                            (ctx.len() - reused) as u64,
-                        );
-                        let next = *pe.generated.last().unwrap();
-                        let a = ActiveSlot {
-                            req: pe.req,
-                            generated: pe.generated,
-                            next_token: next,
-                            started: pe.started,
-                            ttft: pe.ttft,
-                        };
-                        self.occupy(slot, a);
-                    }
-                    Err(e) => {
-                        if e.downcast_ref::<OutOfPages>().is_some() && self.busy() > 0 {
-                            // pages will free as in-flight work completes
-                            self.engine.cache_mut().reset_slot(slot);
-                            self.preempted.requeue(pe);
-                            break;
-                        }
-                        self.respond_error(pe.req, pe.started, format!("resume failed: {e:#}"));
-                    }
-                }
+                self.start_prefill(slot, pe.req, ctx, pe.started, Some((pe.generated, pe.ttft)));
                 admitted += 1;
                 continue;
             }
@@ -455,30 +516,7 @@ impl Scheduler {
             let started = Instant::now();
             let prompt = self.clamp_prompt(&req.prompt, req.max_new_tokens);
             self.trace_instant(EventKind::Admit, req.id, slot, prompt.len() as u64);
-            match self.prefill_with_reuse(slot, req.id, &prompt) {
-                Ok((first, _reused)) => {
-                    let ttft = started.elapsed();
-                    let a = ActiveSlot {
-                        req,
-                        generated: vec![first],
-                        next_token: first,
-                        started,
-                        ttft,
-                    };
-                    self.occupy(slot, a);
-                }
-                Err(e) => {
-                    if e.downcast_ref::<OutOfPages>().is_some()
-                        && (self.busy() > 0 || !self.preempted.is_empty())
-                    {
-                        // admission raced the estimate; retry once pages free
-                        self.engine.cache_mut().reset_slot(slot);
-                        self.batcher.push_front(req);
-                        break;
-                    }
-                    self.respond_error(req, started, format!("prefill failed: {e:#}"));
-                }
-            }
+            self.start_prefill(slot, req, prompt, started, None);
             admitted += 1;
         }
         // cumulative staging-copy traffic (prefill gathers included); the
@@ -487,6 +525,114 @@ impl Scheduler {
             .gather_bytes
             .store(self.engine.gather_bytes(), Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Advance every mid-prefill slot by one chunk (or to completion when
+    /// chunked prefill is off). The final chunk runs the lm head, produces
+    /// the first token, and flips the slot `Active`; non-final chunks only
+    /// extend the KV state. Runs between decode steps, so a long prompt
+    /// costs each in-flight decode at most one chunk of latency per tick.
+    fn advance_prefills(&mut self) -> Result<()> {
+        for slot in 0..self.slots.len() {
+            if !matches!(self.slots[slot], Slot::Prefilling(_)) {
+                continue;
+            }
+            let Slot::Prefilling(mut p) = std::mem::replace(&mut self.slots[slot], Slot::Idle)
+            else {
+                unreachable!()
+            };
+            let chunk =
+                if self.chunked_prefill { self.engine.prefill_chunk().max(1) } else { usize::MAX };
+            let remaining = p.ctx.len() - p.done;
+            if remaining > chunk {
+                // non-final chunk: KV state only, no lm head
+                let t0 = Instant::now();
+                match self.engine.prefill_extend(slot, &p.ctx[p.done..p.done + chunk]) {
+                    Ok(()) => {
+                        self.metrics.record_prefill(t0.elapsed(), chunk);
+                        self.trace_span(EventKind::PrefillChunk, p.req.id, slot, t0, chunk as u64);
+                        p.done += chunk;
+                        self.slots[slot] = Slot::Prefilling(p);
+                    }
+                    Err(e) => self.fail_prefill(slot, p, e),
+                }
+                continue;
+            }
+            // final chunk: compute logits + first token
+            let t0 = Instant::now();
+            match self.engine.prefill(slot, &p.ctx[p.done..]) {
+                Ok(first) => {
+                    self.metrics.record_prefill(t0.elapsed(), remaining);
+                    self.trace_span(EventKind::PrefillChunk, p.req.id, slot, t0, remaining as u64);
+                    self.metrics.record_prefix(p.reused);
+                    self.engine.cache_mut().register_prefix(slot, &p.ctx);
+                    let a = match p.resume {
+                        Some((generated, ttft)) => {
+                            // the recomputed first token is discarded: the
+                            // pending decode input is the last generated one
+                            self.metrics.record_reprefill(p.ctx.len() - p.reused);
+                            self.trace_instant(
+                                EventKind::Resume,
+                                p.req.id,
+                                slot,
+                                (p.ctx.len() - p.reused) as u64,
+                            );
+                            let next = *generated.last().unwrap();
+                            ActiveSlot {
+                                req: p.req,
+                                generated,
+                                next_token: next,
+                                started: p.started,
+                                ttft,
+                            }
+                        }
+                        None => {
+                            let ttft = p.started.elapsed();
+                            ActiveSlot {
+                                req: p.req,
+                                generated: vec![first],
+                                next_token: first,
+                                started: p.started,
+                                ttft,
+                            }
+                        }
+                    };
+                    self.occupy(slot, a);
+                }
+                Err(e) => self.fail_prefill(slot, p, e),
+            }
+        }
+        Ok(())
+    }
+
+    /// A prefill chunk failed: free the slot's partial state, then retry
+    /// later (`OutOfPages` with other work in flight — requeued at the
+    /// front so ordering is preserved) or fail the request loudly.
+    fn fail_prefill(&mut self, slot: usize, p: PrefillingSlot, e: anyhow::Error) {
+        self.engine.cache_mut().reset_slot(slot);
+        let oop = e.downcast_ref::<OutOfPages>().is_some();
+        match p.resume {
+            // a resume retries only while other slots hold pages that will
+            // free; with nothing in flight, retrying would spin forever
+            Some((generated, ttft)) if oop && self.busy() > 0 => {
+                self.preempted.requeue(Preempted {
+                    req: p.req,
+                    generated,
+                    started: p.started,
+                    ttft,
+                    swap: None,
+                })
+            }
+            // a fresh request additionally waits on preempted peers, which
+            // re-admit ahead of it and then either drain or fail loudly
+            None if oop && (self.busy() > 0 || !self.preempted.is_empty()) => {
+                self.batcher.push_front(p.req)
+            }
+            _ => {
+                let started = p.started;
+                self.respond_error(p.req, started, format!("prefill failed: {e:#}"));
+            }
+        }
     }
 
     /// Evict request(s) until the next decode step fits in the page pool
@@ -500,7 +646,7 @@ impl Scheduler {
                 .slots
                 .iter()
                 .enumerate()
-                .filter_map(|(i, s)| s.as_ref().map(|_| i))
+                .filter_map(|(i, s)| matches!(s, Slot::Active(_)).then_some(i))
                 .collect();
             if active.is_empty() {
                 return;
@@ -509,10 +655,22 @@ impl Scheduler {
                 return;
             }
             if active.len() == 1 {
+                // before truncating the lone decoding request, cancel a
+                // mid-prefill slot: requeueing a prompt that has produced
+                // nothing yet is strictly cheaper than cutting short a
+                // generation already under way
+                if let Some(pslot) =
+                    self.slots.iter().position(|s| matches!(s, Slot::Prefilling(_)))
+                {
+                    self.cancel_prefill(pslot);
+                    continue;
+                }
                 // nothing left to evict: deliver what we have, marked as
                 // truncated so the client can tell it from natural completion
                 let i = active[0];
-                let a = self.slots[i].take().unwrap();
+                let Slot::Active(a) = std::mem::replace(&mut self.slots[i], Slot::Idle) else {
+                    unreachable!()
+                };
                 let got = a.generated.len();
                 let want = a.req.max_new_tokens;
                 self.finish(
@@ -527,7 +685,7 @@ impl Scheduler {
             let victim = *active
                 .iter()
                 .max_by_key(|&&i| {
-                    let a = self.slots[i].as_ref().unwrap();
+                    let Slot::Active(a) = &self.slots[i] else { unreachable!() };
                     let pages = self.engine.cache().slot_pages(i);
                     let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
                     // ties fall to the youngest (largest start time)
@@ -535,7 +693,9 @@ impl Scheduler {
                 })
                 .unwrap();
             let pages_held = self.engine.cache().slot_pages(victim);
-            let a = self.slots[victim].take().unwrap();
+            let Slot::Active(a) = std::mem::replace(&mut self.slots[victim], Slot::Idle) else {
+                unreachable!()
+            };
             // capture the victim's live-KV peak before eviction removes its
             // bytes from `layer_kv_live` (the step path only samples after)
             self.engine.sample_kv_live();
@@ -594,24 +754,52 @@ impl Scheduler {
         }
     }
 
-    /// One batched decode step over all active slots; completes finished
-    /// requests. Returns number of active slots before the step.
+    /// Cancel a mid-prefill slot: free its pages and send its request back
+    /// to where it came from (front of the admission queue, or head of the
+    /// resume queue for a recompute resume) so ordering is preserved.
+    fn cancel_prefill(&mut self, slot: usize) {
+        let Slot::Prefilling(p) = std::mem::replace(&mut self.slots[slot], Slot::Idle) else {
+            unreachable!()
+        };
+        let pages = self.engine.cache().slot_pages(slot);
+        // capture the pre-eviction live-KV peak, as for decode victims
+        self.engine.sample_kv_live();
+        self.engine.cache_mut().reset_slot(slot);
+        self.metrics.record_preemption();
+        self.trace_instant(EventKind::Preempt { swap: false }, p.req.id, slot, pages as u64);
+        match p.resume {
+            Some((generated, ttft)) => self.preempted.requeue(Preempted {
+                req: p.req,
+                generated,
+                started: p.started,
+                ttft,
+                swap: None,
+            }),
+            None => self.batcher.push_front(p.req),
+        }
+    }
+
+    /// One batched decode step over all decoding slots; completes finished
+    /// requests. Returns the number of decoding slots before the step. The
+    /// step's buffers are engine-resident (`decode_step_into`) plus the
+    /// scheduler's persistent token/mask vectors — no per-step allocation.
     fn decode_tick(&mut self) -> Result<usize> {
         let batch = self.slots.len();
-        let mut tokens = vec![0i32; batch];
-        let mut active = vec![false; batch];
+        let mut busy = 0usize;
         for (i, s) in self.slots.iter().enumerate() {
-            if let Some(a) = s {
-                tokens[i] = a.next_token;
-                active[i] = true;
+            if let Slot::Active(a) = s {
+                self.step_tokens[i] = a.next_token;
+                self.step_active[i] = true;
+                busy += 1;
+            } else {
+                self.step_active[i] = false;
             }
         }
-        let busy = self.busy();
         if busy == 0 {
             return Ok(0);
         }
         let t0 = Instant::now();
-        let next = self.engine.decode_step(&tokens, &active)?;
+        self.engine.decode_step_into(&self.step_tokens, &self.step_active, &mut self.step_next)?;
         // record_decode also stores the per-step wall-time gauge
         // (last_decode_nanos), updated here each tick like gather_bytes
         self.metrics.record_decode(t0.elapsed(), busy, busy);
@@ -628,8 +816,8 @@ impl Scheduler {
             // one span per active slot so each slot's track shows its share
             // of the batched step
             for i in 0..batch {
-                if active[i] {
-                    if let Some(a) = &self.slots[i] {
+                if self.step_active[i] {
+                    if let Slot::Active(a) = &self.slots[i] {
                         self.trace_span(EventKind::DecodeStep, a.req.id, i, t0, 1);
                     }
                 }
@@ -637,10 +825,10 @@ impl Scheduler {
         }
 
         for i in 0..batch {
-            let done = if let Some(a) = &mut self.slots[i] {
-                if active[i] {
-                    a.generated.push(next[i]);
-                    a.next_token = next[i];
+            let done = if let Slot::Active(a) = &mut self.slots[i] {
+                if self.step_active[i] {
+                    a.generated.push(self.step_next[i]);
+                    a.next_token = self.step_next[i];
                 }
                 generation_done(
                     a.generated.len(),
@@ -652,11 +840,24 @@ impl Scheduler {
                 false
             };
             if done {
-                let a = self.slots[i].take().unwrap();
+                let Slot::Active(a) = std::mem::replace(&mut self.slots[i], Slot::Idle) else {
+                    unreachable!()
+                };
                 self.finish(i, a, None);
             }
         }
         Ok(busy)
+    }
+
+    /// One scheduling round: admit waiting work, advance chunked prefills,
+    /// make decode headroom, then run one batched decode step. Returns the
+    /// number of slots that decoded. This is the unit the serving loop —
+    /// and the differential-churn harness — drives.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.admit()?;
+        self.advance_prefills()?;
+        self.preempt_for_headroom();
+        self.decode_tick()
     }
 
     /// Serve until `shutdown` flips and all in-flight work drains.
@@ -678,15 +879,15 @@ impl Scheduler {
                     Err(_) => break,
                 }
             }
-            self.admit()?;
-            self.preempt_for_headroom();
-            let busy = self.decode_tick()?;
+            self.tick()?;
+            // busy() counts prefilling slots too: a worker mid-chunked-
+            // prefill is in flight even when nothing decoded this tick
             inflight.store(
-                busy + self.batcher.len() + self.preempted.len(),
+                self.busy() + self.batcher.len() + self.preempted.len(),
                 Ordering::Relaxed,
             );
 
-            if busy == 0 && self.batcher.is_empty() && self.preempted.is_empty() {
+            if self.is_idle() {
                 if shutdown.load(Ordering::Relaxed) {
                     return Ok(());
                 }

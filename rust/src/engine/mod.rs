@@ -74,9 +74,24 @@ pub trait EngineCore {
     fn cache_mut(&mut self) -> &mut dyn CacheBackend;
     /// Prefill a slot with a prompt; returns the first generated token.
     fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32>;
+    /// Advance a slot's prefill by a chunk of prompt tokens *without*
+    /// computing logits — the chunked-prefill step (only the final chunk,
+    /// fed to `prefill`, pays the lm head). The default runs a full prefill
+    /// and discards the token; engines with a headless path override it.
+    fn prefill_extend(&mut self, slot: usize, tokens: &[i32]) -> Result<()> {
+        self.prefill(slot, tokens).map(|_| ())
+    }
     /// One decode step over the whole batch; `active[b]` gates cache writes.
     /// Returns the argmax next token per slot (garbage for inactive slots).
     fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>>;
+    /// Allocation-free form of `decode_step`: the caller owns `out` (length
+    /// `batch()`), refilled in place. The serving loop's hot path — engines
+    /// with a resident output buffer override the defaulted delegation.
+    fn decode_step_into(&mut self, tokens: &[i32], active: &[bool], out: &mut [i32]) -> Result<()> {
+        let next = self.decode_step(tokens, active)?;
+        out.copy_from_slice(&next);
+        Ok(())
+    }
     /// Logits of the slot's most recent step.
     fn logits(&self, slot: usize) -> &[f32];
     /// Cumulative bytes moved by gather-to-dense staging copies (the XLA

@@ -27,8 +27,16 @@
 //! group committing at exactly the boundary the token-by-token path commits
 //! — identical numerics, ~group× fewer weight-matrix passes. The
 //! token-by-token path survives as `prefill_tokenwise`, the parity oracle.
-//! Decode steps allocate nothing: logits and all layer scratch live in the
-//! engine (plus thread-local kernel scratch), refilled in place each step.
+//!
+//! Decode is batched the same way: all active slots gather into `[nb, d]`
+//! rows and every layer runs one fused `matmul` + `attend_many` pass
+//! (`decode_batch`), one weight pass for the whole batch. The per-slot
+//! loop survives as `decode_step_sequential`, the bitwise oracle the
+//! differential-churn harness (`tests/batched_decode.rs`) drives against
+//! the batched scheduler. Decode steps allocate nothing proportional to
+//! batch or step count: next tokens, logits and all layer scratch live in
+//! the engine (plus thread-local kernel scratch), refilled in place each
+//! step (`table11_native_mt` pins this with a counting allocator).
 
 use anyhow::Result;
 
@@ -67,6 +75,47 @@ struct Scratch {
     /// Head-major `[h, g, dh]` staging for the cache-append tensor layouts.
     kt: Vec<f32>,
     vt: Vec<f32>,
+}
+
+/// Batch-dimension scratch for the batched decode step: `[batch, ...]`
+/// row-major buffers sized once at construction, plus the gathered
+/// active-slot list and the engine-resident next-token output (the buffer
+/// `decode_step` used to allocate every step).
+struct BatchScratch {
+    xs: Vec<f32>,
+    hs: Vec<f32>,
+    qs: Vec<f32>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    attns: Vec<f32>,
+    projs: Vec<f32>,
+    mlps: Vec<f32>,
+    head_hs: Vec<f32>,
+    /// Active slot indices, ascending — the gather that folds a sparse
+    /// `active` mask into dense `[nb, ...]` rows.
+    act: Vec<usize>,
+    /// Argmax next token per *slot* (not per gathered row).
+    out: Vec<i32>,
+}
+
+impl BatchScratch {
+    fn new(cfg: &ModelConfig, batch: usize) -> BatchScratch {
+        let (d, hq, hkv, dh, ff) =
+            (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff);
+        BatchScratch {
+            xs: vec![0.0; batch * d],
+            hs: vec![0.0; batch * d],
+            qs: vec![0.0; batch * hq * dh],
+            ks: vec![0.0; batch * hkv * dh],
+            vs: vec![0.0; batch * hkv * dh],
+            attns: vec![0.0; batch * hq * dh],
+            projs: vec![0.0; batch * d],
+            mlps: vec![0.0; batch * ff],
+            head_hs: vec![0.0; batch * d],
+            act: Vec::with_capacity(batch),
+            out: vec![0; batch],
+        }
+    }
 }
 
 impl Scratch {
@@ -213,6 +262,233 @@ fn forward_token(
         }
         prof.stop(l, Phase::Mlp, t_mlp);
     }
+    Ok(())
+}
+
+/// One decode step for all active slots at once: the gathered `[nb, d]`
+/// hidden rows run each layer as one fused pass — `rms_norm_rows` +
+/// `matmul` QKV/MLP (one weight pass for the whole batch), per-slot rope /
+/// commit at each slot's own position, and `attend_many` over all block
+/// tables in one pool dispatch. Every per-output accumulation is the exact
+/// `forward_token` + `lm_head` loop (one-row `matmul` ≡ `matvec_acc`,
+/// `attend_many` reuses `attend_head`, `matvec_rows_many` dots are
+/// `matvec_rows` dots), so the step is bit-identical to stepping the slots
+/// sequentially — the `decode_step_sequential` oracle — at any thread
+/// count and any batch shape. Writes each slot's next token into `sc.out`;
+/// the caller advances positions.
+#[allow(clippy::too_many_arguments)]
+fn decode_batch(
+    cfg: &ModelConfig,
+    specs: &[LayerSpec],
+    weights: &Weights,
+    cache: &mut dyn CacheBackend,
+    pool: &ThreadPool,
+    prof: &Profiler,
+    probe: &mut SensitivityProbe,
+    sc: &mut BatchScratch,
+    tokens: &[i32],
+    active: &[bool],
+    last_logits: &mut [Vec<f32>],
+) -> Result<()> {
+    let (d, hq, hkv, dh, ff) = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff);
+    let eps = cfg.rms_eps as f32;
+    let theta = cfg.rope_theta;
+    let g = cfg.group;
+    let (stride_q, stride_kv) = (hq * dh, hkv * dh);
+
+    sc.act.clear();
+    sc.act.extend(active.iter().enumerate().filter(|(_, &a)| a).map(|(b, _)| b));
+    let nb = sc.act.len();
+    if nb == 0 {
+        return Ok(());
+    }
+    {
+        let emb = weights.embed()?.as_f32()?;
+        for (i, &slot) in sc.act.iter().enumerate() {
+            let pos = cache.pos(slot) as usize;
+            anyhow::ensure!(pos < cache.s_max(), "cache capacity {} exceeded", cache.s_max());
+            let tok = tokens[slot];
+            anyhow::ensure!((tok as usize) < cfg.vocab, "token id {tok} out of range");
+            sc.xs[i * d..(i + 1) * d]
+                .copy_from_slice(&emb[(tok as usize) * d..(tok as usize + 1) * d]);
+        }
+    }
+
+    for l in 0..cfg.n_layers {
+        let spec = specs[l];
+        let lw = weights.layer(l)?;
+        let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+            lw[0].as_f32()?,
+            lw[1].as_f32()?,
+            lw[2].as_f32()?,
+            lw[3].as_f32()?,
+            lw[4].as_f32()?,
+            lw[5].as_f32()?,
+            lw[6].as_f32()?,
+            lw[7].as_f32()?,
+        );
+        let t_qkv = prof.start();
+        kernel::rms_norm_rows(pool, &sc.xs[..nb * d], ln1, eps, nb, d, &mut sc.hs[..nb * d]);
+        kernel::matmul_mt(pool, &sc.hs[..nb * d], wq, nb, d, stride_q, &mut sc.qs[..nb * stride_q]);
+        kernel::matmul_mt(
+            pool,
+            &sc.hs[..nb * d],
+            wk,
+            nb,
+            d,
+            stride_kv,
+            &mut sc.ks[..nb * stride_kv],
+        );
+        kernel::matmul_mt(
+            pool,
+            &sc.hs[..nb * d],
+            wv,
+            nb,
+            d,
+            stride_kv,
+            &mut sc.vs[..nb * stride_kv],
+        );
+        for (i, &slot) in sc.act.iter().enumerate() {
+            let pos = cache.pos(slot) as usize;
+            kernel::apply_rope_heads(
+                &mut sc.qs[i * stride_q..(i + 1) * stride_q],
+                hq,
+                dh,
+                pos,
+                theta,
+            );
+            kernel::apply_rope_heads(
+                &mut sc.ks[i * stride_kv..(i + 1) * stride_kv],
+                hkv,
+                dh,
+                pos,
+                theta,
+            );
+        }
+        prof.stop(l, Phase::Qkv, t_qkv);
+
+        // per-slot probe shadow + quantize-at-commit, in ascending slot
+        // order — the order the sequential loop feeds each layer's probe
+        // accumulators, so even observability sums stay bit-identical
+        let t_quant = prof.start();
+        for (i, &slot) in sc.act.iter().enumerate() {
+            let pos = cache.pos(slot) as usize;
+            let qrow = &sc.qs[i * stride_q..(i + 1) * stride_q];
+            let krow = &sc.ks[i * stride_kv..(i + 1) * stride_kv];
+            let vrow = &sc.vs[i * stride_kv..(i + 1) * stride_kv];
+            probe.record_row(l, slot, pos, qrow, krow, vrow);
+            match spec.mode {
+                Mode::Fp => {
+                    let kt = Tensor::f32(&[1, hkv, 1, dh], krow.to_vec());
+                    let vt = Tensor::f32(&[1, hkv, 1, dh], vrow.to_vec());
+                    cache.append_fp(l, slot, &kt, &vt, &[1])?;
+                }
+                Mode::Token => {
+                    let outs = kernel::token_step_outputs(krow, vrow, hkv, dh, spec.pair)?;
+                    cache.append_token_outputs(l, slot, &outs, &[1])?;
+                }
+                Mode::Kivi => {
+                    let kt = Tensor::f32(&[1, hkv, 1, dh], krow.to_vec());
+                    let vt = Tensor::f32(&[1, hkv, 1, dh], vrow.to_vec());
+                    let commit = cache.append_kivi_residual(l, slot, &kt, &vt, &[1])?;
+                    if commit[0] {
+                        let (kchunk, vchunk) = cache.residual_chunk(l, slot)?;
+                        let (k_outs, v_outs) =
+                            kernel::kivi_commit_outputs(&kchunk, &vchunk, hkv, g, dh, spec.pair)?;
+                        cache.commit_kivi_chunk(l, slot, &k_outs, &v_outs)?;
+                    }
+                }
+            }
+        }
+        prof.stop(l, Phase::QuantCommit, t_quant);
+
+        let t_att = prof.start();
+        {
+            // all commits done: take every active slot's view at once (the
+            // views borrow the cache immutably) and attend in one dispatch
+            let cache_ref: &dyn CacheBackend = &*cache;
+            let views = sc
+                .act
+                .iter()
+                .map(|&slot| cache_ref.kv_view(l, slot))
+                .collect::<Result<Vec<_>>>()?;
+            kernel::attend_many(
+                pool,
+                &sc.qs[..nb * stride_q],
+                hq,
+                &views,
+                &mut sc.attns[..nb * stride_q],
+            )?;
+        }
+        kernel::matmul_mt(
+            pool,
+            &sc.attns[..nb * stride_q],
+            wo,
+            nb,
+            stride_q,
+            d,
+            &mut sc.projs[..nb * d],
+        );
+        for i in 0..nb * d {
+            sc.xs[i] += sc.projs[i];
+        }
+        prof.stop(l, Phase::Attend, t_att);
+
+        let t_mlp = prof.start();
+        kernel::rms_norm_rows(pool, &sc.xs[..nb * d], ln2, eps, nb, d, &mut sc.hs[..nb * d]);
+        kernel::matmul_mt(pool, &sc.hs[..nb * d], w1, nb, d, ff, &mut sc.mlps[..nb * ff]);
+        kernel::gelu_tanh_inplace(&mut sc.mlps[..nb * ff]);
+        kernel::matmul_mt(pool, &sc.mlps[..nb * ff], w2, nb, ff, d, &mut sc.projs[..nb * d]);
+        for i in 0..nb * d {
+            sc.xs[i] += sc.projs[i];
+        }
+        prof.stop(l, Phase::Mlp, t_mlp);
+    }
+
+    // batched lm head: one pass over the tied-embedding rows for the whole
+    // batch, each slot's logits row refilled in place, then the sequential
+    // first-max-wins argmax per slot
+    let t_head = prof.start();
+    kernel::rms_norm_rows(
+        pool,
+        &sc.xs[..nb * d],
+        weights.ln_f()?.as_f32()?,
+        eps,
+        nb,
+        d,
+        &mut sc.head_hs[..nb * d],
+    );
+    {
+        let emb = weights.embed()?.as_f32()?;
+        let mut ys: Vec<&mut [f32]> = Vec::with_capacity(nb);
+        let mut rest: &mut [Vec<f32>] = last_logits;
+        let mut base = 0usize;
+        for &slot in &sc.act {
+            let (head, tail) = rest.split_at_mut(slot - base + 1);
+            ys.push(head[slot - base].as_mut_slice());
+            rest = tail;
+            base = slot + 1;
+        }
+        kernel::matvec_rows_many_mt(
+            pool,
+            emb,
+            &sc.head_hs[..nb * d],
+            nb,
+            cfg.vocab,
+            d,
+            &mut ys,
+        );
+    }
+    for &slot in &sc.act {
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for (t, &v) in last_logits[slot].iter().enumerate() {
+            if v > best.1 {
+                best = (t, v);
+            }
+        }
+        sc.out[slot] = best.0 as i32;
+    }
+    prof.stop(cfg.n_layers, Phase::LmHead, t_head);
     Ok(())
 }
 
@@ -433,6 +709,10 @@ pub struct NativeEngine {
     pub prefill_chunk: usize,
     pool: ThreadPool,
     scratch: Scratch,
+    bscratch: BatchScratch,
+    /// Force the per-slot sequential decode loop (the bitwise oracle the
+    /// differential-churn harness runs against the batched path).
+    sequential_decode: bool,
     /// Per-layer/per-phase timers; disabled by default (zero clock reads on
     /// the hot path) and swapped in whole via `set_profiling`.
     profiler: Profiler,
@@ -479,6 +759,8 @@ impl NativeEngine {
             prefill_chunk,
             pool: ThreadPool::new(threads),
             scratch: Scratch::new(cfg),
+            bscratch: BatchScratch::new(cfg, batch),
+            sequential_decode: false,
             profiler: Profiler::disabled(),
             probe: SensitivityProbe::disabled(),
             last_logits: vec![vec![0f32; cfg.vocab]; batch],
@@ -490,12 +772,66 @@ impl NativeEngine {
         self.pool.threads()
     }
 
-    /// One decode step over the whole batch (slots are independent, so the
-    /// native backend steps them sequentially — numerics identical to a
-    /// batched step). Returns the argmax next token per slot.
+    /// One decode step over the whole batch: all active slots fold into one
+    /// `[nb, d]`-row pass per layer (`decode_batch`). Returns the argmax
+    /// next token per slot. Convenience wrapper over `decode_step_into`,
+    /// which is the allocation-free form the serving loop calls.
     pub fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>> {
-        anyhow::ensure!(tokens.len() == self.batch && active.len() == self.batch);
         let mut out = vec![0i32; self.batch];
+        self.decode_step_into(tokens, active, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free decode step: next tokens land in the caller's `out`
+    /// (length `batch`). Dispatches to the batched path, or to the
+    /// sequential oracle when `set_sequential_decode(true)` — the two are
+    /// bit-identical (pinned by `tests/batched_decode.rs`).
+    pub fn decode_step_into(
+        &mut self,
+        tokens: &[i32],
+        active: &[bool],
+        out: &mut [i32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            tokens.len() == self.batch && active.len() == self.batch && out.len() == self.batch
+        );
+        if self.sequential_decode {
+            self.decode_step_sequential(tokens, active, out)?;
+        } else {
+            decode_batch(
+                &self.cfg,
+                &self.specs,
+                &self.weights,
+                self.cache.as_mut(),
+                &self.pool,
+                &self.profiler,
+                &mut self.probe,
+                &mut self.bscratch,
+                tokens,
+                active,
+                &mut self.last_logits,
+            )?;
+            for &slot in &self.bscratch.act {
+                out[slot] = self.bscratch.out[slot];
+                self.cache.advance_pos(slot, 1);
+            }
+        }
+        self.sample_kv_live();
+        Ok(())
+    }
+
+    /// The pre-batching decode loop — each active slot stepped on its own
+    /// through `forward_token` + `lm_head` — kept verbatim as the bitwise
+    /// oracle for the batched path.
+    pub fn decode_step_sequential(
+        &mut self,
+        tokens: &[i32],
+        active: &[bool],
+        out: &mut [i32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            tokens.len() == self.batch && active.len() == self.batch && out.len() == self.batch
+        );
         for b in 0..self.batch {
             if !active[b] {
                 continue;
@@ -527,8 +863,13 @@ impl NativeEngine {
             self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
             self.cache.advance_pos(b, 1);
         }
-        self.sample_kv_live();
-        Ok(out)
+        Ok(())
+    }
+
+    /// Route decode steps through the sequential per-slot loop instead of
+    /// the batched kernels (the differential harness's oracle arm).
+    pub fn set_sequential_decode(&mut self, on: bool) {
+        self.sequential_decode = on;
     }
 
     /// Feed the profiler's per-layer live-KV-byte peaks from the cache's
@@ -551,9 +892,26 @@ impl NativeEngine {
     /// group-aligned, and tails shorter than a group, fall back to
     /// token-by-token. Returns the first generated token.
     pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        self.prefill_extend(slot, prompt)?;
+        let t_head = self.profiler.start();
+        let out = {
+            let Scratch { x, head_h, .. } = &mut self.scratch;
+            lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
+        };
+        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
+        out
+    }
+
+    /// Advance `slot` through a chunk of prompt tokens without running the
+    /// lm head — the chunked-prefill step. The body of `prefill` minus the
+    /// head: group-aligned stretches take the block path, ragged edges fall
+    /// back to token-by-token, so splitting a prompt at *any* chunk
+    /// boundary leaves the KV state bit-identical to one monolithic prefill
+    /// (block-vs-tokenwise parity is pinned by `tests/native_backend.rs`).
+    pub fn prefill_extend(&mut self, slot: usize, tokens: &[i32]) -> Result<()> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         anyhow::ensure!(
-            (self.cache.pos(slot) as usize + prompt.len()) <= self.s_max,
+            (self.cache.pos(slot) as usize + tokens.len()) <= self.s_max,
             "prompt overflows cache"
         );
         let g = self.cfg.group;
@@ -566,9 +924,9 @@ impl NativeEngine {
         // committing, so it needs ring capacity >= group
         let block_ok = g >= 1 && self.cfg.residual >= g;
         let mut i = 0usize;
-        while i < prompt.len() {
+        while i < tokens.len() {
             let pos = self.cache.pos(slot) as usize;
-            if block_ok && pos % g == 0 && prompt.len() - i >= g {
+            if block_ok && pos % g == 0 && tokens.len() - i >= g {
                 prefill_block(
                     &self.cfg,
                     &self.specs,
@@ -579,7 +937,7 @@ impl NativeEngine {
                     &mut self.probe,
                     &mut self.scratch,
                     slot,
-                    &prompt[i..i + g],
+                    &tokens[i..i + g],
                 )?;
                 self.cache.advance_pos(slot, g);
                 i += g;
@@ -594,19 +952,13 @@ impl NativeEngine {
                     &mut self.probe,
                     &mut self.scratch,
                     slot,
-                    prompt[i],
+                    tokens[i],
                 )?;
                 self.cache.advance_pos(slot, 1);
                 i += 1;
             }
         }
-        let t_head = self.profiler.start();
-        let out = {
-            let Scratch { x, head_h, .. } = &mut self.scratch;
-            lm_head(&self.cfg, &self.weights, &self.pool, x, head_h, &mut self.last_logits[slot])
-        };
-        self.profiler.stop(self.cfg.n_layers, Phase::LmHead, t_head);
-        out
+        Ok(())
     }
 
     /// Token-by-token prefill — the original scalar path, kept as the
@@ -702,8 +1054,16 @@ impl super::EngineCore for NativeEngine {
         NativeEngine::prefill(self, slot, prompt)
     }
 
+    fn prefill_extend(&mut self, slot: usize, tokens: &[i32]) -> Result<()> {
+        NativeEngine::prefill_extend(self, slot, tokens)
+    }
+
     fn decode_step(&mut self, tokens: &[i32], active: &[bool]) -> Result<Vec<i32>> {
         NativeEngine::decode_step(self, tokens, active)
+    }
+
+    fn decode_step_into(&mut self, tokens: &[i32], active: &[bool], out: &mut [i32]) -> Result<()> {
+        NativeEngine::decode_step_into(self, tokens, active, out)
     }
 
     fn logits(&self, slot: usize) -> &[f32] {

@@ -1,15 +1,18 @@
 //! Dense matrix kernels. `matvec_acc` is the decode hot path (one token
 //! against `[d_in, d_out]` row-major weights) and keeps the reference
 //! engine's zero-skip so the two paths produce bit-identical accumulations;
-//! `matmul` is the prefill-shaped variant (row blocks of tokens, one weight
-//! pass for the whole block); `matvec_rows` is the lm-head shape (row-major
-//! `[rows, d]` matrix times a vector, one dot per output row).
+//! `matmul` is the row-block variant (one weight pass for a whole block of
+//! tokens — prefill groups *and* batched decode, where each row is one
+//! active slot's hidden state); `matvec_rows` is the lm-head shape
+//! (row-major `[rows, d]` matrix times a vector, one dot per output row)
+//! and `matvec_rows_many` its batched-decode form (the same weight rows
+//! against several slot vectors, one weight pass for the whole batch).
 //!
 //! Every `_mt` variant partitions over *outputs* — column ranges for
-//! `matvec_acc`/`matmul`, row ranges for `matvec_rows` — so each output
-//! element keeps the exact scalar accumulation order and results are
-//! bit-identical for any thread count (the determinism contract pinned by
-//! `tests/native_backend.rs`).
+//! `matvec_acc`/`matmul`, row ranges for `matvec_rows`/`matvec_rows_many` —
+//! so each output element keeps the exact scalar accumulation order and
+//! results are bit-identical for any thread count (the determinism contract
+//! pinned by `tests/native_backend.rs`).
 
 use super::pool::{partition, SharedMut, ThreadPool};
 
@@ -182,6 +185,81 @@ pub fn matvec_rows_mt(
     });
 }
 
+/// The row-range body of `matvec_rows_many`: for weight rows `[r0, r1)`
+/// compute `ys[b][r] = dot(m[r, :], xs[b, :])` for every batch vector. The
+/// row loop is outermost so each weight row is read once for the whole
+/// batch (the batched-lm-head win); per `(b, r)` the dot is the exact
+/// `matvec_rows` loop, which is what makes the batched head bit-identical
+/// to per-slot `matvec_rows_mt`.
+fn matvec_rows_many_range(
+    m: &[f32],
+    xs: &[f32],
+    nb: usize,
+    d: usize,
+    r0: usize,
+    r1: usize,
+    ys: &[SharedMut<'_, f32>],
+) {
+    for r in r0..r1 {
+        let row = &m[r * d..(r + 1) * d];
+        for (b, y) in ys.iter().enumerate().take(nb) {
+            let x = &xs[b * d..(b + 1) * d];
+            let mut dot = 0f32;
+            for i in 0..d {
+                dot += x[i] * row[i];
+            }
+            unsafe { y.slice(r, 1)[0] = dot };
+        }
+    }
+}
+
+/// Batched `matvec_rows`: `ys[b][r] = dot(m[r, :], xs[b, :])` for batch
+/// vectors `xs: [nb, d]` against row-major `m: [rows, d]` — the lm head
+/// over all active decode slots in one weight pass. Each output row is one
+/// whole dot in `matvec_rows` order, so a one-vector call equals
+/// `matvec_rows` bitwise.
+pub fn matvec_rows_many(
+    m: &[f32],
+    xs: &[f32],
+    nb: usize,
+    rows: usize,
+    d: usize,
+    ys: &mut [&mut [f32]],
+) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(xs.len(), nb * d);
+    debug_assert_eq!(ys.len(), nb);
+    debug_assert!(ys.iter().all(|y| y.len() == rows));
+    let shared: Vec<SharedMut<'_, f32>> = ys.iter_mut().map(|y| SharedMut::new(y)).collect();
+    matvec_rows_many_range(m, xs, nb, d, 0, rows, &shared);
+}
+
+/// Threaded `matvec_rows_many`: row-range split, each task streaming its
+/// weight-row stripe once across every batch vector. Bit-identical to the
+/// scalar form (and to per-slot `matvec_rows_mt`) for any thread count.
+pub fn matvec_rows_many_mt(
+    pool: &ThreadPool,
+    m: &[f32],
+    xs: &[f32],
+    nb: usize,
+    rows: usize,
+    d: usize,
+    ys: &mut [&mut [f32]],
+) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(xs.len(), nb * d);
+    debug_assert_eq!(ys.len(), nb);
+    if pool.threads() == 1 || rows < 2 {
+        return matvec_rows_many(m, xs, nb, rows, d, ys);
+    }
+    let ranges = partition(rows, pool.threads());
+    let shared: Vec<SharedMut<'_, f32>> = ys.iter_mut().map(|y| SharedMut::new(y)).collect();
+    pool.run(ranges.len(), &|ci: usize| {
+        let r = ranges[ci].clone();
+        matvec_rows_many_range(m, xs, nb, d, r.start, r.end, &shared);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +319,46 @@ mod tests {
             matvec_rows(&a, &w[..d_in], rows, d_in, &mut r0);
             matvec_rows_mt(&pool, &a, &w[..d_in], rows, d_in, &mut r1);
             assert_eq!(bits(&r0), bits(&r1), "matvec_rows threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batched_rows_kernel_matches_per_slot_matvec_rows() {
+        // the batched lm head must be bit-identical to per-slot matvec_rows
+        // at any thread count, including the one-vector case
+        let (rows, d) = (37, 12);
+        let m: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.21).sin()).collect();
+        for nb in [1usize, 2, 5] {
+            let xs: Vec<f32> =
+                (0..nb * d).map(|i| (i as f32 * 0.43).cos() * ((i % 3) as f32)).collect();
+            let mut want = vec![vec![0f32; rows]; nb];
+            for b in 0..nb {
+                matvec_rows(&m, &xs[b * d..(b + 1) * d], rows, d, &mut want[b]);
+            }
+            let mut got = vec![vec![0f32; rows]; nb];
+            {
+                let mut ys: Vec<&mut [f32]> = got.iter_mut().map(|y| y.as_mut_slice()).collect();
+                matvec_rows_many(&m, &xs, nb, rows, d, &mut ys);
+            }
+            for b in 0..nb {
+                assert_eq!(bits(&want[b]), bits(&got[b]), "scalar nb={nb} b={b}");
+            }
+            for threads in [2, 3, 8] {
+                let pool = ThreadPool::new(threads);
+                let mut got = vec![vec![0f32; rows]; nb];
+                {
+                    let mut ys: Vec<&mut [f32]> =
+                        got.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    matvec_rows_many_mt(&pool, &m, &xs, nb, rows, d, &mut ys);
+                }
+                for b in 0..nb {
+                    assert_eq!(
+                        bits(&want[b]),
+                        bits(&got[b]),
+                        "threads={threads} nb={nb} b={b}"
+                    );
+                }
+            }
         }
     }
 

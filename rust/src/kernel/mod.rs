@@ -43,8 +43,11 @@ pub mod rotary;
 pub mod softmax;
 
 pub use activation::{gelu_tanh, gelu_tanh_inplace, swiglu};
-pub use gemm::{matmul, matmul_mt, matvec_acc, matvec_acc_mt, matvec_rows, matvec_rows_mt};
-pub use paged_attention::{attend_one, attend_one_mt};
+pub use gemm::{
+    matmul, matmul_mt, matvec_acc, matvec_acc_mt, matvec_rows, matvec_rows_many,
+    matvec_rows_many_mt, matvec_rows_mt,
+};
+pub use paged_attention::{attend_many, attend_one, attend_one_mt};
 pub use pool::{default_threads, ThreadPool};
 pub use prefill::attend_block;
 pub use quantize::{kivi_commit_outputs, token_block_outputs, token_step_outputs};

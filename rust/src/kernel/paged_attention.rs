@@ -277,6 +277,62 @@ pub fn attend_one_mt(
     Ok(())
 }
 
+/// Multi-query attention for batched decode: one query token per slot,
+/// `views[b]` is slot `b`'s cache view, `qs`/`outs` are `[nb, hq * dh]`
+/// row-major. All `nb x hq` (slot, head) tasks go through one pool
+/// dispatch, walking every slot's block table in a single pass; each task
+/// runs the shared `attend_head` body on its own disjoint `[Dh]` output
+/// stripe, so the result is op-for-op identical to `nb` separate
+/// `attend_one_mt` calls at any thread count. A batch of one takes the
+/// single-slot fast path (the identical task set, one indirection less).
+pub fn attend_many(
+    pool: &ThreadPool,
+    qs: &[f32],
+    hq: usize,
+    views: &[KvView<'_>],
+    outs: &mut [f32],
+) -> Result<()> {
+    let nb = views.len();
+    if nb == 0 {
+        return Ok(());
+    }
+    if nb == 1 {
+        return attend_one_mt(pool, qs, hq, &views[0], outs);
+    }
+    let dh = views[0].dh;
+    let stride = hq * dh;
+    debug_assert_eq!(qs.len(), nb * stride);
+    debug_assert_eq!(outs.len(), nb * stride);
+    for v in views {
+        anyhow::ensure!(v.dh == dh, "mismatched head_dim across batch views");
+        anyhow::ensure!(hq % v.h == 0, "query heads must be a multiple of kv heads");
+        anyhow::ensure!(v.seq_len() > 0, "attention over an empty cache");
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    let shared = SharedMut::new(outs);
+    pool.run(nb * hq, &|idx: usize| {
+        let (b, hh) = (idx / hq, idx % hq);
+        let view = &views[b];
+        let gqa = hq / view.h;
+        with_scratch(view.seq_len(), dh, |scores, codes| {
+            let o = unsafe { shared.slice(b * stride + hh * dh, dh) };
+            attend_head(
+                view,
+                &qs[b * stride..(b + 1) * stride],
+                hh,
+                gqa,
+                view.cache_len,
+                view.res_len,
+                scale,
+                codes,
+                scores,
+                o,
+            );
+        });
+    });
+    Ok(())
+}
+
 /// Hand-built fp-mode dense view over raw buffers — the shared fixture for
 /// the attention kernels' bitwise-parity tests (here and in
 /// `kernel::prefill`).
@@ -342,6 +398,71 @@ mod tests {
         attend_one(&q, 1, &view, &mut out).unwrap();
         for d in 0..dh {
             assert!((out[d] - (3.0 + d as f32)).abs() < 1e-5, "d={d}: {}", out[d]);
+        }
+    }
+
+    /// `attend_many` over a ragged batch (every slot at a different
+    /// position) must be bit-identical to per-slot `attend_one_mt` at every
+    /// pool width — the batched-decode determinism contract at the kernel
+    /// level.
+    #[test]
+    fn attend_many_matches_per_slot_attend_one() {
+        let (h, hq, dh, s_max, page) = (2usize, 4usize, 8usize, 16usize, 4usize);
+        let stride = hq * dh;
+        // ragged: mixed positions, including a mid-page one and a lone token
+        let lens = [11usize, 4, 1, 7];
+        let nb = lens.len();
+        let mut bufs: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for (b, &len) in lens.iter().enumerate() {
+            let mut k_fp = vec![0f32; h * s_max * dh];
+            let mut v_fp = vec![0f32; h * s_max * dh];
+            for hh in 0..h {
+                for j in 0..len {
+                    for d in 0..dh {
+                        let o = (hh * s_max + j) * dh + d;
+                        k_fp[o] = (((o * 7 + b * 13) % 23) as f32 - 11.0) * 0.09;
+                        v_fp[o] = (((o * 5 + b * 3) % 19) as f32 - 9.0) * 0.11;
+                    }
+                }
+            }
+            bufs.push((k_fp, v_fp));
+        }
+        let views: Vec<KvView<'_>> = bufs
+            .iter()
+            .zip(&lens)
+            .map(|((k, v), &len)| fp_view(k, v, h, dh, s_max, page, len))
+            .collect();
+        let qs: Vec<f32> = (0..nb * stride).map(|i| (i as f32 * 0.37).sin()).collect();
+        // per-slot oracle (threaded — itself pinned to the scalar kernel)
+        let pool1 = ThreadPool::new(2);
+        let mut want = vec![0f32; nb * stride];
+        for b in 0..nb {
+            attend_one_mt(
+                &pool1,
+                &qs[b * stride..(b + 1) * stride],
+                hq,
+                &views[b],
+                &mut want[b * stride..(b + 1) * stride],
+            )
+            .unwrap();
+        }
+        for threads in [1, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut got = vec![0f32; nb * stride];
+            attend_many(&pool, &qs, hq, &views, &mut got).unwrap();
+            let a: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            let g: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, g, "threads={threads}");
+        }
+        // batch-of-1 fast path: identical to attend_one_mt by construction,
+        // asserted anyway
+        for threads in [1, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut got = vec![0f32; stride];
+            attend_many(&pool, &qs[..stride], hq, &views[..1], &mut got).unwrap();
+            let a: Vec<u32> = want[..stride].iter().map(|x| x.to_bits()).collect();
+            let g: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, g, "batch-of-1 threads={threads}");
         }
     }
 

@@ -1,0 +1,359 @@
+//! Differential lockdown for the batched decode path (pure host, no
+//! artifacts). Two layers of defense:
+//!
+//! * Engine-level: `NativeEngine::decode_step` (batched kernels folding all
+//!   active slots into one `[nb, d]`-row pass per layer, attention fanned
+//!   out over `nb x heads` via `attend_many`) against
+//!   `decode_step_sequential` (the pre-batching per-slot loop, kept verbatim
+//!   as the oracle) — bit-identical logits and tokens for ragged lengths,
+//!   inactive slots, mid-residual-ring kivi state, batch-of-1, and every
+//!   (mode, precision pair) combination.
+//! * Scheduler-level: a seeded randomized churn harness drives two real
+//!   `Scheduler`s — chunked-prefill + batched decode vs whole-prompt
+//!   prefill + sequential decode — over tight page pools that force
+//!   preempt/swap/resume, and asserts every request's token stream and
+//!   final-step logits are bit-identical across arms. Failures print the
+//!   reproducing seed.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
+use kvtuner::engine::{EngineCore, NativeEngine};
+use kvtuner::kvcache::{PagedOptions, SwapPolicy};
+use kvtuner::model::Weights;
+use kvtuner::util::rng::Rng;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "batched-decode-test".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 64,
+        vocab: 128,
+        rope_theta: 10000.0,
+        group: 8,
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+fn assert_logits_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: logits length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logits diverge at vocab {i}: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level parity: batched decode_step vs the sequential oracle
+// ---------------------------------------------------------------------------
+
+/// Build an oracle (sequential, 1 thread) and a batched engine over the same
+/// synthetic weights, prefill the given `(slot, prompt_len)` pairs on both,
+/// then run `steps` lockstep decode steps asserting bit-identical tokens and
+/// logits for every active slot.
+fn run_decode_parity(
+    specs: &[LayerSpec],
+    batch: usize,
+    threads: usize,
+    prompts: &[(usize, usize)],
+    steps: usize,
+    label: &str,
+) {
+    let c = cfg();
+    let w = Weights::synthetic(&c, 9);
+    let paged = Some(PagedOptions { total_blocks: Some(64), ..PagedOptions::default() });
+    let mut oracle =
+        NativeEngine::new(&c, w.clone(), specs.to_vec(), batch, 64, 8, 1, paged.clone()).unwrap();
+    oracle.set_sequential_decode(true);
+    let mut batched =
+        NativeEngine::new(&c, w, specs.to_vec(), batch, 64, 8, threads, paged).unwrap();
+
+    let mut tokens = vec![0i32; batch];
+    let mut active = vec![false; batch];
+    for &(slot, len) in prompts {
+        let prompt: Vec<i32> =
+            (0..len).map(|j| ((j * 7 + 11 * slot + 3) % c.vocab) as i32).collect();
+        let a = oracle.prefill(slot, &prompt).unwrap();
+        let b = batched.prefill(slot, &prompt).unwrap();
+        assert_eq!(a, b, "{label}: slot {slot} prefill token");
+        assert_logits_bits_eq(
+            EngineCore::logits(&oracle, slot),
+            EngineCore::logits(&batched, slot),
+            &format!("{label}: slot {slot} prefill"),
+        );
+        tokens[slot] = a;
+        active[slot] = true;
+    }
+
+    for step in 0..steps {
+        let a = oracle.decode_step(&tokens, &active).unwrap();
+        let b = batched.decode_step(&tokens, &active).unwrap();
+        for &(slot, _) in prompts {
+            assert_eq!(
+                a[slot], b[slot],
+                "{label}: step {step} slot {slot} token diverged (threads={threads})"
+            );
+            assert_logits_bits_eq(
+                EngineCore::logits(&oracle, slot),
+                EngineCore::logits(&batched, slot),
+                &format!("{label}: step {step} slot {slot} (threads={threads})"),
+            );
+            tokens[slot] = a[slot];
+        }
+    }
+}
+
+/// Ragged sequence lengths across all four slots, mixed per-layer specs
+/// (token-mode K8V2 under kivi K2V8): every slot walks a different number of
+/// pages and the batched attention fan-out sees per-view ragged `seq_len`s.
+#[test]
+fn batched_decode_matches_sequential_ragged_lengths() {
+    let specs = vec![
+        LayerSpec { mode: Mode::Token, pair: PrecisionPair::new(8, 2) },
+        LayerSpec { mode: Mode::Kivi, pair: PrecisionPair::new(2, 8) },
+    ];
+    run_decode_parity(&specs, 4, 2, &[(0, 11), (1, 4), (2, 1), (3, 7)], 10, "ragged");
+}
+
+/// Only slots 0 and 2 are live: the batched gather must skip idle slots
+/// entirely (no cache writes, no stale logits) and still match the oracle.
+#[test]
+fn batched_decode_matches_sequential_with_inactive_slots() {
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), cfg().n_layers);
+    run_decode_parity(&specs, 4, 8, &[(0, 9), (2, 13)], 6, "inactive-slots");
+}
+
+/// Kivi slots parked mid-residual-ring (prompt lengths 11 and 13 leave 3 and
+/// 5 fp rows in the ring after block prefill); 12 steps cross the
+/// group-commit boundary where the ring flushes into a quantized page.
+#[test]
+fn batched_decode_matches_sequential_mid_residual_ring() {
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(4, 4), cfg().n_layers);
+    run_decode_parity(&specs, 2, 8, &[(0, 11), (1, 13)], 12, "mid-residual-ring");
+}
+
+/// Batch of one: the `attend_many` single-view fast path and the one-row
+/// matmul forms must still agree with the oracle.
+#[test]
+fn batched_decode_matches_sequential_batch_of_one() {
+    let specs = LayerSpec::uniform(Mode::Kivi, PrecisionPair::new(8, 4), cfg().n_layers);
+    run_decode_parity(&specs, 1, 2, &[(0, 10)], 8, "batch-of-1");
+}
+
+/// Every quantization mode x precision pair (plus the fp reference arm)
+/// through 9 lockstep steps that cross a group boundary.
+#[test]
+fn batched_decode_matches_sequential_all_modes_and_pairs() {
+    let c = cfg();
+    for mode in [Mode::Token, Mode::Kivi] {
+        for pair in PAIRS {
+            let specs = LayerSpec::uniform(mode, pair, c.n_layers);
+            let label = format!("{}-{}", mode.as_str(), pair.label());
+            run_decode_parity(&specs, 2, 2, &[(0, 9), (1, 12)], 9, &label);
+        }
+    }
+    let specs = LayerSpec::uniform(Mode::Fp, PrecisionPair::FP, c.n_layers);
+    run_decode_parity(&specs, 2, 2, &[(0, 9), (1, 12)], 9, "fp");
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-level randomized differential churn
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct ChurnReq {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    arrival: usize,
+}
+
+struct ChurnPlan {
+    reqs: Vec<ChurnReq>,
+    specs: Vec<LayerSpec>,
+    batch: usize,
+    threads: usize,
+    total_blocks: usize,
+    swap_mib: Option<f64>,
+    swap_policy: SwapPolicy,
+}
+
+/// Seeded workload: random arrivals, prompt/output lengths spanning KIVI
+/// group boundaries, random per-layer (mode, pair), and a page pool sized
+/// just above the largest single request — big enough that every request can
+/// always finish alone (no livelock), tight enough that concurrent requests
+/// must preempt, swap, and resume.
+fn churn_plan(seed: u64, c: &ModelConfig) -> ChurnPlan {
+    let mut rng = Rng::seed(seed.wrapping_mul(0x9E37_79B9).wrapping_add(17));
+    let n = rng.range(3, 7);
+    let mut reqs = Vec::new();
+    let mut floor_blocks = 0usize;
+    for id in 0..n {
+        let plen = rng.range(3, 21);
+        let max_new = rng.range(1, 13);
+        let arrival = rng.below(16);
+        let prompt = (0..plen).map(|_| rng.below(c.vocab) as i32).collect();
+        // peak pages for this request alone, plus kivi-commit + admission
+        // headroom: the pool floor that guarantees forward progress
+        floor_blocks = floor_blocks.max((plen + max_new + c.group) / c.group + 1);
+        reqs.push(ChurnReq { id: id as u64, prompt, max_new, arrival });
+    }
+    let specs = (0..c.n_layers)
+        .map(|_| LayerSpec {
+            mode: *rng.choose(&[Mode::Token, Mode::Kivi]),
+            pair: *rng.choose(&PAIRS),
+        })
+        .collect();
+    let batch = rng.range(2, 5);
+    let threads = [1, 2, 8][seed as usize % 3];
+    let total_blocks = floor_blocks + rng.below(3);
+    let (swap_mib, swap_policy) = if rng.chance(0.5) {
+        (Some(4.0), *rng.choose(&[SwapPolicy::Always, SwapPolicy::Auto]))
+    } else {
+        (None, SwapPolicy::Off)
+    };
+    ChurnPlan { reqs, specs, batch, threads, total_blocks, swap_mib, swap_policy }
+}
+
+/// Run one scheduler arm over the plan's request stream, submitting each
+/// request at its arrival tick and driving `tick()` until drained. Returns
+/// per-request (token stream, final-logit bits), id-ordered.
+fn run_churn_arm(
+    p: &ChurnPlan,
+    c: &ModelConfig,
+    oracle: bool,
+    seed: u64,
+) -> Vec<(Vec<i32>, Vec<u32>)> {
+    let arm = if oracle { "oracle" } else { "batched" };
+    let w = Weights::synthetic(c, 11);
+    let threads = if oracle { 1 } else { p.threads };
+    let mut engine = NativeEngine::new(
+        c,
+        w,
+        p.specs.clone(),
+        p.batch,
+        64,
+        8,
+        threads,
+        Some(PagedOptions {
+            total_blocks: Some(p.total_blocks),
+            swap_mib: p.swap_mib,
+            swap_policy: p.swap_policy,
+            ..PagedOptions::default()
+        }),
+    )
+    .unwrap();
+    if oracle {
+        engine.set_sequential_decode(true);
+    }
+    let mut sched = Scheduler::new(
+        Box::new(engine),
+        "churn",
+        SchedulerOptions {
+            swap_policy: p.swap_policy,
+            chunked_prefill: !oracle,
+            capture_logits: true,
+            ..SchedulerOptions::default()
+        },
+        Arc::new(Metrics::default()),
+    );
+
+    let mut rxs = Vec::new();
+    let mut pending: Vec<(usize, Request)> = p
+        .reqs
+        .iter()
+        .map(|r| {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            let req = Request {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new,
+                class: AccuracyClass::Balanced,
+                arrival: Instant::now(),
+                respond: tx,
+            };
+            (r.arrival, req)
+        })
+        .collect();
+
+    let mut tick = 0usize;
+    loop {
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].0 <= tick {
+                let (_, req) = pending.remove(i);
+                assert!(sched.submit(req), "seed {seed} [{arm}]: queue rejected a request");
+            } else {
+                i += 1;
+            }
+        }
+        sched.tick().unwrap_or_else(|e| panic!("seed {seed} [{arm}]: tick {tick} failed: {e:#}"));
+        if pending.is_empty() && sched.is_idle() {
+            break;
+        }
+        tick += 1;
+        assert!(tick < 20_000, "seed {seed} [{arm}]: scheduler failed to drain in 20k ticks");
+    }
+
+    rxs.into_iter()
+        .enumerate()
+        .map(|(id, rx)| {
+            let r = rx
+                .try_recv()
+                .unwrap_or_else(|_| panic!("seed {seed} [{arm}]: request {id} got no response"));
+            assert!(
+                r.error.is_none(),
+                "seed {seed} [{arm}]: request {id} degraded: {:?} (blocks={}, batch={})",
+                r.error,
+                p.total_blocks,
+                p.batch
+            );
+            let bits = r
+                .final_logits
+                .unwrap_or_else(|| panic!("seed {seed} [{arm}]: request {id} missing final logits"))
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            (r.tokens, bits)
+        })
+        .collect()
+}
+
+/// The harness proper: for each seed, replay the identical request stream
+/// through the chunked-prefill + batched-decode scheduler and through the
+/// whole-prompt + sequential-oracle scheduler, under page pools tight enough
+/// to force preempt/swap/resume churn, and demand bit-identical token
+/// streams and final logits per request. On failure, rerun with the printed
+/// seed to reproduce.
+#[test]
+fn churn_batched_scheduler_is_bit_identical_to_sequential_oracle() {
+    let c = cfg();
+    for case in 0..12u64 {
+        let seed = 0xC0FFEE + case;
+        let p = churn_plan(seed, &c);
+        let oracle = run_churn_arm(&p, &c, true, seed);
+        let batched = run_churn_arm(&p, &c, false, seed);
+        assert_eq!(oracle.len(), batched.len());
+        for (id, (o, b)) in oracle.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                o.0, b.0,
+                "seed {seed}: request {id} token stream diverged \
+                 (threads={}, batch={}, blocks={}, swap={:?})",
+                p.threads, p.batch, p.total_blocks, p.swap_policy
+            );
+            assert_eq!(
+                o.1, b.1,
+                "seed {seed}: request {id} final logits diverged \
+                 (threads={}, batch={}, blocks={})",
+                p.threads, p.batch, p.total_blocks
+            );
+        }
+    }
+}

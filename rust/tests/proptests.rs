@@ -182,6 +182,94 @@ fn prop_cluster_expand_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// scheduler preemption cost model
+// ---------------------------------------------------------------------------
+
+/// The integer cost model `choose_preempt_action` optimizes over, restated
+/// independently: swap = copy out + copy back; recompute = T/chunk chunked
+/// layer sweeps each re-reading the O(T)-token cache (multiply before
+/// divide, as the scheduler does, so the tie-breaking is bit-identical).
+fn preempt_costs(swap_out_bytes: usize, t: usize, ptb: usize, chunk: usize) -> (u64, u64) {
+    let swap = 2 * swap_out_bytes as u64;
+    let recompute = (t as u64) * (t as u64) * ptb.max(1) as u64 / chunk.max(1) as u64;
+    (swap, recompute)
+}
+
+#[test]
+fn prop_preempt_action_minimizes_modeled_cost() {
+    use kvtuner::coordinator::{choose_preempt_action, PreemptAction};
+    use kvtuner::kvcache::SwapPolicy;
+    for_all(300, |rng| {
+        let ptb = *rng.choose(&[64usize, 256, 1024, 4096]);
+        let chunk = *rng.choose(&[8usize, 16, 32, 128]);
+        let t = rng.range(0, 4096);
+        // bytes roam independently of t: prefix-linked pages can make the
+        // swap payload much smaller than the resident context
+        let bytes = rng.below(t * ptb + 1);
+        let action = choose_preempt_action(SwapPolicy::Auto, true, bytes, t, ptb, chunk);
+        let (swap, recompute) = preempt_costs(bytes, t, ptb, chunk);
+        let (chosen, alternative) = match action {
+            PreemptAction::SwapOut => (swap, recompute),
+            PreemptAction::Recompute => (recompute, swap),
+        };
+        assert!(
+            chosen <= alternative,
+            "chose {action:?} (cost {chosen}) over {alternative}: \
+             bytes={bytes} t={t} ptb={ptb} chunk={chunk}"
+        );
+        // policy overrides dominate the cost model; no-arena forces recompute
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Off, true, bytes, t, ptb, chunk),
+            PreemptAction::Recompute
+        );
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Always, true, bytes, t, ptb, chunk),
+            PreemptAction::SwapOut
+        );
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, false, bytes, t, ptb, chunk),
+            PreemptAction::Recompute
+        );
+    });
+}
+
+#[test]
+fn prop_preempt_crossover_at_twice_prefill_chunk() {
+    use kvtuner::coordinator::{choose_preempt_action, PreemptAction};
+    use kvtuner::kvcache::SwapPolicy;
+    // with the full context swapped (bytes = t * ptb), the two costs meet at
+    // exactly T = 2 * chunk: 2*t*ptb == t*t*ptb/chunk. Ties break toward
+    // recompute (strict `<` for swap), so the boundary token lands there.
+    for_all(100, |rng| {
+        let ptb = *rng.choose(&[64usize, 256, 1024]);
+        let chunk = *rng.choose(&[8usize, 16, 32, 64]);
+        let at = 2 * chunk;
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, at * ptb, at, ptb, chunk),
+            PreemptAction::Recompute,
+            "t = 2*chunk is a tie: ptb={ptb} chunk={chunk}"
+        );
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, (at + 1) * ptb, at + 1, ptb, chunk),
+            PreemptAction::SwapOut,
+            "one past the tie must swap: ptb={ptb} chunk={chunk}"
+        );
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, (at - 1) * ptb, at - 1, ptb, chunk),
+            PreemptAction::Recompute,
+            "below the tie must recompute: ptb={ptb} chunk={chunk}"
+        );
+        // and the ordering is monotone: longer contexts never flip back
+        let longer = at + 1 + rng.below(512);
+        assert_eq!(
+            choose_preempt_action(SwapPolicy::Auto, true, longer * ptb, longer, ptb, chunk),
+            PreemptAction::SwapOut,
+            "t={longer} past the crossover must swap: ptb={ptb} chunk={chunk}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
 // config / precision pairs
 // ---------------------------------------------------------------------------
 
