@@ -3,7 +3,7 @@
 # lm-head bucket to HLO text under artifacts/ and writes the manifest the
 # runtime loads. Python runs only here, never on the serving path.
 
-.PHONY: artifacts verify bench
+.PHONY: artifacts verify bench bench-baseline
 
 artifacts:
 	cd python && python -m compile.aot
@@ -16,3 +16,17 @@ verify:
 bench:
 	cargo bench --bench table8_paged
 	cargo bench --bench table9_swap
+
+# artifact-free benches whose BENCH_JSON output seeds the perf baseline
+BASELINE_BENCHES = table2_ppl table3_eo table8_throughput table8_paged \
+                   table9_swap table10_kernel table11_native_mt
+
+# run the full artifact-free bench suite and collect every BENCH_JSON line
+# into the checked-in baseline; python/bench_compare.py compare flags >15%
+# regressions against it (advisory in CI)
+bench-baseline:
+	rm -f bench_baseline.out
+	for b in $(BASELINE_BENCHES); do \
+		cargo bench --bench $$b --no-default-features | tee -a bench_baseline.out || exit 1; \
+	done
+	python3 python/bench_compare.py collect bench_baseline.out -o BENCH_BASELINE.json

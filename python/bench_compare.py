@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Collect and compare BENCH_JSON bench output.
+
+Every bench prints each result table as a machine-readable line:
+
+    BENCH_JSON {"title": ..., "header": [...], "rows": [[...], ...]}
+
+Two modes:
+
+  collect  <out-with-BENCH_JSON-lines>... -o BENCH_BASELINE.json
+      Parse every BENCH_JSON line from the given files (or stdin) and write
+      a baseline document. `make bench-baseline` drives this over the full
+      artifact-free bench suite.
+
+  compare  <BENCH_BASELINE.json> <out-with-BENCH_JSON-lines>... [--threshold 0.15]
+      Match current tables against the baseline and flag perf regressions
+      beyond the threshold. Advisory by default (always exits 0 so a noisy
+      shared runner cannot red-gate unrelated changes); --strict exits 1 on
+      regressions.
+
+Matching is deliberately loose, because table titles embed host parameters
+(thread counts, core counts): tables pair up by title prefix (up to the
+first '('), rows by their first cell, and columns by header name. Only
+clearly perf-directional columns are compared — rate-like columns
+('tok/s', 'GiB/s', 'speedup') where higher is better, and latency-like
+columns ('ms', 'ns', 'us') where lower is better. Everything else
+(equivalent bits, MiB footprints, error metrics) is deterministic output
+guarded by tests, not by this comparator.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# keep in sync with SCHEMA_VERSION in rust/src/obs/mod.rs
+SCHEMA_VERSION = 2
+
+HIGHER_BETTER = re.compile(r"(tok/s|toks/s|/s\b|/sec\b|speedup|throughput)", re.I)
+LOWER_BETTER = re.compile(r"(\bms\b|\bns\b|\bus\b|latency|ttft|tpot)", re.I)
+
+
+def parse_tables(paths):
+    """All BENCH_JSON tables from the given files ('-' = stdin), in order."""
+    tables = []
+    for path in paths:
+        fh = sys.stdin if path == "-" else open(path)
+        with fh:
+            for line in fh:
+                if line.startswith("BENCH_JSON "):
+                    tables.append(json.loads(line.split(" ", 1)[1]))
+    return tables
+
+
+def title_key(title):
+    return title.split("(")[0].strip()
+
+
+def numeric(cell):
+    try:
+        return float(str(cell).replace(",", ""))
+    except ValueError:
+        return None
+
+
+def collect(args):
+    tables = parse_tables(args.files or ["-"])
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "note": "perf baseline collected by `make bench-baseline`; "
+        "compare with python/bench_compare.py",
+        "tables": tables,
+    }
+    with open(args.output, "w") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
+    print(f"[bench-compare] collected {len(tables)} table(s) into {args.output}")
+    return 0
+
+
+def column_direction(header):
+    if HIGHER_BETTER.search(header):
+        return 1
+    if LOWER_BETTER.search(header):
+        return -1
+    return 0
+
+
+def compare(args):
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    if base.get("schema_version") != SCHEMA_VERSION:
+        print(
+            f"[bench-compare] WARNING: baseline schema_version "
+            f"{base.get('schema_version')} != expected {SCHEMA_VERSION}; "
+            f"re-run `make bench-baseline`"
+        )
+    baseline = {title_key(t["title"]): t for t in base.get("tables", [])}
+    if not baseline:
+        print(
+            "[bench-compare] baseline has no tables yet — run `make bench-baseline` "
+            "on a reference host and commit BENCH_BASELINE.json to arm this check"
+        )
+        return 0
+    current = parse_tables(args.files)
+    if not current:
+        print("[bench-compare] no BENCH_JSON lines in the current output")
+        return 0
+
+    regressions, compared = [], 0
+    for table in current:
+        key = title_key(table["title"])
+        ref = baseline.get(key)
+        if ref is None:
+            print(f"[bench-compare] no baseline for {key!r} (skipped)")
+            continue
+        ref_rows = {r[0]: r for r in ref["rows"]}
+        for row in table["rows"]:
+            ref_row = ref_rows.get(row[0])
+            if ref_row is None:
+                continue
+            for ci, header in enumerate(table["header"]):
+                direction = column_direction(header)
+                if direction == 0 or ci >= len(ref["header"]) or header != ref["header"][ci]:
+                    continue
+                now, was = numeric(row[ci]), numeric(ref_row[ci])
+                if now is None or was is None or was == 0:
+                    continue
+                compared += 1
+                change = (now - was) / was
+                if change * direction < -args.threshold:
+                    regressions.append(
+                        f"{key} / {row[0]} / {header}: {was:g} -> {now:g} "
+                        f"({change * 100:+.1f}%)"
+                    )
+    if regressions:
+        print(
+            f"[bench-compare] {len(regressions)} regression(s) beyond "
+            f"{args.threshold * 100:.0f}% (of {compared} compared cells):"
+        )
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+    else:
+        print(f"[bench-compare] no regressions beyond {args.threshold * 100:.0f}% "
+              f"({compared} cells compared)")
+    return 1 if (regressions and args.strict) else 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+    c = sub.add_parser("collect", help="gather BENCH_JSON lines into a baseline")
+    c.add_argument("files", nargs="*", help="bench output files ('-' = stdin)")
+    c.add_argument("-o", "--output", default="BENCH_BASELINE.json")
+    d = sub.add_parser("compare", help="flag regressions vs a baseline")
+    d.add_argument("baseline")
+    d.add_argument("files", nargs="+", help="bench output files ('-' = stdin)")
+    d.add_argument("--threshold", type=float, default=0.15)
+    d.add_argument("--strict", action="store_true", help="exit 1 on regressions")
+    args = ap.parse_args()
+    sys.exit(collect(args) if args.mode == "collect" else compare(args))
+
+
+if __name__ == "__main__":
+    main()

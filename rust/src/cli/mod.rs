@@ -90,9 +90,16 @@ OBSERVABILITY (serve / throughput)
                     drift-alert counts) as JSON at exit
   --metrics-interval SECS
                     serve: stream one JSONL line per interval while serving
-                    (metrics snapshot + live sensitivity per engine) — next
-                    to --metrics-out as <file>.jsonl, else as METRICS_JSON
-                    stdout lines
+                    (metrics snapshot + live sensitivity + latest counter
+                    samples per engine) — next to --metrics-out as
+                    <file>.jsonl, else as METRICS_JSON stdout lines
+  --metrics-listen ADDR
+                    serve the Prometheus text exposition at
+                    http://ADDR/metrics while the run lasts (e.g.
+                    127.0.0.1:9464; port 0 picks a free port). Scrapes show
+                    snapshot aggregates plus the latest sample of every
+                    memory-hierarchy counter track (pool occupancy,
+                    per-layer KV bytes, swap/gather bandwidth, queue depths)
 ";
 
 pub fn cli_main() -> Result<()> {

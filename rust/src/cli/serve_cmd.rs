@@ -11,7 +11,17 @@
 //! online sensitivity probe (fp shadow of every Nth committed KV group,
 //! drift-checked against a tuned config's calibration envelope);
 //! `--sensitivity-out` writes the per-engine sensitivity tables at exit;
-//! `--metrics-interval SECS` streams mid-run snapshot + sensitivity JSONL.
+//! `--metrics-interval SECS` streams mid-run snapshot + sensitivity (and
+//! counter-track) JSONL; `--metrics-listen ADDR` serves the Prometheus
+//! text exposition at `http://ADDR/metrics` for the run's duration.
+//!
+//! When any of `--metrics-listen`, `--trace-out` or `--metrics-interval`
+//! is given, each worker gets a counter-track registry: the scheduler
+//! publishes memory-hierarchy occupancy (page pool, host swap arena,
+//! queues, swap/gather bandwidth) per tick and the engine per-layer live
+//! KV bytes. The tracks ride the Chrome trace as `"ph":"C"` counter
+//! events, so Perfetto draws the occupancy curves under the lifecycle
+//! spans.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -21,7 +31,10 @@ use anyhow::Result;
 use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use crate::coordinator::{AccuracyClass, Router, WorkerSpec};
 use crate::engine::BackendKind;
-use crate::obs::{ProbeConfig, Tracer};
+use crate::obs::{
+    render_tracks, write_trace, Counters, Exposition, MetricsServer, ProbeConfig, TrackSnapshot,
+    Tracer, SCHEMA_VERSION,
+};
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -69,6 +82,11 @@ pub fn run(args: &Args) -> Result<()> {
         || std::env::var("KVTUNER_PROFILE").map(|v| v == "1").unwrap_or(false);
     let probe_every = args.usize("probe-every", 0)?;
     let metrics_interval = args.f64("metrics-interval", 0.0)?;
+    let metrics_listen = args.opt_str("metrics-listen").map(String::from);
+    // counter tracks are armed whenever any consumer exists: the /metrics
+    // endpoint, the trace export, or the JSONL stream
+    let want_counters =
+        metrics_listen.is_some() || trace_out.is_some() || metrics_interval > 0.0;
 
     // load the tuned config once: its specs back the balanced worker and its
     // calibration envelope (when recorded) backs the probe's drift detector
@@ -122,6 +140,14 @@ pub fn run(args: &Args) -> Result<()> {
         class: AccuracyClass::Balanced,
         ..common
     });
+    if want_counters {
+        // one registry per worker, all sharing the tracer's epoch so the
+        // counter samples land on the same Perfetto timeline as the spans
+        let epoch = tracer.as_ref().map(|t| t.epoch()).unwrap_or_else(std::time::Instant::now);
+        for w in &mut workers {
+            w.counters = Some(Arc::new(Counters::with_epoch(epoch)));
+        }
+    }
 
     eprintln!(
         "[serve] starting {} workers (batch={batch}, smax={s_max}, cache={}, backend={}, \
@@ -135,6 +161,27 @@ pub fn run(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let router = Router::start(dir, workers)?;
     eprintln!("[serve] workers ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // pull-based exporter: each scrape renders every worker's snapshot
+    // aggregates plus the latest sample of every counter track
+    let metrics_server = match &metrics_listen {
+        Some(addr) => {
+            let observers = router.observers();
+            let server = MetricsServer::start(addr, move || {
+                let mut expo = Exposition::new();
+                for o in &observers {
+                    o.metrics.snapshot().render_prometheus(&mut expo, &o.name);
+                    if let Some(c) = &o.counters {
+                        render_tracks(&mut expo, &o.name, &c.snapshot());
+                    }
+                }
+                expo.render()
+            })?;
+            eprintln!("[serve] serving Prometheus exposition on http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
 
     // live metrics streaming: a reader thread snapshots every worker's
     // metrics (and armed probes) each interval and appends one JSONL line —
@@ -158,20 +205,29 @@ pub fn run(args: &Args) -> Result<()> {
                 std::thread::sleep(period);
                 let engines: Vec<Json> = observers
                     .iter()
-                    .map(|(name, metrics, sens)| {
-                        let sens = sens
+                    .map(|o| {
+                        let sens = o
+                            .sensitivity
                             .lock()
                             .unwrap_or_else(|e| e.into_inner())
                             .as_ref()
                             .map_or(Json::Null, |s| s.snapshot().to_json());
-                        obj(vec![
-                            ("name", s(name.clone())),
-                            ("snapshot", metrics.snapshot().to_json()),
+                        let mut pairs = vec![
+                            ("name", s(o.name.clone())),
+                            ("snapshot", o.metrics.snapshot().to_json()),
                             ("sensitivity", sens),
-                        ])
+                        ];
+                        if let Some(c) = &o.counters {
+                            pairs.push((
+                                "counters",
+                                arr(c.snapshot().iter().map(|t| t.to_json_latest()).collect()),
+                            ));
+                        }
+                        obj(pairs)
                     })
                     .collect();
                 let line = obj(vec![
+                    ("schema_version", crate::util::json::num(SCHEMA_VERSION as f64)),
                     ("t_s", crate::util::json::num(started.elapsed().as_secs_f64())),
                     ("engines", arr(engines)),
                 ])
@@ -226,6 +282,14 @@ pub fn run(args: &Args) -> Result<()> {
     if let Some(h) = streamer {
         h.join().map_err(|_| anyhow::anyhow!("metrics streamer panicked"))??;
     }
+    // the registries outlive the router (Arc), so the trace export below
+    // snapshots final counter state after the workers drain
+    let worker_counters: Vec<(u32, Arc<Counters>)> = router
+        .observers()
+        .iter()
+        .enumerate()
+        .filter_map(|(wi, o)| o.counters.clone().map(|c| (wi as u32, c)))
+        .collect();
     let reports = router.shutdown()?;
     let mut tm = Table::new("serve — per-engine metrics", &["engine", "summary"]);
     for r in &reports {
@@ -250,10 +314,13 @@ pub fn run(args: &Args) -> Result<()> {
     }
 
     if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
-        tracer.write(path)?;
+        let sets: Vec<(u32, Vec<TrackSnapshot>)> =
+            worker_counters.iter().map(|(wi, c)| (*wi, c.snapshot())).collect();
+        write_trace(path, tracer, &sets)?;
         eprintln!(
-            "[serve] wrote {} trace events to {} ({} dropped)",
+            "[serve] wrote {} trace events + {} counter tracks to {} ({} dropped)",
             tracer.events().len(),
+            sets.iter().map(|(_, t)| t.len()).sum::<usize>(),
             path.display(),
             tracer.dropped(),
         );
@@ -270,7 +337,10 @@ pub fn run(args: &Args) -> Result<()> {
                 ])
             })
             .collect();
-        let doc = obj(vec![("engines", arr(engines))]);
+        let doc = obj(vec![
+            ("schema_version", crate::util::json::num(SCHEMA_VERSION as f64)),
+            ("engines", arr(engines)),
+        ]);
         std::fs::write(path, doc.to_string_pretty())?;
         eprintln!("[serve] wrote metrics JSON to {}", path.display());
     }
@@ -287,6 +357,9 @@ pub fn run(args: &Args) -> Result<()> {
         let doc = obj(vec![("engines", arr(engines))]);
         std::fs::write(path, doc.to_string_pretty())?;
         eprintln!("[serve] wrote sensitivity JSON to {}", path.display());
+    }
+    if let Some(server) = metrics_server {
+        server.stop();
     }
     Ok(())
 }

@@ -18,7 +18,7 @@ use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
 use crate::engine::{BackendKind, NativeEngine};
 use crate::kvcache::{CacheBackend, PagedOptions};
 use crate::model::Weights;
-use crate::obs::{EventKind, TraceSink, Tracer};
+use crate::obs::{render_tracks, Counters, EventKind, Exposition, MetricsServer, TraceSink, Tracer};
 use crate::tuner::TunedConfig;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -199,6 +199,37 @@ fn run_grid(
     // arg = input len) so a Perfetto view shows where grid time went
     let trace_out = args.opt_str("trace-out").map(std::path::PathBuf::from);
     let tracer = trace_out.as_ref().map(|_| Arc::new(Tracer::with_default_capacity()));
+    // --metrics-listen: serve grid progress as a Prometheus exposition while
+    // the sweep runs (long grids are otherwise silent between rows)
+    let counters = args.opt_str("metrics-listen").map(|_| Arc::new(Counters::new()));
+    let metrics_server = match args.opt_str("metrics-listen") {
+        Some(addr) => {
+            let c = Arc::clone(counters.as_ref().unwrap());
+            let engine = format!("throughput-{}", backend.as_str());
+            let server = MetricsServer::start(addr, move || {
+                let mut expo = Exposition::new();
+                render_tracks(&mut expo, &engine, &c.snapshot());
+                expo.render()
+            })?;
+            eprintln!(
+                "[throughput] serving Prometheus exposition on http://{}/metrics",
+                server.addr()
+            );
+            Some(server)
+        }
+        None => None,
+    };
+    let grid_tracks = counters.as_ref().map(|c| {
+        (
+            c.gauge("grid_cells_done", "cells", "completed grid cells"),
+            c.gauge(
+                "grid_cell_tokens_per_sec",
+                "tokens/s",
+                "decode throughput of the most recent grid cell",
+            ),
+            c.rate("grid_tokens_decoded", "tokens", "cumulative decoded tokens across grid cells"),
+        )
+    });
     let mut baseline: Vec<f64> = Vec::new();
     let mut cell: u64 = 0;
     for (i, (label, specs)) in settings.iter().enumerate() {
@@ -219,6 +250,11 @@ fn run_grid(
                 );
             }
             cell += 1;
+            if let Some((done, tps, decoded)) = &grid_tracks {
+                done.record(cell as f64);
+                tps.record(r.toks_per_sec);
+                decoded.record((cell as usize * batch * steps) as f64);
+            }
             bits = r.equiv_bits;
             mib = r.kv_mib;
             tps_list.push(r.toks_per_sec);
@@ -250,6 +286,9 @@ fn run_grid(
         let doc = obj(vec![("table", t.to_json())]);
         std::fs::write(path, doc.to_string_pretty())?;
         eprintln!("[throughput] wrote metrics JSON to {path}");
+    }
+    if let Some(server) = metrics_server {
+        server.stop();
     }
     Ok(())
 }

@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::obs::{HistSnapshot, LogHistogram};
+use crate::obs::{Exposition, HistSnapshot, LogHistogram, SCHEMA_VERSION};
 use crate::util::json::{num, obj, Json};
 
 #[derive(Default)]
@@ -59,6 +59,10 @@ pub struct Metrics {
     /// (a layer's sampled quantization error left the offline calibration
     /// envelope). Stored by the scheduler each tick from the engine's probe.
     pub drift_alerts: AtomicU64,
+    /// Trace-ring overflow: lifecycle events overwritten before export.
+    /// Stored by the scheduler each tick from its tracer so truncated
+    /// traces are detectable from any metrics surface.
+    pub trace_dropped: AtomicU64,
     /// Time to first token, per completed request.
     ttft: LogHistogram,
     /// End-to-end latency, per completed request.
@@ -111,6 +115,8 @@ pub struct Snapshot {
     pub reprefill_tokens: u64,
     pub gather_bytes: u64,
     pub drift_alerts: u64,
+    /// Lifecycle trace events lost to ring wraparound (0 when untraced).
+    pub trace_dropped: u64,
     /// Full bucket dumps backing the percentile fields above.
     pub ttft_hist: HistSnapshot,
     pub total_hist: HistSnapshot,
@@ -233,6 +239,7 @@ impl Metrics {
             reprefill_tokens: self.reprefill_tokens.load(Ordering::Relaxed),
             gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
             drift_alerts: self.drift_alerts.load(Ordering::Relaxed),
+            trace_dropped: self.trace_dropped.load(Ordering::Relaxed),
             ttft_hist: ttft,
             total_hist: total,
             tpot_hist: tpot,
@@ -247,6 +254,7 @@ impl Snapshot {
     /// serve writes it to `--metrics-out`.
     pub fn to_json(&self) -> Json {
         obj(vec![
+            ("schema_version", num(SCHEMA_VERSION as f64)),
             ("requests_completed", num(self.requests_completed as f64)),
             ("tokens_generated", num(self.tokens_generated as f64)),
             ("decode_steps", num(self.decode_steps as f64)),
@@ -282,11 +290,83 @@ impl Snapshot {
             ("reprefill_tokens", num(self.reprefill_tokens as f64)),
             ("gather_bytes", num(self.gather_bytes as f64)),
             ("drift_alerts", num(self.drift_alerts as f64)),
+            ("trace_dropped", num(self.trace_dropped as f64)),
             ("ttft_hist", self.ttft_hist.to_json()),
             ("total_hist", self.total_hist.to_json()),
             ("tpot_hist", self.tpot_hist.to_json()),
             ("step_hist", self.step_hist.to_json()),
         ])
+    }
+
+    /// Render the end-of-run aggregates into a Prometheus exposition under
+    /// one `engine` label: lifetime counters as `counter`s, current levels
+    /// and throughputs as `gauge`s, and the four latency histograms as
+    /// quantile-labeled `summary` series.
+    pub fn render_prometheus(&self, expo: &mut Exposition, engine: &str) {
+        let l = &[("engine", engine)][..];
+        let counters: &[(&str, &str, f64)] = &[
+            ("requests_completed", "completed requests", self.requests_completed as f64),
+            ("tokens_generated", "decoded tokens", self.tokens_generated as f64),
+            ("decode_steps", "batched decode steps", self.decode_steps as f64),
+            ("prefill_tokens_computed", "prompt tokens prefilled", self.prefill_tokens as f64),
+            ("preemptions", "requests evicted under page pressure", self.preemptions as f64),
+            ("prefix_hits", "prompts that reused shared prefix pages", self.prefix_hits as f64),
+            ("prefix_tokens_reused", "prompt tokens reused", self.prefix_tokens_reused as f64),
+            ("swap_outs", "evictions that moved KV state to the host tier", self.swap_outs as f64),
+            ("swap_ins", "swapped resumes restored from the host tier", self.swap_ins as f64),
+            ("swap_stalls", "swap-outs refused by a full host arena", self.swap_stalls as f64),
+            ("swap_fallbacks", "resumes that fell back to re-prefill", self.swap_fallbacks as f64),
+            ("reprefill_tokens", "tokens re-prefilled on resume", self.reprefill_tokens as f64),
+            ("drift_alerts", "quantization error left the envelope", self.drift_alerts as f64),
+            ("trace_dropped_events", "lost to tracer ring wraparound", self.trace_dropped as f64),
+        ];
+        for &(name, help, v) in counters {
+            expo.add(&format!("kvtuner_{name}_total"), "counter", help, l, v);
+        }
+        let gauges: &[(&str, &str, f64)] = &[
+            ("decode_tokens_per_sec", "decode throughput", self.tokens_per_sec_decode),
+            ("prefill_tokens_per_sec", "prefill throughput", self.prefill_tokens_per_sec),
+            ("decode_step_seconds_last", "last decode step wall time", self.last_decode_ms / 1e3),
+            ("decode_step_seconds_mean", "mean decode step time", self.decode_ms_per_step / 1e3),
+            ("mean_batch_occupancy", "mean busy slots per decode step", self.mean_batch_occupancy),
+        ];
+        for &(name, help, v) in gauges {
+            expo.add(&format!("kvtuner_{name}"), "gauge", help, l, v);
+        }
+        let summaries: &[(&str, &str, [f64; 3], &HistSnapshot)] = &[
+            (
+                "ttft_seconds",
+                "time to first token",
+                [self.ttft_p50, self.ttft_p95, self.ttft_p99],
+                &self.ttft_hist,
+            ),
+            (
+                "request_seconds",
+                "end-to-end request latency",
+                [self.total_p50, self.total_p95, self.total_p99],
+                &self.total_hist,
+            ),
+            (
+                "tpot_seconds",
+                "per-request mean time per output token",
+                [self.tpot_p50, self.tpot_p95, self.tpot_p99],
+                &self.tpot_hist,
+            ),
+            (
+                "decode_step_seconds",
+                "batched decode step wall time",
+                [self.step_p50, self.step_p95, self.step_p99],
+                &self.step_hist,
+            ),
+        ];
+        for &(name, help, qs, hist) in summaries {
+            let family = format!("kvtuner_{name}");
+            for (q, v) in [("0.5", qs[0]), ("0.95", qs[1]), ("0.99", qs[2])] {
+                expo.add(&family, "summary", help, &[("engine", engine), ("quantile", q)], v);
+            }
+            expo.add_suffixed(&family, "_count", "summary", help, l, hist.total as f64);
+            expo.add_suffixed(&family, "_sum", "summary", help, l, hist.sum_nanos as f64 / 1e9);
+        }
     }
 }
 

@@ -20,7 +20,8 @@ use crate::engine::Engine;
 use crate::engine::{BackendKind, EngineCore, NativeEngine};
 use crate::kvcache::PagedOptions;
 use crate::obs::{
-    ProbeConfig, ProfileSnapshot, SensitivityShared, SensitivitySnapshot, TraceSink, Tracer,
+    Counters, ProbeConfig, ProfileSnapshot, SensitivityShared, SensitivitySnapshot, TraceSink,
+    Tracer,
 };
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
@@ -63,6 +64,11 @@ pub struct WorkerSpec {
     /// instead of loading a model from the artifact dir (native backend
     /// only — smoke tests and CI runs that have no artifacts).
     pub synthetic: Option<ModelConfig>,
+    /// `Some` = this worker's counter-track registry (`--metrics-listen`,
+    /// `--trace-out`): the scheduler publishes memory-hierarchy occupancy
+    /// per tick and the engine per-layer live-KV bytes into it. One
+    /// registry per worker; `None` = no tracks, no overhead.
+    pub counters: Option<Arc<Counters>>,
 }
 
 impl Default for WorkerSpec {
@@ -82,6 +88,7 @@ impl Default for WorkerSpec {
             profile: false,
             probe: None,
             synthetic: None,
+            counters: None,
         }
     }
 }
@@ -154,6 +161,9 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
     if let Some(p) = &ws.probe {
         engine.set_probe(p.clone());
     }
+    if let Some(c) = &ws.counters {
+        engine.set_counters(c);
+    }
     Ok(engine)
 }
 
@@ -172,6 +182,18 @@ pub struct WorkerHandle {
     /// serving loop.
     pub sensitivity: Arc<Mutex<Option<Arc<SensitivityShared>>>>,
     pub join: JoinHandle<Result<()>>,
+}
+
+/// One worker's mid-run observables, handed to streaming readers (the
+/// `--metrics-interval` JSONL loop, the `/metrics` scrape endpoint): its
+/// metrics atomics, the probe's live accumulator slot, and its counter-track
+/// registry. All snapshot-safe while the worker serves.
+#[derive(Clone)]
+pub struct WorkerObserver {
+    pub name: String,
+    pub metrics: Arc<Metrics>,
+    pub sensitivity: Arc<Mutex<Option<Arc<SensitivityShared>>>>,
+    pub counters: Option<Arc<Counters>>,
 }
 
 /// Everything one worker reports at shutdown: its serving metrics snapshot
@@ -241,6 +263,7 @@ impl Router {
                             .trace
                             .as_ref()
                             .map(|t| TraceSink { tracer: t.clone(), worker: wi as u32 }),
+                        counters: ws.counters.clone(),
                         ..SchedulerOptions::default()
                     };
                     let mut sched = Scheduler::new(engine, &ws.name, opts, met);
@@ -306,15 +329,17 @@ impl Router {
         Ok(Submission { id, rx })
     }
 
-    /// Per-worker observables for mid-run streaming readers: name, metrics,
-    /// and the probe's live accumulator slot. All are snapshot-safe from any
-    /// thread while the workers serve.
-    pub fn observers(
-        &self,
-    ) -> Vec<(String, Arc<Metrics>, Arc<Mutex<Option<Arc<SensitivityShared>>>>)> {
+    /// Per-worker observables for mid-run streaming readers. All fields are
+    /// snapshot-safe from any thread while the workers serve.
+    pub fn observers(&self) -> Vec<WorkerObserver> {
         self.workers
             .iter()
-            .map(|w| (w.spec.name.clone(), w.metrics.clone(), w.sensitivity.clone()))
+            .map(|w| WorkerObserver {
+                name: w.spec.name.clone(),
+                metrics: w.metrics.clone(),
+                sensitivity: w.sensitivity.clone(),
+                counters: w.spec.counters.clone(),
+            })
             .collect()
     }
 

@@ -46,7 +46,7 @@ use anyhow::Result;
 
 use crate::engine::EngineCore;
 use crate::kvcache::{CacheBackend, OutOfPages, SwapHandle, SwapPolicy};
-use crate::obs::{EventKind, TraceSink};
+use crate::obs::{CounterHandle, Counters, EventKind, TraceSink};
 
 use super::batcher::{Batcher, BatcherOptions};
 use super::metrics::Metrics;
@@ -200,6 +200,112 @@ pub fn choose_preempt_action(
     }
 }
 
+/// Pre-registered counter handles for the memory-hierarchy time series the
+/// scheduler publishes once per tick: device page-pool occupancy, host
+/// swap-arena occupancy, swap/staging byte rates (EWMA bandwidth), queue
+/// depths and batch width. Registration happens once at scheduler
+/// construction; per-tick publication is a handful of lock-free seqlock
+/// writes, and a scheduler built without counters skips all of it.
+struct HierarchyTracks {
+    pool_blocks_live: CounterHandle,
+    pool_blocks_free: CounterHandle,
+    pool_blocks_total: CounterHandle,
+    pool_bytes_live: CounterHandle,
+    pool_frag_bytes: CounterHandle,
+    host_swap_bytes_used: CounterHandle,
+    host_swap_bytes_total: CounterHandle,
+    swap_out_bytes: CounterHandle,
+    swap_in_bytes: CounterHandle,
+    gather_bytes: CounterHandle,
+    resume_queue_depth: CounterHandle,
+    admission_queue_depth: CounterHandle,
+    prefill_backlog_tokens: CounterHandle,
+    active_batch: CounterHandle,
+    busy_slots: CounterHandle,
+}
+
+impl HierarchyTracks {
+    fn register(c: &Counters) -> HierarchyTracks {
+        HierarchyTracks {
+            pool_blocks_live: c.gauge(
+                "pool_blocks_live",
+                "blocks",
+                "device page-pool blocks currently held by live sequences",
+            ),
+            pool_blocks_free: c.gauge(
+                "pool_blocks_free",
+                "blocks",
+                "device page-pool free-list depth",
+            ),
+            pool_blocks_total: c.gauge(
+                "pool_blocks_total",
+                "blocks",
+                "device page-pool capacity in blocks",
+            ),
+            pool_bytes_live: c.gauge(
+                "pool_bytes_live",
+                "bytes",
+                "quantized KV bytes resident in the device arena",
+            ),
+            pool_frag_bytes: c.gauge(
+                "pool_frag_bytes",
+                "bytes",
+                "bytes lost to partially filled tail pages",
+            ),
+            host_swap_bytes_used: c.gauge(
+                "host_swap_bytes_used",
+                "bytes",
+                "host swap-arena bytes pinned by outstanding swap handles",
+            ),
+            host_swap_bytes_total: c.gauge(
+                "host_swap_bytes_total",
+                "bytes",
+                "host swap-arena reservation",
+            ),
+            swap_out_bytes: c.rate(
+                "swap_out_bytes",
+                "bytes",
+                "cumulative bytes copied device-to-host at preemption",
+            ),
+            swap_in_bytes: c.rate(
+                "swap_in_bytes",
+                "bytes",
+                "cumulative bytes copied host-to-device at resume",
+            ),
+            gather_bytes: c.rate(
+                "gather_bytes",
+                "bytes",
+                "cumulative gather-to-dense staging bytes (XLA arm; native is 0)",
+            ),
+            resume_queue_depth: c.gauge(
+                "resume_queue_depth",
+                "requests",
+                "preempted requests waiting to resume",
+            ),
+            admission_queue_depth: c.gauge(
+                "admission_queue_depth",
+                "requests",
+                "requests queued behind admission",
+            ),
+            prefill_backlog_tokens: c.gauge(
+                "prefill_backlog_tokens",
+                "tokens",
+                "context tokens still to prefill across mid-prefill slots",
+            ),
+            active_batch: c.gauge(
+                "active_batch",
+                "slots",
+                "slots that took part in the last batched decode step",
+            ),
+            busy_slots: c.gauge(
+                "busy_slots",
+                "slots",
+                "slots holding a request in any stage (prefilling or decoding)",
+            ),
+        }
+    }
+}
+
 /// Completion predicate for one request after a decode step has pushed its
 /// token. `generated` includes the prefill's first token, so a request is
 /// done at exactly `max_new` tokens — the old `>` comparison ran one extra
@@ -229,6 +335,9 @@ pub struct Scheduler {
     step_next: Vec<i32>,
     /// Lifecycle trace sink; `None` keeps the serving loop emission-free.
     trace: Option<TraceSink>,
+    /// Memory-hierarchy counter tracks, published once per tick; `None`
+    /// keeps the serving loop publication-free.
+    hier: Option<HierarchyTracks>,
     /// Drift alerts already traced, so each new envelope violation emits
     /// exactly one `EventKind::Drift` instant.
     drift_seen: u64,
@@ -248,6 +357,9 @@ pub struct SchedulerOptions {
     pub capture_logits: bool,
     /// Lifecycle trace sink (worker-tagged handle on the shared ring).
     pub trace: Option<TraceSink>,
+    /// Counter registry for the per-tick memory-hierarchy time series
+    /// (`None` disables publication entirely).
+    pub counters: Option<Arc<Counters>>,
 }
 
 impl Default for SchedulerOptions {
@@ -259,6 +371,7 @@ impl Default for SchedulerOptions {
             chunked_prefill: true,
             capture_logits: false,
             trace: None,
+            counters: None,
         }
     }
 }
@@ -284,6 +397,7 @@ impl Scheduler {
             step_active: vec![false; batch],
             step_next: vec![0; batch],
             trace: opts.trace,
+            hier: opts.counters.as_deref().map(HierarchyTracks::register),
             drift_seen: 0,
             name: name.to_string(),
         }
@@ -849,6 +963,42 @@ impl Scheduler {
         Ok(busy)
     }
 
+    /// Publish the per-tick memory-hierarchy time series: device page-pool
+    /// occupancy and free-list depth, host swap-arena occupancy, swap and
+    /// staging byte totals (the tracks' EWMA turns them into bandwidth),
+    /// queue depths, prefill backlog and batch width. A scheduler built
+    /// without counters pays a single branch here.
+    fn publish_counters(&mut self, decoded: usize) {
+        let Some(h) = &self.hier else { return };
+        let ms = self.engine.cache().mem_stats();
+        h.pool_blocks_live.record(ms.blocks_live as f64);
+        h.pool_blocks_free.record(ms.blocks_free as f64);
+        h.pool_blocks_total.record(ms.blocks_total as f64);
+        h.pool_bytes_live.record(ms.bytes_live as f64);
+        h.pool_frag_bytes.record(ms.frag_bytes as f64);
+        h.host_swap_bytes_used.record(ms.host_bytes_used as f64);
+        h.host_swap_bytes_total.record(ms.host_bytes_total as f64);
+        h.swap_out_bytes.record(self.metrics.swap_bytes_out.load(Ordering::Relaxed) as f64);
+        h.swap_in_bytes.record(self.metrics.swap_bytes_in.load(Ordering::Relaxed) as f64);
+        h.gather_bytes.record(self.metrics.gather_bytes.load(Ordering::Relaxed) as f64);
+        h.resume_queue_depth.record(self.preempted.len() as f64);
+        h.admission_queue_depth.record(self.batcher.len() as f64);
+        let backlog: usize = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Prefilling(p) => p.ctx.len() - p.done,
+                _ => 0,
+            })
+            .sum();
+        h.prefill_backlog_tokens.record(backlog as f64);
+        h.active_batch.record(decoded as f64);
+        h.busy_slots.record(self.busy() as f64);
+        // per-layer-per-precision arena bytes, published by the engine's
+        // own sampling hook so the same tracks update inside decode steps
+        self.engine.sample_kv_live();
+    }
+
     /// One scheduling round: admit waiting work, advance chunked prefills,
     /// make decode headroom, then run one batched decode step. Returns the
     /// number of slots that decoded. This is the unit the serving loop —
@@ -857,7 +1007,14 @@ impl Scheduler {
         self.admit()?;
         self.advance_prefills()?;
         self.preempt_for_headroom();
-        self.decode_tick()
+        let decoded = self.decode_tick()?;
+        if let Some(t) = &self.trace {
+            // ring-overflow accounting so truncated traces are detectable
+            // from any metrics surface
+            self.metrics.trace_dropped.store(t.tracer.dropped(), Ordering::Relaxed);
+        }
+        self.publish_counters(decoded);
+        Ok(decoded)
     }
 
     /// Serve until `shutdown` flips and all in-flight work drains.

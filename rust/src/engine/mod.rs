@@ -132,7 +132,14 @@ pub trait EngineCore {
     /// current occupancy. Engines call this each decode step; the scheduler
     /// also calls it around swap-out/swap-in so eviction-time peaks are
     /// captured (a swapped-out slot's bytes vanish from `layer_kv_live`).
+    /// With counters attached (`set_counters`) the same sampling also
+    /// publishes per-layer `layer_kv_live` time-series points.
     fn sample_kv_live(&self) {}
+
+    /// Attach a counter registry: `sample_kv_live` additionally publishes
+    /// each layer's live KV bytes as a `layer_kv_live{layer,spec}` track.
+    /// The default engine publishes nothing — and pays nothing.
+    fn set_counters(&mut self, _counters: &std::sync::Arc<crate::obs::Counters>) {}
 
     fn kv_bytes(&self) -> usize {
         self.cache().kv_bytes()

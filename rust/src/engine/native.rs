@@ -44,7 +44,7 @@ use crate::config::{LayerSpec, Mode, ModelConfig};
 use crate::kernel::{self, ThreadPool};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
-use crate::obs::{Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
+use crate::obs::{CounterHandle, Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
 use crate::tensor::Tensor;
 
 /// Engine-resident scratch: sized once at construction so the decode loop
@@ -722,6 +722,9 @@ pub struct NativeEngine {
     /// Logits of the last step per slot (for perplexity / eval paths);
     /// allocated once, refilled in place every step.
     pub last_logits: Vec<Vec<f32>>,
+    /// One `layer_kv_live{layer,spec}` counter track per layer, attached
+    /// via `set_counters`; empty (publication-free) by default.
+    layer_tracks: Vec<CounterHandle>,
 }
 
 impl NativeEngine {
@@ -764,6 +767,7 @@ impl NativeEngine {
             profiler: Profiler::disabled(),
             probe: SensitivityProbe::disabled(),
             last_logits: vec![vec![0f32; cfg.vocab]; batch],
+            layer_tracks: Vec::new(),
         })
     }
 
@@ -876,12 +880,21 @@ impl NativeEngine {
     /// current occupancy. Runs after every decode step; the scheduler also
     /// calls it around swap transitions, because a swap-out removes the
     /// victim's bytes from `layer_kv_live` before the next step samples.
+    /// With counter tracks attached, the same walk publishes each layer's
+    /// live bytes as a time-series point — levels, not just peaks.
     pub fn sample_kv_live(&self) {
+        if !self.profiler.enabled() && self.layer_tracks.is_empty() {
+            return;
+        }
+        let live = self.cache.layer_kv_live();
         if self.profiler.enabled() {
             // per-layer live KV bytes (peaks kept)
-            for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
+            for (l, bytes) in live.iter().enumerate() {
                 self.profiler.note_kv_live(l, *bytes as u64);
             }
+        }
+        for (h, bytes) in self.layer_tracks.iter().zip(&live) {
+            h.record(*bytes as f64);
         }
     }
 
@@ -1109,5 +1122,27 @@ impl super::EngineCore for NativeEngine {
 
     fn sample_kv_live(&self) {
         NativeEngine::sample_kv_live(self)
+    }
+
+    fn set_counters(&mut self, counters: &std::sync::Arc<crate::obs::Counters>) {
+        self.layer_tracks = self
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(l, s)| {
+                counters.gauge_with(
+                    "layer_kv_live",
+                    vec![
+                        ("layer".to_string(), format!("{l:02}")),
+                        (
+                            "spec".to_string(),
+                            format!("{} K{}V{}", s.mode.as_str(), s.pair.k_bits, s.pair.v_bits),
+                        ),
+                    ],
+                    "bytes",
+                    "live quantized KV bytes resident per layer and precision",
+                )
+            })
+            .collect();
     }
 }

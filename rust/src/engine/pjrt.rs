@@ -19,7 +19,7 @@ use xla::Literal;
 use crate::config::{LayerSpec, Manifest, Mode, ModelConfig};
 use crate::kvcache::{CacheBackend, KvCache, PagedKvCache, PagedOptions};
 use crate::model::Weights;
-use crate::obs::{Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
+use crate::obs::{CounterHandle, Phase, ProbeConfig, ProfileSnapshot, Profiler, SensitivityProbe};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -59,6 +59,9 @@ pub struct Engine {
     /// fp residual chunks are shadowed at kivi commit (`e_k`/`e_v`; the
     /// attention-divergence columns stay zero).
     probe: SensitivityProbe,
+    /// One `layer_kv_live{layer,spec}` counter track per layer, attached
+    /// via `set_counters`; empty (publication-free) by default.
+    layer_tracks: Vec<CounterHandle>,
 }
 
 impl Engine {
@@ -179,6 +182,7 @@ impl Engine {
             gather_bytes: AtomicU64::new(0),
             profiler: Profiler::disabled(),
             probe: SensitivityProbe::disabled(),
+            layer_tracks: Vec::new(),
         })
     }
 
@@ -324,12 +328,21 @@ impl Engine {
 
     /// Feed the profiler's per-layer live-KV-byte peaks from the cache's
     /// current occupancy (each decode step; the scheduler also calls it
-    /// around swap transitions so eviction-time peaks are captured).
+    /// around swap transitions so eviction-time peaks are captured). With
+    /// counter tracks attached, the same walk publishes each layer's live
+    /// bytes as a time-series point — levels, not just peaks.
     pub fn sample_kv_live(&self) {
+        if !self.profiler.enabled() && self.layer_tracks.is_empty() {
+            return;
+        }
+        let live = self.cache.layer_kv_live();
         if self.profiler.enabled() {
-            for (l, bytes) in self.cache.layer_kv_live().iter().enumerate() {
+            for (l, bytes) in live.iter().enumerate() {
                 self.profiler.note_kv_live(l, *bytes as u64);
             }
+        }
+        for (h, bytes) in self.layer_tracks.iter().zip(&live) {
+            h.record(*bytes as f64);
         }
     }
 
@@ -480,6 +493,28 @@ impl super::EngineCore for Engine {
 
     fn sample_kv_live(&self) {
         Engine::sample_kv_live(self)
+    }
+
+    fn set_counters(&mut self, counters: &Arc<crate::obs::Counters>) {
+        self.layer_tracks = self
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(l, s)| {
+                counters.gauge_with(
+                    "layer_kv_live",
+                    vec![
+                        ("layer".to_string(), format!("{l:02}")),
+                        (
+                            "spec".to_string(),
+                            format!("{} K{}V{}", s.mode.as_str(), s.pair.k_bits, s.pair.v_bits),
+                        ),
+                    ],
+                    "bytes",
+                    "live quantized KV bytes resident per layer and precision",
+                )
+            })
+            .collect();
     }
 
     fn generate(&mut self, slot: usize, prompt: &[i32], max_new: usize) -> Result<Vec<i32>> {

@@ -1,0 +1,492 @@
+//! Named time-series counter tracks: the continuous occupancy/bandwidth
+//! signals the end-of-run aggregates in [`crate::coordinator::Metrics`]
+//! cannot provide.
+//!
+//! Each track is a bounded ring of `(t_nanos, value)` samples written with
+//! a per-slot seqlock — the publisher does a handful of relaxed/release
+//! atomic stores and never blocks, and a snapshot reads the ring without
+//! taking any lock (a sample the writer is mid-overwrite on is simply
+//! skipped). Two flavors:
+//!
+//! * [`CounterKind::Gauge`] — instantaneous level (pool occupancy, queue
+//!   depth, live bytes). Exported as a Prometheus `gauge`.
+//! * [`CounterKind::Rate`] — a monotonically nondecreasing cumulative
+//!   total (swap bytes, gather bytes). The publisher additionally folds
+//!   each delta into an EWMA per-second rate with a wall-clock time
+//!   constant, so the exposition can report live bandwidth next to the
+//!   raw counter. Exported as a Prometheus `counter` (`_total`) plus an
+//!   `_ewma_per_sec` gauge.
+//!
+//! The registry ([`Counters`]) hands out cheaply cloneable
+//! [`CounterHandle`]s at registration time (the only locking point) so hot
+//! paths publish through a pre-resolved `Arc` with zero lookups. Tracks
+//! carry Prometheus-style labels (e.g. `layer="03"`, `spec="kivi K8V4"`),
+//! letting one logical series name fan out per layer / per precision.
+//!
+//! Timestamps are nanoseconds since the registry epoch; construct with
+//! [`Counters::with_epoch`] sharing the [`crate::obs::Tracer`]'s epoch and
+//! the samples land on the same Perfetto timeline as the lifecycle spans.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Default per-track ring capacity (~4 KiB of samples per track).
+pub const DEFAULT_TRACK_CAPACITY: usize = 256;
+
+/// EWMA time constant for [`CounterKind::Rate`] tracks, seconds. Chosen so
+/// bandwidth readings settle within a couple of seconds of a load change
+/// while still smoothing over per-tick burstiness.
+const EWMA_TAU_S: f64 = 1.5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterKind {
+    /// Instantaneous level; each sample stands alone.
+    Gauge,
+    /// Monotonic cumulative total; deltas between samples are folded into
+    /// an EWMA per-second rate.
+    Rate,
+}
+
+impl CounterKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CounterKind::Gauge => "gauge",
+            CounterKind::Rate => "rate",
+        }
+    }
+}
+
+/// One `(t_nanos, value)` point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Nanoseconds since the registry epoch.
+    pub t_nanos: u64,
+    pub value: f64,
+}
+
+/// One ring slot: a seqlock triple. `seq` is odd while the writer is
+/// mid-store and `2 * (generation + 1)` once the sample for `generation`
+/// is fully published.
+#[derive(Debug)]
+struct Slot {
+    seq: AtomicU64,
+    t: AtomicU64,
+    /// f64 bits.
+    v: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { seq: AtomicU64::new(0), t: AtomicU64::new(0), v: AtomicU64::new(0) }
+    }
+}
+
+#[derive(Debug)]
+struct Track {
+    name: String,
+    labels: Vec<(String, String)>,
+    unit: &'static str,
+    help: &'static str,
+    kind: CounterKind,
+    slots: Vec<Slot>,
+    /// Lifetime publish count; `head` is stored last (release) so a reader
+    /// that observes generation `g` in `head` can rely on slot `g % cap`
+    /// having an even seq for some generation >= g.
+    head: AtomicU64,
+    // Rate bookkeeping. Written only by publishers; torn reads across the
+    // three cells would merely perturb one EWMA step, and in practice each
+    // track has a single publishing thread.
+    prev_t: AtomicU64,
+    prev_v: AtomicU64,
+    has_prev: AtomicU64,
+    /// EWMA per-second rate, f64 bits.
+    ewma: AtomicU64,
+}
+
+impl Track {
+    fn publish(&self, t_nanos: u64, value: f64) {
+        if self.kind == CounterKind::Rate {
+            self.fold_rate(t_nanos, value);
+        }
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head as usize) % self.slots.len()];
+        // canonical seqlock write: odd seq, release fence, data, even seq
+        slot.seq.store(2 * head + 1, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::Release);
+        slot.t.store(t_nanos, Ordering::Relaxed);
+        slot.v.store(value.to_bits(), Ordering::Relaxed);
+        slot.seq.store(2 * (head + 1), Ordering::Release);
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    fn fold_rate(&self, t_nanos: u64, value: f64) {
+        if self.has_prev.load(Ordering::Relaxed) == 1 {
+            let pt = self.prev_t.load(Ordering::Relaxed);
+            let pv = f64::from_bits(self.prev_v.load(Ordering::Relaxed));
+            if t_nanos > pt {
+                let dt = (t_nanos - pt) as f64 / 1e9;
+                // clamp negative deltas (counter reset) to zero rate
+                let rate = (value - pv).max(0.0) / dt;
+                let alpha = 1.0 - (-dt / EWMA_TAU_S).exp();
+                let old = f64::from_bits(self.ewma.load(Ordering::Relaxed));
+                self.ewma.store((old + alpha * (rate - old)).to_bits(), Ordering::Relaxed);
+            }
+        }
+        self.prev_t.store(t_nanos, Ordering::Relaxed);
+        self.prev_v.store(value.to_bits(), Ordering::Relaxed);
+        self.has_prev.store(1, Ordering::Relaxed);
+    }
+
+    /// Lock-free read of the retained samples, oldest first. A slot the
+    /// writer is concurrently overwriting (odd seq, or seq from a newer
+    /// generation) is skipped rather than waited on.
+    fn samples(&self) -> Vec<Sample> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for g in start..head {
+            let slot = &self.slots[(g % cap) as usize];
+            let want = 2 * (g + 1);
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != want {
+                continue; // overwritten (or mid-overwrite) by a newer generation
+            }
+            let t = slot.t.load(Ordering::Relaxed);
+            let v = f64::from_bits(slot.v.load(Ordering::Relaxed));
+            // canonical seqlock read: acquire fence, then re-check seq
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) == want {
+                out.push(Sample { t_nanos: t, value: v });
+            }
+        }
+        out
+    }
+
+    fn snapshot(&self) -> TrackSnapshot {
+        TrackSnapshot {
+            name: self.name.clone(),
+            labels: self.labels.clone(),
+            unit: self.unit,
+            kind: self.kind,
+            published: self.head.load(Ordering::Acquire),
+            ewma_per_sec: match self.kind {
+                CounterKind::Rate => Some(f64::from_bits(self.ewma.load(Ordering::Relaxed))),
+                CounterKind::Gauge => None,
+            },
+            samples: self.samples(),
+        }
+    }
+}
+
+/// Point-in-time copy of one track: identity, the retained ring, and the
+/// EWMA rate for [`CounterKind::Rate`] tracks.
+#[derive(Debug, Clone)]
+pub struct TrackSnapshot {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub unit: &'static str,
+    pub kind: CounterKind,
+    /// Lifetime publish count (`> samples.len()` means the ring wrapped).
+    pub published: u64,
+    pub ewma_per_sec: Option<f64>,
+    /// Retained samples, oldest first.
+    pub samples: Vec<Sample>,
+}
+
+impl TrackSnapshot {
+    pub fn latest(&self) -> Option<Sample> {
+        self.samples.last().copied()
+    }
+
+    /// Compact JSON: identity plus the latest sample (and EWMA rate), the
+    /// shape the `--metrics-interval` JSONL stream carries per tick.
+    pub fn to_json_latest(&self) -> Json {
+        let mut pairs = vec![
+            ("name", s(&self.name)),
+            ("kind", s(self.kind.as_str())),
+            ("unit", s(self.unit)),
+            (
+                "labels",
+                obj(self.labels.iter().map(|(k, v)| (k.as_str(), s(v.as_str()))).collect()),
+            ),
+        ];
+        if let Some(sm) = self.latest() {
+            pairs.push(("t_ns", num(sm.t_nanos as f64)));
+            pairs.push(("value", num(sm.value)));
+        }
+        if let Some(r) = self.ewma_per_sec {
+            pairs.push(("ewma_per_sec", num(r)));
+        }
+        obj(pairs)
+    }
+}
+
+/// Registry of counter tracks sharing one epoch. Registration takes a
+/// short mutex; publishing and snapshotting never do.
+#[derive(Debug)]
+pub struct Counters {
+    epoch: Instant,
+    cap: usize,
+    tracks: Mutex<Vec<Arc<Track>>>,
+}
+
+impl Default for Counters {
+    fn default() -> Counters {
+        Counters::new()
+    }
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::with_epoch(Instant::now())
+    }
+
+    /// Share an epoch with another time source (the [`crate::obs::Tracer`])
+    /// so counter samples and trace spans land on one timeline.
+    pub fn with_epoch(epoch: Instant) -> Counters {
+        Counters::with_capacity(epoch, DEFAULT_TRACK_CAPACITY)
+    }
+
+    pub fn with_capacity(epoch: Instant, cap: usize) -> Counters {
+        Counters { epoch, cap: cap.max(2), tracks: Mutex::new(Vec::new()) }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn now_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Register (or re-attach to) the track with this `(name, labels)`
+    /// identity. Idempotent: a second registration returns a handle on the
+    /// same ring, so restarts and multiple publishers compose.
+    pub fn register(
+        &self,
+        name: &str,
+        labels: Vec<(String, String)>,
+        unit: &'static str,
+        help: &'static str,
+        kind: CounterKind,
+    ) -> CounterHandle {
+        let mut tracks = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(t) = tracks.iter().find(|t| t.name == name && t.labels == labels) {
+            return CounterHandle { track: Arc::clone(t), epoch: self.epoch };
+        }
+        let track = Arc::new(Track {
+            name: name.to_string(),
+            labels,
+            unit,
+            help,
+            kind,
+            slots: (0..self.cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+            prev_t: AtomicU64::new(0),
+            prev_v: AtomicU64::new(0),
+            has_prev: AtomicU64::new(0),
+            ewma: AtomicU64::new(0f64.to_bits()),
+        });
+        tracks.push(Arc::clone(&track));
+        CounterHandle { track, epoch: self.epoch }
+    }
+
+    pub fn gauge(&self, name: &str, unit: &'static str, help: &'static str) -> CounterHandle {
+        self.register(name, Vec::new(), unit, help, CounterKind::Gauge)
+    }
+
+    pub fn gauge_with(
+        &self,
+        name: &str,
+        labels: Vec<(String, String)>,
+        unit: &'static str,
+        help: &'static str,
+    ) -> CounterHandle {
+        self.register(name, labels, unit, help, CounterKind::Gauge)
+    }
+
+    pub fn rate(&self, name: &str, unit: &'static str, help: &'static str) -> CounterHandle {
+        self.register(name, Vec::new(), unit, help, CounterKind::Rate)
+    }
+
+    /// Help text for a track name (first registration wins).
+    pub fn help_of(&self, name: &str) -> Option<&'static str> {
+        let tracks = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+        tracks.iter().find(|t| t.name == name).map(|t| t.help)
+    }
+
+    /// Snapshot every track: identity + retained ring + rates. Lock-free
+    /// except for cloning the (short) track list.
+    pub fn snapshot(&self) -> Vec<TrackSnapshot> {
+        let tracks: Vec<Arc<Track>> = {
+            let guard = self.tracks.lock().unwrap_or_else(|e| e.into_inner());
+            guard.clone()
+        };
+        tracks.iter().map(|t| t.snapshot()).collect()
+    }
+}
+
+/// Cheap cloneable publishing handle on one track.
+#[derive(Debug, Clone)]
+pub struct CounterHandle {
+    track: Arc<Track>,
+    epoch: Instant,
+}
+
+impl CounterHandle {
+    /// Publish a sample stamped "now".
+    pub fn record(&self, value: f64) {
+        self.track.publish(self.epoch.elapsed().as_nanos() as u64, value);
+    }
+
+    /// Publish with an explicit timestamp (nanoseconds since the registry
+    /// epoch) — deterministic rate math in tests, or batched publication
+    /// from a caller that already stamped the tick.
+    pub fn record_at(&self, t_nanos: u64, value: f64) {
+        self.track.publish(t_nanos, value);
+    }
+
+    /// Current EWMA per-second rate (0.0 for gauges or before two samples).
+    pub fn ewma_per_sec(&self) -> f64 {
+        f64::from_bits(self.track.ewma.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_samples() {
+        let c = Counters::with_capacity(Instant::now(), 8);
+        let h = c.gauge("depth", "reqs", "test gauge");
+        for i in 0..20u64 {
+            h.record_at(i * 1_000, i as f64);
+        }
+        let snap = &c.snapshot()[0];
+        assert_eq!(snap.published, 20);
+        assert_eq!(snap.samples.len(), 8);
+        let vals: Vec<f64> = snap.samples.iter().map(|s| s.value).collect();
+        assert_eq!(vals, (12..20).map(|i| i as f64).collect::<Vec<_>>());
+        let ts: Vec<u64> = snap.samples.iter().map(|s| s.t_nanos).collect();
+        assert!(ts.windows(2).all(|w| w[0] < w[1]), "samples oldest-first: {ts:?}");
+        assert_eq!(snap.latest().unwrap().value, 19.0);
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything() {
+        let c = Counters::with_capacity(Instant::now(), 16);
+        let h = c.gauge("x", "", "");
+        for i in 0..5u64 {
+            h.record_at(i, i as f64);
+        }
+        let snap = &c.snapshot()[0];
+        assert_eq!(snap.samples.len(), 5);
+        assert_eq!(snap.published, 5);
+        assert!(snap.ewma_per_sec.is_none());
+    }
+
+    #[test]
+    fn rate_track_ewma_matches_closed_form() {
+        let c = Counters::with_capacity(Instant::now(), 16);
+        let h = c.rate("bytes", "bytes", "cumulative");
+        // steady 1000 bytes/sec in 1s steps: ewma_n = R * (1 - (1-a)^n)
+        h.record_at(0, 0.0);
+        let a = 1.0 - (-1.0 / EWMA_TAU_S).exp();
+        let mut expect = 0.0;
+        for i in 1..=5u64 {
+            h.record_at(i * 1_000_000_000, (i * 1000) as f64);
+            expect += a * (1000.0 - expect);
+            let got = h.ewma_per_sec();
+            assert!(
+                (got - expect).abs() < 1e-9,
+                "step {i}: ewma {got} != expected {expect}"
+            );
+        }
+        let snap = &c.snapshot()[0];
+        assert!((snap.ewma_per_sec.unwrap() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_counter_reset_clamps_to_zero_not_negative() {
+        let c = Counters::new();
+        let h = c.rate("bytes", "bytes", "");
+        h.record_at(0, 1000.0);
+        h.record_at(1_000_000_000, 0.0); // reset
+        assert!(h.ewma_per_sec() >= 0.0);
+    }
+
+    #[test]
+    fn registration_is_idempotent_by_name_and_labels() {
+        let c = Counters::new();
+        let l = vec![("layer".to_string(), "03".to_string())];
+        let a = c.gauge_with("layer_kv_live", l.clone(), "bytes", "");
+        let b = c.gauge_with("layer_kv_live", l, "bytes", "");
+        a.record_at(1, 7.0);
+        b.record_at(2, 8.0);
+        let snaps = c.snapshot();
+        assert_eq!(snaps.len(), 1, "same identity must share one ring");
+        assert_eq!(snaps[0].samples.len(), 2);
+        // different labels → distinct track
+        c.gauge_with("layer_kv_live", vec![("layer".into(), "04".into())], "bytes", "");
+        assert_eq!(c.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_publish_and_snapshot_stay_coherent() {
+        use std::sync::atomic::AtomicBool;
+        let c = Arc::new(Counters::with_capacity(Instant::now(), 32));
+        let h = c.gauge("hot", "", "");
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    h.record_at(i, i as f64);
+                    i += 1;
+                }
+                i
+            })
+        };
+        for _ in 0..200 {
+            for snap in c.snapshot() {
+                // every accepted sample must be internally consistent
+                for sm in &snap.samples {
+                    assert_eq!(sm.t_nanos as f64, sm.value);
+                }
+                let ts: Vec<u64> = snap.samples.iter().map(|s| s.t_nanos).collect();
+                assert!(ts.windows(2).all(|w| w[0] < w[1]), "monotone: {ts:?}");
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total = writer.join().unwrap();
+        assert!(total > 0);
+        assert_eq!(c.snapshot()[0].published, total);
+    }
+
+    #[test]
+    fn latest_json_round_trips() {
+        let c = Counters::new();
+        let h = c.gauge_with(
+            "pool_blocks_live",
+            vec![("engine".into(), "tuned".into())],
+            "blocks",
+            "live device pages",
+        );
+        h.record_at(5_000, 17.0);
+        let j = c.snapshot()[0].to_json_latest();
+        let re = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(re.get("name").unwrap().as_str().unwrap(), "pool_blocks_live");
+        assert_eq!(re.get("kind").unwrap().as_str().unwrap(), "gauge");
+        assert_eq!(re.get("value").unwrap().as_f64().unwrap(), 17.0);
+        assert_eq!(
+            re.get("labels").unwrap().get("engine").unwrap().as_str().unwrap(),
+            "tuned"
+        );
+    }
+}

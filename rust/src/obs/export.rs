@@ -1,0 +1,557 @@
+//! Pull-based exporters for the observability substrate: Prometheus
+//! text-exposition rendering of counter tracks and snapshot aggregates, a
+//! minimal std-`TcpListener` HTTP responder serving `/metrics`
+//! (`--metrics-listen ADDR` — no HTTP stack, no new deps), and the
+//! Chrome-trace writer that interleaves counter events (`"ph": "C"`) with
+//! the lifecycle spans so Perfetto renders occupancy/bandwidth curves
+//! under the per-slot tracks.
+//!
+//! Exposition conventions: every metric is prefixed `kvtuner_`, every
+//! per-engine series carries an `engine` label, [`CounterKind::Rate`]
+//! tracks export as a `counter` named `<track>_total` plus a
+//! `<track>_ewma_per_sec` gauge, and `kvtuner_schema_version` stamps the
+//! wire schema (see [`crate::obs::SCHEMA_VERSION`]).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::counters::{CounterKind, TrackSnapshot};
+use super::trace::Tracer;
+use super::SCHEMA_VERSION;
+
+/// Accumulates samples grouped by metric name, then renders the Prometheus
+/// text exposition format (version 0.0.4): all samples of one metric under
+/// a single `# HELP` / `# TYPE` header, labels escaped, one sample per
+/// line.
+#[derive(Debug, Default)]
+pub struct Exposition {
+    metrics: BTreeMap<String, Metric>,
+}
+
+#[derive(Debug)]
+struct Metric {
+    kind: &'static str,
+    help: String,
+    /// (sample name, rendered labels, value) — the sample name is usually
+    /// the family name, but summaries also carry `_count`/`_sum` children.
+    samples: Vec<(String, String, f64)>,
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// True iff `name` is a legal Prometheus metric name.
+pub fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().enumerate().all(|(i, c)| {
+            c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit())
+        })
+}
+
+impl Exposition {
+    pub fn new() -> Exposition {
+        let mut e = Exposition::default();
+        e.add(
+            "kvtuner_schema_version",
+            "gauge",
+            "wire schema version of every kvtuner telemetry surface",
+            &[],
+            SCHEMA_VERSION as f64,
+        );
+        e
+    }
+
+    /// Add one sample. The first `(kind, help)` seen for a family wins;
+    /// all samples of that family render under one header regardless of
+    /// insertion order.
+    pub fn add(
+        &mut self,
+        name: &str,
+        kind: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.add_suffixed(name, "", kind, help, labels, value);
+    }
+
+    /// Add a child sample of family `name` whose sample name is
+    /// `name<suffix>` — how a summary's `_count`/`_sum` series land under
+    /// the parent family's single `# TYPE` header.
+    pub fn add_suffixed(
+        &mut self,
+        name: &str,
+        suffix: &str,
+        kind: &'static str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        debug_assert!(valid_metric_name(name), "bad metric name {name:?}");
+        let rendered = if labels.is_empty() {
+            String::new()
+        } else {
+            let body: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+            format!("{{{}}}", body.join(","))
+        };
+        self.metrics
+            .entry(name.to_string())
+            .or_insert_with(|| Metric { kind, help: help.to_string(), samples: Vec::new() })
+            .samples
+            .push((format!("{name}{suffix}"), rendered, value));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (family, m) in &self.metrics {
+            out.push_str(&format!("# HELP {family} {}\n", escape_help(&m.help)));
+            out.push_str(&format!("# TYPE {family} {}\n", m.kind));
+            for (name, labels, v) in &m.samples {
+                if v.is_nan() {
+                    out.push_str(&format!("{name}{labels} NaN\n"));
+                } else if v.is_infinite() {
+                    let sign = if *v < 0.0 { "-" } else { "+" };
+                    out.push_str(&format!("{name}{labels} {sign}Inf\n"));
+                } else {
+                    out.push_str(&format!("{name}{labels} {v}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Render one engine's counter tracks into the exposition: the latest
+/// sample of every track, gauges as-is, rate tracks as `_total` counter +
+/// `_ewma_per_sec` gauge.
+pub fn render_tracks(expo: &mut Exposition, engine: &str, tracks: &[TrackSnapshot]) {
+    for t in tracks {
+        let Some(latest) = t.latest() else { continue };
+        let mut labels: Vec<(&str, &str)> = vec![("engine", engine)];
+        for (k, v) in &t.labels {
+            labels.push((k.as_str(), v.as_str()));
+        }
+        match t.kind {
+            CounterKind::Gauge => {
+                expo.add(&format!("kvtuner_{}", t.name), "gauge", t.unit, &labels, latest.value);
+            }
+            CounterKind::Rate => {
+                expo.add(
+                    &format!("kvtuner_{}_total", t.name),
+                    "counter",
+                    t.unit,
+                    &labels,
+                    latest.value,
+                );
+                expo.add(
+                    &format!("kvtuner_{}_ewma_per_sec", t.name),
+                    "gauge",
+                    t.unit,
+                    &labels,
+                    t.ewma_per_sec.unwrap_or(0.0),
+                );
+            }
+        }
+    }
+}
+
+/// Minimal HTTP responder for `/metrics`: a nonblocking accept loop on a
+/// dedicated thread, rendering the exposition per scrape via the supplied
+/// closure. Anything but `GET /metrics` (or `/`) gets a 404. Connection
+/// handling is strictly one-shot (`Connection: close`).
+#[derive(Debug)]
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn start<F>(addr: &str, render: F) -> Result<MetricsServer>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // serve inline: scrapes are tiny and infrequent
+                            let _ = handle(stream, &render);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle<F: Fn() -> String>(mut stream: TcpStream, render: &F) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // read until the end of the request head (or a sane cap)
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body): (&str, String) = if method != "GET" {
+        ("405 Method Not Allowed", "method not allowed\n".into())
+    } else if path == "/metrics" || path.starts_with("/metrics?") || path == "/" {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found; scrape /metrics\n".into())
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+/// Chrome trace-event counter events (`"ph": "C"`) for one worker's
+/// tracks: one named counter track per series, every retained ring sample
+/// a point, so Perfetto draws the occupancy/bandwidth curve under that
+/// worker's lifecycle spans. Per-layer series keep their labels in the
+/// series key inside `args`, which Perfetto stacks on one track.
+pub fn chrome_counter_events(worker: u32, tracks: &[TrackSnapshot]) -> Vec<Json> {
+    let mut out = Vec::new();
+    for t in tracks {
+        let series = if t.labels.is_empty() {
+            t.unit.to_string()
+        } else {
+            t.labels.iter().map(|(_, v)| v.as_str()).collect::<Vec<_>>().join(" ")
+        };
+        let series = if series.is_empty() { "value".to_string() } else { series };
+        // gauges plot as-is; rate tracks plot the point-to-point bandwidth
+        // between retained samples (the unbounded cumulative total would
+        // render as a useless monotone ramp)
+        let points: Vec<(u64, f64)> = match t.kind {
+            CounterKind::Gauge => t.samples.iter().map(|sm| (sm.t_nanos, sm.value)).collect(),
+            CounterKind::Rate => t
+                .samples
+                .windows(2)
+                .filter(|w| w[1].t_nanos > w[0].t_nanos)
+                .map(|w| {
+                    let dt = (w[1].t_nanos - w[0].t_nanos) as f64 / 1e9;
+                    (w[1].t_nanos, (w[1].value - w[0].value).max(0.0) / dt)
+                })
+                .collect(),
+        };
+        let name = match t.kind {
+            CounterKind::Gauge => t.name.clone(),
+            CounterKind::Rate => format!("{}_per_sec", t.name),
+        };
+        for (t_nanos, value) in points {
+            out.push(obj(vec![
+                ("name", s(name.as_str())),
+                ("cat", s("kvtuner_counters")),
+                ("ph", s("C")),
+                ("ts", num(t_nanos as f64 / 1e3)),
+                ("pid", num(worker as f64)),
+                ("tid", num(0.0)),
+                ("args", obj(vec![(series.as_str(), num(value))])),
+            ]));
+        }
+    }
+    out
+}
+
+/// Full Chrome trace document: the tracer's span/instant events plus
+/// counter events for every worker's tracks, with ring-drop accounting at
+/// the top level (Perfetto ignores unknown keys).
+pub fn chrome_trace_json(tracer: &Tracer, counters: &[(u32, Vec<TrackSnapshot>)]) -> Json {
+    let doc = tracer.to_chrome_json();
+    let mut events: Vec<Json> = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    for (worker, tracks) in counters {
+        events.extend(chrome_counter_events(*worker, tracks));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("droppedEvents", num(tracer.dropped() as f64)),
+        ("totalEvents", num(tracer.total() as f64)),
+    ])
+}
+
+/// Write a trace with counter tracks interleaved: `.jsonl` keeps the
+/// line-per-event format (meta line first, then events, then one
+/// `counter_track` line per series with the retained samples); anything
+/// else writes the merged Chrome JSON.
+pub fn write_trace(
+    path: &std::path::Path,
+    tracer: &Tracer,
+    counters: &[(u32, Vec<TrackSnapshot>)],
+) -> Result<()> {
+    let body = if path.extension().is_some_and(|e| e == "jsonl") {
+        let mut body = tracer.to_jsonl();
+        for (worker, tracks) in counters {
+            for t in tracks {
+                let j = obj(vec![
+                    ("kind", s("counter_track")),
+                    ("worker", num(*worker as f64)),
+                    ("name", s(t.name.as_str())),
+                    (
+                        "labels",
+                        obj(t.labels.iter().map(|(k, v)| (k.as_str(), s(v.as_str()))).collect()),
+                    ),
+                    ("track_kind", s(t.kind.as_str())),
+                    ("unit", s(t.unit)),
+                    ("ewma_per_sec", num(t.ewma_per_sec.unwrap_or(0.0))),
+                    (
+                        "samples",
+                        Json::Arr(
+                            t.samples
+                                .iter()
+                                .map(|sm| {
+                                    obj(vec![
+                                        ("t_ns", num(sm.t_nanos as f64)),
+                                        ("value", num(sm.value)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                body.push_str(&j.to_string_compact());
+                body.push('\n');
+            }
+        }
+        body
+    } else {
+        chrome_trace_json(tracer, counters).to_string_pretty()
+    };
+    std::fs::write(path, body)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::counters::Counters;
+    use super::*;
+
+    /// Strict line-by-line parse of the text exposition format: HELP/TYPE
+    /// comments, then `name{labels} value` samples.
+    fn check_exposition(body: &str) -> usize {
+        let mut samples = 0;
+        let mut typed: BTreeMap<String, String> = BTreeMap::new();
+        for line in body.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                assert!(rest.split_whitespace().next().is_some(), "HELP without name: {line}");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().expect("TYPE without name").to_string();
+                let kind = it.next().expect("TYPE without kind").to_string();
+                let kinds = ["gauge", "counter", "summary", "histogram", "untyped"];
+                assert!(kinds.contains(&kind.as_str()), "bad TYPE {kind} in {line}");
+                typed.insert(name, kind);
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment: {line}");
+            let (series, value) = line.rsplit_once(' ').expect("sample line without value");
+            let name = series.split('{').next().unwrap();
+            assert!(valid_metric_name(name), "bad metric name in {line}");
+            assert!(
+                typed.keys().any(|t| name == t.as_str() || name.starts_with(&format!("{t}_"))),
+                "sample {name} has no TYPE header"
+            );
+            if let Some(rest) = series.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "bad labels in {line}");
+                }
+            }
+            value.parse::<f64>().or_else(|e| match value {
+                "NaN" | "+Inf" | "-Inf" => Ok(0.0),
+                _ => Err(e),
+            }).unwrap_or_else(|_| panic!("unparseable value in {line}"));
+            samples += 1;
+        }
+        samples
+    }
+
+    #[test]
+    fn exposition_renders_and_parses() {
+        let mut e = Exposition::new();
+        e.add("kvtuner_pool_blocks_live", "gauge", "live pages", &[("engine", "a")], 7.0);
+        e.add("kvtuner_pool_blocks_live", "gauge", "live pages", &[("engine", "b")], 9.0);
+        e.add(
+            "kvtuner_swap_out_bytes_total",
+            "counter",
+            "bytes",
+            &[("engine", "a"), ("tier", "host\"1\"")],
+            1234.5,
+        );
+        let body = e.render();
+        let n = check_exposition(&body);
+        assert_eq!(n, 4, "schema_version + 2 gauges + 1 counter:\n{body}");
+        assert!(body.contains("kvtuner_schema_version 2"), "{body}");
+        assert!(body.contains("tier=\"host\\\"1\\\"\""), "label escaping:\n{body}");
+        // grouping: both engine samples under one header pair
+        let headers = body.matches("# TYPE kvtuner_pool_blocks_live").count();
+        assert_eq!(headers, 1);
+    }
+
+    #[test]
+    fn tracks_render_with_engine_label_and_rate_split() {
+        let c = Counters::new();
+        let g = c.gauge_with(
+            "layer_kv_live",
+            vec![("layer".into(), "03".into()), ("spec".into(), "kivi K8V4".into())],
+            "bytes",
+            "",
+        );
+        let r = c.rate("swap_out_bytes", "bytes", "");
+        g.record_at(10, 4096.0);
+        r.record_at(0, 0.0);
+        r.record_at(1_000_000_000, 8192.0);
+        let mut e = Exposition::new();
+        render_tracks(&mut e, "tuned-balanced", &c.snapshot());
+        let body = e.render();
+        check_exposition(&body);
+        let series = "{engine=\"tuned-balanced\",layer=\"03\",spec=\"kivi K8V4\"}";
+        assert!(body.contains(&format!("kvtuner_layer_kv_live{series} 4096")), "{body}");
+        let sw = "kvtuner_swap_out_bytes_total{engine=\"tuned-balanced\"} 8192";
+        assert!(body.contains(sw), "{body}");
+        assert!(body.contains("kvtuner_swap_out_bytes_ewma_per_sec"), "{body}");
+        assert!(body.contains("# TYPE kvtuner_swap_out_bytes_total counter"), "{body}");
+    }
+
+    #[test]
+    fn metrics_server_serves_scrapes_and_404s() {
+        let server = MetricsServer::start("127.0.0.1:0", || {
+            let e = Exposition::new();
+            e.render()
+        })
+        .unwrap();
+        let addr = server.addr();
+        let get = |path: &str| -> String {
+            let mut st = TcpStream::connect(addr).unwrap();
+            write!(st, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut out = String::new();
+            st.read_to_string(&mut out).unwrap();
+            out
+        };
+        let ok = get("/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"), "{ok}");
+        let body = ok.split("\r\n\r\n").nth(1).unwrap();
+        check_exposition(body);
+        assert!(body.contains("kvtuner_schema_version"), "{body}");
+        let missing = get("/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        server.stop();
+    }
+
+    #[test]
+    fn chrome_counter_events_are_well_formed_and_ordered() {
+        let c = Counters::new();
+        let h = c.gauge("pool_blocks_live", "blocks", "");
+        for i in 0..5u64 {
+            h.record_at(i * 1_000, (i * 2) as f64);
+        }
+        let tracer = Tracer::new(8);
+        let evs = chrome_counter_events(3, &c.snapshot());
+        assert_eq!(evs.len(), 5);
+        let doc = chrome_trace_json(&tracer, &[(3, c.snapshot())]);
+        let re = Json::parse(&doc.to_string_pretty()).unwrap();
+        let all = re.get("traceEvents").unwrap().as_arr().unwrap();
+        let counters: Vec<&Json> = all
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "C")
+            .collect();
+        assert_eq!(counters.len(), 5);
+        let mut last = f64::NEG_INFINITY;
+        for ev in counters {
+            assert_eq!(ev.get("name").unwrap().as_str().unwrap(), "pool_blocks_live");
+            assert_eq!(ev.get("pid").unwrap().as_usize().unwrap(), 3);
+            let ts = ev.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last, "counter events time-ordered per track");
+            last = ts;
+            ev.get("args").unwrap().get("blocks").unwrap().as_f64().unwrap();
+        }
+        assert_eq!(re.get("droppedEvents").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(re.get("schema_version").unwrap().as_usize().unwrap(), 2);
+    }
+}

@@ -25,12 +25,38 @@
 //!   (`--sensitivity-out`), drift-checked against the offline
 //!   [`sensitivity::Envelope`] and streamable mid-run
 //!   (`--metrics-interval`).
+//! * [`counters::Counters`] — named time-series counter tracks (bounded
+//!   seqlock sample rings, gauge + monotonic-rate flavors with EWMA
+//!   bandwidth) fed per scheduler tick with memory-hierarchy occupancy:
+//!   page-pool blocks, per-layer-per-precision live KV bytes, host swap
+//!   arena, swap/gather byte rates, queue depths, batch width.
+//! * [`export`] — pull-based exporters over all of the above: Prometheus
+//!   text exposition served from a std-`TcpListener` responder
+//!   (`--metrics-listen`), and Chrome trace counter events (`"ph": "C"`)
+//!   interleaved into the `--trace-out` export so Perfetto plots
+//!   occupancy/bandwidth curves under the lifecycle spans.
 
+pub mod counters;
+pub mod export;
 pub mod hist;
 pub mod profile;
 pub mod sensitivity;
 pub mod trace;
 
+/// Wire schema version stamped on every machine-readable telemetry
+/// surface: `Snapshot::to_json`, the `--metrics-interval` JSONL stream,
+/// the Prometheus exposition, and both trace export formats. Bump on any
+/// breaking change to field names or shapes; the CI validators reject a
+/// mismatch. v1 was the implicit pre-versioned schema of PRs 6–7; v2
+/// added counter tracks, trace-drop accounting and the version stamp
+/// itself.
+pub const SCHEMA_VERSION: u64 = 2;
+
+pub use counters::{CounterHandle, CounterKind, Counters, Sample, TrackSnapshot};
+pub use export::{
+    chrome_counter_events, chrome_trace_json, render_tracks, write_trace, Exposition,
+    MetricsServer,
+};
 pub use hist::{HistSnapshot, LogHistogram};
 pub use profile::{LayerProfile, Phase, ProfileSnapshot, Profiler};
 pub use sensitivity::{

@@ -116,6 +116,13 @@ impl Tracer {
         self.cap
     }
 
+    /// The tracer's epoch `Instant` — share it with
+    /// [`crate::obs::Counters::with_epoch`] so counter samples and trace
+    /// events land on one timeline.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
     /// Nanoseconds since this tracer's epoch for an `Instant` the caller
     /// already holds (0 for instants that predate the epoch).
     pub fn nanos_of(&self, t: Instant) -> u64 {
@@ -153,6 +160,12 @@ impl Tracer {
         r.total - r.buf.len() as u64
     }
 
+    /// Lifetime event count, including overwritten events.
+    pub fn total(&self) -> u64 {
+        let r = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        r.total
+    }
+
     /// Chrome trace-event JSON (the "JSON object format"): load in Perfetto
     /// or `chrome://tracing`. pid = worker, tid = slot, ts/dur in µs.
     pub fn to_chrome_json(&self) -> Json {
@@ -184,12 +197,27 @@ impl Tracer {
         obj(vec![
             ("traceEvents", Json::Arr(events)),
             ("displayTimeUnit", s("ms")),
+            ("schema_version", num(crate::obs::SCHEMA_VERSION as f64)),
+            // ring-wraparound accounting so truncated traces are detectable
+            // (Perfetto ignores unknown top-level keys)
+            ("droppedEvents", num(self.dropped() as f64)),
+            ("totalEvents", num(self.total() as f64)),
         ])
     }
 
-    /// JSONL export: one compact event object per line.
+    /// JSONL export: a `trace_meta` header line (schema version + ring-drop
+    /// accounting), then one compact event object per line.
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
+        let meta = obj(vec![
+            ("kind", s("trace_meta")),
+            ("schema_version", num(crate::obs::SCHEMA_VERSION as f64)),
+            ("dropped", num(self.dropped() as f64)),
+            ("total", num(self.total() as f64)),
+            ("capacity", num(self.cap as f64)),
+        ]);
+        out.push_str(&meta.to_string_compact());
+        out.push('\n');
         for ev in self.events() {
             let j = obj(vec![
                 ("kind", s(ev.kind.as_str())),
@@ -321,10 +349,32 @@ mod tests {
         }
         let body = t.to_jsonl();
         let lines: Vec<&str> = body.lines().collect();
-        assert_eq!(lines.len(), 3);
-        for l in lines {
+        assert_eq!(lines.len(), 4, "trace_meta header + 3 events");
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("kind").unwrap().as_str().unwrap(), "trace_meta");
+        assert_eq!(
+            meta.get("schema_version").unwrap().as_usize().unwrap(),
+            crate::obs::SCHEMA_VERSION as usize
+        );
+        assert_eq!(meta.get("dropped").unwrap().as_usize().unwrap(), 0);
+        for l in &lines[1..] {
             let j = Json::parse(l).unwrap();
             assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "decode_step");
         }
+    }
+
+    #[test]
+    fn both_exports_report_ring_drops() {
+        let t = Tracer::new(4);
+        for i in 0..10 {
+            t.emit(ev(i));
+        }
+        let chrome = Json::parse(&t.to_chrome_json().to_string_pretty()).unwrap();
+        assert_eq!(chrome.get("droppedEvents").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(chrome.get("totalEvents").unwrap().as_usize().unwrap(), 10);
+        let jsonl = t.to_jsonl();
+        let meta = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(meta.get("dropped").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(meta.get("total").unwrap().as_usize().unwrap(), 10);
     }
 }

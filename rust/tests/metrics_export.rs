@@ -1,0 +1,277 @@
+//! Memory-hierarchy observability, end to end (pure host, no artifacts):
+//! drive a real `Scheduler` over a native paged engine with counter tracks
+//! armed and a `/metrics` endpoint up, scrape the Prometheus exposition
+//! while the run lives, and assert the exposition is well-formed and
+//! carries the hierarchy tracks (pool occupancy, per-layer KV bytes, swap
+//! bandwidth) alongside the snapshot aggregates. Then check the Chrome
+//! trace export interleaves well-formed, time-ordered `"ph":"C"` counter
+//! events with the lifecycle spans.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
+use kvtuner::engine::{EngineCore, NativeEngine};
+use kvtuner::kvcache::{PagedOptions, SwapPolicy};
+use kvtuner::obs::{
+    chrome_trace_json, render_tracks, Counters, Exposition, MetricsServer, TraceSink, Tracer,
+};
+use kvtuner::util::json::Json;
+
+// Same pressure geometry as tests/obs.rs: a 4-page pool under two requests
+// that peak at 3 pages each forces a swap-out, so the swap-bandwidth rate
+// tracks see real bytes.
+const PROMPT_LEN: usize = 7;
+const MAX_NEW: usize = 18;
+const TOTAL_BLOCKS: usize = 4;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "metrics-export-test".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 64,
+        vocab: 128,
+        rope_theta: 10000.0,
+        group: 8,
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+/// Strict line-by-line check of the Prometheus text exposition: HELP/TYPE
+/// comments, then `name{labels} value` samples whose family has a TYPE
+/// header. Returns the sample count.
+fn check_exposition(body: &str) -> usize {
+    let mut samples = 0;
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with("# HELP ") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE without name").to_string();
+            let kind = it.next().expect("TYPE without kind").to_string();
+            assert!(
+                ["gauge", "counter", "summary"].contains(&kind.as_str()),
+                "unexpected TYPE {kind} in {line}"
+            );
+            typed.insert(name, kind);
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment: {line}");
+        let (series, value) = line.rsplit_once(' ').expect("sample line without value");
+        let name = series.split('{').next().unwrap();
+        assert!(
+            typed.keys().any(|t| name == t.as_str() || name.starts_with(&format!("{t}_"))),
+            "sample {name} has no TYPE header"
+        );
+        if !matches!(value, "NaN" | "+Inf" | "-Inf") {
+            value.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line}"));
+        }
+        samples += 1;
+    }
+    samples
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut st = std::net::TcpStream::connect(addr).unwrap();
+    write!(st, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut out = String::new();
+    st.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn live_scrape_and_chrome_counters_during_synthetic_serve_run() {
+    let c = cfg();
+    let specs = LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), c.n_layers);
+    let w = kvtuner::model::Weights::synthetic(&c, 5);
+    let engine = NativeEngine::new(
+        &c,
+        w,
+        specs,
+        2,
+        64,
+        8,
+        1,
+        Some(PagedOptions {
+            total_blocks: Some(TOTAL_BLOCKS),
+            swap_mib: Some(4.0),
+            swap_policy: SwapPolicy::Always,
+            ..PagedOptions::default()
+        }),
+    )
+    .unwrap();
+
+    // the serve wiring in miniature: tracer + counters share an epoch, the
+    // engine publishes per-layer tracks, the scheduler the hierarchy tracks
+    let tracer = Arc::new(Tracer::with_default_capacity());
+    let counters = Arc::new(Counters::with_epoch(tracer.epoch()));
+    let mut engine: Box<dyn EngineCore> = Box::new(engine);
+    engine.set_counters(&counters);
+    let metrics = Arc::new(Metrics::default());
+    let mut sched = Scheduler::new(
+        engine,
+        "metrics-worker",
+        SchedulerOptions {
+            swap_policy: SwapPolicy::Always,
+            trace: Some(TraceSink { tracer: tracer.clone(), worker: 0 }),
+            counters: Some(counters.clone()),
+            ..SchedulerOptions::default()
+        },
+        metrics.clone(),
+    );
+
+    // /metrics endpoint over the live registries, port picked by the OS
+    let server = {
+        let metrics = metrics.clone();
+        let counters = counters.clone();
+        MetricsServer::start("127.0.0.1:0", move || {
+            let mut expo = Exposition::new();
+            metrics.snapshot().render_prometheus(&mut expo, "metrics-worker");
+            render_tracks(&mut expo, "metrics-worker", &counters.snapshot());
+            expo.render()
+        })
+        .unwrap()
+    };
+    let addr = server.addr();
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut responses = Vec::new();
+    for id in 0..2u64 {
+        let (rtx, rrx) = mpsc::channel();
+        let prompt: Vec<i32> =
+            (0..PROMPT_LEN).map(|j| ((j * 7 + 13 * id as usize) % c.vocab) as i32).collect();
+        tx.send(Request {
+            id,
+            prompt,
+            max_new_tokens: MAX_NEW,
+            class: AccuracyClass::Balanced,
+            arrival: Instant::now(),
+            respond: rtx,
+        })
+        .unwrap();
+        responses.push(rrx);
+    }
+    drop(tx);
+    let worker = std::thread::spawn(move || {
+        sched.run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0))).unwrap();
+    });
+
+    // scrape while the run lives (and after — the registries outlive the
+    // scheduler, exactly like the serve command's shutdown path); retry
+    // until the hierarchy tracks have published
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    let body = loop {
+        let resp = http_get(addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap().to_string();
+        if body.contains("kvtuner_pool_blocks_live")
+            && body.contains("kvtuner_layer_kv_live")
+            && body.contains("kvtuner_swap_out_bytes_total")
+        {
+            break body;
+        }
+        assert!(Instant::now() < deadline, "hierarchy tracks never appeared:\n{body}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    worker.join().unwrap();
+    for rrx in responses {
+        let r = rrx.recv().expect("scheduler dropped a response channel");
+        assert!(r.error.is_none(), "request {} degraded: {:?}", r.id, r.error);
+    }
+
+    // the captured exposition is well-formed and complete
+    let n = check_exposition(&body);
+    assert!(n > 20, "suspiciously small exposition ({n} samples):\n{body}");
+    assert!(body.contains("kvtuner_schema_version 2"), "{body}");
+    for family in [
+        "# TYPE kvtuner_pool_blocks_live gauge",
+        "# TYPE kvtuner_pool_bytes_live gauge",
+        "# TYPE kvtuner_layer_kv_live gauge",
+        "# TYPE kvtuner_swap_out_bytes_total counter",
+        "# TYPE kvtuner_swap_out_bytes_ewma_per_sec gauge",
+        "# TYPE kvtuner_requests_completed_total counter",
+        "# TYPE kvtuner_ttft_seconds summary",
+    ] {
+        assert!(body.contains(family), "missing {family:?} in:\n{body}");
+    }
+    assert!(
+        body.contains("kvtuner_layer_kv_live{engine=\"metrics-worker\",layer=\"00\","),
+        "per-layer track must carry engine + layer labels:\n{body}"
+    );
+    assert!(http_get(addr, "/nope").starts_with("HTTP/1.1 404"));
+
+    // a final scrape reflects the drained run: swap bytes moved, requests
+    // completed (Always-policy eviction under a 4-page pool must swap)
+    let resp = http_get(addr, "/metrics");
+    let final_body = resp.split("\r\n\r\n").nth(1).unwrap();
+    check_exposition(final_body);
+    let sample_of = |name: &str| -> f64 {
+        final_body
+            .lines()
+            .find(|l| l.starts_with(name) && !l.starts_with('#'))
+            .unwrap_or_else(|| panic!("no sample for {name}:\n{final_body}"))
+            .rsplit_once(' ')
+            .unwrap()
+            .1
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(sample_of("kvtuner_requests_completed_total") as u64, 2);
+    assert!(sample_of("kvtuner_swap_out_bytes_total") > 0.0, "pressure must have swapped");
+    server.stop();
+
+    // Chrome export: counter events ride alongside the lifecycle spans,
+    // well-formed and time-ordered per track
+    let doc = chrome_trace_json(&tracer, &[(0, counters.snapshot())]);
+    let re = Json::parse(&doc.to_string_pretty()).unwrap();
+    assert_eq!(re.get("schema_version").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(re.get("droppedEvents").unwrap().as_usize().unwrap(), 0);
+    let evs = re.get("traceEvents").unwrap().as_arr().unwrap();
+    let spans = evs
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+        .count();
+    assert!(spans > 0, "no lifecycle spans in the merged export");
+    let mut last_ts: BTreeMap<String, f64> = BTreeMap::new();
+    let mut counter_events = 0;
+    for e in evs {
+        if e.get("ph").unwrap().as_str().unwrap() != "C" {
+            continue;
+        }
+        counter_events += 1;
+        assert_eq!(e.get("cat").unwrap().as_str().unwrap(), "kvtuner_counters");
+        assert_eq!(e.get("pid").unwrap().as_usize().unwrap(), 0);
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        let args = e.get("args").unwrap().as_obj().unwrap();
+        assert_eq!(args.len(), 1, "one series value per counter event");
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let key = format!("{name}/{}", args.keys().next().unwrap());
+        if let Some(prev) = last_ts.get(&key) {
+            assert!(ts >= *prev, "counter events out of order on {key}");
+        }
+        last_ts.insert(key, ts);
+    }
+    assert!(counter_events > 0, "no counter events in the merged export");
+    let names: Vec<&String> = last_ts.keys().collect();
+    assert!(
+        last_ts.keys().any(|k| k.starts_with("pool_blocks_live/"))
+            && last_ts.keys().any(|k| k.starts_with("layer_kv_live/"))
+            && last_ts.keys().any(|k| k.starts_with("swap_out_bytes_per_sec/")),
+        "hierarchy tracks missing from the chrome export: {names:?}"
+    );
+}
