@@ -37,7 +37,7 @@ import sys
 SCHEMA_VERSION = 2
 
 HIGHER_BETTER = re.compile(r"(tok/s|toks/s|/s\b|/sec\b|speedup|throughput)", re.I)
-LOWER_BETTER = re.compile(r"(\bms\b|\bns\b|\bus\b|latency|ttft|tpot)", re.I)
+LOWER_BETTER = re.compile(r"(\bms\b|\bns\b|\bus\b|latency|ttft|tpot|\bovh\b|overhead)", re.I)
 
 
 def parse_tables(paths):
@@ -57,8 +57,11 @@ def title_key(title):
 
 
 def numeric(cell):
+    # tolerate unit-suffixed cells ("12.3%", "4.37x") so overhead and
+    # speedup columns participate in the comparison
+    text = str(cell).replace(",", "").rstrip("%x")
     try:
-        return float(str(cell).replace(",", ""))
+        return float(text)
     except ValueError:
         return None
 

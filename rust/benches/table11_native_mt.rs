@@ -24,9 +24,11 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
+use kvtuner::coordinator::{AccuracyClass, Metrics, Request, Scheduler, SchedulerOptions};
 use kvtuner::engine::{EngineCore, NativeEngine};
 use kvtuner::kvcache::PagedOptions;
 use kvtuner::model::Weights;
@@ -368,6 +370,104 @@ fn main() -> anyhow::Result<()> {
 
     t.print();
     println!("BENCH_JSON {}", t.to_json().to_string_compact());
+
+    // --- unarmed fault-injection overhead guard: the scheduler's injection
+    // points compile in unconditionally, so a serving path with no fault
+    // plan must (a) produce the bit-identical stream + final logits of a
+    // direct engine drive and (b) pay only scheduler bookkeeping, tracked
+    // here as an explicit overhead column for bench_compare.
+    {
+        let specs = &settings[0].1; // KV8
+        let mut direct_sig: Option<(Vec<i32>, Vec<u32>)> = None;
+        let direct_tps = best_of(REPS, || {
+            let mut e = engine(&cfg, &w, specs, 2);
+            let first = e.prefill(0, &prompt).unwrap();
+            let mut tok = first;
+            let mut stream = vec![first];
+            let t0 = Instant::now();
+            for _ in 0..DECODE_STEPS {
+                tok = e.decode_step(&[tok], &[true]).unwrap()[0];
+                stream.push(tok);
+            }
+            let tps = DECODE_STEPS as f64 / t0.elapsed().as_secs_f64();
+            let sig = (stream, bits(e.logits(0)));
+            match &direct_sig {
+                None => direct_sig = Some(sig),
+                Some(want) => assert_eq!(*want, sig, "direct drive diverged between reps"),
+            }
+            tps
+        });
+        let want = direct_sig.as_ref().unwrap();
+
+        let sched_tps = best_of(REPS, || {
+            let e = engine(&cfg, &w, specs, 2);
+            let metrics = Arc::new(Metrics::default());
+            let mut sched = Scheduler::new(
+                Box::new(e),
+                "bench",
+                SchedulerOptions {
+                    capture_logits: true,
+                    // faults: None — every injection point is one never-taken
+                    // branch; this arm prices exactly that
+                    ..SchedulerOptions::default()
+                },
+                metrics.clone(),
+            );
+            let (tx, rx) = mpsc::channel();
+            assert!(sched.submit(Request {
+                id: 0,
+                prompt: prompt.clone(),
+                max_new_tokens: DECODE_STEPS + 1,
+                class: AccuracyClass::Balanced,
+                arrival: Instant::now(),
+                deadline: None,
+                respond: tx,
+            }));
+            let mut ticks = 0u32;
+            while !sched.is_idle() {
+                sched.tick().unwrap();
+                ticks += 1;
+                assert!(ticks < 20_000, "scheduler failed to drain");
+            }
+            let r = rx.try_recv().unwrap();
+            assert!(r.error.is_none(), "unarmed scheduler run failed: {:?}", r.error);
+            assert_eq!(
+                r.tokens, want.0,
+                "unarmed injection changed the token stream vs the direct drive"
+            );
+            assert_eq!(
+                bits(r.final_logits.as_ref().unwrap()),
+                want.1,
+                "unarmed injection changed the final logits vs the direct drive"
+            );
+            let snap = metrics.snapshot();
+            assert_eq!(snap.faults_injected, 0, "no plan armed, nothing may inject");
+            assert_eq!(snap.failures_total(), 0);
+            snap.tokens_per_sec_decode
+        });
+        let ovh_pct = (direct_tps / sched_tps - 1.0) * 100.0;
+
+        let mut tf = Table::with_headers(
+            &format!(
+                "table11_faults_unarmed — serving-path overhead with fault injection \
+                 compiled in but unarmed (KV8, {DECODE_STEPS} decode steps, ×2 threads)"
+            ),
+            vec![
+                "setting".into(),
+                "direct decode tok/s".into(),
+                "scheduler decode tok/s".into(),
+                "unarmed ovh %".into(),
+            ],
+        );
+        tf.row(vec![
+            "KV8".into(),
+            format!("{direct_tps:.1}"),
+            format!("{sched_tps:.1}"),
+            format!("{ovh_pct:.1}%"),
+        ]);
+        tf.print();
+        println!("BENCH_JSON {}", tf.to_json().to_string_compact());
+    }
     println!(
         "\nall arms bit-identical: block prefill == token-by-token prefill, every pool \
          width produces the same logits (outputs are partitioned, never accumulation \

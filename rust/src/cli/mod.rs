@@ -100,6 +100,22 @@ OBSERVABILITY (serve / throughput)
                     snapshot aggregates plus the latest sample of every
                     memory-hierarchy counter track (pool occupancy,
                     per-layer KV bytes, swap/gather bandwidth, queue depths)
+
+FAILURE INJECTION / DEADLINES (serve)
+  --fault-plan P    arm the seeded chaos injector on every worker. P is a
+                    bare seed (derives 1-5% rates per injection point:
+                    swap-out refusal, transient/lost swap-in, spurious
+                    alloc failure, transient step error), an inline JSON
+                    object pinning each rate (plus \"step_panic\" and
+                    \"death_tick\" for worker-death drills), or a path to
+                    such a JSON file. Same plan + seed = same fault
+                    schedule. See README \"Failure semantics\".
+  --deadline-ms N   per-request deadline: the scheduler abandons a request
+                    past its budget with a typed deadline_exceeded failure,
+                    delivering the tokens generated so far
+  --request-timeout SECS
+                    client-side wait bound while draining: an expired wait
+                    is a typed timeout response, never a hang
 ";
 
 pub fn cli_main() -> Result<()> {

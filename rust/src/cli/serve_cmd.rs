@@ -29,8 +29,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{LayerSpec, Mode, ModelConfig, PrecisionPair};
-use crate::coordinator::{AccuracyClass, Router, WorkerSpec};
+use crate::coordinator::{AccuracyClass, FailureKind, Router, WorkerSpec};
 use crate::engine::BackendKind;
+use crate::faults::FaultPlan;
 use crate::obs::{
     render_tracks, write_trace, Counters, Exposition, MetricsServer, ProbeConfig, TrackSnapshot,
     Tracer, SCHEMA_VERSION,
@@ -83,6 +84,27 @@ pub fn run(args: &Args) -> Result<()> {
     let probe_every = args.usize("probe-every", 0)?;
     let metrics_interval = args.f64("metrics-interval", 0.0)?;
     let metrics_listen = args.opt_str("metrics-listen").map(String::from);
+    // chaos mode: a seeded fault plan armed on every worker (each salts the
+    // seed with its index, so one plan drives distinct per-worker fault
+    // streams); a no-op plan leaves the injectors unarmed entirely
+    let fault_plan = match args.opt_str("fault-plan") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec)?;
+            if plan.is_noop() {
+                eprintln!("[serve] --fault-plan has every rate at zero; injection stays unarmed");
+                None
+            } else {
+                Some(plan)
+            }
+        }
+        None => None,
+    };
+    // per-request deadline: the scheduler abandons a request (typed
+    // DeadlineExceeded, tokens-so-far delivered) once this budget passes
+    let deadline_ms = args.f64("deadline-ms", 0.0)?;
+    // client-side wait bound during drain: an expired wait is a typed
+    // Timeout response instead of blocking forever on a stuck fleet
+    let request_timeout = args.f64("request-timeout", 0.0)?;
     // counter tracks are armed whenever any consumer exists: the /metrics
     // endpoint, the trace export, or the JSONL stream
     let want_counters =
@@ -114,6 +136,7 @@ pub fn run(args: &Args) -> Result<()> {
         profile,
         probe,
         synthetic: synthetic.then(|| cfg.clone()),
+        faults: fault_plan.clone(),
         ..WorkerSpec::default()
     };
     let mut workers = vec![
@@ -256,25 +279,51 @@ pub fn run(args: &Args) -> Result<()> {
         let plen = rng.range(16, 64);
         let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
         let class = classes[i % classes.len()];
-        subs.push((class, router.submit(prompt, max_new, class)?));
+        let deadline = (deadline_ms > 0.0).then(|| {
+            std::time::Instant::now() + std::time::Duration::from_secs_f64(deadline_ms / 1e3)
+        });
+        subs.push((class, router.submit_with_deadline(prompt, max_new, class, deadline)?));
     }
     let mut t = Table::new(
         "serve — per-request results",
-        &["id", "class", "engine", "tokens", "ttft ms", "total ms"],
+        &["id", "class", "engine", "tokens", "status", "ttft ms", "total ms"],
     );
+    let mut failed = 0u64;
     for (class, sub) in subs {
-        let r = sub.wait()?;
-        anyhow::ensure!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        let r = if request_timeout > 0.0 {
+            sub.wait_timeout(std::time::Duration::from_secs_f64(request_timeout))?
+        } else {
+            sub.wait()?
+        };
+        let status = match &r.error {
+            None => "ok".to_string(),
+            Some(f) => {
+                failed += 1;
+                // typed failures are the expected outcome under an armed
+                // fault plan or an explicit deadline/timeout budget; without
+                // one, any failure is a real serving bug
+                anyhow::ensure!(
+                    fault_plan.is_some() || deadline_ms > 0.0 || request_timeout > 0.0,
+                    "request {} failed: {f}",
+                    r.id
+                );
+                f.kind.as_str().to_string()
+            }
+        };
         t.row(vec![
             r.id.to_string(),
             class.as_str().into(),
             r.engine.clone(),
             r.tokens.len().to_string(),
+            status,
             format!("{:.1}", r.ttft.as_secs_f64() * 1e3),
             format!("{:.1}", r.total.as_secs_f64() * 1e3),
         ]);
     }
     t.print();
+    if failed > 0 {
+        eprintln!("[serve] {failed}/{n_requests} request(s) ended in a typed failure");
+    }
 
     // stop the streamer before shutdown so its last line reflects a running
     // fleet, then drain the workers
@@ -300,6 +349,27 @@ pub fn run(args: &Args) -> Result<()> {
         if let Some(p) = &r.profile {
             p.table(&format!("serve — per-layer profile ({})", r.name)).print();
         }
+    }
+    // failure-domain summary: per-kind tallies plus the injected-fault and
+    // retry counters, so a chaos run's outcome is auditable from the console
+    if reports.iter().any(|r| r.snapshot.failures_total() > 0 || r.snapshot.faults_injected > 0) {
+        let mut tf =
+            Table::new("serve — failure domains", &["engine", "faults", "retries", "failed", "by kind"]);
+        for r in &reports {
+            let by_kind: Vec<String> = FailureKind::ALL
+                .iter()
+                .filter(|k| r.snapshot.failed(**k) > 0)
+                .map(|k| format!("{}={}", k.as_str(), r.snapshot.failed(*k)))
+                .collect();
+            tf.row(vec![
+                r.name.clone(),
+                r.snapshot.faults_injected.to_string(),
+                r.snapshot.retries.to_string(),
+                r.snapshot.failures_total().to_string(),
+                if by_kind.is_empty() { "-".to_string() } else { by_kind.join(" ") },
+            ]);
+        }
+        tf.print();
     }
     for r in &reports {
         if let Some(sens) = &r.sensitivity {

@@ -89,6 +89,7 @@ mod tests {
             max_new_tokens: 4,
             class: super::super::request::AccuracyClass::Balanced,
             arrival: Instant::now(),
+            deadline: None,
             respond: tx,
         }
     }

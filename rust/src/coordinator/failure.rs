@@ -1,0 +1,119 @@
+//! Typed failure taxonomy for the serving path. Every way a request can end
+//! other than natural completion gets a [`FailureKind`], so clients branch
+//! on an enum instead of parsing error strings, metrics tally failures
+//! per kind (`kvtuner_requests_failed_total{kind=...}`), and the chaos
+//! harness can assert *which* failure a fault produced.
+
+/// Why a request failed (or completed degraded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    /// The request's deadline passed before it completed; any tokens
+    /// generated so far are still delivered.
+    DeadlineExceeded,
+    /// The request cannot fit the KV page pool even alone (or exhausted its
+    /// retry budget waiting for pages).
+    PoolExhausted,
+    /// Pool exhausted mid-generation with nothing left to evict: the tokens
+    /// generated so far are delivered, marked degraded.
+    Truncated,
+    /// The admission queue was full at submit time.
+    QueueFull,
+    /// The worker serving this request died (panic or thread loss) and no
+    /// sibling could take it over.
+    WorkerDied,
+    /// The engine itself reported an error (prefill or decode step).
+    EngineFault,
+    /// The client-side wait timed out before a response arrived.
+    Timeout,
+    /// No routable worker: every candidate is dead, or the router is
+    /// draining and no longer admits work.
+    Unroutable,
+}
+
+impl FailureKind {
+    /// Every kind, in a fixed order — metrics index tallies by position and
+    /// the Prometheus exposition emits the full family even at zero so
+    /// scrapers can discover it before the first failure.
+    pub const ALL: [FailureKind; 8] = [
+        FailureKind::DeadlineExceeded,
+        FailureKind::PoolExhausted,
+        FailureKind::Truncated,
+        FailureKind::QueueFull,
+        FailureKind::WorkerDied,
+        FailureKind::EngineFault,
+        FailureKind::Timeout,
+        FailureKind::Unroutable,
+    ];
+
+    pub const COUNT: usize = FailureKind::ALL.len();
+
+    /// Stable label (metrics `kind` label, JSON keys).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailureKind::DeadlineExceeded => "deadline_exceeded",
+            FailureKind::PoolExhausted => "pool_exhausted",
+            FailureKind::Truncated => "truncated",
+            FailureKind::QueueFull => "queue_full",
+            FailureKind::WorkerDied => "worker_died",
+            FailureKind::EngineFault => "engine_fault",
+            FailureKind::Timeout => "timeout",
+            FailureKind::Unroutable => "unroutable",
+        }
+    }
+
+    /// Position in [`FailureKind::ALL`] (the metrics tally index).
+    pub fn index(self) -> usize {
+        FailureKind::ALL.iter().position(|k| *k == self).unwrap_or(0)
+    }
+}
+
+/// A typed failure: the kind plus human-readable detail. This is what rides
+/// in `Response::error` and inside routing errors (downcastable from
+/// `anyhow::Error`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Failure {
+    pub kind: FailureKind,
+    pub detail: String,
+}
+
+impl Failure {
+    pub fn new(kind: FailureKind, detail: impl Into<String>) -> Failure {
+        Failure { kind, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.detail.is_empty() {
+            write!(f, "{}", self.kind.as_str())
+        } else {
+            write!(f, "{}: {}", self.kind.as_str(), self.detail)
+        }
+    }
+}
+
+impl std::error::Error for Failure {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_have_unique_stable_labels_and_indices() {
+        let mut seen = std::collections::HashSet::new();
+        for (i, k) in FailureKind::ALL.iter().enumerate() {
+            assert!(seen.insert(k.as_str()), "duplicate label {}", k.as_str());
+            assert_eq!(k.index(), i);
+        }
+        assert_eq!(seen.len(), FailureKind::COUNT);
+    }
+
+    #[test]
+    fn failure_downcasts_from_anyhow() {
+        let e = anyhow::Error::new(Failure::new(FailureKind::Unroutable, "no workers"));
+        let f = e.downcast_ref::<Failure>().expect("typed failure survives anyhow");
+        assert_eq!(f.kind, FailureKind::Unroutable);
+        assert_eq!(format!("{f}"), "unroutable: no workers");
+        assert_eq!(format!("{}", Failure::new(FailureKind::Timeout, "")), "timeout");
+    }
+}

@@ -12,6 +12,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use super::failure::FailureKind;
 use crate::obs::{Exposition, HistSnapshot, LogHistogram, SCHEMA_VERSION};
 use crate::util::json::{num, obj, Json};
 
@@ -63,6 +64,15 @@ pub struct Metrics {
     /// Stored by the scheduler each tick from its tracer so truncated
     /// traces are detectable from any metrics surface.
     pub trace_dropped: AtomicU64,
+    /// Seeded faults the injector actually fired (0 unless a fault plan is
+    /// armed — the injection points compile in but never roll).
+    pub faults_injected: AtomicU64,
+    /// Operations re-attempted after a transient failure (swap-in retries,
+    /// page-wait requeues, prefill-chunk re-tries).
+    pub retries: AtomicU64,
+    /// Requests that ended in a typed failure, tallied by
+    /// [`FailureKind::index`].
+    requests_failed: [AtomicU64; FailureKind::COUNT],
     /// Time to first token, per completed request.
     ttft: LogHistogram,
     /// End-to-end latency, per completed request.
@@ -117,6 +127,12 @@ pub struct Snapshot {
     pub drift_alerts: u64,
     /// Lifecycle trace events lost to ring wraparound (0 when untraced).
     pub trace_dropped: u64,
+    /// Seeded faults fired (0 when no fault plan armed).
+    pub faults_injected: u64,
+    /// Transient-failure retries (swap-in, page-wait, prefill chunk).
+    pub retries: u64,
+    /// Per-kind failed-request tallies, indexed by [`FailureKind::index`].
+    pub requests_failed: [u64; FailureKind::COUNT],
     /// Full bucket dumps backing the percentile fields above.
     pub ttft_hist: HistSnapshot,
     pub total_hist: HistSnapshot,
@@ -171,6 +187,23 @@ impl Metrics {
 
     pub fn record_reprefill(&self, tokens: usize) {
         self.reprefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_fault(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self, kind: FailureKind) {
+        self.requests_failed[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total failed requests across all kinds.
+    pub fn failures_total(&self) -> u64 {
+        self.requests_failed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
     /// One completed request: TTFT, end-to-end latency, and — when the
@@ -240,6 +273,11 @@ impl Metrics {
             gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
             drift_alerts: self.drift_alerts.load(Ordering::Relaxed),
             trace_dropped: self.trace_dropped.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            requests_failed: std::array::from_fn(|i| {
+                self.requests_failed[i].load(Ordering::Relaxed)
+            }),
             ttft_hist: ttft,
             total_hist: total,
             tpot_hist: tpot,
@@ -249,6 +287,16 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// This snapshot's tally for one failure kind.
+    pub fn failed(&self, kind: FailureKind) -> u64 {
+        self.requests_failed[kind.index()]
+    }
+
+    /// Failed requests summed across all kinds.
+    pub fn failures_total(&self) -> u64 {
+        self.requests_failed.iter().sum()
+    }
+
     /// Full machine-readable snapshot: every scalar plus the four latency
     /// histograms' bucket dumps. Benches emit this as a `BENCH_JSON` line;
     /// serve writes it to `--metrics-out`.
@@ -291,6 +339,15 @@ impl Snapshot {
             ("gather_bytes", num(self.gather_bytes as f64)),
             ("drift_alerts", num(self.drift_alerts as f64)),
             ("trace_dropped", num(self.trace_dropped as f64)),
+            ("faults_injected", num(self.faults_injected as f64)),
+            ("retries", num(self.retries as f64)),
+            (
+                "requests_failed",
+                obj(FailureKind::ALL
+                    .iter()
+                    .map(|k| (k.as_str(), num(self.failed(*k) as f64)))
+                    .collect()),
+            ),
             ("ttft_hist", self.ttft_hist.to_json()),
             ("total_hist", self.total_hist.to_json()),
             ("tpot_hist", self.tpot_hist.to_json()),
@@ -319,9 +376,22 @@ impl Snapshot {
             ("reprefill_tokens", "tokens re-prefilled on resume", self.reprefill_tokens as f64),
             ("drift_alerts", "quantization error left the envelope", self.drift_alerts as f64),
             ("trace_dropped_events", "lost to tracer ring wraparound", self.trace_dropped as f64),
+            ("faults_injected", "seeded faults fired by the injector", self.faults_injected as f64),
+            ("retries", "transient-failure retries", self.retries as f64),
         ];
         for &(name, help, v) in counters {
             expo.add(&format!("kvtuner_{name}_total"), "counter", help, l, v);
+        }
+        // Full failure family, every kind emitted even at zero so scrapers
+        // discover the label set before the first failure.
+        for k in FailureKind::ALL {
+            expo.add(
+                "kvtuner_requests_failed_total",
+                "counter",
+                "requests ended in a typed failure, by kind",
+                &[("engine", engine), ("kind", k.as_str())],
+                self.failed(k) as f64,
+            );
         }
         let gauges: &[(&str, &str, f64)] = &[
             ("decode_tokens_per_sec", "decode throughput", self.tokens_per_sec_decode),
@@ -374,7 +444,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95/p99={:.1}/{:.1}/{:.1}ms total p50/p95/p99={:.1}/{:.1}/{:.1}ms tpot p50/p95/p99={:.2}/{:.2}/{:.2}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB drift={}",
+            "req={} tok={} decode_tok/s={:.1} decode_ms/step={:.2}(last {:.2}) prefill_tok/s={:.0} occ={:.2} ttft p50/p95/p99={:.1}/{:.1}/{:.1}ms total p50/p95/p99={:.1}/{:.1}/{:.1}ms tpot p50/p95/p99={:.2}/{:.2}/{:.2}ms preempt={} reuse={}tok/{}hit swap={}out/{}in({}/{}KiB) reprefill={}tok gather={}KiB drift={} faults={} retries={} failed={}",
             self.requests_completed,
             self.tokens_generated,
             self.tokens_per_sec_decode,
@@ -401,6 +471,9 @@ impl std::fmt::Display for Snapshot {
             self.reprefill_tokens,
             self.gather_bytes / 1024,
             self.drift_alerts,
+            self.faults_injected,
+            self.retries,
+            self.failures_total(),
         )
     }
 }
@@ -488,6 +561,37 @@ mod tests {
         assert_eq!(s.decode_ms_per_step, 0.0);
         assert_eq!(s.ttft_p95, 0.0);
         assert_eq!(s.tpot_p99, 0.0);
+    }
+
+    #[test]
+    fn failure_tallies_are_per_kind_and_exported() {
+        let m = Metrics::default();
+        m.record_failure(FailureKind::DeadlineExceeded);
+        m.record_failure(FailureKind::DeadlineExceeded);
+        m.record_failure(FailureKind::WorkerDied);
+        m.record_fault();
+        m.record_retry();
+        let s = m.snapshot();
+        assert_eq!(s.failed(FailureKind::DeadlineExceeded), 2);
+        assert_eq!(s.failed(FailureKind::WorkerDied), 1);
+        assert_eq!(s.failed(FailureKind::Timeout), 0);
+        assert_eq!(s.failures_total(), 3);
+        assert_eq!(s.faults_injected, 1);
+        assert_eq!(s.retries, 1);
+        let j = Json::parse(&s.to_json().to_string_pretty()).unwrap();
+        let rf = j.get("requests_failed").unwrap();
+        assert_eq!(rf.get("deadline_exceeded").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rf.get("unroutable").unwrap().as_usize().unwrap(), 0);
+        let mut expo = Exposition::new();
+        s.render_prometheus(&mut expo, "t");
+        let body = expo.render();
+        assert!(body.contains("kvtuner_requests_failed_total{engine=\"t\",kind=\"worker_died\"} 1"));
+        assert!(
+            body.contains("kvtuner_requests_failed_total{engine=\"t\",kind=\"queue_full\"} 0"),
+            "zero-valued kinds still emitted for discoverability"
+        );
+        assert!(body.contains("kvtuner_faults_injected_total"));
+        assert!(body.contains("kvtuner_retries_total"));
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //! batching scheduler, multi-engine router, and metrics.
 
 pub mod batcher;
+pub mod failure;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
 pub use batcher::{Batcher, BatcherOptions};
+pub use failure::{Failure, FailureKind};
 pub use metrics::{Metrics, Snapshot};
 pub use request::{AccuracyClass, Request, Response, Submission};
 pub use router::{EngineReport, Router, WorkerSpec};

@@ -5,6 +5,8 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use super::failure::{Failure, FailureKind};
+
 /// Client-declared accuracy requirement: the router maps this to an engine
 /// whose tuned config meets it (paper Sec. 1 issue 3 — multiple deployed
 /// LLM configs, per-request adaptation).
@@ -44,6 +46,11 @@ pub struct Request {
     pub max_new_tokens: usize,
     pub class: AccuracyClass,
     pub arrival: Instant,
+    /// `Some` = the scheduler abandons this request (typed
+    /// `DeadlineExceeded`, tokens-so-far delivered) once the deadline
+    /// passes — checked at admission, prefill-chunk, and decode-tick
+    /// boundaries. `None` = run to completion.
+    pub deadline: Option<Instant>,
     pub respond: mpsc::Sender<Response>,
 }
 
@@ -56,7 +63,10 @@ pub struct Response {
     /// Total request latency.
     pub total: Duration,
     pub engine: String,
-    pub error: Option<String>,
+    /// `Some` = the request failed or completed degraded; the kind is the
+    /// machine-readable taxonomy, `tokens` still carries whatever was
+    /// generated before the failure.
+    pub error: Option<Failure>,
     /// Final-step logits for the request's slot, captured only when the
     /// scheduler runs with `capture_logits` (the differential-churn harness
     /// compares them bit-for-bit across scheduler arms). `None` in normal
@@ -71,11 +81,86 @@ pub struct Submission {
 }
 
 impl Submission {
-    pub fn wait(self) -> anyhow::Result<Response> {
-        Ok(self.rx.recv()?)
+    /// A synthesized response for submissions whose worker disappeared or
+    /// whose wait expired: no channel hang ever reaches the client — every
+    /// outcome is a `Response`, failures typed through `error`.
+    pub(crate) fn failed(id: u64, kind: FailureKind, detail: &str) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            ttft: Duration::ZERO,
+            total: Duration::ZERO,
+            engine: String::new(),
+            error: Some(Failure::new(kind, detail)),
+            final_logits: None,
+        }
     }
 
+    /// Block until the response arrives. A dropped response channel (the
+    /// worker died with the request still queued, past the router's
+    /// redispatch window) comes back as a typed `WorkerDied` failure
+    /// instead of a channel error.
+    pub fn wait(self) -> anyhow::Result<Response> {
+        Ok(self.rx.recv().unwrap_or_else(|_| {
+            Submission::failed(
+                self.id,
+                FailureKind::WorkerDied,
+                "response channel closed before a response arrived",
+            )
+        }))
+    }
+
+    /// Block at most `d`. An expired wait is a typed `Timeout` failure; a
+    /// dropped channel is a typed `WorkerDied` failure — the caller always
+    /// gets a `Response`.
     pub fn wait_timeout(self, d: Duration) -> anyhow::Result<Response> {
-        Ok(self.rx.recv_timeout(d)?)
+        use mpsc::RecvTimeoutError;
+        Ok(match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Submission::failed(
+                self.id,
+                FailureKind::Timeout,
+                &format!("no response within {:.3}s", d.as_secs_f64()),
+            ),
+            Err(RecvTimeoutError::Disconnected) => Submission::failed(
+                self.id,
+                FailureKind::WorkerDied,
+                "response channel closed before a response arrived",
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite regression: the expired arm of `wait_timeout` — previously
+    /// unexercised — must come back as a typed `Timeout` failure, not a
+    /// channel error.
+    #[test]
+    fn wait_timeout_expired_path_is_a_typed_timeout() {
+        let (tx, rx) = mpsc::channel::<Response>();
+        let sub = Submission { id: 7, rx };
+        let r = sub.wait_timeout(Duration::from_millis(5)).unwrap();
+        assert_eq!(r.id, 7);
+        let f = r.error.expect("expired wait must carry a typed failure");
+        assert_eq!(f.kind, FailureKind::Timeout);
+        assert!(r.tokens.is_empty());
+        drop(tx);
+    }
+
+    #[test]
+    fn wait_on_a_dropped_channel_is_a_typed_worker_death() {
+        let (tx, rx) = mpsc::channel::<Response>();
+        drop(tx);
+        let r = Submission { id: 3, rx }.wait().unwrap();
+        assert_eq!(r.error.unwrap().kind, FailureKind::WorkerDied);
+        let (tx2, rx2) = mpsc::channel::<Response>();
+        drop(tx2);
+        let r2 = Submission { id: 4, rx: rx2 }
+            .wait_timeout(Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(r2.error.unwrap().kind, FailureKind::WorkerDied);
     }
 }

@@ -4,13 +4,14 @@
 //! This is the paper's deployment story — several configs of the same model
 //! served side by side, per-request precision selection at zero decode cost.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::config::{LayerSpec, ModelConfig};
 use crate::coordinator::metrics::Metrics;
@@ -18,14 +19,16 @@ use crate::coordinator::scheduler::{Scheduler, SchedulerOptions};
 #[cfg(feature = "xla")]
 use crate::engine::Engine;
 use crate::engine::{BackendKind, EngineCore, NativeEngine};
+use crate::faults::{FaultInjector, FaultPlan};
 use crate::kvcache::PagedOptions;
 use crate::obs::{
-    Counters, ProbeConfig, ProfileSnapshot, SensitivityShared, SensitivitySnapshot, TraceSink,
-    Tracer,
+    Counters, EventKind, ProbeConfig, ProfileSnapshot, SensitivityShared, SensitivitySnapshot,
+    TraceSink, Tracer,
 };
 #[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
+use super::failure::{Failure, FailureKind};
 use super::metrics::Snapshot;
 use super::request::{AccuracyClass, Request, Submission};
 
@@ -69,6 +72,15 @@ pub struct WorkerSpec {
     /// per tick and the engine per-layer live-KV bytes into it. One
     /// registry per worker; `None` = no tracks, no overhead.
     pub counters: Option<Arc<Counters>>,
+    /// `Some` = arm this worker's seeded fault injector (`--fault-plan`).
+    /// The injector is salted with the worker index, so one plan drives a
+    /// distinct deterministic fault stream per worker. `None` = faults
+    /// compiled in but unarmed — a single never-taken branch per injection
+    /// point.
+    pub faults: Option<FaultPlan>,
+    /// Capture each request's final-step logits into its `Response`
+    /// (differential harnesses only; a per-request vocab-sized copy).
+    pub capture_logits: bool,
 }
 
 impl Default for WorkerSpec {
@@ -89,6 +101,8 @@ impl Default for WorkerSpec {
             probe: None,
             synthetic: None,
             counters: None,
+            faults: None,
+            capture_logits: false,
         }
     }
 }
@@ -149,7 +163,7 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
             Box::new(eng)
         }
         #[cfg(not(feature = "xla"))]
-        BackendKind::Xla => bail!(
+        BackendKind::Xla => anyhow::bail!(
             "worker {}: this build has no XLA backend (compiled without the \
              `xla` feature); use the native backend",
             ws.name
@@ -167,9 +181,70 @@ fn build_worker_engine(dir: &std::path::Path, ws: &WorkerSpec) -> Result<Box<dyn
     Ok(engine)
 }
 
+/// One worker's routing-relevant state, shared (via [`Fleet`]) with every
+/// worker thread so a dying worker can redispatch its orphans without going
+/// back through the `Router` (which the caller owns).
+struct FleetWorker {
+    name: String,
+    class: AccuracyClass,
+    tx: Sender<Request>,
+    /// Cleared when the worker's thread dies (caught panic) or its request
+    /// channel is found closed; a dead worker is never routed to again.
+    alive: Arc<AtomicBool>,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// The shared worker registry: built before any worker thread spawns, held
+/// by the router and by every worker thread. `mpsc::Sender` is `Sync`, so
+/// cloning senders into one shared table is sound.
+struct Fleet {
+    workers: Vec<FleetWorker>,
+}
+
+impl Fleet {
+    /// Re-send an orphaned request to a live worker, preferring the
+    /// request's accuracy class (mirroring `Router::submit`) and never the
+    /// dead worker `skip`. Returns the surviving worker's index, or the
+    /// request back when no live worker can take it.
+    fn redispatch(&self, skip: usize, mut req: Request) -> std::result::Result<usize, Request> {
+        for same_class_only in [true, false] {
+            loop {
+                let target = self
+                    .workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, w)| {
+                        *i != skip
+                            && w.alive.load(Ordering::Relaxed)
+                            && (!same_class_only || w.class == req.class)
+                    })
+                    .min_by_key(|(_, w)| w.inflight.load(Ordering::Relaxed));
+                let Some((ti, target)) = target else { break };
+                match target.tx.send(req) {
+                    Ok(()) => return Ok(ti),
+                    Err(e) => {
+                        // sibling's receiver is gone too: mark it dead and
+                        // keep looking with the request we got back
+                        eprintln!(
+                            "worker {}: unreachable during redispatch; marking dead",
+                            target.name
+                        );
+                        target.alive.store(false, Ordering::Relaxed);
+                        req = e.0;
+                    }
+                }
+            }
+        }
+        Err(req)
+    }
+}
+
 pub struct WorkerHandle {
     pub spec: WorkerSpec,
     pub tx: Sender<Request>,
+    /// `false` once the worker's thread has died; the router stops routing
+    /// to it and `shutdown()` tolerates its join.
+    pub alive: Arc<AtomicBool>,
     pub inflight: Arc<AtomicUsize>,
     pub metrics: Arc<Metrics>,
     /// The engine's final per-layer profile, captured by the worker thread
@@ -216,13 +291,36 @@ pub struct Router {
 
 impl Router {
     /// Spawn one thread per worker; each constructs its own Runtime + Engine
-    /// (PJRT objects never cross threads).
+    /// (PJRT objects never cross threads). Every thread holds the shared
+    /// [`Fleet`] registry so a caught panic can redispatch in-flight work to
+    /// surviving siblings.
     pub fn start(artifact_dir: std::path::PathBuf, specs: Vec<WorkerSpec>) -> Result<Router> {
         let shutdown = Arc::new(AtomicBool::new(false));
-        let mut workers = Vec::new();
-        for (wi, wspec) in specs.into_iter().enumerate() {
+        // Pass 1: channels + liveness state, so the full fleet registry
+        // exists before any worker thread spawns (a worker's panic path may
+        // need siblings that start after it).
+        let mut rxs = Vec::with_capacity(specs.len());
+        let mut fleet_workers = Vec::with_capacity(specs.len());
+        for ws in &specs {
             let (tx, rx) = mpsc::channel::<Request>();
-            let inflight = Arc::new(AtomicUsize::new(0));
+            rxs.push(rx);
+            fleet_workers.push(FleetWorker {
+                name: ws.name.clone(),
+                class: ws.class,
+                tx,
+                alive: Arc::new(AtomicBool::new(true)),
+                inflight: Arc::new(AtomicUsize::new(0)),
+            });
+        }
+        let fleet = Arc::new(Fleet { workers: fleet_workers });
+
+        // Pass 2: spawn, with a readiness handshake so start() fails fast
+        // on bad configs.
+        let mut workers = Vec::new();
+        for (wi, (wspec, rx)) in specs.into_iter().zip(rxs).enumerate() {
+            let tx = fleet.workers[wi].tx.clone();
+            let alive = fleet.workers[wi].alive.clone();
+            let inflight = fleet.workers[wi].inflight.clone();
             let metrics = Arc::new(Metrics::default());
             let profile: Arc<Mutex<Option<ProfileSnapshot>>> = Arc::new(Mutex::new(None));
             let sensitivity: Arc<Mutex<Option<Arc<SensitivityShared>>>> =
@@ -231,9 +329,11 @@ impl Router {
             let ws = wspec.clone();
             let sd = shutdown.clone();
             let inf = inflight.clone();
+            let alv = alive.clone();
             let met = metrics.clone();
             let prof = profile.clone();
             let sens = sensitivity.clone();
+            let flt = fleet.clone();
             // engine readiness signal so start() fails fast on bad configs
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let join = std::thread::Builder::new()
@@ -242,6 +342,7 @@ impl Router {
                     let engine = match build_worker_engine(&dir, &ws) {
                         Ok(e) => e,
                         Err(e) => {
+                            alv.store(false, Ordering::Relaxed);
                             let _ = ready_tx.send(Err(e));
                             return Ok(());
                         }
@@ -251,6 +352,10 @@ impl Router {
                     // can snapshot it while the serving loop runs
                     *sens.lock().unwrap_or_else(|e| e.into_inner()) =
                         engine.sensitivity_shared();
+                    let sink = ws
+                        .trace
+                        .as_ref()
+                        .map(|t| TraceSink { tracer: t.clone(), worker: wi as u32 });
                     // the swap policy rides inside the paged options so
                     // WorkerSpec stays one struct per engine arm
                     let opts = SchedulerOptions {
@@ -259,19 +364,74 @@ impl Router {
                             .as_ref()
                             .map(|p| p.swap_policy)
                             .unwrap_or_default(),
-                        trace: ws
-                            .trace
-                            .as_ref()
-                            .map(|t| TraceSink { tracer: t.clone(), worker: wi as u32 }),
+                        trace: sink.clone(),
                         counters: ws.counters.clone(),
+                        capture_logits: ws.capture_logits,
+                        // salt by worker index: one plan, a distinct
+                        // deterministic fault stream per worker
+                        faults: ws.faults.as_ref().map(|p| FaultInjector::new(p, wi as u64)),
                         ..SchedulerOptions::default()
                     };
-                    let mut sched = Scheduler::new(engine, &ws.name, opts, met);
-                    let out = sched.run(rx, sd, inf);
-                    // capture the engine's profile before it is dropped so
-                    // shutdown() can report it
-                    *prof.lock().unwrap_or_else(|e| e.into_inner()) = sched.engine.profile();
-                    out
+                    let mut sched = Scheduler::new(engine, &ws.name, opts, met.clone());
+                    // Failure domain: a panic inside the serving loop (an
+                    // injected worker death, or a real engine bug) is caught
+                    // here and confined to this worker. Injected panics fire
+                    // at the tick boundary, where every request lives inside
+                    // the scheduler — none is lost on the unwound stack.
+                    let out = catch_unwind(AssertUnwindSafe(|| sched.run(&rx, sd, inf.clone())));
+                    match out {
+                        Ok(result) => {
+                            // capture the engine's profile before it is
+                            // dropped so shutdown() can report it
+                            *prof.lock().unwrap_or_else(|e| e.into_inner()) =
+                                sched.engine.profile();
+                            result
+                        }
+                        Err(_) => {
+                            alv.store(false, Ordering::Relaxed);
+                            // strip every request out of the dead scheduler
+                            // and out of the channel behind it
+                            let mut orphans = sched.evacuate();
+                            while let Ok(r) = rx.try_recv() {
+                                orphans.push(r);
+                            }
+                            if let Some(s) = &sink {
+                                s.instant(EventKind::WorkerDeath, 0, 0, orphans.len() as u64);
+                            }
+                            eprintln!(
+                                "worker {}: died mid-serve; redispatching {} orphaned \
+                                 request(s)",
+                                ws.name,
+                                orphans.len()
+                            );
+                            for r in orphans {
+                                let id = r.id;
+                                match flt.redispatch(wi, r) {
+                                    Ok(ti) => {
+                                        if let Some(s) = &sink {
+                                            s.instant(EventKind::Redispatch, id, 0, ti as u64);
+                                        }
+                                    }
+                                    Err(r) => {
+                                        met.record_failure(FailureKind::WorkerDied);
+                                        let _ = r.respond.send(Submission::failed(
+                                            id,
+                                            FailureKind::WorkerDied,
+                                            &format!(
+                                                "worker {} died with no live sibling to \
+                                                 take over",
+                                                ws.name
+                                            ),
+                                        ));
+                                    }
+                                }
+                            }
+                            inf.store(0, Ordering::Relaxed);
+                            // the panic is handled: join cleanly so one dead
+                            // worker cannot poison Router::shutdown()
+                            Ok(())
+                        }
+                    }
                 })
                 .context("spawning engine worker")?;
             ready_rx
@@ -281,6 +441,7 @@ impl Router {
             workers.push(WorkerHandle {
                 spec: wspec,
                 tx,
+                alive,
                 inflight,
                 metrics,
                 profile,
@@ -292,41 +453,90 @@ impl Router {
     }
 
     /// Route by accuracy class, least-loaded within the class; fall back to
-    /// any worker when no engine advertises the class.
+    /// any live worker when no engine advertises the class.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         class: AccuracyClass,
     ) -> Result<Submission> {
-        let candidates: Vec<&WorkerHandle> = {
-            let matching: Vec<&WorkerHandle> =
-                self.workers.iter().filter(|w| w.spec.class == class).collect();
-            if matching.is_empty() {
-                self.workers.iter().collect()
-            } else {
-                matching
-            }
-        };
-        if candidates.is_empty() {
-            bail!("no engine workers");
-        }
-        let w = candidates
-            .iter()
-            .min_by_key(|w| w.inflight.load(Ordering::Relaxed))
-            .unwrap();
+        self.submit_with_deadline(prompt, max_new_tokens, class, None)
+    }
+
+    /// [`Router::submit`] with a per-request deadline: the scheduler abandons
+    /// the request (typed `DeadlineExceeded`, tokens-so-far delivered) once
+    /// `deadline` passes.
+    ///
+    /// Routing never panics: dead workers are filtered out up front, a
+    /// worker found dead at send time is marked and the next candidate
+    /// tried, and exhausting every candidate is a typed `Unroutable` error
+    /// — the old code `min_by_key(...).unwrap()`'d over an unfiltered
+    /// candidate list and trusted `send` to a single pick.
+    pub fn submit_with_deadline(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        class: AccuracyClass,
+        deadline: Option<Instant>,
+    ) -> Result<Submission> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        w.tx.send(Request {
+        let mut req = Request {
             id,
             prompt,
             max_new_tokens,
             class,
             arrival: Instant::now(),
+            deadline,
             respond: tx,
-        })
-        .map_err(|_| anyhow::anyhow!("worker {} is gone", w.spec.name))?;
-        Ok(Submission { id, rx })
+        };
+        for same_class_only in [true, false] {
+            loop {
+                let target = self
+                    .workers
+                    .iter()
+                    .filter(|w| {
+                        w.alive.load(Ordering::Relaxed)
+                            && (!same_class_only || w.spec.class == class)
+                    })
+                    .min_by_key(|w| w.inflight.load(Ordering::Relaxed));
+                let Some(w) = target else { break };
+                match w.tx.send(req) {
+                    Ok(()) => return Ok(Submission { id, rx }),
+                    Err(e) => {
+                        w.alive.store(false, Ordering::Relaxed);
+                        req = e.0;
+                    }
+                }
+            }
+        }
+        Err(anyhow::Error::new(Failure::new(
+            FailureKind::Unroutable,
+            "no live engine worker can accept this request",
+        )))
+    }
+
+    /// Wait up to `timeout` for every live worker's in-flight count to reach
+    /// zero. Returns `true` when the fleet drained, `false` on timeout —
+    /// either way the router is still usable; callers decide whether to
+    /// proceed to `shutdown()`.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        loop {
+            let pending: usize = self
+                .workers
+                .iter()
+                .filter(|w| w.alive.load(Ordering::Relaxed))
+                .map(|w| w.inflight.load(Ordering::Relaxed))
+                .sum();
+            if pending == 0 {
+                return true;
+            }
+            if start.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     /// Per-worker observables for mid-run streaming readers. All fields are
@@ -345,13 +555,25 @@ impl Router {
 
     /// Graceful shutdown: signal, then join all workers. Each worker's final
     /// metrics snapshot (and profile + sensitivity, when enabled) comes back
-    /// in an `EngineReport`.
+    /// in an `EngineReport` — including dead workers', whose metrics atomics
+    /// outlive their threads. A failed join is reported on stderr, never
+    /// propagated: one dead worker cannot poison the whole fleet's report.
     pub fn shutdown(self) -> Result<Vec<EngineReport>> {
         self.shutdown.store(true, Ordering::Relaxed);
         let mut out = Vec::new();
         for w in self.workers {
             drop(w.tx);
-            w.join.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            match w.join.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    eprintln!("worker {}: exited with error: {e:#}", w.spec.name)
+                }
+                Err(_) => {
+                    // a panic that escaped the serving loop's failure domain
+                    // (e.g. during engine construction teardown)
+                    eprintln!("worker {}: panicked outside the failure domain", w.spec.name)
+                }
+            }
             let snapshot = w.metrics.snapshot();
             let profile = w.profile.lock().unwrap_or_else(|e| e.into_inner()).take();
             let sensitivity = w

@@ -45,12 +45,34 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::engine::EngineCore;
+use crate::faults::{point, FaultInjector, StepFault, SwapInFault};
 use crate::kvcache::{CacheBackend, OutOfPages, SwapHandle, SwapPolicy};
 use crate::obs::{CounterHandle, Counters, EventKind, TraceSink};
 
 use super::batcher::{Batcher, BatcherOptions};
+use super::failure::{Failure, FailureKind};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
+
+/// A transiently-faulted swap-in retries (with the injector-chosen
+/// per-retry backoff) at most this many times before it is treated as
+/// permanently lost and the request falls back to re-prefill.
+pub const SWAP_RETRY_MAX: u32 = 4;
+
+/// A recompute resume that keeps hitting `OutOfPages` requeues at most this
+/// many times before failing with a typed `PoolExhausted` — bounds resume-
+/// queue churn when the pool is pathologically oversubscribed.
+pub const OOP_RETRY_MAX: u32 = 256;
+
+/// Consecutive injected faults on one path are capped so a rate-1.0 plan
+/// degrades the path it targets without livelocking the scheduler.
+const FAULT_STREAK_MAX: u32 = 64;
+
+/// Deadline check applied at every enforcement boundary: admission,
+/// prefill chunk, and decode tick.
+fn deadline_expired(req: &Request) -> bool {
+    req.deadline.is_some_and(|d| Instant::now() >= d)
+}
 
 struct ActiveSlot {
     req: Request,
@@ -78,6 +100,12 @@ struct PrefillingSlot {
     /// before preemption (the re-prefill's recomputed first token is
     /// discarded) and the original time-to-first-token.
     resume: Option<(Vec<i32>, Duration)>,
+    /// `OutOfPages` requeue count carried across preemption round trips
+    /// (bounded by [`OOP_RETRY_MAX`]).
+    retries: u32,
+    /// Consecutive injected alloc faults on this slot; past
+    /// [`FAULT_STREAK_MAX`] the injection point stops rolling.
+    fault_streak: u32,
 }
 
 /// One engine slot's scheduling state.
@@ -104,6 +132,12 @@ struct Preempted {
     started: Instant,
     ttft: Duration,
     swap: Option<SwapHandle>,
+    /// Transient swap-in retries ([`SWAP_RETRY_MAX`]) / `OutOfPages`
+    /// requeues ([`OOP_RETRY_MAX`]) consumed so far.
+    retries: u32,
+    /// Earliest scheduler tick this entry may re-attempt admission — the
+    /// backoff window a transient swap-in fault opened (0 = no window).
+    retry_at: u64,
 }
 
 /// FIFO bookkeeping for preempted requests, separated so the ordering policy
@@ -341,6 +375,14 @@ pub struct Scheduler {
     /// Drift alerts already traced, so each new envelope violation emits
     /// exactly one `EventKind::Drift` instant.
     drift_seen: u64,
+    /// Seeded fault injector; `None` (production default) keeps every
+    /// injection point a single never-taken branch.
+    faults: Option<FaultInjector>,
+    /// Monotonic tick counter (first tick = 1): the time base for injected
+    /// worker death and transient-fault backoff windows.
+    tick_no: u64,
+    /// Consecutive injected step faults, capped by [`FAULT_STREAK_MAX`].
+    step_fault_streak: u32,
     pub name: String,
 }
 
@@ -360,6 +402,9 @@ pub struct SchedulerOptions {
     /// Counter registry for the per-tick memory-hierarchy time series
     /// (`None` disables publication entirely).
     pub counters: Option<Arc<Counters>>,
+    /// Seeded fault injector (chaos testing / `--fault-plan`); `None`
+    /// disables injection entirely.
+    pub faults: Option<FaultInjector>,
 }
 
 impl Default for SchedulerOptions {
@@ -372,6 +417,7 @@ impl Default for SchedulerOptions {
             capture_logits: false,
             trace: None,
             counters: None,
+            faults: None,
         }
     }
 }
@@ -399,6 +445,9 @@ impl Scheduler {
             trace: opts.trace,
             hier: opts.counters.as_deref().map(HierarchyTracks::register),
             drift_seen: 0,
+            faults: opts.faults,
+            tick_no: 0,
+            step_fault_streak: 0,
             name: name.to_string(),
         }
     }
@@ -443,14 +492,30 @@ impl Scheduler {
         }
     }
 
-    fn respond_error(&self, req: Request, started: Instant, msg: String) {
+    /// Fail a request that produced no deliverable tokens.
+    fn respond_error(&self, req: Request, started: Instant, failure: Failure) {
+        self.respond_failure(req, Vec::new(), Duration::ZERO, started, failure);
+    }
+
+    /// Fail a request with a typed failure, delivering any tokens generated
+    /// before it. Every failure path funnels here so the per-kind tally
+    /// (`kvtuner_requests_failed_total{kind}`) stays complete.
+    fn respond_failure(
+        &self,
+        req: Request,
+        tokens: Vec<i32>,
+        ttft: Duration,
+        started: Instant,
+        failure: Failure,
+    ) {
+        self.metrics.record_failure(failure.kind);
         let _ = req.respond.send(Response {
             id: req.id,
-            tokens: Vec::new(),
-            ttft: Duration::ZERO,
+            tokens,
+            ttft,
             total: started.elapsed(),
             engine: self.name.clone(),
-            error: Some(msg),
+            error: Some(failure),
             final_logits: None,
         });
     }
@@ -458,11 +523,14 @@ impl Scheduler {
     /// Complete a request: truncate, record, respond, release the slot.
     /// `error` marks degraded completions (e.g. pool-exhaustion truncation)
     /// while still delivering the tokens generated so far.
-    fn finish(&mut self, slot: usize, a: ActiveSlot, error: Option<String>) {
+    fn finish(&mut self, slot: usize, a: ActiveSlot, error: Option<Failure>) {
         let mut toks = a.generated;
         toks.truncate(a.req.max_new_tokens);
         let total = a.started.elapsed();
         self.metrics.record_completion(a.ttft, total, toks.len());
+        if let Some(f) = &error {
+            self.metrics.record_failure(f.kind);
+        }
         self.trace_instant(EventKind::Complete, a.req.id, slot, toks.len() as u64);
         let final_logits =
             if self.capture_logits { Some(self.engine.logits(slot).to_vec()) } else { None };
@@ -501,11 +569,20 @@ impl Scheduler {
         ctx: Vec<i32>,
         started: Instant,
         resume: Option<(Vec<i32>, Duration)>,
+        retries: u32,
     ) {
         self.engine.cache_mut().reset_slot(slot);
         let reused = self.engine.cache_mut().prefill_reuse(slot, &ctx);
-        self.slots[slot] =
-            Slot::Prefilling(PrefillingSlot { req, ctx, done: reused, reused, started, resume });
+        self.slots[slot] = Slot::Prefilling(PrefillingSlot {
+            req,
+            ctx,
+            done: reused,
+            reused,
+            started,
+            resume,
+            retries,
+            fault_streak: 0,
+        });
     }
 
     /// Place a resumed/admitted request into its slot (or finish it when no
@@ -529,57 +606,140 @@ impl Scheduler {
             let Some(slot) = self.slots.iter().position(|s| s.is_idle()) else { break };
 
             if let Some(mut pe) = self.preempted.next() {
+                if deadline_expired(&pe.req) {
+                    // abandon before re-admission: release any swapped
+                    // state, deliver the tokens generated before preemption
+                    if let Some(sh) = pe.swap.take() {
+                        self.engine.cache_mut().release_swap(sh);
+                    }
+                    let got = pe.generated.len() as u64;
+                    self.trace_instant(EventKind::DeadlineExceeded, pe.req.id, slot, got);
+                    self.respond_failure(
+                        pe.req,
+                        pe.generated,
+                        pe.ttft,
+                        pe.started,
+                        Failure::new(
+                            FailureKind::DeadlineExceeded,
+                            format!("deadline passed with {got} tokens generated"),
+                        ),
+                    );
+                    admitted += 1;
+                    continue;
+                }
+                if pe.retry_at > self.tick_no {
+                    // a transient fault's backoff window is still open;
+                    // FIFO order is preserved while it waits at the head
+                    self.preempted.requeue(pe);
+                    break;
+                }
                 if let Some(sh) = pe.swap.take() {
-                    // swapped resume: pages re-link / copy back, no re-prefill
-                    if self.engine.cache().can_swap_in(&sh) {
-                        match self.engine.cache_mut().swap_in(slot, &sh) {
-                            Ok(()) => {
-                                self.metrics.record_swap_in(sh.host_bytes);
-                                self.trace_instant(
-                                    EventKind::SwapIn,
-                                    pe.req.id,
-                                    slot,
-                                    sh.host_bytes as u64,
-                                );
-                                // swapped state restores bit-exact: no
-                                // re-prefill, so the resume's arg is 0
-                                self.trace_instant(EventKind::Resume, pe.req.id, slot, 0);
+                    // the seeded swap-in fault rolls before any engine call,
+                    // so injected failures leave cache state untouched
+                    let injected = self.faults.as_mut().and_then(|f| f.swap_in_fault());
+                    match injected {
+                        Some(SwapInFault::Transient { delay_ticks })
+                            if pe.retries < SWAP_RETRY_MAX =>
+                        {
+                            // transient swap-in I/O fault: bounded
+                            // retry-with-backoff before the loss fallback
+                            pe.retries += 1;
+                            pe.retry_at = self.tick_no + delay_ticks;
+                            pe.swap = Some(sh);
+                            self.metrics.record_fault();
+                            self.metrics.record_retry();
+                            self.trace_instant(
+                                EventKind::Fault,
+                                pe.req.id,
+                                slot,
+                                point::SWAP_IN_TRANSIENT,
+                            );
+                            self.trace_instant(
+                                EventKind::Retry,
+                                pe.req.id,
+                                slot,
+                                pe.retries as u64,
+                            );
+                            self.preempted.requeue(pe);
+                            break;
+                        }
+                        Some(fault) => {
+                            // permanent loss — or a transient past the retry
+                            // budget, which the policy treats the same:
+                            // release the handle, re-prefill below
+                            self.metrics.record_fault();
+                            let pt = if fault == SwapInFault::Lost {
+                                point::SWAP_IN_LOST
+                            } else {
+                                point::SWAP_IN_TRANSIENT
+                            };
+                            self.trace_instant(EventKind::Fault, pe.req.id, slot, pt);
+                            self.engine.cache_mut().release_swap(sh);
+                            self.metrics.record_swap_fallback();
+                        }
+                        None => {
+                            // swapped resume: pages re-link / copy back, no
+                            // re-prefill
+                            if self.engine.cache().can_swap_in(&sh) {
+                                match self.engine.cache_mut().swap_in(slot, &sh) {
+                                    Ok(()) => {
+                                        self.metrics.record_swap_in(sh.host_bytes);
+                                        self.trace_instant(
+                                            EventKind::SwapIn,
+                                            pe.req.id,
+                                            slot,
+                                            sh.host_bytes as u64,
+                                        );
+                                        // swapped state restores bit-exact: no
+                                        // re-prefill, so the resume's arg is 0
+                                        self.trace_instant(
+                                            EventKind::Resume,
+                                            pe.req.id,
+                                            slot,
+                                            0,
+                                        );
+                                        self.engine.cache_mut().release_swap(sh);
+                                        // swapped-in bytes are live again:
+                                        // sample so the peak reflects them
+                                        // before the next step
+                                        self.engine.sample_kv_live();
+                                        let next = *pe.generated.last().unwrap();
+                                        let a = ActiveSlot {
+                                            req: pe.req,
+                                            generated: pe.generated,
+                                            next_token: next,
+                                            started: pe.started,
+                                            ttft: pe.ttft,
+                                        };
+                                        self.occupy(slot, a);
+                                        admitted += 1;
+                                        continue;
+                                    }
+                                    Err(_) => {
+                                        // swapped state unrecoverable (re-
+                                        // linked prefix pages were recycled):
+                                        // release the handle and re-prefill
+                                        // below instead
+                                        self.engine.cache_mut().release_swap(sh);
+                                        self.engine.cache_mut().reset_slot(slot);
+                                        self.metrics.record_swap_fallback();
+                                    }
+                                }
+                            } else if self.busy() > 0 {
+                                // its pages do not fit yet; in-flight
+                                // completions will free some — keep it at
+                                // the head of the queue
+                                pe.swap = Some(sh);
+                                self.preempted.requeue(pe);
+                                break;
+                            } else {
+                                // nothing in flight will ever free pages: a
+                                // clamped re-prefill may fit where the full
+                                // page set cannot
                                 self.engine.cache_mut().release_swap(sh);
-                                // swapped-in bytes are live again: sample so
-                                // the peak reflects them before the next step
-                                self.engine.sample_kv_live();
-                                let next = *pe.generated.last().unwrap();
-                                let a = ActiveSlot {
-                                    req: pe.req,
-                                    generated: pe.generated,
-                                    next_token: next,
-                                    started: pe.started,
-                                    ttft: pe.ttft,
-                                };
-                                self.occupy(slot, a);
-                                admitted += 1;
-                                continue;
-                            }
-                            Err(_) => {
-                                // swapped state unrecoverable (re-linked
-                                // prefix pages were recycled): release the
-                                // handle and re-prefill below instead
-                                self.engine.cache_mut().release_swap(sh);
-                                self.engine.cache_mut().reset_slot(slot);
                                 self.metrics.record_swap_fallback();
                             }
                         }
-                    } else if self.busy() > 0 {
-                        // its pages do not fit yet; in-flight completions
-                        // will free some — keep it at the head of the queue
-                        pe.swap = Some(sh);
-                        self.preempted.requeue(pe);
-                        break;
-                    } else {
-                        // nothing in flight will ever free pages: a clamped
-                        // re-prefill may fit where the full page set cannot
-                        self.engine.cache_mut().release_swap(sh);
-                        self.metrics.record_swap_fallback();
                     }
                 }
 
@@ -591,10 +751,15 @@ impl Scheduler {
                 ctx.extend_from_slice(&pe.generated[..pe.generated.len() - 1]);
                 if !self.engine.cache().can_admit(ctx.len(), pe.req.max_new_tokens) {
                     if self.busy() == 0 {
-                        self.respond_error(
+                        self.respond_failure(
                             pe.req,
+                            pe.generated,
+                            pe.ttft,
                             pe.started,
-                            "request exceeds the kv page pool budget".into(),
+                            Failure::new(
+                                FailureKind::PoolExhausted,
+                                "request exceeds the kv page pool budget",
+                            ),
                         );
                         admitted += 1;
                         continue;
@@ -602,12 +767,34 @@ impl Scheduler {
                     self.preempted.requeue(pe);
                     break;
                 }
-                self.start_prefill(slot, pe.req, ctx, pe.started, Some((pe.generated, pe.ttft)));
+                let retries = pe.retries;
+                self.start_prefill(
+                    slot,
+                    pe.req,
+                    ctx,
+                    pe.started,
+                    Some((pe.generated, pe.ttft)),
+                    retries,
+                );
                 admitted += 1;
                 continue;
             }
 
             let Some(front) = self.batcher.peek() else { break };
+            if deadline_expired(front) {
+                // expired while queued: fail typed before spending any
+                // prefill work on it
+                let req = self.batcher.pop().unwrap();
+                let started = req.arrival;
+                self.trace_instant(EventKind::DeadlineExceeded, req.id, slot, 0);
+                self.respond_error(
+                    req,
+                    started,
+                    Failure::new(FailureKind::DeadlineExceeded, "deadline passed before admission"),
+                );
+                admitted += 1;
+                continue;
+            }
             let max_new = front.max_new_tokens;
             let cap = self.engine.s_max().saturating_sub(max_new + 1);
             let plen = front.prompt.len().min(cap);
@@ -619,7 +806,10 @@ impl Scheduler {
                     self.respond_error(
                         req,
                         started,
-                        "request exceeds the kv page pool budget".into(),
+                        Failure::new(
+                            FailureKind::PoolExhausted,
+                            "request exceeds the kv page pool budget",
+                        ),
                     );
                     admitted += 1;
                     continue;
@@ -630,7 +820,7 @@ impl Scheduler {
             let started = Instant::now();
             let prompt = self.clamp_prompt(&req.prompt, req.max_new_tokens);
             self.trace_instant(EventKind::Admit, req.id, slot, prompt.len() as u64);
-            self.start_prefill(slot, req, prompt, started, None);
+            self.start_prefill(slot, req, prompt, started, None, 0);
             admitted += 1;
         }
         // cumulative staging-copy traffic (prefill gathers included); the
@@ -655,6 +845,35 @@ impl Scheduler {
             else {
                 unreachable!()
             };
+            if deadline_expired(&p.req) {
+                // expired mid-prefill: free the slot's partial state and
+                // deliver any pre-preemption tokens a resume carried
+                self.engine.cache_mut().reset_slot(slot);
+                let (tokens, ttft) = p.resume.unwrap_or((Vec::new(), Duration::ZERO));
+                self.trace_instant(EventKind::DeadlineExceeded, p.req.id, slot, tokens.len() as u64);
+                self.respond_failure(
+                    p.req,
+                    tokens,
+                    ttft,
+                    p.started,
+                    Failure::new(FailureKind::DeadlineExceeded, "deadline passed during prefill"),
+                );
+                continue;
+            }
+            if p.fault_streak < FAULT_STREAK_MAX
+                && self.faults.as_mut().is_some_and(|f| f.alloc_fails())
+            {
+                // injected spurious OutOfPages, rolled before the chunk runs:
+                // the slot makes no progress this tick and retries the same
+                // chunk next tick with its pages intact
+                p.fault_streak += 1;
+                self.metrics.record_fault();
+                self.metrics.record_retry();
+                self.trace_instant(EventKind::Fault, p.req.id, slot, point::ALLOC);
+                self.trace_instant(EventKind::Retry, p.req.id, slot, p.fault_streak as u64);
+                self.slots[slot] = Slot::Prefilling(p);
+                continue;
+            }
             let chunk =
                 if self.chunked_prefill { self.engine.prefill_chunk().max(1) } else { usize::MAX };
             let remaining = p.ctx.len() - p.done;
@@ -727,24 +946,37 @@ impl Scheduler {
         let oop = e.downcast_ref::<OutOfPages>().is_some();
         match p.resume {
             // a resume retries only while other slots hold pages that will
-            // free; with nothing in flight, retrying would spin forever
-            Some((generated, ttft)) if oop && self.busy() > 0 => {
+            // free; with nothing in flight, retrying would spin forever, and
+            // past the requeue budget it fails typed instead of churning
+            Some((generated, ttft)) if oop && self.busy() > 0 && p.retries < OOP_RETRY_MAX => {
+                self.metrics.record_retry();
                 self.preempted.requeue(Preempted {
                     req: p.req,
                     generated,
                     started: p.started,
                     ttft,
                     swap: None,
+                    retries: p.retries + 1,
+                    retry_at: 0,
                 })
             }
             // a fresh request additionally waits on preempted peers, which
             // re-admit ahead of it and then either drain or fail loudly
             None if oop && (self.busy() > 0 || !self.preempted.is_empty()) => {
+                self.metrics.record_retry();
                 self.batcher.push_front(p.req)
             }
-            _ => {
-                let started = p.started;
-                self.respond_error(p.req, started, format!("prefill failed: {e:#}"));
+            resume => {
+                let kind =
+                    if oop { FailureKind::PoolExhausted } else { FailureKind::EngineFault };
+                let (tokens, ttft) = resume.unwrap_or((Vec::new(), Duration::ZERO));
+                self.respond_failure(
+                    p.req,
+                    tokens,
+                    ttft,
+                    p.started,
+                    Failure::new(kind, format!("prefill failed: {e:#}")),
+                );
             }
         }
     }
@@ -790,22 +1022,28 @@ impl Scheduler {
                 self.finish(
                     i,
                     a,
-                    Some(format!(
-                        "kv page pool exhausted: generation truncated at {got}/{want} tokens"
+                    Some(Failure::new(
+                        FailureKind::Truncated,
+                        format!(
+                            "kv page pool exhausted: generation truncated at {got}/{want} tokens"
+                        ),
                     )),
                 );
                 return;
             }
-            let victim = *active
-                .iter()
-                .max_by_key(|&&i| {
-                    let Slot::Active(a) = &self.slots[i] else { unreachable!() };
-                    let pages = self.engine.cache().slot_pages(i);
-                    let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
-                    // ties fall to the youngest (largest start time)
-                    (victim_score(pages, remaining), a.started)
-                })
-                .unwrap();
+            // regression fix: victim selection used `.unwrap()` on
+            // `max_by_key`; the guard above makes an empty candidate list
+            // unreachable today, but a panic here would take the whole
+            // worker down — bail out of preemption instead
+            let Some(victim) = active.iter().copied().max_by_key(|&i| {
+                let Slot::Active(a) = &self.slots[i] else { unreachable!() };
+                let pages = self.engine.cache().slot_pages(i);
+                let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
+                // ties fall to the youngest (largest start time)
+                (victim_score(pages, remaining), a.started)
+            }) else {
+                return;
+            };
             let pages_held = self.engine.cache().slot_pages(victim);
             let Slot::Active(a) = std::mem::replace(&mut self.slots[victim], Slot::Idle) else {
                 unreachable!()
@@ -833,16 +1071,31 @@ impl Scheduler {
                 PreemptAction::Recompute
             };
             let swap = if action == PreemptAction::SwapOut {
-                match self.engine.cache_mut().swap_out(victim) {
-                    Ok(h) => {
-                        self.metrics.record_swap_out(h.host_bytes);
-                        self.trace_instant(EventKind::SwapOut, a.req.id, victim, h.host_bytes as u64);
-                        Some(h)
-                    }
-                    Err(_) => {
-                        // host arena full: recompute instead
-                        self.metrics.record_swap_stall();
-                        None
+                if self.faults.as_mut().is_some_and(|f| f.swap_out_fails()) {
+                    // injected swap-out I/O failure, rolled before the copy
+                    // starts: the victim falls back to recompute exactly as
+                    // on a real full host arena
+                    self.metrics.record_fault();
+                    self.trace_instant(EventKind::Fault, a.req.id, victim, point::SWAP_OUT);
+                    self.metrics.record_swap_stall();
+                    None
+                } else {
+                    match self.engine.cache_mut().swap_out(victim) {
+                        Ok(h) => {
+                            self.metrics.record_swap_out(h.host_bytes);
+                            self.trace_instant(
+                                EventKind::SwapOut,
+                                a.req.id,
+                                victim,
+                                h.host_bytes as u64,
+                            );
+                            Some(h)
+                        }
+                        Err(_) => {
+                            // host arena full: recompute instead
+                            self.metrics.record_swap_stall();
+                            None
+                        }
                     }
                 }
             } else {
@@ -864,6 +1117,8 @@ impl Scheduler {
                 started: a.started,
                 ttft: a.ttft,
                 swap,
+                retries: 0,
+                retry_at: 0,
             });
         }
     }
@@ -888,6 +1143,8 @@ impl Scheduler {
                 started: p.started,
                 ttft,
                 swap: None,
+                retries: p.retries,
+                retry_at: 0,
             }),
             None => self.batcher.push_front(p.req),
         }
@@ -898,6 +1155,32 @@ impl Scheduler {
     /// step's buffers are engine-resident (`decode_step_into`) plus the
     /// scheduler's persistent token/mask vectors — no per-step allocation.
     fn decode_tick(&mut self) -> Result<usize> {
+        let tick_no = self.tick_no;
+        match self.faults.as_mut().and_then(|f| f.step_fault(tick_no)) {
+            Some(StepFault::Panic) => {
+                // injected worker death at a tick boundary: no Request is on
+                // the unwound stack (they all live in `self`), so the
+                // router's catch_unwind + evacuate path can redispatch
+                // every orphan
+                self.metrics.record_fault();
+                self.trace_instant(EventKind::Fault, 0, 0, point::STEP_PANIC);
+                panic!("injected worker death (tick {tick_no})");
+            }
+            Some(StepFault::Transient) if self.step_fault_streak < FAULT_STREAK_MAX => {
+                // transient engine fault: skip this batched step (no state
+                // mutated — the injection displaces the engine call) and
+                // retry the identical step next tick
+                self.step_fault_streak += 1;
+                self.metrics.record_fault();
+                self.metrics.record_retry();
+                self.trace_instant(EventKind::Fault, 0, 0, point::STEP_TRANSIENT);
+                self.trace_instant(EventKind::Retry, 0, 0, self.step_fault_streak as u64);
+                return Ok(0);
+            }
+            // past the streak cap a rate-1.0 plan stops stalling decode
+            Some(StepFault::Transient) => {}
+            None => self.step_fault_streak = 0,
+        }
         let batch = self.slots.len();
         let mut busy = 0usize;
         for (i, s) in self.slots.iter().enumerate() {
@@ -939,25 +1222,41 @@ impl Scheduler {
         }
 
         for i in 0..batch {
-            let done = if let Slot::Active(a) = &mut self.slots[i] {
+            let (done, expired) = if let Slot::Active(a) = &mut self.slots[i] {
                 if self.step_active[i] {
                     a.generated.push(self.step_next[i]);
                     a.next_token = self.step_next[i];
                 }
-                generation_done(
+                let done = generation_done(
                     a.generated.len(),
                     a.req.max_new_tokens,
                     self.engine.cache().pos(i) as usize,
                     self.engine.s_max(),
-                )
+                );
+                (done, !done && deadline_expired(&a.req))
             } else {
-                false
+                (false, false)
             };
-            if done {
+            if done || expired {
                 let Slot::Active(a) = std::mem::replace(&mut self.slots[i], Slot::Idle) else {
                     unreachable!()
                 };
-                self.finish(i, a, None);
+                if done {
+                    self.finish(i, a, None);
+                } else {
+                    // deadline passed mid-generation: deliver the tokens
+                    // generated so far, typed DeadlineExceeded
+                    let got = a.generated.len() as u64;
+                    self.trace_instant(EventKind::DeadlineExceeded, a.req.id, i, got);
+                    self.finish(
+                        i,
+                        a,
+                        Some(Failure::new(
+                            FailureKind::DeadlineExceeded,
+                            format!("deadline passed after {got} tokens"),
+                        )),
+                    );
+                }
             }
         }
         Ok(busy)
@@ -1004,6 +1303,9 @@ impl Scheduler {
     /// number of slots that decoded. This is the unit the serving loop —
     /// and the differential-churn harness — drives.
     pub fn tick(&mut self) -> Result<usize> {
+        // 1-based: the first tick a scheduler runs is tick 1 (the time base
+        // for `FaultRates::death_tick` and transient backoff windows)
+        self.tick_no += 1;
         self.admit()?;
         self.advance_prefills()?;
         self.preempt_for_headroom();
@@ -1017,24 +1319,63 @@ impl Scheduler {
         Ok(decoded)
     }
 
-    /// Serve until `shutdown` flips and all in-flight work drains.
+    /// Enqueue an arrival, or — when the admission queue is full — answer
+    /// it immediately with a typed `QueueFull` failure instead of silently
+    /// dropping it (the old behavior left the client to discover the drop
+    /// as a closed channel).
+    fn enqueue_or_reject(&mut self, r: Request) {
+        if self.batcher.len() >= self.batcher.opts.max_queue {
+            self.batcher.rejected += 1;
+            let started = r.arrival;
+            self.respond_error(
+                r,
+                started,
+                Failure::new(FailureKind::QueueFull, "admission queue full"),
+            );
+        } else {
+            self.batcher.push(r);
+        }
+    }
+
+    /// Strip every request out of the scheduler: queued, preempted, and
+    /// slotted, in that order. Called by the router's failure domain after
+    /// a caught panic, when the engine may be in an arbitrary state — so
+    /// this touches no engine or cache method: swap handles are dropped
+    /// unreleased (their arena dies with the worker) and slots are
+    /// abandoned, not reset. Generated tokens are discarded: a redispatched
+    /// request restarts fresh on its new worker and, with deterministic
+    /// numerics, regenerates the identical stream.
+    pub fn evacuate(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.batcher.pop() {
+            out.push(r);
+        }
+        while let Some(pe) = self.preempted.next() {
+            out.push(pe.req);
+        }
+        for s in self.slots.iter_mut() {
+            match std::mem::replace(s, Slot::Idle) {
+                Slot::Idle => {}
+                Slot::Prefilling(p) => out.push(p.req),
+                Slot::Active(a) => out.push(a.req),
+            }
+        }
+        out
+    }
+
+    /// Serve until `shutdown` flips and all in-flight work drains. Takes
+    /// the receiver by reference so the router can drain requests that
+    /// arrived between a caught panic and the channel teardown.
     pub fn run(
         &mut self,
-        rx: Receiver<Request>,
+        rx: &Receiver<Request>,
         shutdown: Arc<AtomicBool>,
         inflight: Arc<AtomicUsize>,
     ) -> Result<()> {
         loop {
             // drain new arrivals without blocking
-            loop {
-                match rx.try_recv() {
-                    Ok(r) => {
-                        if !self.batcher.push(r) {
-                            // rejected: backpressure counter already bumped
-                        }
-                    }
-                    Err(_) => break,
-                }
+            while let Ok(r) = rx.try_recv() {
+                self.enqueue_or_reject(r);
             }
             self.tick()?;
             // busy() counts prefilling slots too: a worker mid-chunked-
@@ -1050,9 +1391,7 @@ impl Scheduler {
                 }
                 // idle: block briefly for the next request
                 match rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(r) => {
-                        self.batcher.push(r);
-                    }
+                    Ok(r) => self.enqueue_or_reject(r),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => return Ok(()),
                 }

@@ -1,0 +1,361 @@
+//! Deterministic, seeded fault injection for the serving path.
+//!
+//! Production failure domains — the swap tier's I/O, the page pool's
+//! allocator, the engine step, the worker thread itself — are modeled as
+//! *injection points* the scheduler consults before touching real state.
+//! Every decision comes from one seeded PRNG, so a failing chaos run
+//! reproduces from its seed exactly like the churn harness's workloads, and
+//! every injected failure happens *before* the engine call it displaces:
+//! no cache or model state is mutated on an injected path, which is what
+//! keeps completed token streams bit-identical to a fault-free run.
+//!
+//! Zero-cost when disabled: the scheduler holds an `Option<FaultInjector>`
+//! and every injection point is one `is-Some` branch on `None`.
+//!
+//! A [`FaultPlan`] comes from a single CLI string (`--fault-plan`): a bare
+//! integer seeds a small mixed-rate plan (each rate drawn from 1–5%), while
+//! a JSON object (inline or a path to a file) pins every rate explicitly:
+//!
+//! ```json
+//! {"seed": 7, "swap_out_fail": 0.05, "swap_in_transient": 0.1,
+//!  "swap_in_lost": 0.02, "alloc_fail": 0.03, "step_transient": 0.02,
+//!  "step_panic": 0.0, "death_tick": null, "max_delay_ticks": 4}
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-injection-point probabilities (rolled independently at each visit)
+/// plus the deterministic worker-death tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRates {
+    /// Swap-out refused before the copy starts (the victim falls back to
+    /// recompute, as on a real `HostArenaFull`).
+    pub swap_out_fail: f64,
+    /// Swap-in transiently unavailable: the resume is delayed and retried
+    /// with backoff before the permanent-loss fallback fires.
+    pub swap_in_transient: f64,
+    /// Swap-in permanently lost (as on a real `SwapLost`): the handle is
+    /// released and the request re-prefills.
+    pub swap_in_lost: f64,
+    /// Spurious `OutOfPages` on a prefill chunk: the slot retries the chunk
+    /// on a later tick (bounded; see the scheduler's retry cap).
+    pub alloc_fail: f64,
+    /// Transient engine-step error: the batched decode tick is skipped and
+    /// retried next tick (no state mutated).
+    pub step_transient: f64,
+    /// Injected panic at a tick boundary — the worker thread dies and the
+    /// router's isolation/redispatch path takes over.
+    pub step_panic: f64,
+    /// Deterministic worker death: panic exactly at this scheduler tick.
+    pub death_tick: Option<u64>,
+    /// Upper bound on the per-retry delay (in scheduler ticks) a transient
+    /// swap-in fault imposes.
+    pub max_delay_ticks: u64,
+}
+
+impl Default for FaultRates {
+    fn default() -> FaultRates {
+        FaultRates {
+            swap_out_fail: 0.0,
+            swap_in_transient: 0.0,
+            swap_in_lost: 0.0,
+            alloc_fail: 0.0,
+            step_transient: 0.0,
+            step_panic: 0.0,
+            death_tick: None,
+            max_delay_ticks: 4,
+        }
+    }
+}
+
+/// A reproducible fault schedule: one seed plus the rates above. Thread it
+/// through `WorkerSpec`/`SchedulerOptions`; each worker salts the seed with
+/// its index so a fleet under one plan still exercises distinct schedules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rates: FaultRates,
+}
+
+impl FaultPlan {
+    /// A mixed low-rate plan derived deterministically from one seed: every
+    /// transient/permanent rate lands in [1%, 5%], panics and worker death
+    /// stay off (those are opted into explicitly via JSON).
+    pub fn from_seed(seed: u64) -> FaultPlan {
+        let mut rng = Rng::seed(seed.wrapping_mul(0xA24B_AED4_963E_E407).wrapping_add(5));
+        let mut rate = || 0.01 + 0.04 * rng.f64();
+        FaultPlan {
+            seed,
+            rates: FaultRates {
+                swap_out_fail: rate(),
+                swap_in_transient: rate(),
+                swap_in_lost: rate(),
+                alloc_fail: rate(),
+                step_transient: rate(),
+                ..FaultRates::default()
+            },
+        }
+    }
+
+    /// Parse a `--fault-plan` argument: a bare integer (`from_seed`), an
+    /// inline JSON object, or a path to a JSON file.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let s = s.trim();
+        if let Ok(seed) = s.parse::<u64>() {
+            return Ok(FaultPlan::from_seed(seed));
+        }
+        let body = if s.starts_with('{') {
+            s.to_string()
+        } else {
+            std::fs::read_to_string(s)
+                .with_context(|| format!("--fault-plan: reading plan file {s:?}"))?
+        };
+        let j = Json::parse(&body).context("--fault-plan: parsing plan JSON")?;
+        let f = |key: &str| -> Result<f64> {
+            match j.opt(key) {
+                Some(v) => {
+                    let r = v.as_f64()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&r),
+                        "--fault-plan: {key} must be a probability in [0,1], got {r}"
+                    );
+                    Ok(r)
+                }
+                None => Ok(0.0),
+            }
+        };
+        let d = FaultRates::default();
+        Ok(FaultPlan {
+            seed: j.opt("seed").map(|v| v.as_usize()).transpose()?.unwrap_or(0) as u64,
+            rates: FaultRates {
+                swap_out_fail: f("swap_out_fail")?,
+                swap_in_transient: f("swap_in_transient")?,
+                swap_in_lost: f("swap_in_lost")?,
+                alloc_fail: f("alloc_fail")?,
+                step_transient: f("step_transient")?,
+                step_panic: f("step_panic")?,
+                death_tick: match j.opt("death_tick") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_usize()? as u64),
+                },
+                max_delay_ticks: match j.opt("max_delay_ticks") {
+                    Some(v) => (v.as_usize()? as u64).max(1),
+                    None => d.max_delay_ticks,
+                },
+            },
+        })
+    }
+
+    /// True when every injection point is inert — the scheduler drops the
+    /// injector entirely and pays nothing.
+    pub fn is_noop(&self) -> bool {
+        let r = &self.rates;
+        r.swap_out_fail == 0.0
+            && r.swap_in_transient == 0.0
+            && r.swap_in_lost == 0.0
+            && r.alloc_fail == 0.0
+            && r.step_transient == 0.0
+            && r.step_panic == 0.0
+            && r.death_tick.is_none()
+    }
+}
+
+/// Outcome of a swap-in injection roll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapInFault {
+    /// Retry after this many ticks (bounded backoff in the scheduler).
+    Transient { delay_ticks: u64 },
+    /// Permanent: release the handle and re-prefill.
+    Lost,
+}
+
+/// Outcome of an engine-step injection roll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepFault {
+    /// Skip this decode tick and retry next tick.
+    Transient,
+    /// Kill the worker thread (caught by the router's isolation layer).
+    Panic,
+}
+
+/// Names for the injection points, used by trace events and tallies.
+pub const FAULT_POINTS: [&str; 6] =
+    ["swap_out", "swap_in_transient", "swap_in_lost", "alloc", "step_transient", "step_panic"];
+
+/// Indices into [`FAULT_POINTS`] — the `arg` payload of
+/// `EventKind::Fault` trace events.
+pub mod point {
+    pub const SWAP_OUT: u64 = 0;
+    pub const SWAP_IN_TRANSIENT: u64 = 1;
+    pub const SWAP_IN_LOST: u64 = 2;
+    pub const ALLOC: u64 = 3;
+    pub const STEP_TRANSIENT: u64 = 4;
+    pub const STEP_PANIC: u64 = 5;
+}
+
+/// The live injector one scheduler owns: the plan's rates driven by a
+/// salted PRNG, plus per-point injected counts for reporting.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rates: FaultRates,
+    rng: Rng,
+    injected: [u64; FAULT_POINTS.len()],
+}
+
+impl FaultInjector {
+    /// `salt` distinguishes workers sharing one plan (use the worker index).
+    pub fn new(plan: &FaultPlan, salt: u64) -> FaultInjector {
+        FaultInjector {
+            rates: plan.rates.clone(),
+            rng: Rng::seed(plan.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            injected: [0; FAULT_POINTS.len()],
+        }
+    }
+
+    fn hit(&mut self, point: usize, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let hit = self.rng.chance(p);
+        if hit {
+            self.injected[point] += 1;
+        }
+        hit
+    }
+
+    /// Roll the swap-out injection point (before the device-to-host copy).
+    pub fn swap_out_fails(&mut self) -> bool {
+        let p = self.rates.swap_out_fail;
+        self.hit(0, p)
+    }
+
+    /// Roll the swap-in injection point (before the host-to-device copy).
+    pub fn swap_in_fault(&mut self) -> Option<SwapInFault> {
+        // permanent loss is rolled first so a plan with both rates set
+        // exercises both outcomes
+        let lost = self.rates.swap_in_lost;
+        if self.hit(2, lost) {
+            return Some(SwapInFault::Lost);
+        }
+        let transient = self.rates.swap_in_transient;
+        if self.hit(1, transient) {
+            let delay = 1 + self.rng.below(self.rates.max_delay_ticks.max(1) as usize) as u64;
+            return Some(SwapInFault::Transient { delay_ticks: delay });
+        }
+        None
+    }
+
+    /// Roll the page-allocation injection point (before a prefill chunk).
+    pub fn alloc_fails(&mut self) -> bool {
+        let p = self.rates.alloc_fail;
+        self.hit(3, p)
+    }
+
+    /// Roll the engine-step injection point at tick `tick_no` (before the
+    /// batched decode call). Worker death at `death_tick` wins over the
+    /// probabilistic rolls.
+    pub fn step_fault(&mut self, tick_no: u64) -> Option<StepFault> {
+        if self.rates.death_tick == Some(tick_no) {
+            self.injected[5] += 1;
+            return Some(StepFault::Panic);
+        }
+        let panic_p = self.rates.step_panic;
+        if self.hit(5, panic_p) {
+            return Some(StepFault::Panic);
+        }
+        let transient = self.rates.step_transient;
+        if self.hit(4, transient) {
+            return Some(StepFault::Transient);
+        }
+        None
+    }
+
+    /// Total injected faults across every point.
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    /// Injected count per point, aligned with [`FAULT_POINTS`].
+    pub fn injected(&self) -> &[u64; FAULT_POINTS.len()] {
+        &self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_seed_derives_small_mixed_rates() {
+        let p = FaultPlan::parse("42").unwrap();
+        assert_eq!(p.seed, 42);
+        for r in [
+            p.rates.swap_out_fail,
+            p.rates.swap_in_transient,
+            p.rates.swap_in_lost,
+            p.rates.alloc_fail,
+            p.rates.step_transient,
+        ] {
+            assert!((0.01..=0.05).contains(&r), "derived rate {r} outside 1-5%");
+        }
+        assert_eq!(p.rates.step_panic, 0.0, "panics are opt-in only");
+        assert_eq!(p.rates.death_tick, None);
+        // same seed, same plan — the reproducibility contract
+        assert_eq!(FaultPlan::parse("42").unwrap(), p);
+        assert_ne!(FaultPlan::from_seed(43).rates, p.rates);
+    }
+
+    #[test]
+    fn json_plan_pins_rates_and_rejects_bad_probabilities() {
+        let p = FaultPlan::parse(
+            r#"{"seed": 9, "swap_in_lost": 1.0, "death_tick": 17, "max_delay_ticks": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.rates.swap_in_lost, 1.0);
+        assert_eq!(p.rates.swap_out_fail, 0.0, "unset rates default to 0");
+        assert_eq!(p.rates.death_tick, Some(17));
+        assert_eq!(p.rates.max_delay_ticks, 2);
+        assert!(FaultPlan::parse(r#"{"alloc_fail": 1.5}"#).is_err());
+        assert!(FaultPlan::parse("not json or a number").is_err());
+    }
+
+    #[test]
+    fn injector_is_reproducible_and_counts_injections() {
+        let plan = FaultPlan::parse(r#"{"seed": 5, "alloc_fail": 0.5, "step_transient": 0.5}"#)
+            .unwrap();
+        let roll = |salt: u64| {
+            let mut inj = FaultInjector::new(&plan, salt);
+            let seq: Vec<bool> = (0..64).map(|_| inj.alloc_fails()).collect();
+            (seq, inj.total_injected())
+        };
+        let (a, na) = roll(0);
+        let (b, nb) = roll(0);
+        assert_eq!(a, b, "same plan + salt must replay identically");
+        assert_eq!(na, nb);
+        assert!(na > 0, "a 50% rate over 64 rolls must inject");
+        let (c, _) = roll(1);
+        assert_ne!(a, c, "different salts must draw different schedules");
+    }
+
+    #[test]
+    fn death_tick_fires_exactly_once_at_its_tick() {
+        let plan = FaultPlan::parse(r#"{"death_tick": 3}"#).unwrap();
+        assert!(!plan.is_noop());
+        let mut inj = FaultInjector::new(&plan, 0);
+        for t in 0..3 {
+            assert_eq!(inj.step_fault(t), None);
+        }
+        assert_eq!(inj.step_fault(3), Some(StepFault::Panic));
+        assert_eq!(inj.step_fault(4), None);
+    }
+
+    #[test]
+    fn unarmed_plan_is_noop() {
+        assert!(FaultPlan::parse("{}").unwrap().is_noop());
+        assert!(!FaultPlan::from_seed(1).is_noop());
+    }
+}

@@ -12,6 +12,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod faults;
 pub mod kernel;
 pub mod kvcache;
 pub mod model;

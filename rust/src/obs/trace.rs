@@ -48,6 +48,21 @@ pub enum EventKind {
     /// Online quantization error exceeded the calibrated envelope (arg =
     /// cumulative drift-alert count at emission time).
     Drift,
+    /// A seeded fault fired (arg = index into
+    /// [`crate::faults::FAULT_POINTS`] naming the injection point).
+    Fault,
+    /// A faulted operation was scheduled for retry (arg = the request's
+    /// retry count after this increment).
+    Retry,
+    /// The request's deadline passed and it was abandoned (arg = tokens
+    /// delivered so far).
+    DeadlineExceeded,
+    /// A worker thread died — panic or engine loss (arg = requests orphaned
+    /// on the dead worker, emitted with `req = 0`).
+    WorkerDeath,
+    /// An orphaned request was re-sent to a surviving worker (arg = the
+    /// surviving worker index).
+    Redispatch,
 }
 
 impl EventKind {
@@ -63,6 +78,11 @@ impl EventKind {
             EventKind::Resume => "resume",
             EventKind::Complete => "complete",
             EventKind::Drift => "drift",
+            EventKind::Fault => "fault",
+            EventKind::Retry => "retry",
+            EventKind::DeadlineExceeded => "deadline_exceeded",
+            EventKind::WorkerDeath => "worker_death",
+            EventKind::Redispatch => "redispatch",
         }
     }
 }

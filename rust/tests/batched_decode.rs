@@ -277,6 +277,7 @@ fn run_churn_arm(
                 max_new_tokens: r.max_new,
                 class: AccuracyClass::Balanced,
                 arrival: Instant::now(),
+                deadline: None,
                 respond: tx,
             };
             (r.arrival, req)

@@ -1,0 +1,484 @@
+//! Chaos extension of the differential-churn harness (pure host, no
+//! artifacts): seeded fault plans drive the scheduler's injection points —
+//! swap-out/swap-in I/O, page allocation, engine step, worker death — and
+//! the suite asserts the failure-domain contract:
+//!
+//! * every request terminates (typed failure or completion; nothing hangs),
+//! * completed token streams + final logits are bit-identical to a
+//!   fault-free oracle (injection displaces engine calls, never corrupts
+//!   state),
+//! * the page pool and host swap arena leak nothing after drain,
+//! * a worker killed mid-serve is isolated by the router: its orphans are
+//!   redispatched to a surviving sibling and complete there, and
+//!   `shutdown()` still returns every engine's report.
+//!
+//! Every failing case prints its reproducing seed.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use kvtuner::config::{LayerSpec, Mode, ModelConfig, PrecisionPair, PAIRS};
+use kvtuner::coordinator::{
+    AccuracyClass, FailureKind, Metrics, Request, Router, Scheduler, SchedulerOptions,
+    Snapshot, WorkerSpec,
+};
+use kvtuner::engine::{BackendKind, EngineCore, NativeEngine};
+use kvtuner::faults::{FaultInjector, FaultPlan, FaultRates};
+use kvtuner::kvcache::{CacheBackend, PagedOptions, SwapPolicy};
+use kvtuner::model::Weights;
+use kvtuner::obs::{EventKind, Tracer};
+use kvtuner::util::rng::Rng;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "faults-test".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 16,
+        d_ff: 64,
+        vocab: 128,
+        rope_theta: 10000.0,
+        group: 8,
+        residual: 8,
+        rms_eps: 1e-5,
+    }
+}
+
+#[derive(Clone)]
+struct ChaosReq {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    arrival: usize,
+    /// Submitted with an already-expired deadline: must come back as a
+    /// typed `DeadlineExceeded` in every arm, and is excluded from the
+    /// stream comparison.
+    expired: bool,
+}
+
+struct ChaosPlan {
+    reqs: Vec<ChaosReq>,
+    specs: Vec<LayerSpec>,
+    batch: usize,
+    threads: usize,
+    total_blocks: usize,
+    swap_mib: Option<f64>,
+    swap_policy: SwapPolicy,
+}
+
+/// Seeded workload, shaped like the churn harness's: page pool just above
+/// the largest single request (forward progress guaranteed, concurrency
+/// forces preemption), swap tier on for even seeds so the swap injection
+/// points get traffic, and every third request carrying an expired deadline.
+fn chaos_plan(seed: u64, c: &ModelConfig) -> ChaosPlan {
+    let mut rng = Rng::seed(seed.wrapping_mul(0x9E37_79B9).wrapping_add(29));
+    let n = rng.range(4, 8);
+    let mut reqs = Vec::new();
+    let mut floor_blocks = 0usize;
+    for id in 0..n {
+        let plen = rng.range(3, 21);
+        let max_new = rng.range(1, 13);
+        let arrival = rng.below(12);
+        let prompt = (0..plen).map(|_| rng.below(c.vocab) as i32).collect();
+        floor_blocks = floor_blocks.max((plen + max_new + c.group) / c.group + 1);
+        reqs.push(ChaosReq {
+            id: id as u64,
+            prompt,
+            max_new,
+            arrival,
+            expired: id % 3 == 2,
+        });
+    }
+    let specs = (0..c.n_layers)
+        .map(|_| LayerSpec {
+            mode: *rng.choose(&[Mode::Token, Mode::Kivi]),
+            pair: *rng.choose(&PAIRS),
+        })
+        .collect();
+    let batch = rng.range(2, 5);
+    let threads = [1, 2, 8][seed as usize % 3];
+    let total_blocks = floor_blocks + rng.below(3);
+    let (swap_mib, swap_policy) = if seed % 2 == 0 {
+        (Some(4.0), SwapPolicy::Always)
+    } else {
+        (None, SwapPolicy::Off)
+    };
+    ChaosPlan { reqs, specs, batch, threads, total_blocks, swap_mib, swap_policy }
+}
+
+/// Drive one scheduler arm over the plan, tick-driven, until drained.
+/// `rates: Some` arms the injector; `None` is the fault-free arm. Returns
+/// per-request responses (id-ordered) plus the arm's metrics snapshot.
+fn run_chaos_arm(
+    p: &ChaosPlan,
+    c: &ModelConfig,
+    oracle: bool,
+    rates: Option<FaultRates>,
+    seed: u64,
+) -> (Vec<kvtuner::coordinator::Response>, Snapshot) {
+    let arm = if oracle { "oracle" } else { "chaos" };
+    let w = Weights::synthetic(c, 11);
+    let threads = if oracle { 1 } else { p.threads };
+    let mut engine = NativeEngine::new(
+        c,
+        w,
+        p.specs.clone(),
+        p.batch,
+        64,
+        8,
+        threads,
+        Some(PagedOptions {
+            total_blocks: Some(p.total_blocks),
+            swap_mib: p.swap_mib,
+            swap_policy: p.swap_policy,
+            ..PagedOptions::default()
+        }),
+    )
+    .unwrap();
+    if oracle {
+        engine.set_sequential_decode(true);
+    }
+    let metrics = Arc::new(Metrics::default());
+    let mut sched = Scheduler::new(
+        Box::new(engine),
+        arm,
+        SchedulerOptions {
+            swap_policy: p.swap_policy,
+            chunked_prefill: !oracle,
+            capture_logits: true,
+            faults: rates.map(|r| FaultInjector::new(&FaultPlan { seed, rates: r }, 0)),
+            ..SchedulerOptions::default()
+        },
+        metrics.clone(),
+    );
+
+    let mut rxs = Vec::new();
+    let mut pending: Vec<(usize, Request)> = p
+        .reqs
+        .iter()
+        .map(|r| {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            let req = Request {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new,
+                class: AccuracyClass::Balanced,
+                arrival: Instant::now(),
+                // an already-expired deadline: the scheduler must abandon it
+                // typed at its first enforcement boundary
+                deadline: r.expired.then(Instant::now),
+                respond: tx,
+            };
+            (r.arrival, req)
+        })
+        .collect();
+
+    let mut tick = 0usize;
+    loop {
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].0 <= tick {
+                let (_, req) = pending.remove(i);
+                assert!(sched.submit(req), "seed {seed} [{arm}]: queue rejected a request");
+            } else {
+                i += 1;
+            }
+        }
+        sched.tick().unwrap_or_else(|e| panic!("seed {seed} [{arm}]: tick {tick} failed: {e:#}"));
+        if pending.is_empty() && sched.is_idle() {
+            break;
+        }
+        tick += 1;
+        // the termination contract: injected faults may stretch the run but
+        // must never livelock it
+        assert!(tick < 20_000, "seed {seed} [{arm}]: scheduler failed to drain in 20k ticks");
+    }
+
+    // leak check: after a full drain nothing may pin device pages or host
+    // swap-arena bytes, no matter which fault paths fired
+    let ms = sched.engine.cache().mem_stats();
+    assert_eq!(ms.blocks_live, 0, "seed {seed} [{arm}]: leaked {} live blocks", ms.blocks_live);
+    assert_eq!(
+        ms.host_bytes_used, 0,
+        "seed {seed} [{arm}]: leaked {} host swap bytes",
+        ms.host_bytes_used
+    );
+
+    let responses = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(id, rx)| {
+            rx.try_recv()
+                .unwrap_or_else(|_| panic!("seed {seed} [{arm}]: request {id} got no response"))
+        })
+        .collect();
+    (responses, metrics.snapshot())
+}
+
+/// Tentpole capstone: across >= 8 seeded mixed-rate plans, every request
+/// terminates, expired-deadline requests fail typed in both arms, completed
+/// streams and final logits are bit-identical to the fault-free oracle, and
+/// nothing leaks.
+#[test]
+fn chaos_completed_streams_match_fault_free_oracle() {
+    let c = cfg();
+    let mut total_injected = 0u64;
+    for case in 0..8u64 {
+        let seed = 0xFA017 + case;
+        let p = chaos_plan(seed, &c);
+        let (oracle, _) = run_chaos_arm(&p, &c, true, None, seed);
+        let plan = FaultPlan::from_seed(seed);
+        let (chaos, snap) = run_chaos_arm(&p, &c, false, Some(plan.rates.clone()), seed);
+        total_injected += snap.faults_injected;
+        assert_eq!(oracle.len(), chaos.len());
+        for (r, (o, ch)) in p.reqs.iter().zip(oracle.iter().zip(&chaos)) {
+            if r.expired {
+                for (arm, resp) in [("oracle", o), ("chaos", ch)] {
+                    let f = resp.error.as_ref().unwrap_or_else(|| {
+                        panic!("seed {seed} [{arm}]: expired request {} completed", r.id)
+                    });
+                    assert_eq!(
+                        f.kind,
+                        FailureKind::DeadlineExceeded,
+                        "seed {seed} [{arm}]: request {} failed with the wrong kind",
+                        r.id
+                    );
+                }
+                continue;
+            }
+            assert!(
+                o.error.is_none(),
+                "seed {seed} [oracle]: request {} degraded: {:?}",
+                r.id,
+                o.error
+            );
+            assert!(
+                ch.error.is_none(),
+                "seed {seed} [chaos]: request {} degraded: {:?} \
+                 (faults={}, retries={})",
+                r.id,
+                ch.error,
+                snap.faults_injected,
+                snap.retries
+            );
+            assert_eq!(
+                o.tokens, ch.tokens,
+                "seed {seed}: request {} token stream diverged under injected faults \
+                 (threads={}, batch={}, blocks={}, swap={:?})",
+                r.id, p.threads, p.batch, p.total_blocks, p.swap_policy
+            );
+            let ob: Vec<u32> =
+                o.final_logits.as_ref().unwrap().iter().map(|x| x.to_bits()).collect();
+            let cb: Vec<u32> =
+                ch.final_logits.as_ref().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                ob, cb,
+                "seed {seed}: request {} final logits diverged under injected faults",
+                r.id
+            );
+        }
+        // deadline failures are tallied per kind in the arm's metrics
+        let expired = p.reqs.iter().filter(|r| r.expired).count() as u64;
+        assert_eq!(snap.failed(FailureKind::DeadlineExceeded), expired, "seed {seed}");
+    }
+    assert!(
+        total_injected > 0,
+        "8 mixed-rate plans injected nothing — the injection points are dead"
+    );
+}
+
+/// A fixed workload that forces preemption: 3 requests arriving together,
+/// each needing ~7 of 8 pool blocks at peak, so two concurrent generations
+/// cannot both stay resident — with `SwapPolicy::Always` and a host arena,
+/// every eviction is a swap-out.
+fn preempt_heavy_plan(c: &ModelConfig) -> ChaosPlan {
+    let reqs = (0..3u64)
+        .map(|id| ChaosReq {
+            id,
+            prompt: (0..16).map(|j| ((j * 7 + 13 * id as usize) % c.vocab) as i32).collect(),
+            max_new: 24,
+            arrival: 0,
+            expired: false,
+        })
+        .collect();
+    ChaosPlan {
+        reqs,
+        specs: LayerSpec::uniform(Mode::Token, PrecisionPair::new(4, 4), c.n_layers),
+        batch: 2,
+        threads: 1,
+        // floor for one request: (16 + 24 + 8) / 8 + 1 = 7 blocks; 8 total
+        // guarantees solo progress, forbids two resident peaks
+        total_blocks: 8,
+        swap_mib: Some(4.0),
+        swap_policy: SwapPolicy::Always,
+    }
+}
+
+/// Satellite: the SwapLost -> release + re-prefill fallback, driven through
+/// the scheduler by injection. `swap_in_lost: 1.0` turns every swapped
+/// resume into a loss; the request must recover via recompute and its
+/// stream must still match the fault-free oracle bit-for-bit.
+#[test]
+fn injected_swap_loss_falls_back_to_reprefill_and_streams_match() {
+    let c = cfg();
+    let p = preempt_heavy_plan(&c);
+    let seed = 0xDEAD01;
+    let (oracle, osnap) = run_chaos_arm(&p, &c, true, None, seed);
+    assert!(
+        osnap.swap_outs > 0,
+        "plan failed to force swap-outs (preemptions={}) — retune the pool",
+        osnap.preemptions
+    );
+    let rates = FaultRates { swap_in_lost: 1.0, ..FaultRates::default() };
+    let (chaos, snap) = run_chaos_arm(&p, &c, false, Some(rates), seed);
+    assert!(snap.swap_outs > 0, "chaos arm produced no swap-outs");
+    assert!(
+        snap.swap_fallbacks > 0,
+        "every swapped resume was injected Lost yet no fallback was recorded"
+    );
+    assert!(snap.faults_injected > 0);
+    for (o, ch) in oracle.iter().zip(&chaos) {
+        assert!(ch.error.is_none(), "request {} degraded: {:?}", ch.id, ch.error);
+        assert_eq!(o.tokens, ch.tokens, "request {} diverged after SwapLost fallback", ch.id);
+    }
+}
+
+/// Satellite: the HostArenaFull-shaped swap-out refusal -> recompute
+/// fallback. `swap_out_fail: 1.0` refuses every swap-out before the copy;
+/// victims must evict by recompute (stall recorded) and still finish with
+/// oracle-identical streams.
+#[test]
+fn injected_swap_out_failure_falls_back_to_recompute_and_streams_match() {
+    let c = cfg();
+    let p = preempt_heavy_plan(&c);
+    let seed = 0xDEAD02;
+    let (oracle, _) = run_chaos_arm(&p, &c, true, None, seed);
+    let rates = FaultRates { swap_out_fail: 1.0, ..FaultRates::default() };
+    let (chaos, snap) = run_chaos_arm(&p, &c, false, Some(rates), seed);
+    assert!(
+        snap.swap_stalls > 0,
+        "every swap-out was injected to fail yet no stall was recorded \
+         (preemptions={})",
+        snap.preemptions
+    );
+    assert_eq!(snap.swap_outs, 0, "a refused swap-out still copied bytes");
+    for (o, ch) in oracle.iter().zip(&chaos) {
+        assert!(ch.error.is_none(), "request {} degraded: {:?}", ch.id, ch.error);
+        assert_eq!(o.tokens, ch.tokens, "request {} diverged after swap-out refusal", ch.id);
+    }
+}
+
+fn synthetic_worker(name: &str, class: AccuracyClass, c: &ModelConfig) -> WorkerSpec {
+    WorkerSpec {
+        name: name.into(),
+        model: c.name.clone(),
+        specs: LayerSpec::uniform(Mode::Token, PrecisionPair::new(8, 8), c.n_layers),
+        class,
+        batch: 2,
+        s_max: 512,
+        prefill_chunk: 16,
+        backend: BackendKind::Native,
+        threads: 1,
+        synthetic: Some(c.clone()),
+        ..WorkerSpec::default()
+    }
+}
+
+/// Tentpole, router level: an injected worker death mid-serve is confined to
+/// its thread. Requests are pinned to the doomed worker by accuracy class;
+/// its orphans are redispatched to the (different-class) survivor, every
+/// request completes, the trace carries WorkerDeath + Redispatch events, and
+/// shutdown() still reports both engines.
+#[test]
+fn worker_death_redispatches_orphans_to_survivor() {
+    let c = cfg();
+    let tracer = Arc::new(Tracer::with_default_capacity());
+    let mut doomed = synthetic_worker("doomed", AccuracyClass::High, &c);
+    // deterministic death at tick 40: far fewer ticks than the ~1500 the
+    // workload needs, so orphans are guaranteed to exist at death
+    doomed.faults = Some(FaultPlan::parse(r#"{"death_tick": 40}"#).unwrap());
+    doomed.trace = Some(tracer.clone());
+    let mut survivor = synthetic_worker("survivor", AccuracyClass::Balanced, &c);
+    survivor.trace = Some(tracer.clone());
+
+    let router = Router::start(std::env::temp_dir(), vec![doomed, survivor]).unwrap();
+    // class High pins every request to the doomed worker while it lives
+    let subs: Vec<_> = (0..6u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..8).map(|j| ((j * 3 + i as usize) % c.vocab) as i32).collect();
+            router.submit(prompt, 250, AccuracyClass::High).unwrap()
+        })
+        .collect();
+    for (i, sub) in subs.into_iter().enumerate() {
+        let r = sub.wait_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "request {i} failed after redispatch: {:?}", r.error);
+        assert_eq!(r.tokens.len(), 250, "request {i} truncated");
+        assert_eq!(r.engine, "survivor", "request {i} answered by the dead worker");
+    }
+    assert!(router.drain(Duration::from_secs(30)), "fleet failed to drain");
+
+    let evs = tracer.events();
+    let death: Vec<_> =
+        evs.iter().filter(|e| e.kind == EventKind::WorkerDeath).collect();
+    assert_eq!(death.len(), 1, "exactly one worker death expected");
+    assert_eq!(death[0].worker, 0, "the doomed worker is pid 0");
+    let orphans = death[0].arg;
+    assert!(orphans >= 1, "death at tick 40 must orphan in-flight requests");
+    let redispatched =
+        evs.iter().filter(|e| e.kind == EventKind::Redispatch).count() as u64;
+    assert_eq!(redispatched, orphans, "every orphan must be redispatched");
+
+    let reports = router.shutdown().unwrap();
+    assert_eq!(reports.len(), 2, "shutdown must report dead workers too");
+    let done: u64 = reports.iter().map(|r| r.snapshot.requests_completed).sum();
+    assert_eq!(done, 6);
+}
+
+/// Satellite regression: routing over a fully-dead fleet is a typed
+/// `Unroutable` error, not a panic (the old `min_by_key(...).unwrap()` +
+/// unchecked `send`).
+#[test]
+fn routing_to_a_dead_fleet_is_a_typed_error_not_a_panic() {
+    let c = cfg();
+    let mut solo = synthetic_worker("solo", AccuracyClass::Balanced, &c);
+    solo.faults = Some(FaultPlan::parse(r#"{"death_tick": 1}"#).unwrap());
+    let router = Router::start(std::env::temp_dir(), vec![solo]).unwrap();
+    // the worker dies on its first tick; wait for the liveness flag to drop
+    let t0 = Instant::now();
+    while router.workers[0].alive.load(std::sync::atomic::Ordering::Relaxed) {
+        assert!(t0.elapsed() < Duration::from_secs(30), "worker never died");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let err = match router.submit(vec![1, 2, 3], 4, AccuracyClass::Balanced) {
+        Err(e) => e,
+        Ok(sub) => {
+            // raced the death window: the request slipped into the channel
+            // before the thread exited — it must still resolve typed, not
+            // hang (redispatch finds no sibling)
+            let r = sub.wait_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.error.unwrap().kind, FailureKind::WorkerDied);
+            router.shutdown().unwrap();
+            return;
+        }
+    };
+    let f = err.downcast_ref::<kvtuner::coordinator::Failure>().expect("typed routing error");
+    assert_eq!(f.kind, FailureKind::Unroutable);
+    router.shutdown().unwrap();
+}
+
+/// An unarmed plan (all rates zero) must parse as a no-op so the serve CLI
+/// can skip building an injector entirely; and an armed injector must be
+/// droppable into SchedulerOptions without further plumbing.
+#[test]
+fn noop_plans_are_detected_and_armed_plans_thread_through_options() {
+    assert!(FaultPlan::parse("{}").unwrap().is_noop());
+    assert!(!FaultPlan::from_seed(3).is_noop());
+    let opts = SchedulerOptions {
+        faults: Some(FaultInjector::new(&FaultPlan::from_seed(3), 7)),
+        ..SchedulerOptions::default()
+    };
+    assert!(opts.faults.is_some());
+}

@@ -160,6 +160,7 @@ fn live_scrape_and_chrome_counters_during_synthetic_serve_run() {
             max_new_tokens: MAX_NEW,
             class: AccuracyClass::Balanced,
             arrival: Instant::now(),
+            deadline: None,
             respond: rtx,
         })
         .unwrap();
@@ -167,7 +168,7 @@ fn live_scrape_and_chrome_counters_during_synthetic_serve_run() {
     }
     drop(tx);
     let worker = std::thread::spawn(move || {
-        sched.run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0))).unwrap();
+        sched.run(&rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0))).unwrap();
     });
 
     // scrape while the run lives (and after — the registries outlive the

@@ -109,6 +109,7 @@ fn scheduler_trace_records_preempt_swap_resume_lifecycle() {
             max_new_tokens: MAX_NEW,
             class: AccuracyClass::Balanced,
             arrival: Instant::now(),
+            deadline: None,
             respond: rtx,
         })
         .unwrap();
@@ -116,7 +117,7 @@ fn scheduler_trace_records_preempt_swap_resume_lifecycle() {
     }
     drop(tx);
     sched
-        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .run(&rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
         .unwrap();
 
     // both requests complete fully despite the pool holding only one
@@ -280,6 +281,7 @@ fn kv_live_peak_includes_the_pre_eviction_moment() {
             max_new_tokens: max_new,
             class: AccuracyClass::Balanced,
             arrival: Instant::now(),
+            deadline: None,
             respond: rtx,
         })
         .unwrap();
@@ -287,7 +289,7 @@ fn kv_live_peak_includes_the_pre_eviction_moment() {
     }
     drop(tx);
     sched
-        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .run(&rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
         .unwrap();
     for rrx in responses {
         let r = rrx.recv().expect("scheduler dropped a response channel");

@@ -123,6 +123,7 @@ fn drift_alert_fires_on_out_of_distribution_workload() {
             max_new_tokens: 4,
             class: AccuracyClass::Balanced,
             arrival: Instant::now(),
+            deadline: None,
             respond: rtx,
         })
         .unwrap();
@@ -130,7 +131,7 @@ fn drift_alert_fires_on_out_of_distribution_workload() {
     }
     drop(tx);
     sched
-        .run(rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
+        .run(&rx, Arc::new(AtomicBool::new(true)), Arc::new(AtomicUsize::new(0)))
         .unwrap();
     for (id, rrx) in responses.into_iter().enumerate() {
         let r = rrx.recv().expect("scheduler dropped a response channel");
